@@ -1,0 +1,73 @@
+//! Retraining ablation (paper §V-C): identical campaigns with the online
+//! learning loop ON vs OFF, at 32 and 64 nodes.
+//!
+//!     cargo run --release --example ablation_retrain [-- minutes]
+//!
+//! Paper: at 90 min, retraining raises stable MOFs from 133→313 (32 nodes)
+//! and 393→641 (64 nodes); the stable fraction improves from 5→11 % and
+//! 8→12 %. We reproduce the *shape* (ON > OFF on both axes) with the
+//! corpus-seeded surrogate generator, whose quality responds to retraining
+//! exactly like the real model's (noise shrinks per version).
+
+use std::sync::Arc;
+
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::thinker::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: f64 = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(90.0);
+    println!("== retraining ablation (paper §V-C), {minutes:.0} min virtual ==\n");
+    println!(
+        "{:>6} {:>9} {:>14} {:>14} {:>10}",
+        "nodes", "retrain", "stable@end", "validated", "stable %"
+    );
+
+    for nodes in [32usize, 64] {
+        let mut results = Vec::new();
+        for retrain in [true, false] {
+            let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+            let config = CampaignConfig {
+                nodes,
+                duration_s: minutes * 60.0,
+                seed: 7,
+                policy: PolicyConfig {
+                    retrain_enabled: retrain,
+                    retrain_min: 32,
+                    ..Default::default()
+                },
+                threads: 0,
+                util_sample_dt: 120.0,
+            };
+            let report = run_campaign(config, Arc::clone(&engines));
+            let th = &report.thinker;
+            let validated = report.tasks_done
+                [&mofa::workflow::taskserver::TaskKind::ValidateStructure];
+            let stable = th.db.stable_count(th.cfg.stable_strain);
+            let frac = 100.0 * stable as f64 / validated.max(1) as f64;
+            println!(
+                "{:>6} {:>9} {:>14} {:>14} {:>9.1}%",
+                nodes,
+                if retrain { "ON" } else { "OFF" },
+                stable,
+                validated,
+                frac
+            );
+            results.push((retrain, stable, frac));
+        }
+        let on = results.iter().find(|r| r.0).unwrap();
+        let off = results.iter().find(|r| !r.0).unwrap();
+        println!(
+            "   -> {}x more stable MOFs with retraining (paper: 2.4x at 32 nodes, 1.6x at 64)\n",
+            if off.1 > 0 {
+                format!("{:.1}", on.1 as f64 / off.1 as f64)
+            } else {
+                "∞".to_string()
+            }
+        );
+    }
+    Ok(())
+}

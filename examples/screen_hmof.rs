@@ -1,0 +1,91 @@
+//! Screening-only workload: run the simulation cascade over the *seed*
+//! linker corpus (the hMOF-fragment stand-in) with no generative model in
+//! the loop — the brute-force baseline MOFA's intro argues against.
+//!
+//!     cargo run --release --example screen_hmof [-- n_linkers]
+//!
+//! Reports the survival funnel and the capacity distribution of the
+//! screened reference structures, and compares the hit-rate (stable MOFs
+//! per simulated structure) with what a generative campaign achieves.
+
+use mofa::charges::{assign_charges, QeqSettings};
+use mofa::gcmc::{run_gcmc, GcmcSettings};
+use mofa::genai::corpus::load_seed_corpus;
+use mofa::genai::LinkerGenerator;
+use mofa::linkerproc::process_linker;
+use mofa::md::{run_npt, MdSettings};
+use mofa::runtime::artifacts::ArtifactPaths;
+use mofa::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    println!("== hMOF-style screening baseline ({n} linkers) ==");
+
+    // seed corpus (falls back to the builtin templates if artifacts absent)
+    let paths = ArtifactPaths::default_dir();
+    let linkers: Vec<_> = if paths.seed_linkers.exists() {
+        let frags = load_seed_corpus(&paths.seed_linkers)?;
+        frags.iter().take(n).map(|f| f.to_gen_linker()).collect()
+    } else {
+        let g = mofa::genai::generator::SurrogateGenerator::builtin(16);
+        g.set_params(vec![], 10);
+        let mut v = Vec::new();
+        let mut s = 0;
+        while v.len() < n {
+            v.extend(g.generate(s)?);
+            s += 1;
+        }
+        v.truncate(n);
+        v
+    };
+
+    let md = MdSettings { steps: 200, supercell: 1, ..Default::default() };
+    let gc = GcmcSettings { equil_moves: 1_500, prod_moves: 3_000, ..Default::default() };
+
+    let (mut processed, mut assembled, mut stable) = (0usize, 0usize, 0usize);
+    let mut capacities = Vec::new();
+    for (i, l) in linkers.iter().enumerate() {
+        let Ok(p) = process_linker(l) else { continue };
+        processed += 1;
+        let Ok(m) = mofa::assembly::assemble_default(&p) else { continue };
+        assembled += 1;
+        let r = run_npt(&m.framework, &md, 1000 + i as u64);
+        if !(r.sound && r.strain < 0.10) {
+            continue;
+        }
+        stable += 1;
+        let Ok(q) = assign_charges(&r.relaxed, &QeqSettings::default()) else {
+            continue;
+        };
+        let g = run_gcmc(&r.relaxed, &q, &gc, 2000 + i as u64);
+        capacities.push(g.uptake_mol_kg);
+        println!(
+            "  linker {i:>3}: strain {:.3}  capacity {:.3} mol/kg",
+            r.strain, g.uptake_mol_kg
+        );
+    }
+
+    println!("\n-- screening funnel --");
+    println!("linkers screened : {}", linkers.len());
+    println!("processed        : {processed}");
+    println!("assembled        : {assembled}");
+    println!("stable (<10%)    : {stable}");
+    println!("adsorption runs  : {}", capacities.len());
+    if !capacities.is_empty() {
+        println!(
+            "capacity: mean {:.3}  median {:.3}  max {:.3} mol/kg",
+            stats::mean(&capacities),
+            stats::median(&capacities),
+            capacities.iter().cloned().fold(f64::MIN, f64::max)
+        );
+    }
+    println!(
+        "\nhit rate {:.1}% — compare `mofa run` campaigns where retraining\n\
+         concentrates sampling on high-performing regions (paper §V-C).",
+        100.0 * stable as f64 / linkers.len().max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT compile path: lower MOFLinker to HLO text + pretrain initial params.
+
+Runs ONCE at build time (`make artifacts`); Python is never on the Rust
+request path.  Outputs in artifacts/:
+
+  sample.hlo.txt        full reverse-diffusion sampler (Pallas hot path)
+  denoise_step.hlo.txt  single eps prediction (tests / benches)
+  train_step.hlo.txt    one Adam step on the denoising MSE
+  params_init.bin       flat f32 params after pretraining on the corpus
+  params_random.bin     flat f32 params before pretraining (ablations)
+  meta.json             dims, param layout, schedule, pretrain log
+  seed_linkers.json     the synthetic fragment corpus (Rust pins on this)
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids cleanly.  See
+/opt/xla-example/load_hlo/gen_hlo.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(outdir: str) -> dict:
+    sizes = {}
+    entries = [
+        ("sample_step", model.sample_step, model.sample_step_specs()),
+        ("denoise_step", model.denoise_step, model.denoise_specs()),
+        ("train_step", model.train_step, model.train_specs()),
+    ]
+    for name, fn, specs in entries:
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sizes[name] = len(text)
+        print(f"  lowered {name}: {len(text)} chars in {time.time()-t0:.1f}s")
+    return sizes
+
+
+def pretrain(outdir: str, steps: int, corpus_size: int, seed: int):
+    """Pretrain on the synthetic fragment corpus; save params + corpus."""
+    frags, xs, hs, ms = corpus.build_corpus(corpus_size, seed=seed)
+    params = model.init_params(seed)
+    with open(os.path.join(outdir, "params_random.bin"), "wb") as f:
+        f.write(params.astype("<f4").tobytes())
+
+    train = jax.jit(model.train_step)
+    rng = np.random.default_rng(seed + 1)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    step = jnp.asarray(0.0, jnp.float32)
+    p = jnp.asarray(params)
+    losses = []
+    bt = model.B_TRAIN
+    for i in range(steps):
+        idx = rng.integers(0, corpus_size, bt)
+        t_idx = rng.integers(0, model.T_STEPS, bt).astype(np.int32)
+        nx = rng.normal(size=(bt, model.N, 3)).astype(np.float32)
+        nh = rng.normal(size=(bt, model.N, model.F)).astype(np.float32)
+        p, m, v, step, loss = train(
+            p, m, v, step, xs[idx], hs[idx], ms[idx], t_idx, nx, nh
+        )
+        losses.append(float(loss))
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  pretrain step {i:4d} loss {float(loss):.4f}")
+
+    with open(os.path.join(outdir, "params_init.bin"), "wb") as f:
+        f.write(np.asarray(p).astype("<f4").tobytes())
+
+    with open(os.path.join(outdir, "seed_linkers.json"), "w") as f:
+        json.dump(
+            [
+                {
+                    "family": fr["family"],
+                    "elements": fr["elements"],
+                    "coords": [[round(float(c), 4) for c in row] for row in fr["coords"]],
+                    "anchors": fr["anchors"],
+                }
+                for fr in frags
+            ],
+            f,
+        )
+    return losses
+
+
+def write_meta(outdir: str, sizes: dict, losses) -> None:
+    off = 0
+    layout = []
+    for name, shape in model.LAYOUT:
+        size = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape), "offset": off})
+        off += size
+    meta = {
+        "n_atoms": model.N,
+        "elements": model.ELEMENTS,
+        "n_feats": model.F,
+        "hidden": model.H,
+        "layers": model.L,
+        "t_steps": model.T_STEPS,
+        "b_gen": model.B_GEN,
+        "b_train": model.B_TRAIN,
+        "p_total": int(model.P_TOTAL),
+        "adam_lr": model.ADAM_LR,
+        "coord_scale": model.COORD_SCALE,
+        # Diffusion schedule, exported so the Rust runtime can drive the
+        # T-step loop itself (HLO while-loops are broken in the 0.5.1
+        # text-interchange path; see model.sample_step docstring).
+        "alpha": [float(v) for v in model.ALPHA],
+        "alpha_bar": [float(v) for v in model.ALPHA_BAR],
+        "beta": [float(v) for v in model.BETA],
+        "sigma": [float(v) for v in model.SIGMA],
+        "hlo_chars": sizes,
+        "param_layout": layout,
+        "pretrain_loss_first": losses[0],
+        "pretrain_loss_last": float(np.mean(losses[-20:])),
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--steps", type=int, default=2500)
+    ap.add_argument("--corpus", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out.endswith(".txt") else args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    print(f"[aot] P_TOTAL={model.P_TOTAL} params; lowering to {outdir}")
+    sizes = lower_all(outdir)
+    print("[aot] pretraining MOFLinker on synthetic fragment corpus")
+    losses = pretrain(outdir, args.steps, args.corpus, args.seed)
+    write_meta(outdir, sizes, losses)
+    print(f"[aot] done: loss {losses[0]:.4f} -> {np.mean(losses[-20:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

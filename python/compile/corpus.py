@@ -1,0 +1,141 @@
+"""Synthetic linker-fragment corpus (hMOF-fragment stand-in).
+
+The paper fine-tunes DiffLinker on molecular fragments from the hMOF
+dataset.  We have no hMOF, so we procedurally build an idealized corpus of
+ditopic linker fragments in the two families MOFA generates (paper §III-B):
+
+  * BCA — benzene-carboxylic-acid linkers: para-connected aromatic cores
+    whose anchor atoms are the carboxylate carbons (slots 0 and 1);
+  * BZN — benzonitrile linkers: same cores with nitrile-nitrogen anchors.
+
+Geometry conventions here are the contract with the Rust side
+(rust/src/chem + rust/src/linkerproc): aromatic C-C 1.39 Å, C-anchor
+1.48 Å, ring-substituted N, O/S decorations, coordinates CoM-free, and the
+two anchors are always atom slots 0 and 1.  The corpus is exported to
+artifacts/seed_linkers.json so Rust tests pin against identical data.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .model import ELEMENTS, F, N
+
+CC_AROM = 1.39  # Å aromatic ring bond
+C_ANCHOR = 1.48  # Å ring-carbon to anchor-carbon
+CC_TRIPLE = 1.20  # Å alkyne bridge
+CC_SINGLE = 1.46  # Å sp-sp2 single bond
+
+_ELEM_IDX = {e: i for i, e in enumerate(ELEMENTS)}
+
+
+def _ring(center_x: float, rng, n_subst: int):
+    """Hexagonal aromatic ring in the xy-plane centred at (center_x, 0, 0).
+
+    Returns (elements, coords, para_axis_atoms): atoms 0 and 3 are the para
+    positions used for anchor attachment / bridging.
+    """
+    r = CC_AROM  # circumradius of a regular hexagon == bond length
+    elems = []
+    coords = []
+    for k in range(6):
+        ang = np.pi / 3.0 * k
+        elems.append("C")
+        coords.append([center_x + r * np.cos(ang), r * np.sin(ang), 0.0])
+    # Aza-substitution: swap up to n_subst non-para ring carbons for N.
+    cand = [1, 2, 4, 5]
+    rng.shuffle(cand)
+    for i in cand[:n_subst]:
+        elems[i] = "N"
+    return elems, np.asarray(coords), (0, 3)
+
+
+def make_fragment(rng: np.random.Generator, family: str | None = None):
+    """Build one fragment. Returns dict with elements/coords/anchors/family."""
+    family = family or ("BCA" if rng.random() < 0.6 else "BZN")
+    n_rings = 1 if rng.random() < 0.65 else 2
+    bridge = rng.random() < 0.35 if n_rings == 2 else False
+    n_subst = rng.integers(0, 3)
+
+    elems: list[str] = []
+    coords_list: list[np.ndarray] = []
+    ring_sep = 2 * CC_AROM + CC_SINGLE  # para-C to para-C across a C-C bond
+    if bridge:
+        ring_sep = 2 * CC_AROM + 2 * CC_SINGLE + CC_TRIPLE
+
+    # Core ring(s) along the x axis.
+    e1, c1, (p1a, p1b) = _ring(0.0, rng, n_subst)
+    elems += e1
+    coords_list.append(c1)
+    right_attach = c1[p1a]  # (+x para position at angle 0)
+    left_attach = c1[p1b]  # (-x para position)
+    if n_rings == 2:
+        e2, c2, (p2a, p2b) = _ring(ring_sep, rng, int(rng.integers(0, 2)))
+        elems += e2
+        coords_list.append(c2)
+        if bridge:  # -C#C- alkyne bridge between the rings
+            xa = right_attach[0] + CC_SINGLE
+            elems += ["C", "C"]
+            coords_list.append(np.array([[xa, 0.0, 0.0], [xa + CC_TRIPLE, 0.0, 0.0]]))
+        right_attach = c2[p2a]
+
+    # Anchors: +x and -x terminal atoms. BCA anchor = C, BZN anchor = N.
+    anchor_elem = "C" if family == "BCA" else "N"
+    a_right = right_attach + np.array([C_ANCHOR, 0.0, 0.0])
+    a_left = left_attach + np.array([-C_ANCHOR, 0.0, 0.0])
+
+    # Optional O/S decoration on a free ring position.
+    if rng.random() < 0.3 and len(elems) + 3 <= N:
+        dec = "O" if rng.random() < 0.7 else "S"
+        base = coords_list[0][1]
+        direction = base / (np.linalg.norm(base) + 1e-9)
+        elems.append(dec)
+        coords_list.append((base + 1.36 * direction)[None, :])
+
+    core = np.concatenate(coords_list, axis=0)
+    all_elems = [anchor_elem, anchor_elem] + elems
+    all_coords = np.concatenate([a_left[None, :], a_right[None, :], core], axis=0)
+
+    if len(all_elems) > N:
+        all_elems = all_elems[:N]
+        all_coords = all_coords[:N]
+
+    # Random rigid rotation (augmentation; the model is equivariant anyway)
+    # plus small thermal jitter so the corpus has a learnable noise floor.
+    q = rng.normal(size=(3, 3))
+    u, _, vt = np.linalg.svd(q)
+    rot = u @ vt
+    if np.linalg.det(rot) < 0:
+        rot[:, 0] *= -1
+    all_coords = all_coords @ rot.T + rng.normal(0, 0.03, all_coords.shape)
+    all_coords -= all_coords.mean(axis=0, keepdims=True)
+
+    return {
+        "family": family,
+        "elements": all_elems,
+        "coords": all_coords.astype(np.float32),
+        "anchors": [0, 1],
+    }
+
+
+def fragment_to_tensors(frag):
+    """Fragment dict -> (x (N,3), h (N,F), mask (N,1)) padded numpy arrays."""
+    n = len(frag["elements"])
+    x = np.zeros((N, 3), np.float32)
+    h = np.zeros((N, F), np.float32)
+    mask = np.zeros((N, 1), np.float32)
+    x[:n] = frag["coords"][:n]
+    for i, e in enumerate(frag["elements"]):
+        h[i, _ELEM_IDX[e]] = 1.0
+    h[0, F - 1] = 1.0  # anchor flag channel
+    h[1, F - 1] = 1.0
+    mask[:n] = 1.0
+    return x, h, mask
+
+
+def build_corpus(size: int, seed: int = 1234):
+    """Build `size` fragments and the stacked training tensors."""
+    rng = np.random.default_rng(seed)
+    frags = [make_fragment(rng) for _ in range(size)]
+    xs, hs, ms = zip(*(fragment_to_tensors(f) for f in frags))
+    return frags, np.stack(xs), np.stack(hs), np.stack(ms)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Pallas EGNN layer (and the AD-capable twin).
+
+`egnn_layer_ref` is the correctness reference the kernel is pinned against
+in pytest.  It is also used on the *training* path (train_step): the loss
+needs reverse-mode AD through the layer and the interpret-mode pallas_call
+is kept off the gradient tape (DESIGN.md §2, L2 notes) — inference volume
+dominates training volume in MOFA by orders of magnitude (Table I), so the
+Pallas kernel sits on the sampling path where the FLOPs are.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.nn import sigmoid
+
+
+def _silu(v):
+    return v * sigmoid(v)
+
+
+def egnn_layer_ref(x, h, mask, we1, be1, we2, be2, wx, wh1, bh1, wh2, bh2):
+    """Batched EGNN layer, vectorized jnp. Shapes as in kernels.egnn."""
+    b, n, _ = x.shape
+    hidden = h.shape[-1]
+
+    diff = x[:, :, None, :] - x[:, None, :, :]  # (B, N, N, 3)
+    d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)  # (B, N, N, 1)
+
+    hi = jnp.broadcast_to(h[:, :, None, :], (b, n, n, hidden))
+    hj = jnp.broadcast_to(h[:, None, :, :], (b, n, n, hidden))
+    eij = jnp.concatenate([hi, hj, d2], axis=-1)  # (B, N, N, 2H+1)
+
+    m = _silu(eij @ we1 + be1)
+    m = _silu(m @ we2 + be2)  # (B, N, N, H)
+
+    pair = mask[:, :, None, 0:1] * mask[:, None, :, 0:1]  # (B, N, N, 1)
+    eye = jnp.eye(n, dtype=bool)[None, :, :, None]
+    pair = jnp.where(eye, 0.0, pair)
+    m = m * pair
+
+    coef = (m @ wx) / (jnp.sqrt(d2 + 1e-6) + 1.0)  # (B, N, N, 1)
+    xo = x + jnp.sum(diff * coef, axis=2) * mask
+
+    magg = jnp.sum(m, axis=2)  # (B, N, H)
+    hin = jnp.concatenate([h, magg], axis=-1)
+    ho = h + (_silu(hin @ wh1 + bh1) @ wh2 + bh2)
+    ho = ho * mask
+    return xo, ho

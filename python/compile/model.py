@@ -1,0 +1,350 @@
+"""Layer-2 JAX model: MOFLinker, an E(3)-equivariant diffusion model.
+
+MOFA's generative component (paper §III-B) is DiffLinker fine-tuned on hMOF
+fragments.  This module is the reproduction's equivalent: a DDPM over linker
+point clouds with an EGNN denoiser.  Three jitted entrypoints are AOT-lowered
+to HLO text by `aot.py` and executed from the Rust coordinator via PJRT:
+
+  * ``sample``        — full reverse diffusion (lax.scan over T steps),
+                        Pallas EGNN kernel on the hot path;
+  * ``denoise_step``  — single eps prediction (tests / benches);
+  * ``train_step``    — one Adam step on the denoising MSE (uses the jnp
+                        oracle layer so reverse-mode AD applies; see ref.py).
+
+The parameter vector is a single flat ``f32[P]`` so the Rust side treats the
+model as opaque tensors; the layout is emitted into ``meta.json``.
+
+State representation (matches rust/src/genai/decode.rs):
+  coords  x : (B, N, 3)  — Å, CoM-free for real atoms
+  feats   h : (B, N, F)  — one-hot over ELEMENTS + anchor-flag channel
+  mask      : (B, N, 1)  — 1.0 for real atom slots
+By convention atom slots 0 and 1 are the two anchor atoms (the carboxylate /
+nitrile carbon that later becomes the At / Fr dummy site).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.egnn import egnn_layer
+from .kernels.ref import egnn_layer_ref
+
+# ---------------------------------------------------------------------------
+# Dimensions (mirrored in artifacts/meta.json and rust/src/runtime/artifacts.rs)
+# ---------------------------------------------------------------------------
+N = 16  # atom slots per linker
+ELEMENTS = ["C", "N", "O", "S"]  # heavy-atom vocabulary (H implicit)
+F = len(ELEMENTS) + 1  # + anchor flag channel
+H = 64  # hidden width
+L = 3  # EGNN layers
+TFEAT = 4  # time-embedding features
+T_STEPS = 64  # diffusion steps
+B_GEN = 16  # generation batch
+B_TRAIN = 32  # training batch
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0  # global-norm clip
+
+# Interfaces (corpus, Rust decode) speak Å; the network sees reduced units
+# so pairwise d² stays O(1) at every noise level (training stability).
+COORD_SCALE = 4.0
+
+# ---------------------------------------------------------------------------
+# Noise schedule (cosine, Nichol & Dhariwal) — baked into the HLO as consts.
+# ---------------------------------------------------------------------------
+
+
+def _cosine_abar(t_steps: int) -> np.ndarray:
+    s = 0.008
+    ts = np.arange(t_steps + 1, dtype=np.float64)
+    f = np.cos((ts / t_steps + s) / (1 + s) * np.pi / 2) ** 2
+    abar = f / f[0]
+    return abar  # length T+1, abar[0] = 1
+
+_ABAR_RAW = _cosine_abar(T_STEPS)
+# Clip per-step alpha at 0.8 so 1/sqrt(alpha_t) in the reverse update stays
+# bounded (the raw cosine tail at T=64 otherwise amplifies x by >10x/step
+# and the sampler diverges), then rebuild abar as the cumprod of the
+# *clipped* alphas so q-sampling (training) and the reverse process agree.
+_ALPHA_NP = np.clip(_ABAR_RAW[1:] / _ABAR_RAW[:-1], 0.8, 0.9999)
+_ABAR_NP = np.cumprod(_ALPHA_NP)
+ALPHA = jnp.asarray(_ALPHA_NP, jnp.float32)
+ALPHA_BAR = jnp.asarray(_ABAR_NP, dtype=jnp.float32)  # (T,)
+BETA = 1.0 - ALPHA
+ALPHA_BAR_PREV = jnp.asarray(
+    np.concatenate([[1.0], _ABAR_NP[:-1]]), dtype=jnp.float32
+)
+# posterior variance beta_tilde_t = beta_t (1 - abar_{t-1}) / (1 - abar_t)
+SIGMA = jnp.sqrt(BETA * (1.0 - ALPHA_BAR_PREV) / (1.0 - ALPHA_BAR) + 1e-12)
+
+# ---------------------------------------------------------------------------
+# Flat-parameter layout
+# ---------------------------------------------------------------------------
+
+
+def param_layout():
+    """Return [(name, shape)] in flat-vector order."""
+    shapes = [("w_in", (F + TFEAT, H)), ("b_in", (H,))]
+    for l in range(L):
+        shapes += [
+            (f"l{l}.we1", (2 * H + 1, H)),
+            (f"l{l}.be1", (H,)),
+            (f"l{l}.we2", (H, H)),
+            (f"l{l}.be2", (H,)),
+            (f"l{l}.wx", (H, 1)),
+            (f"l{l}.wh1", (2 * H, H)),
+            (f"l{l}.bh1", (H,)),
+            (f"l{l}.wh2", (H, H)),
+            (f"l{l}.bh2", (H,)),
+        ]
+    shapes += [("w_out", (H, F)), ("b_out", (F,))]
+    return shapes
+
+
+LAYOUT = param_layout()
+P_TOTAL = sum(int(np.prod(s)) for _, s in LAYOUT)
+
+
+def unpack(flat):
+    """Flat f32[P] -> dict of named arrays (static slices, fuses away)."""
+    out = {}
+    off = 0
+    for name, shape in LAYOUT:
+        size = int(np.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(seed: int = 0) -> np.ndarray:
+    """Xavier-ish init; wx near zero so initial coord updates are tame."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in LAYOUT:
+        if name.endswith(("be1", "be2", "bh1", "bh2", "b_in", "b_out")):
+            chunks.append(np.zeros(shape, np.float32))
+        elif name.endswith("wx"):
+            chunks.append(rng.normal(0, 1e-3, shape).astype(np.float32))
+        elif name.endswith(("w_out", "wh2")):
+            # small init: residual/readout paths start near-identity
+            chunks.append(
+                rng.normal(0, 1e-2 / np.sqrt(shape[0]), shape).astype(np.float32)
+            )
+        else:
+            fan_in = shape[0]
+            chunks.append(
+                rng.normal(0, 1.0 / np.sqrt(fan_in), shape).astype(np.float32)
+            )
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (eps prediction)
+# ---------------------------------------------------------------------------
+
+
+def _time_feats(t_frac, batch: int):
+    """t_frac: scalar or (B,) in [0,1] -> (B, TFEAT)."""
+    t = jnp.broadcast_to(jnp.asarray(t_frac, jnp.float32), (batch,))
+    return jnp.stack(
+        [t, jnp.sin(2 * jnp.pi * t), jnp.cos(2 * jnp.pi * t), jnp.sqrt(t + 1e-8)],
+        axis=-1,
+    )
+
+
+def _com_project(x, mask):
+    """Remove the masked centre of mass (translation invariance)."""
+    denom = jnp.sum(mask, axis=1, keepdims=True) + 1e-8
+    com = jnp.sum(x * mask, axis=1, keepdims=True) / denom
+    return (x - com) * mask
+
+
+def forward(flat_params, x, h_feats, mask, t_frac, *, use_pallas: bool):
+    """Predict (eps_x, eps_h) for noisy state (x, h) at time t.
+
+    `x` is in *reduced* units (Å / COORD_SCALE); see module docstring.
+    """
+    p = unpack(flat_params)
+    b = x.shape[0]
+    layer = egnn_layer if use_pallas else egnn_layer_ref
+
+    tf = _time_feats(t_frac, b)[:, None, :]  # (B,1,TFEAT)
+    tf = jnp.broadcast_to(tf, (b, N, TFEAT))
+    h = jnp.concatenate([h_feats, tf], axis=-1) @ p["w_in"] + p["b_in"]
+    h = h * mask
+    x_in = x
+    for l in range(L):
+        x, h = layer(
+            x,
+            h,
+            mask,
+            p[f"l{l}.we1"],
+            p[f"l{l}.be1"],
+            p[f"l{l}.we2"],
+            p[f"l{l}.be2"],
+            p[f"l{l}.wx"],
+            p[f"l{l}.wh1"],
+            p[f"l{l}.bh1"],
+            p[f"l{l}.wh2"],
+            p[f"l{l}.bh2"],
+        )
+    eps_x = _com_project((x - x_in) * mask, mask)
+    eps_h = (h @ p["w_out"] + p["b_out"]) * mask
+    return eps_x, eps_h
+
+
+# ---------------------------------------------------------------------------
+# Entrypoints lowered to HLO
+# ---------------------------------------------------------------------------
+
+
+def denoise_step(flat_params, x, h, mask, t_frac):
+    """Single eps prediction (Pallas path). t_frac: f32 scalar in [0,1].
+
+    Takes `x` in Å (interface convention); eps is unit-free noise.
+    """
+    ex, eh = forward(
+        flat_params, x / COORD_SCALE, h, mask, t_frac, use_pallas=True
+    )
+    return ex, eh
+
+
+def sample_step(flat_params, x, h, mask, t_frac, alpha, abar, beta, sigma, nonzero, zx, zh):
+    """One reverse-diffusion step (Pallas hot path), scan-free.
+
+    GOTCHA (DESIGN.md §2, EXPERIMENTS.md): HLO while-loops (`lax.scan`)
+    silently produce NaN through the HLO-text → xla_extension 0.5.1 path,
+    so the T-step loop lives on the Rust side (`runtime::Runtime::sample`),
+    which passes the schedule scalars for step t explicitly. `x`, the
+    carried state, is in *reduced* units between steps; the Rust caller
+    multiplies by COORD_SCALE after the final step (`prep_init` /
+    `finish` helpers are Rust-side).
+
+    Scalars: t_frac=(t+1)/T, alpha=ALPHA[t], abar=ALPHA_BAR[t],
+    beta=BETA[t], sigma=SIGMA[t], nonzero=1.0 if t>0 else 0.0.
+    """
+    x = _com_project(x, mask)
+    h = h * mask
+    ex, eh = forward(flat_params, x, h, mask, t_frac, use_pallas=True)
+    coef = beta / jnp.sqrt(1.0 - abar)
+    mean_x = (x - coef * ex) / jnp.sqrt(alpha)
+    mean_h = (h - coef * eh) / jnp.sqrt(alpha)
+    x_next = mean_x + nonzero * sigma * _com_project(zx, mask)
+    h_next = mean_h + nonzero * sigma * zh * mask
+    return _com_project(x_next, mask), h_next * mask
+
+
+def sample_loop(flat_params, x_init, h_init, mask, zs_x, zs_h):
+    """Full reverse diffusion via a *python* loop over sample_step.
+
+    Mirrors exactly what the Rust runtime does (64 sample_step executions);
+    used by pytest to pin the Rust loop's semantics. Returns (x0 Å, h0).
+    """
+    x = x_init
+    h = h_init
+    step_fn = jax.jit(sample_step)
+    for t in range(T_STEPS - 1, -1, -1):
+        x, h = step_fn(
+            flat_params,
+            x,
+            h,
+            mask,
+            jnp.float32((t + 1.0) / T_STEPS),
+            ALPHA[t],
+            ALPHA_BAR[t],
+            BETA[t],
+            SIGMA[t],
+            jnp.float32(1.0 if t > 0 else 0.0),
+            zs_x[T_STEPS - 1 - t],
+            zs_h[T_STEPS - 1 - t],
+        )
+    return x * COORD_SCALE, h
+
+
+def _loss(flat_params, x0, h0, mask, t_idx, noise_x, noise_h):
+    """Denoising MSE at integer timesteps t_idx (B,). x0 in Å."""
+    x0 = _com_project(x0 / COORD_SCALE, mask)
+    nx = _com_project(noise_x, mask)
+    nh = noise_h * mask
+    ab = ALPHA_BAR[t_idx][:, None, None]  # (B,1,1)
+    xt = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * nx
+    ht = jnp.sqrt(ab) * h0 * mask + jnp.sqrt(1.0 - ab) * nh
+    t_frac = (t_idx.astype(jnp.float32) + 1.0) / T_STEPS
+    ex, eh = forward(flat_params, xt, ht, mask, t_frac, use_pallas=False)
+    denom = jnp.sum(mask) + 1e-8
+    lx = jnp.sum((ex - nx) ** 2) / (denom * 3.0)
+    lh = jnp.sum((eh - nh) ** 2) / (denom * F)
+    return lx + lh
+
+
+def train_step(flat_params, m, v, step, x0, h0, mask, t_idx, noise_x, noise_h):
+    """One Adam step. Returns (params', m', v', step', loss)."""
+    loss, g = jax.value_and_grad(_loss)(
+        flat_params, x0, h0, mask, t_idx, noise_x, noise_h
+    )
+    gnorm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    g = g * jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    step = step + 1.0
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1**step)
+    vhat = v / (1 - ADAM_B2**step)
+    params = flat_params - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params, m, v, step, loss
+
+
+# ---------------------------------------------------------------------------
+# Example-argument shapes for lowering
+# ---------------------------------------------------------------------------
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def sample_step_specs():
+    s = spec((), jnp.float32)
+    return (
+        spec((P_TOTAL,)),
+        spec((B_GEN, N, 3)),
+        spec((B_GEN, N, F)),
+        spec((B_GEN, N, 1)),
+        s,  # t_frac
+        s,  # alpha
+        s,  # abar
+        s,  # beta
+        s,  # sigma
+        s,  # nonzero
+        spec((B_GEN, N, 3)),
+        spec((B_GEN, N, F)),
+    )
+
+
+def denoise_specs():
+    return (
+        spec((P_TOTAL,)),
+        spec((B_GEN, N, 3)),
+        spec((B_GEN, N, F)),
+        spec((B_GEN, N, 1)),
+        spec((), jnp.float32),
+    )
+
+
+def train_specs():
+    return (
+        spec((P_TOTAL,)),
+        spec((P_TOTAL,)),
+        spec((P_TOTAL,)),
+        spec((), jnp.float32),
+        spec((B_TRAIN, N, 3)),
+        spec((B_TRAIN, N, F)),
+        spec((B_TRAIN, N, 1)),
+        spec((B_TRAIN,), jnp.int32),
+        spec((B_TRAIN, N, 3)),
+        spec((B_TRAIN, N, F)),
+    )

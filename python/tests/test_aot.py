@@ -1,0 +1,87 @@
+"""Compile-path checks: artifacts exist, parse, and match the model dims."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def art(name):
+    return os.path.join(ART, name)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(art("meta.json")), reason="run `make artifacts` first"
+)
+
+
+@needs_artifacts
+class TestArtifacts:
+    def test_all_files_present(self):
+        for name in [
+            "sample_step.hlo.txt",
+            "denoise_step.hlo.txt",
+            "train_step.hlo.txt",
+            "params_init.bin",
+            "params_random.bin",
+            "meta.json",
+            "seed_linkers.json",
+        ]:
+            assert os.path.exists(art(name)), name
+
+    def test_meta_matches_model(self):
+        meta = json.load(open(art("meta.json")))
+        assert meta["n_atoms"] == model.N
+        assert meta["elements"] == model.ELEMENTS
+        assert meta["p_total"] == model.P_TOTAL
+        assert meta["t_steps"] == model.T_STEPS
+        assert meta["coord_scale"] == model.COORD_SCALE
+        assert len(meta["alpha"]) == model.T_STEPS
+        np.testing.assert_allclose(
+            meta["alpha_bar"], np.asarray(model.ALPHA_BAR), rtol=1e-6
+        )
+
+    def test_params_sizes(self):
+        for name in ["params_init.bin", "params_random.bin"]:
+            data = np.fromfile(art(name), dtype="<f4")
+            assert data.shape == (model.P_TOTAL,), name
+            assert np.isfinite(data).all(), name
+
+    def test_pretraining_reduced_loss(self):
+        meta = json.load(open(art("meta.json")))
+        assert meta["pretrain_loss_last"] < 0.5 * meta["pretrain_loss_first"]
+
+    def test_hlo_text_is_hlo(self):
+        # HLO *text* is the interchange format (not serialized protos):
+        # it must start with an HloModule header the 0.5.1 parser accepts.
+        for name in ["sample_step", "denoise_step", "train_step"]:
+            head = open(art(f"{name}.hlo.txt")).read(200)
+            assert head.startswith("HloModule"), f"{name}: {head[:40]!r}"
+
+    def test_hlo_while_loop_budget(self):
+        """Regression guard for the 0.5.1 interchange bug: a `lax.scan`
+        over the T diffusion steps lowers to an *extra* while-loop that
+        silently produces NaN through the text path (see model.sample_step
+        docstring). The Pallas grid loop contributes at most one benign
+        while per entrypoint (validated numerically by the Rust runtime
+        round-trip tests), so the budget is ≤1."""
+        for name in ["sample_step", "denoise_step", "train_step"]:
+            text = open(art(f"{name}.hlo.txt")).read()
+            n = text.count(" while(")
+            assert n <= 1, f"{name} has {n} while loops (scan reintroduced?)"
+
+    def test_seed_corpus_schema(self):
+        corpus = json.load(open(art("seed_linkers.json")))
+        assert len(corpus) >= 256
+        for frag in corpus[:8]:
+            assert frag["anchors"] == [0, 1]
+            assert len(frag["elements"]) == len(frag["coords"])
+            assert frag["family"] in ("BCA", "BZN")
+            # anchor element encodes the family
+            want = "C" if frag["family"] == "BCA" else "N"
+            assert frag["elements"][0] == want

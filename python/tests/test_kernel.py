@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas EGNN kernel vs pure-jnp oracle.
+
+The CORE correctness signal for the compile path: the kernel that sits on
+MOFA's sampling hot path must agree with ref.py to float32 tolerance for
+every shape/mask/scale regime hypothesis can reach.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.egnn import egnn_layer
+from compile.kernels.ref import egnn_layer_ref
+
+HID = 32  # smaller hidden dim for sweep speed; model.H covered in test_model
+
+
+def _weights(rng, hidden):
+    return [
+        rng.normal(0, 0.2, s).astype(np.float32)
+        for s in [
+            (2 * hidden + 1, hidden),
+            (hidden,),
+            (hidden, hidden),
+            (hidden,),
+            (hidden, 1),
+            (2 * hidden, hidden),
+            (hidden,),
+            (hidden, hidden),
+            (hidden,),
+        ]
+    ]
+
+
+def _run_both(b, n, hidden, seed, mask_p=0.8, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(b, n, 3)) * scale).astype(np.float32)
+    h = rng.normal(size=(b, n, hidden)).astype(np.float32)
+    mask = (rng.random((b, n, 1)) < mask_p).astype(np.float32)
+    ws = _weights(rng, hidden)
+    got = egnn_layer(x, h, mask, *ws)
+    want = egnn_layer_ref(x, h, mask, *ws)
+    return got, want
+
+
+class TestKernelVsRef:
+    def test_basic_allclose(self):
+        (gx, gh), (wx, wh) = _run_both(4, 16, HID, seed=0)
+        np.testing.assert_allclose(gx, wx, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(gh, wh, atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 6),
+        n=st.sampled_from([4, 8, 16]),
+        hidden=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 10_000),
+        mask_p=st.floats(0.2, 1.0),
+        scale=st.floats(0.1, 10.0),
+    )
+    def test_hypothesis_sweep(self, b, n, hidden, seed, mask_p, scale):
+        (gx, gh), (wx, wh) = _run_both(b, n, hidden, seed, mask_p, scale)
+        np.testing.assert_allclose(gx, wx, atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(gh, wh, atol=3e-4, rtol=3e-4)
+
+    def test_all_masked_out_is_noop(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(2, 8, 3)).astype(np.float32)
+        h = rng.normal(size=(2, 8, HID)).astype(np.float32)
+        mask = np.zeros((2, 8, 1), np.float32)
+        ws = _weights(rng, HID)
+        xo, ho = egnn_layer(x, h, mask, *ws)
+        # masked-out atoms keep coordinates (no update) and zeroed features
+        np.testing.assert_allclose(xo, x, atol=1e-6)
+        np.testing.assert_allclose(ho, np.zeros_like(ho), atol=1e-6)
+
+    def test_single_atom_no_selfinteraction(self):
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(1, 4, 3)).astype(np.float32)
+        h = rng.normal(size=(1, 4, HID)).astype(np.float32)
+        mask = np.zeros((1, 4, 1), np.float32)
+        mask[0, 0] = 1.0  # only one real atom -> no edges -> x unchanged
+        ws = _weights(rng, HID)
+        xo, _ = egnn_layer(x, h, mask, *ws)
+        np.testing.assert_allclose(xo[0, 0], x[0, 0], atol=1e-6)
+
+
+class TestEquivariance:
+    """The kernel must be E(3)-equivariant: rotate input -> rotated output."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_rotation_equivariance(self, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.normal(size=(3, 3))
+        u, _, vt = np.linalg.svd(q)
+        rot = (u @ vt).astype(np.float32)
+        x = rng.normal(size=(2, 8, 3)).astype(np.float32)
+        h = rng.normal(size=(2, 8, HID)).astype(np.float32)
+        mask = np.ones((2, 8, 1), np.float32)
+        ws = _weights(rng, HID)
+        xo, ho = egnn_layer(x, h, mask, *ws)
+        xr, hr = egnn_layer(x @ rot.T, h, mask, *ws)
+        np.testing.assert_allclose(xr, np.asarray(xo) @ rot.T, atol=2e-4)
+        np.testing.assert_allclose(hr, ho, atol=2e-4)  # features invariant
+
+    def test_translation_equivariance(self):
+        rng = np.random.default_rng(7)
+        t = np.array([5.0, -3.0, 11.0], np.float32)
+        x = rng.normal(size=(2, 8, 3)).astype(np.float32)
+        h = rng.normal(size=(2, 8, HID)).astype(np.float32)
+        mask = np.ones((2, 8, 1), np.float32)
+        ws = _weights(rng, HID)
+        xo, ho = egnn_layer(x, h, mask, *ws)
+        xt, ht = egnn_layer(x + t, h, mask, *ws)
+        np.testing.assert_allclose(xt, np.asarray(xo) + t, atol=1e-4)
+        np.testing.assert_allclose(ht, ho, atol=1e-5)
+
+    def test_permutation_equivariance(self):
+        rng = np.random.default_rng(8)
+        perm = rng.permutation(8)
+        x = rng.normal(size=(1, 8, 3)).astype(np.float32)
+        h = rng.normal(size=(1, 8, HID)).astype(np.float32)
+        mask = np.ones((1, 8, 1), np.float32)
+        ws = _weights(rng, HID)
+        xo, ho = egnn_layer(x, h, mask, *ws)
+        xp, hp = egnn_layer(x[:, perm], h[:, perm], mask, *ws)
+        np.testing.assert_allclose(xp, np.asarray(xo)[:, perm], atol=1e-4)
+        np.testing.assert_allclose(hp, np.asarray(ho)[:, perm], atol=1e-4)
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [np.float32])
+    def test_dtype_roundtrip(self, dtype):
+        rng = np.random.default_rng(11)
+        x = rng.normal(size=(2, 8, 3)).astype(dtype)
+        h = rng.normal(size=(2, 8, HID)).astype(dtype)
+        mask = np.ones((2, 8, 1), dtype)
+        ws = [w.astype(dtype) for w in _weights(rng, HID)]
+        xo, ho = egnn_layer(x, h, mask, *ws)
+        assert np.asarray(xo).dtype == dtype
+        assert np.asarray(ho).dtype == dtype
+        assert np.isfinite(np.asarray(xo)).all()
+        assert np.isfinite(np.asarray(ho)).all()

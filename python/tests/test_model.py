@@ -1,0 +1,233 @@
+"""L2 correctness: MOFLinker diffusion model (shapes, loss, invariances)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import corpus, model
+
+
+@pytest.fixture(scope="module")
+def data():
+    frags, xs, hs, ms = corpus.build_corpus(64, seed=7)
+    return frags, xs, hs, ms
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(model.init_params(3))
+
+
+class TestSchedule:
+    def test_alpha_bar_monotone(self):
+        ab = np.asarray(model.ALPHA_BAR)
+        assert (np.diff(ab) < 0).all()
+        assert 0 < ab[-1] < ab[0] <= 1.0
+
+    def test_sigma_finite_positive(self):
+        s = np.asarray(model.SIGMA)
+        assert np.isfinite(s).all()
+        assert (s >= 0).all()
+
+    def test_alpha_beta_consistent(self):
+        np.testing.assert_allclose(
+            np.asarray(model.ALPHA) + np.asarray(model.BETA), 1.0, atol=1e-6
+        )
+
+
+class TestParamLayout:
+    def test_total_matches_layout(self):
+        total = sum(int(np.prod(s)) for _, s in model.LAYOUT)
+        assert total == model.P_TOTAL
+
+    def test_unpack_shapes(self, params):
+        p = model.unpack(params)
+        assert p["w_in"].shape == (model.F + model.TFEAT, model.H)
+        assert p["w_out"].shape == (model.H, model.F)
+        for l in range(model.L):
+            assert p[f"l{l}.we1"].shape == (2 * model.H + 1, model.H)
+
+    def test_unpack_roundtrip_values(self, params):
+        p = model.unpack(params)
+        flat0 = np.asarray(params)[: (model.F + model.TFEAT) * model.H]
+        np.testing.assert_array_equal(
+            np.asarray(p["w_in"]).reshape(-1), flat0
+        )
+
+
+class TestForward:
+    def test_denoise_shapes(self, params, data):
+        _, xs, hs, ms = data
+        b = model.B_GEN
+        ex, eh = jax.jit(model.denoise_step)(
+            params, xs[:b], hs[:b], ms[:b], jnp.float32(0.5)
+        )
+        assert ex.shape == (b, model.N, 3)
+        assert eh.shape == (b, model.N, model.F)
+        assert np.isfinite(np.asarray(ex)).all()
+
+    def test_eps_x_com_free(self, params, data):
+        _, xs, hs, ms = data
+        b = model.B_GEN
+        ex, _ = jax.jit(model.denoise_step)(
+            params, xs[:b], hs[:b], ms[:b], jnp.float32(0.3)
+        )
+        com = np.asarray(jnp.sum(ex * ms[:b], axis=1))
+        np.testing.assert_allclose(com, 0.0, atol=1e-4)
+
+    def test_masked_slots_untouched(self, params, data):
+        _, xs, hs, ms = data
+        b = model.B_GEN
+        ex, eh = jax.jit(model.denoise_step)(
+            params, xs[:b], hs[:b], ms[:b], jnp.float32(0.3)
+        )
+        pad = np.asarray(ms[:b]) == 0.0
+        assert np.abs(np.asarray(ex)[pad[..., 0]]).max() < 1e-6
+        assert np.abs(np.asarray(eh)[pad[..., 0]]).max() < 1e-6
+
+    def test_rotation_equivariance_full_model(self, params, data):
+        _, xs, hs, ms = data
+        b = model.B_GEN
+        rng = np.random.default_rng(0)
+        q = rng.normal(size=(3, 3))
+        u, _, vt = np.linalg.svd(q)
+        rot = (u @ vt).astype(np.float32)
+        f = jax.jit(model.denoise_step)
+        ex, eh = f(params, xs[:b], hs[:b], ms[:b], jnp.float32(0.5))
+        exr, ehr = f(params, xs[:b] @ rot.T, hs[:b], ms[:b], jnp.float32(0.5))
+        np.testing.assert_allclose(exr, np.asarray(ex) @ rot.T, atol=3e-4)
+        np.testing.assert_allclose(ehr, eh, atol=3e-4)
+
+
+class TestSample:
+    def test_sample_shapes_and_finite(self, params, data):
+        _, xs, hs, ms = data
+        b, n, f, t = model.B_GEN, model.N, model.F, model.T_STEPS
+        rng = np.random.default_rng(5)
+        x0, h0 = model.sample_loop(
+            params,
+            rng.normal(size=(b, n, 3)).astype(np.float32),
+            rng.normal(size=(b, n, f)).astype(np.float32),
+            ms[:b],
+            rng.normal(size=(t, b, n, 3)).astype(np.float32),
+            rng.normal(size=(t, b, n, f)).astype(np.float32),
+        )
+        assert x0.shape == (b, n, 3)
+        assert h0.shape == (b, n, f)
+        assert np.isfinite(np.asarray(x0)).all()
+        assert np.isfinite(np.asarray(h0)).all()
+
+    def test_sample_respects_mask(self, params, data):
+        _, xs, hs, ms = data
+        b, n, f, t = model.B_GEN, model.N, model.F, model.T_STEPS
+        rng = np.random.default_rng(6)
+        x0, h0 = model.sample_loop(
+            params,
+            rng.normal(size=(b, n, 3)).astype(np.float32),
+            rng.normal(size=(b, n, f)).astype(np.float32),
+            ms[:b],
+            rng.normal(size=(t, b, n, 3)).astype(np.float32),
+            rng.normal(size=(t, b, n, f)).astype(np.float32),
+        )
+        pad = np.asarray(ms[:b]) == 0.0
+        assert np.abs(np.asarray(h0)[pad[..., 0]]).max() < 1e-5
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, params, data):
+        """A few Adam steps on a fixed batch must reduce the loss."""
+        _, xs, hs, ms = data
+        bt = model.B_TRAIN
+        rng = np.random.default_rng(9)
+        t_idx = rng.integers(0, model.T_STEPS, bt).astype(np.int32)
+        nx = rng.normal(size=(bt, model.N, 3)).astype(np.float32)
+        nh = rng.normal(size=(bt, model.N, model.F)).astype(np.float32)
+        train = jax.jit(model.train_step)
+        p = params
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        step = jnp.float32(0.0)
+        losses = []
+        for _ in range(30):
+            p, m, v, step, loss = train(
+                p, m, v, step, xs[:bt], hs[:bt], ms[:bt], t_idx, nx, nh
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_step_counter_increments(self, params, data):
+        _, xs, hs, ms = data
+        bt = model.B_TRAIN
+        rng = np.random.default_rng(10)
+        t_idx = rng.integers(0, model.T_STEPS, bt).astype(np.int32)
+        nx = rng.normal(size=(bt, model.N, 3)).astype(np.float32)
+        nh = rng.normal(size=(bt, model.N, model.F)).astype(np.float32)
+        _, _, _, step, _ = jax.jit(model.train_step)(
+            params,
+            jnp.zeros_like(params),
+            jnp.zeros_like(params),
+            jnp.float32(4.0),
+            xs[:bt],
+            hs[:bt],
+            ms[:bt],
+            t_idx,
+            nx,
+            nh,
+        )
+        assert float(step) == 5.0
+
+    def test_gradient_nonzero(self, params, data):
+        _, xs, hs, ms = data
+        bt = model.B_TRAIN
+        rng = np.random.default_rng(11)
+        t_idx = rng.integers(0, model.T_STEPS, bt).astype(np.int32)
+        nx = rng.normal(size=(bt, model.N, 3)).astype(np.float32)
+        nh = rng.normal(size=(bt, model.N, model.F)).astype(np.float32)
+        p2, *_ = jax.jit(model.train_step)(
+            params,
+            jnp.zeros_like(params),
+            jnp.zeros_like(params),
+            jnp.float32(0.0),
+            xs[:bt],
+            hs[:bt],
+            ms[:bt],
+            t_idx,
+            nx,
+            nh,
+        )
+        assert float(jnp.abs(p2 - params).max()) > 0.0
+
+
+class TestCorpus:
+    def test_fragment_conventions(self, data):
+        frags, xs, hs, ms = data
+        for fr in frags:
+            assert fr["anchors"] == [0, 1]
+            assert len(fr["elements"]) <= model.N
+            a = fr["elements"][0]
+            assert a == ("C" if fr["family"] == "BCA" else "N")
+
+    def test_tensors_com_free_and_masked(self, data):
+        _, xs, hs, ms = data
+        com = (xs * ms).sum(1) / ms.sum(1)
+        np.testing.assert_allclose(com, 0.0, atol=1e-3)
+        # features zero where masked
+        assert np.abs(hs[ms[..., 0] == 0.0]).max() == 0.0
+
+    def test_anchor_flags_set(self, data):
+        _, xs, hs, ms = data
+        assert (hs[:, 0, model.F - 1] == 1.0).all()
+        assert (hs[:, 1, model.F - 1] == 1.0).all()
+
+    def test_bond_lengths_reasonable(self, data):
+        frags, *_ = data
+        for fr in frags[:16]:
+            c = np.asarray(fr["coords"])
+            n = len(fr["elements"])
+            # nearest-neighbour distance of every atom within [0.9, 2.2] Å
+            d = np.linalg.norm(c[:n, None] - c[None, :n], axis=-1)
+            np.fill_diagonal(d, np.inf)
+            nn = d.min(axis=1)
+            assert (nn > 0.8).all() and (nn < 2.3).all()

@@ -1,0 +1,71 @@
+//! Fig. 3 + Fig. 4 reproduction: worker active time and per-type
+//! utilization over the campaign.
+//!
+//! Fig. 3 claim: workers of all task types spend >99 % of their time
+//! executing tasks. Fig. 4 claim: utilization is roughly constant over the
+//! run for all worker types except the single-node trainer (bursty early,
+//! then waits on new data).
+//!
+//!     cargo bench --bench fig3_fig4_utilization [-- minutes]
+
+use std::sync::Arc;
+
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::resources::WorkerKind;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: f64 = std::env::args()
+        .skip(1)
+        .find(|a| a != "--bench")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20.0);
+    let nodes = 64;
+    println!("== Fig. 3/4: utilization ({nodes} nodes, {minutes:.0} min virtual) ==\n");
+
+    let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+    engines.generator.set_params(vec![], 3); // steady-state survival
+    let config = CampaignConfig {
+        nodes,
+        duration_s: minutes * 60.0,
+        seed: 17,
+        policy: PolicyConfig { retrain_min: 32, ..Default::default() },
+        threads: 0,
+        util_sample_dt: (minutes * 60.0 / 24.0).max(30.0),
+    };
+    let report = run_campaign(config, Arc::clone(&engines));
+
+    println!("-- Fig. 3: mean active time per worker type --");
+    for k in WorkerKind::ALL {
+        println!(
+            "  {:<10} {:>6.2}%",
+            k.label(),
+            100.0 * report.utilization_avg[&k]
+        );
+    }
+    println!("  (paper: >99% for generate/validate/optimize workers; cpu pool");
+    println!("   hosts best-effort post-processing on idle cores by design)");
+
+    println!("\n-- Fig. 4: utilization over time (busy fraction per type) --");
+    println!(
+        "{:>8} {:>10} {:>10} {:>8} {:>10} {:>9}",
+        "t (min)", "generator", "validate", "cpu", "optimize", "trainer"
+    );
+    for (t, row) in &report.util_series {
+        println!(
+            "{:>8.0} {:>9.0}% {:>9.0}% {:>7.0}% {:>9.0}% {:>8.0}%",
+            t / 60.0,
+            row[0] * 100.0,
+            row[1] * 100.0,
+            row[2] * 100.0,
+            row[3] * 100.0,
+            row[4] * 100.0
+        );
+    }
+    println!(
+        "\npaper: generator/validate/optimize flat near 100%; trainer bursty\n\
+         early (retraining on any stable MOF) then intermittent."
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Fig. 5 reproduction: sustained stage throughput vs cluster size.
+//!
+//! Runs campaigns at increasing node counts and extracts each stage's
+//! sustained rate (linear regression over cumulative completions, the
+//! paper's methodology). The claim under test: throughput scales linearly
+//! from the smallest node count (dashed "ideal" column).
+//!
+//!     cargo bench --bench fig5_scaling [-- minutes]
+
+use std::sync::Arc;
+
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: f64 = std::env::args()
+        .skip(1)
+        .find(|a| a != "--bench")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15.0);
+    let node_counts = [8usize, 16, 32, 64, 128];
+    let stages = [
+        (TaskKind::GenerateLinkers, "linkers generated"),
+        (TaskKind::AssembleMofs, "MOFs assembled"),
+        (TaskKind::ValidateStructure, "structures validated"),
+        (TaskKind::OptimizeCells, "cells optimized"),
+    ];
+
+    println!("== Fig. 5: sustained throughput (items/hour) vs nodes ==");
+    println!("({minutes:.0} min virtual campaigns, corpus surrogate)\n");
+
+    let mut base: Option<[f64; 4]> = None;
+    println!(
+        "{:>6} {:>18} {:>18} {:>20} {:>16}",
+        "nodes", stages[0].1, stages[1].1, stages[2].1, stages[3].1
+    );
+    let mut rows = Vec::new();
+    for &nodes in &node_counts {
+        let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+        engines.generator.set_params(vec![], 3); // steady-state model quality
+        let config = CampaignConfig {
+            nodes,
+            duration_s: minutes * 60.0,
+            seed: 13,
+            policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
+            threads: 0,
+            util_sample_dt: 300.0,
+        };
+        let report = run_campaign(config, Arc::clone(&engines));
+        let mut rates = [0.0f64; 4];
+        for (i, (kind, _)) in stages.iter().enumerate() {
+            rates[i] = report.thinker.metrics.sustained_rate_per_hour(*kind);
+        }
+        if base.is_none() {
+            base = Some(rates);
+        }
+        println!(
+            "{:>6} {:>18.0} {:>18.0} {:>20.0} {:>16.1}",
+            nodes, rates[0], rates[1], rates[2], rates[3]
+        );
+        rows.push((nodes, rates));
+    }
+
+    // ideal-scaling comparison from the smallest node count
+    let base = base.unwrap();
+    let n0 = node_counts[0] as f64;
+    println!("\n-- measured / ideal (ideal = smallest-count rate x nodes/{}) --", node_counts[0]);
+    println!(
+        "{:>6} {:>18} {:>18} {:>20}",
+        "nodes", "generated", "assembled", "validated"
+    );
+    for (nodes, rates) in &rows {
+        let s = *nodes as f64 / n0;
+        let ratio = |i: usize| {
+            if base[i] > 0.0 {
+                rates[i] / (base[i] * s)
+            } else {
+                0.0
+            }
+        };
+        println!(
+            "{:>6} {:>17.2}x {:>17.2}x {:>19.2}x",
+            nodes,
+            ratio(0),
+            ratio(1),
+            ratio(2)
+        );
+    }
+    println!("\npaper claim: linear scaling 32 -> 450 nodes (ratios ~= 1.0)");
+    Ok(())
+}

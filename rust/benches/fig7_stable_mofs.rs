@@ -1,0 +1,83 @@
+//! Fig. 7 + §V-C reproduction: stable MOFs over time, with and without
+//! retraining, across node counts.
+//!
+//! Claims under test:
+//!   * stable-MOF count grows (super-linearly early) with time;
+//!   * larger clusters find proportionally more (dashed ideal from the
+//!     smallest run);
+//!   * the retraining ablation: ON finds ~2x the stable MOFs of OFF and a
+//!     higher stable fraction (paper: 5→11 % at 32 nodes, 8→12 % at 64).
+//!
+//!     cargo bench --bench fig7_stable_mofs [-- minutes]
+
+use std::sync::Arc;
+
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig, CampaignReport};
+use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn campaign(nodes: usize, minutes: f64, retrain: bool, seed: u64) -> anyhow::Result<CampaignReport> {
+    let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+    let config = CampaignConfig {
+        nodes,
+        duration_s: minutes * 60.0,
+        seed,
+        policy: PolicyConfig {
+            retrain_enabled: retrain,
+            retrain_min: 32,
+            ..Default::default()
+        },
+        threads: 0,
+        util_sample_dt: 300.0,
+    };
+    Ok(run_campaign(config, Arc::clone(&engines)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let minutes: f64 = std::env::args()
+        .skip(1)
+        .find(|a| a != "--bench")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30.0);
+
+    println!("== Fig. 7: stable MOFs over time ==\n");
+    let marks = [0.25, 0.5, 0.75, 1.0];
+    println!(
+        "{:>6} {:>9} | {:>8} {:>8} {:>8} {:>8} | {:>12} {:>10}",
+        "nodes", "retrain", "t/4", "t/2", "3t/4", "t", "stable/nodehr", "stable %"
+    );
+    let mut base_rate: Option<f64> = None;
+    for nodes in [8usize, 16, 32, 64] {
+        for retrain in [true, false] {
+            let r = campaign(nodes, minutes, retrain, 31)?;
+            let counts: Vec<usize> = marks
+                .iter()
+                .map(|f| r.stable_at(f * minutes * 60.0))
+                .collect();
+            let validated = r.tasks_done[&TaskKind::ValidateStructure];
+            let stable = counts[3];
+            let node_hours = nodes as f64 * minutes / 60.0;
+            let rate = stable as f64 / node_hours;
+            if retrain && base_rate.is_none() {
+                base_rate = Some(rate);
+            }
+            println!(
+                "{:>6} {:>9} | {:>8} {:>8} {:>8} {:>8} | {:>12.2} {:>9.1}%",
+                nodes,
+                if retrain { "ON" } else { "OFF" },
+                counts[0],
+                counts[1],
+                counts[2],
+                counts[3],
+                rate,
+                100.0 * stable as f64 / validated.max(1) as f64
+            );
+        }
+    }
+    println!(
+        "\npaper: 133->313 stable at 90 min (32 nodes, OFF->ON); 393->641 (64 nodes);\n\
+         stable fraction 5->11% and 8->12%; 9.7 stable/node-hour at 450 nodes vs 6.5 at 32."
+    );
+    Ok(())
+}

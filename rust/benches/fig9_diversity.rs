@@ -1,0 +1,149 @@
+//! Fig. 9 reproduction: chemical diversity of generated linkers vs the
+//! reference corpus, in a 2-D projection of the 38-descriptor space.
+//!
+//! Paper: UMAP over 38 RDKit properties shows generated linkers both
+//! overlapping the hMOF region and extending beyond it. We project both
+//! populations onto the corpus' first two principal components (the UMAP
+//! substitute per DESIGN.md §3) and quantify (a) overlap — the fraction of
+//! generated linkers inside the reference's 2σ ellipse — and (b) novelty —
+//! the fraction outside plus the spread ratio.
+//!
+//!     cargo bench --bench fig9_diversity
+
+use mofa::chem::bonding::impute_bonds;
+use mofa::chem::descriptors::{descriptors, N_DESCRIPTORS};
+use mofa::genai::corpus::load_seed_corpus;
+use mofa::genai::LinkerGenerator;
+use mofa::runtime::artifacts::ArtifactPaths;
+use mofa::util::linalg::pca2;
+use mofa::util::stats;
+use mofa::workflow::launch::{build_engines, ModelMode};
+
+fn descriptor_rows(mols: &[mofa::chem::molecule::Molecule]) -> Vec<f64> {
+    let mut rows = Vec::with_capacity(mols.len() * N_DESCRIPTORS);
+    for m in mols {
+        rows.extend_from_slice(&descriptors(m));
+    }
+    rows
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 9: linker diversity (PCA of 38 descriptors) ==\n");
+
+    // reference population: seed corpus (hMOF-fragment stand-in)
+    let paths = ArtifactPaths::default_dir();
+    anyhow::ensure!(
+        paths.seed_linkers.exists(),
+        "artifacts/seed_linkers.json missing — run `make artifacts`"
+    );
+    let corpus = load_seed_corpus(&paths.seed_linkers)?;
+    let ref_mols: Vec<_> = corpus
+        .iter()
+        .take(256)
+        .map(|f| {
+            let mut m = f.to_molecule();
+            impute_bonds(&mut m);
+            m
+        })
+        .collect();
+
+    // generated population (surrogate at moderate quality => real spread)
+    let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+    engines.generator.set_params(vec![], 2);
+    let mut gen_mols = Vec::new();
+    let mut seed = 0;
+    while gen_mols.len() < 256 && seed < 64 {
+        for l in engines.generator.generate(seed)? {
+            let mut m = l.molecule;
+            impute_bonds(&mut m);
+            gen_mols.push(m);
+        }
+        seed += 1;
+    }
+
+    // z-score the combined descriptor matrix, PCA on the reference
+    let n_ref = ref_mols.len();
+    let n_gen = gen_mols.len();
+    let mut data = descriptor_rows(&ref_mols);
+    data.extend(descriptor_rows(&gen_mols));
+    let n_all = n_ref + n_gen;
+    for d in 0..N_DESCRIPTORS {
+        let col: Vec<f64> = (0..n_all).map(|r| data[r * N_DESCRIPTORS + d]).collect();
+        let m = stats::mean(&col);
+        let s = stats::std_dev(&col).max(1e-9);
+        for r in 0..n_all {
+            data[r * N_DESCRIPTORS + d] = (data[r * N_DESCRIPTORS + d] - m) / s;
+        }
+    }
+    let (_, _, proj) = pca2(&data, n_all, N_DESCRIPTORS);
+    let (ref_p, gen_p) = proj.split_at(n_ref);
+
+    // reference 2σ ellipse (axis-aligned in PC space)
+    let rx: Vec<f64> = ref_p.iter().map(|p| p[0]).collect();
+    let ry: Vec<f64> = ref_p.iter().map(|p| p[1]).collect();
+    let (mx, my) = (stats::mean(&rx), stats::mean(&ry));
+    let (sx, sy) = (stats::std_dev(&rx).max(1e-9), stats::std_dev(&ry).max(1e-9));
+    let inside = gen_p
+        .iter()
+        .filter(|p| {
+            let dx = (p[0] - mx) / (2.0 * sx);
+            let dy = (p[1] - my) / (2.0 * sy);
+            dx * dx + dy * dy <= 1.0
+        })
+        .count();
+    let gx: Vec<f64> = gen_p.iter().map(|p| p[0]).collect();
+    let gy: Vec<f64> = gen_p.iter().map(|p| p[1]).collect();
+
+    println!("reference linkers : {n_ref}   generated linkers: {n_gen}");
+    println!(
+        "overlap: {:.0}% of generated linkers inside the reference 2σ region",
+        100.0 * inside as f64 / n_gen.max(1) as f64
+    );
+    println!(
+        "novelty: {:.0}% explore outside it",
+        100.0 * (n_gen - inside) as f64 / n_gen.max(1) as f64
+    );
+    println!(
+        "spread ratio (gen/ref): PC1 {:.2}x  PC2 {:.2}x",
+        stats::std_dev(&gx) / sx,
+        stats::std_dev(&gy) / sy
+    );
+
+    // coarse ASCII density map (paper's qualitative picture)
+    println!("\nprojection (o = reference, x = generated, * = both):");
+    let (w, h) = (64usize, 20usize);
+    let all_x: Vec<f64> = proj.iter().map(|p| p[0]).collect();
+    let all_y: Vec<f64> = proj.iter().map(|p| p[1]).collect();
+    let (x0, x1) = (stats::quantile(&all_x, 0.01), stats::quantile(&all_x, 0.99));
+    let (y0, y1) = (stats::quantile(&all_y, 0.01), stats::quantile(&all_y, 0.99));
+    let mut grid = vec![vec![0u8; w]; h]; // bit0 = ref, bit1 = gen
+    let mark = |grid: &mut Vec<Vec<u8>>, p: &[f64; 2], bit: u8| {
+        if x1 > x0 && y1 > y0 {
+            let cx = (((p[0] - x0) / (x1 - x0)) * (w - 1) as f64).round();
+            let cy = (((p[1] - y0) / (y1 - y0)) * (h - 1) as f64).round();
+            if cx >= 0.0 && cy >= 0.0 && (cx as usize) < w && (cy as usize) < h {
+                grid[cy as usize][cx as usize] |= bit;
+            }
+        }
+    };
+    for p in ref_p {
+        mark(&mut grid, p, 1);
+    }
+    for p in gen_p {
+        mark(&mut grid, p, 2);
+    }
+    for row in grid.iter().rev() {
+        let line: String = row
+            .iter()
+            .map(|&c| match c {
+                0 => ' ',
+                1 => 'o',
+                2 => 'x',
+                _ => '*',
+            })
+            .collect();
+        println!("  {line}");
+    }
+    println!("\npaper: generated linkers overlap hMOF space AND extend beyond it.");
+    Ok(())
+}

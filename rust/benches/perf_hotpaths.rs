@@ -1,0 +1,163 @@
+//! §Perf microbenchmarks: the real-compute hot paths of every layer.
+//!
+//! Hand-rolled timing harness (criterion is not in the offline vendor set):
+//! median-of-runs wallclock per operation, printed as a table that
+//! EXPERIMENTS.md §Perf records before/after optimization.
+//!
+//!     cargo bench --bench perf_hotpaths
+
+use std::time::Instant;
+
+use mofa::charges::{assign_charges, QeqSettings};
+use mofa::ff::uff::{FfParams, FfSystem, Space};
+use mofa::gcmc::ewald::Ewald;
+use mofa::gcmc::{run_gcmc, GcmcSettings};
+use mofa::genai::LinkerGenerator;
+use mofa::linkerproc::process_batch;
+use mofa::md::{run_npt, MdSettings};
+use mofa::util::linalg::V3;
+use mofa::workflow::launch::{build_engines, ModelMode};
+
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== perf_hotpaths: per-layer hot-path timings (median) ==\n");
+    let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+    engines.generator.set_params(vec![], 6);
+
+    // workload: one assembled MOF
+    let gens = engines.generator.generate(3)?;
+    let (processed, _) = process_batch(&gens);
+    let mof = processed
+        .iter()
+        .find_map(|p| mofa::assembly::assemble_default(p).ok())
+        .expect("assembly");
+    let fw = &mof.framework;
+    let n_atoms = fw.len();
+
+    // L3 substrate hot paths -------------------------------------------
+    println!("[L3 substrates]  (framework: {n_atoms} atoms/cell)");
+
+    // FF energy+forces (the MD inner loop)
+    let sys = FfSystem::new(&fw.basis, FfParams::default(), Space::Periodic(fw.cell));
+    let pos: Vec<V3> = fw.basis.atoms.iter().map(|a| a.pos).collect();
+    let mut forces = Vec::new();
+    let t = time_median(30, || {
+        let _ = sys.energy_forces(&pos, &mut forces);
+    });
+    println!("  ff energy+forces (1 step, 1 cell)    {:>10.3} ms", t * 1e3);
+
+    // supercell MD step cost
+    let sc = fw.supercell(2, 2, 2);
+    let sys2 = FfSystem::new(&sc.basis, FfParams::default(), Space::Periodic(sc.cell));
+    let pos2: Vec<V3> = sc.basis.atoms.iter().map(|a| a.pos).collect();
+    let t = time_median(10, || {
+        let _ = sys2.energy_forces(&pos2, &mut forces);
+    });
+    println!("  ff energy+forces (2x2x2 = {:>4} atoms) {:>9.3} ms", sc.len(), t * 1e3);
+
+    // full MD validate task
+    let md = MdSettings { steps: 150, supercell: 1, ..Default::default() };
+    let t = time_median(5, || {
+        let _ = run_npt(fw, &md, 1);
+    });
+    println!("  validate task (150-step NPT)          {:>9.3} ms", t * 1e3);
+
+    // QEq
+    let t = time_median(10, || {
+        let _ = assign_charges(fw, &QeqSettings::default());
+    });
+    println!("  QEq charge solve                      {:>9.3} ms", t * 1e3);
+
+    // Ewald structure-factor delta (GCMC inner loop)
+    let q = assign_charges(fw, &QeqSettings::default()).unwrap();
+    let sites: Vec<(V3, f64)> = fw
+        .basis
+        .atoms
+        .iter()
+        .zip(&q)
+        .map(|(a, &qq)| (a.pos, qq))
+        .collect();
+    let mut ew = Ewald::new(&fw.cell, 0.5, 6);
+    ew.init(&sites);
+    let mol = mofa::gcmc::co2::Co2::new([3.0, 3.0, 3.0], [0.0, 0.0, 1.0]);
+    let t = time_median(200, || {
+        let _ = ew.delta_energy(&[], &mol.charged_sites());
+    });
+    println!(
+        "  Ewald delta (1 CO2, {} k-vecs)      {:>9.3} µs",
+        ew.n_k(),
+        t * 1e6
+    );
+
+    // full GCMC task
+    let gc = GcmcSettings { equil_moves: 1_000, prod_moves: 2_500, ..Default::default() };
+    let t = time_median(3, || {
+        let _ = run_gcmc(fw, &q, &gc, 5);
+    });
+    println!("  adsorption task (3.5k GCMC moves)     {:>9.3} ms", t * 1e3);
+
+    // process-linkers batch
+    let t = time_median(5, || {
+        let _ = process_batch(&gens);
+    });
+    println!(
+        "  process task ({} linkers)             {:>9.3} ms",
+        gens.len(),
+        t * 1e3
+    );
+
+    // L2/L1 via PJRT ------------------------------------------------------
+    if mofa::runtime::artifacts::ArtifactPaths::default_dir().all_present() {
+        println!("\n[L2/L1 via PJRT]");
+        let hlo = build_engines(ModelMode::Hlo, true)?;
+        let t = time_median(3, || {
+            let _ = hlo.generator.generate(11).unwrap();
+        });
+        println!("  generate batch (64 sample_steps)      {:>9.1} ms", t * 1e3);
+        let gens2 = hlo.generator.generate(12)?;
+        let exs = mofa::genai::trainer::examples_from_linkers(&gens2, 16, 5);
+        if !exs.is_empty() {
+            let t = time_median(3, || {
+                let _ = hlo.trainer.retrain(&exs, 5, 0).unwrap();
+            });
+            println!("  retrain (5 Adam steps)                {:>9.1} ms", t * 1e3);
+        }
+    } else {
+        println!("\n[L2/L1 skipped: artifacts not built]");
+    }
+
+    // DES overhead ------------------------------------------------------
+    println!("\n[L3 coordinator]");
+    use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+    use mofa::workflow::thinker::PolicyConfig;
+    let t = Instant::now();
+    let report = run_campaign(
+        CampaignConfig {
+            nodes: 16,
+            duration_s: 900.0,
+            seed: 3,
+            policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
+            threads: 0,
+            util_sample_dt: 600.0,
+        },
+        std::sync::Arc::clone(&engines),
+    );
+    let n_events = report.thinker.metrics.tasks.len();
+    let wall = t.elapsed().as_secs_f64();
+    println!(
+        "  campaign 16 nodes x 15 min: {n_events} tasks in {:.2} s wall ({:.0} µs/event incl. real compute)",
+        wall,
+        wall * 1e6 / n_events.max(1) as f64
+    );
+    Ok(())
+}

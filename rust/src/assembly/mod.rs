@@ -1,0 +1,311 @@
+//! `assemble MOFs` task (paper §III-B step 3): combine processed linkers
+//! with pre-selected metal nodes in the **pcu** topology (RCSR), then run
+//! the distance/bond screens ("discard if inter-atomic separations below
+//! threshold … check bonds & atomic distances").
+//!
+//! pcu primitive cell: one node at the origin + one linker along each of
+//! the three axes; cell parameter a = 2·r_conn + d(anchor, anchor).
+
+pub mod nodes;
+
+use crate::chem::bonding::{check_min_separation_periodic, Validity};
+use crate::chem::cell::{Cell, Framework};
+use crate::chem::elements::Element;
+use crate::chem::molecule::{BondOrder, Molecule};
+use crate::genai::Family;
+use crate::linkerproc::ProcessedLinker;
+use crate::util::linalg::{dist, matvec, norm, normalize, scale, sub, M3, V3};
+use nodes::NodeTemplate;
+
+/// An assembled periodic MOF candidate.
+#[derive(Clone, Debug)]
+pub struct AssembledMof {
+    pub framework: Framework,
+    pub family: Family,
+    /// canonical key of the linker it was built from
+    pub linker_key: String,
+    pub node_label: &'static str,
+    pub model_version: u64,
+    /// residual linker strain carried through (kcal/mol/atom)
+    pub linker_strain: f64,
+}
+
+/// Reasons assembly can fail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssemblyError {
+    /// linker anchors closer than a viable cell allows
+    TooShort,
+    /// atoms overlap after placement (OChemDb-style screen)
+    Overlap,
+    /// anchor geometry could not be aligned
+    Alignment,
+}
+
+/// Rotation taking unit vector `from` onto unit vector `to` (Rodrigues).
+fn rotation_between(from: V3, to: V3) -> M3 {
+    let c = crate::util::linalg::dot(from, to);
+    let axis = crate::util::linalg::cross(from, to);
+    let s = norm(axis);
+    if s < 1e-9 {
+        if c > 0.0 {
+            return [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        }
+        // 180°: rotate about any axis orthogonal to `from`
+        let ortho = normalize(if from[0].abs() < 0.9 {
+            crate::util::linalg::cross(from, [1.0, 0.0, 0.0])
+        } else {
+            crate::util::linalg::cross(from, [0.0, 1.0, 0.0])
+        });
+        let (x, y, z) = (ortho[0], ortho[1], ortho[2]);
+        return [
+            [2.0 * x * x - 1.0, 2.0 * x * y, 2.0 * x * z],
+            [2.0 * x * y, 2.0 * y * y - 1.0, 2.0 * y * z],
+            [2.0 * x * z, 2.0 * y * z, 2.0 * z * z - 1.0],
+        ];
+    }
+    let k = scale(axis, 1.0 / s);
+    let (x, y, z) = (k[0], k[1], k[2]);
+    let v = 1.0 - c;
+    [
+        [c + x * x * v, x * y * v - z * s, x * z * v + y * s],
+        [x * y * v + z * s, c + y * y * v, y * z * v - x * s],
+        [x * z * v - y * s, y * z * v + x * s, c + z * z * v],
+    ]
+}
+
+/// Assemble one MOF from a processed linker + matching node template in the
+/// pcu topology. The same linker is used along all three axes (as in
+/// GHP-MOFassemble's primitive-cell construction).
+pub fn assemble_pcu(
+    linker: &ProcessedLinker,
+    node: &NodeTemplate,
+) -> Result<AssembledMof, AssemblyError> {
+    let [d0, d1] = linker.dummy_sites;
+    let lm = &linker.molecule;
+    let span = dist(lm.atoms[d0].pos, lm.atoms[d1].pos);
+    if span < 3.0 {
+        return Err(AssemblyError::TooShort);
+    }
+    let a = 2.0 * node.r_conn + span;
+    let cell = Cell::cubic(a);
+
+    let mut basis = node.molecule.clone();
+    // strip placeholder bookkeeping: node template atoms come first
+    for (axis_idx, axis) in [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]]
+        .into_iter()
+        .enumerate()
+    {
+        // orient linker: dummy0 -> +axis site, dummy1 -> -axis site image
+        let mut l = lm.clone();
+        let cur = normalize(sub(l.atoms[d1].pos, l.atoms[d0].pos));
+        let rot = rotation_between(cur, axis);
+        l.rotate(&rot);
+        // translate so dummy0 lands on the +axis anchor position
+        let target0 = scale(axis, node.r_conn);
+        let t = sub(target0, l.atoms[d0].pos);
+        l.translate(t);
+        // snap: scale along axis so dummy1 lands exactly on a - r_conn
+        // (linker may have residual curvature after minimization)
+        let d1_pos = l.atoms[d1].pos;
+        let want1 = scale(axis, a - node.r_conn);
+        let err = sub(want1, d1_pos);
+        if norm(err) > 1.5 {
+            return Err(AssemblyError::Alignment);
+        }
+        // distribute the correction linearly along the anchor axis
+        let axis_v = axis;
+        let p0 = l.atoms[d0].pos;
+        let len = norm(sub(d1_pos, p0)).max(1e-9);
+        for at in l.atoms.iter_mut() {
+            let s = crate::util::linalg::dot(sub(at.pos, p0), axis_v) / len;
+            let s = s.clamp(0.0, 1.0);
+            at.pos = crate::util::linalg::add(at.pos, scale(err, s));
+        }
+
+        let off = basis.merge(&l);
+        let site_plus = &node.sites[axis_idx * 2]; // +axis site
+        match linker.family {
+            Family::Bca => {
+                // At dummy becomes the carboxylate carbon, bonded to the
+                // site's bridging oxygens (both ends via PBC).
+                for (dummy, site) in [
+                    (off + d0, site_plus),
+                    (off + d1, &node.sites[axis_idx * 2 + 1]),
+                ] {
+                    basis.atoms[dummy].element = Element::C;
+                    for &o in &site.bond_to {
+                        basis.add_bond(dummy, o, BondOrder::Single);
+                    }
+                }
+            }
+            Family::Bzn => {
+                // Fr dummies mark the metal position: delete them and bond
+                // the anchor N directly to the node metal.
+                let nb = lm.neighbors();
+                for (dummy, site) in [
+                    (off + d0, site_plus),
+                    (off + d1, &node.sites[axis_idx * 2 + 1]),
+                ] {
+                    let anchor_local = nb[dummy - off][0]; // N bonded to Fr
+                    for &mz in &site.bond_to {
+                        basis.add_bond(off + anchor_local, mz, BondOrder::Single);
+                    }
+                    // mark dummy for removal (can't remove mid-loop)
+                    basis.atoms[dummy].element = Element::Fr;
+                }
+            }
+        }
+    }
+    // remove any remaining Fr markers
+    if linker.family == Family::Bzn {
+        let fr: Vec<usize> = basis
+            .atoms
+            .iter()
+            .enumerate()
+            .filter(|(_, at)| at.element == Element::Fr)
+            .map(|(i, _)| i)
+            .collect();
+        remove_atoms_remap(&mut basis, &fr);
+    }
+    // wrap all atoms into the home cell
+    for at in basis.atoms.iter_mut() {
+        at.pos = cell.wrap(at.pos);
+    }
+
+    let fw = Framework::new(cell, basis);
+    // OChemDb-style distance screen, periodic
+    if check_min_separation_periodic(&fw, 0.85) != Validity::Ok {
+        return Err(AssemblyError::Overlap);
+    }
+    Ok(AssembledMof {
+        framework: fw,
+        family: linker.family,
+        linker_key: linker.key.clone(),
+        node_label: node.label,
+        model_version: linker.model_version,
+        linker_strain: linker.strain_energy,
+    })
+}
+
+/// Assemble with the family's default node.
+pub fn assemble_default(linker: &ProcessedLinker) -> Result<AssembledMof, AssemblyError> {
+    match linker.family {
+        Family::Bca => assemble_pcu(linker, &nodes::zn4o_node()),
+        Family::Bzn => assemble_pcu(linker, &nodes::zn_n6_node()),
+    }
+}
+
+fn remove_atoms_remap(mol: &mut Molecule, idx: &[usize]) {
+    let mut sorted = idx.to_vec();
+    sorted.sort_unstable();
+    for &i in sorted.iter().rev() {
+        mol.atoms.remove(i);
+        mol.bonds.retain(|b| b.i != i && b.j != i);
+        for b in mol.bonds.iter_mut() {
+            if b.i > i {
+                b.i -= 1;
+            }
+            if b.j > i {
+                b.j -= 1;
+            }
+        }
+    }
+}
+
+#[allow(unused)]
+fn unused_matvec_guard(m: &M3, v: V3) -> V3 {
+    matvec(m, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genai::generator::SurrogateGenerator;
+    use crate::genai::LinkerGenerator;
+    use crate::linkerproc::process_linker;
+
+    fn processed(family: Family) -> ProcessedLinker {
+        let g = SurrogateGenerator::builtin(32);
+        g.set_params(vec![], 20);
+        let l = g
+            .generate(1)
+            .unwrap()
+            .into_iter()
+            .find(|l| l.family == family)
+            .unwrap();
+        process_linker(&l).unwrap()
+    }
+
+    #[test]
+    fn bca_assembly_produces_periodic_mof() {
+        let p = processed(Family::Bca);
+        let mof = assemble_default(&p).expect("assembly");
+        let fw = &mof.framework;
+        // cubic cell, a = 2*3.2 + span
+        let a = fw.cell.lengths()[0];
+        assert!(a > 10.0 && a < 22.0, "cell {a}");
+        // 3 linkers + node; no dummies left
+        assert!(fw.basis.atoms_of(Element::At).is_empty());
+        assert!(fw.basis.atoms_of(Element::Fr).is_empty());
+        assert_eq!(fw.basis.atoms_of(Element::Zn).len(), 4);
+        // carboxylate carbons bonded to node oxygens
+        assert!(fw.basis.is_connected() || fw.basis.components().1 <= 4);
+        assert!(fw.density() > 0.1 && fw.density() < 3.0, "density {}", fw.density());
+    }
+
+    #[test]
+    fn bzn_assembly_bonds_nitrogen_to_metal() {
+        let p = processed(Family::Bzn);
+        let mof = assemble_default(&p).expect("assembly");
+        let fw = &mof.framework;
+        assert!(fw.basis.atoms_of(Element::Fr).is_empty());
+        let zn = fw.basis.atoms_of(Element::Zn);
+        assert_eq!(zn.len(), 1);
+        // Zn coordinated by 6 nitrogens (3 linkers × 2 via PBC)
+        let nb = fw.basis.neighbors();
+        let n_coord = nb[zn[0]]
+            .iter()
+            .filter(|&&j| fw.basis.atoms[j].element == Element::N)
+            .count();
+        assert_eq!(n_coord, 6, "Zn coordination {n_coord}");
+    }
+
+    #[test]
+    fn supercell_of_assembled_mof() {
+        let p = processed(Family::Bca);
+        let mof = assemble_default(&p).unwrap();
+        let sc = mof.framework.supercell(2, 2, 2);
+        assert_eq!(sc.len(), mof.framework.len() * 8);
+    }
+
+    #[test]
+    fn assembled_mof_is_porous() {
+        let p = processed(Family::Bca);
+        let mof = assemble_default(&p).unwrap();
+        let vf = mof.framework.void_fraction(1.2, 10);
+        assert!(vf > 0.2, "MOF should be porous, vf={vf}");
+    }
+
+    #[test]
+    fn rotation_between_axes() {
+        let r = rotation_between([1.0, 0.0, 0.0], [0.0, 1.0, 0.0]);
+        let v = matvec(&r, [1.0, 0.0, 0.0]);
+        assert!((v[1] - 1.0).abs() < 1e-9);
+        // antiparallel case
+        let r2 = rotation_between([1.0, 0.0, 0.0], [-1.0, 0.0, 0.0]);
+        let v2 = matvec(&r2, [1.0, 0.0, 0.0]);
+        assert!((v2[0] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn too_short_linker_rejected() {
+        let mut p = processed(Family::Bca);
+        // collapse the dummies to 1 Å apart
+        let [d0, d1] = p.dummy_sites;
+        p.molecule.atoms[d1].pos = crate::util::linalg::add(
+            p.molecule.atoms[d0].pos,
+            [1.0, 0.0, 0.0],
+        );
+        assert_eq!(assemble_default(&p).unwrap_err(), AssemblyError::TooShort);
+    }
+}

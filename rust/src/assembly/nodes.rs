@@ -1,0 +1,173 @@
+//! Metal-node templates (pre-selected inorganic clusters, paper §III-B).
+//!
+//! * [`zn4o_node`] — basic zinc carboxylate Zn₄O(CO₂)₆ (IRMOF chemistry)
+//!   for BCA linkers: six connection sites on the ±x/±y/±z faces, each a
+//!   carboxylate carbon position (where the linker's At dummy lands)
+//!   backed by two bridging oxygens bonded to Zn.
+//! * [`zn_n6_node`] — a single hexacoordinate Zn for BZN linkers: the
+//!   nitrile N binds the metal directly; the linker's Fr dummy marks the
+//!   metal position (paper: Fr sits 2 Å beyond N, away from the linker).
+
+use crate::chem::elements::Element;
+use crate::chem::molecule::{BondOrder, Molecule};
+use crate::util::linalg::{add, scale, V3};
+
+/// One linker connection site on a node.
+#[derive(Clone, Debug)]
+pub struct ConnectionSite {
+    /// unit direction of the site (cell axis ±)
+    pub dir: V3,
+    /// where the linker anchor-carbon / metal lands, relative to node center
+    pub anchor_pos: V3,
+    /// node atoms (indices into the template molecule) the incoming anchor
+    /// atom must bond to
+    pub bond_to: Vec<usize>,
+}
+
+/// A metal node template: atoms + connection sites.
+#[derive(Clone, Debug)]
+pub struct NodeTemplate {
+    pub molecule: Molecule,
+    pub sites: Vec<ConnectionSite>,
+    /// distance from node center to the anchor position, Å
+    pub r_conn: f64,
+    pub label: &'static str,
+}
+
+const AXES: [V3; 6] = [
+    [1.0, 0.0, 0.0],
+    [-1.0, 0.0, 0.0],
+    [0.0, 1.0, 0.0],
+    [0.0, -1.0, 0.0],
+    [0.0, 0.0, 1.0],
+    [0.0, 0.0, -1.0],
+];
+
+/// Zn₄O(carboxylate)₆ node for BCA linkers.
+pub fn zn4o_node() -> NodeTemplate {
+    let mut m = Molecule::new();
+    let o_c = m.add_atom(Element::O, [0.0, 0.0, 0.0]); // central µ4-O
+    // four Zn, tetrahedral at 1.95 Å
+    let t = 1.95 / (3.0f64).sqrt();
+    let zn: Vec<usize> = [
+        [t, t, t],
+        [-t, -t, t],
+        [-t, t, -t],
+        [t, -t, -t],
+    ]
+    .iter()
+    .map(|&p| m.add_atom(Element::Zn, p))
+    .collect();
+    for &z in &zn {
+        m.add_bond(o_c, z, BondOrder::Single);
+    }
+
+    let r_conn = 3.2; // center -> carboxylate C
+    let mut sites = Vec::new();
+    for dir in AXES {
+        let anchor_pos = scale(dir, r_conn);
+        // two bridging carboxylate O: 1.26 Å from C, O-C-O ≈ 125°,
+        // in the plane spanned by dir and a perpendicular axis
+        let perp = if dir[0].abs() > 0.5 {
+            [0.0, 1.0, 0.0]
+        } else if dir[1].abs() > 0.5 {
+            [0.0, 0.0, 1.0]
+        } else {
+            [1.0, 0.0, 0.0]
+        };
+        let half = 62.5f64.to_radians();
+        let mut bond_to = Vec::new();
+        for s in [1.0, -1.0] {
+            let o_pos = add(
+                anchor_pos,
+                add(
+                    scale(dir, -1.26 * half.cos()),
+                    scale(perp, s * 1.26 * half.sin()),
+                ),
+            );
+            let o = m.add_atom(Element::O, o_pos);
+            // bond O to the nearest Zn
+            let mut best = zn[0];
+            let mut bd = f64::INFINITY;
+            for &z in &zn {
+                let d = crate::util::linalg::dist(m.atoms[z].pos, o_pos);
+                if d < bd {
+                    bd = d;
+                    best = z;
+                }
+            }
+            m.add_bond(o, best, BondOrder::Single);
+            bond_to.push(o);
+        }
+        sites.push(ConnectionSite { dir, anchor_pos, bond_to });
+    }
+    NodeTemplate { molecule: m, sites, r_conn, label: "Zn4O" }
+}
+
+/// Hexacoordinate Zn node for BZN linkers (nitrile N → Zn coordination).
+pub fn zn_n6_node() -> NodeTemplate {
+    let mut m = Molecule::new();
+    let zn = m.add_atom(Element::Zn, [0.0, 0.0, 0.0]);
+    let sites = AXES
+        .iter()
+        .map(|&dir| ConnectionSite {
+            dir,
+            // the linker N itself binds the metal at ~2.0 Å: the Fr dummy
+            // (2 Å beyond N) lands exactly on the metal position
+            anchor_pos: [0.0, 0.0, 0.0],
+            bond_to: vec![zn],
+        })
+        .collect();
+    NodeTemplate { molecule: m, sites, r_conn: 0.0, label: "ZnN6" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zn4o_composition() {
+        let n = zn4o_node();
+        assert_eq!(n.molecule.atoms_of(Element::Zn).len(), 4);
+        // 1 central O + 12 carboxylate O
+        assert_eq!(n.molecule.atoms_of(Element::O).len(), 13);
+        assert_eq!(n.sites.len(), 6);
+        assert_eq!(n.label, "Zn4O");
+    }
+
+    #[test]
+    fn zn4o_sites_on_axes() {
+        let n = zn4o_node();
+        for s in &n.sites {
+            let r = crate::util::linalg::norm(s.anchor_pos);
+            assert!((r - n.r_conn).abs() < 1e-9);
+            assert_eq!(s.bond_to.len(), 2);
+            // bridging O within bonding distance of the anchor position
+            for &o in &s.bond_to {
+                let d = crate::util::linalg::dist(n.molecule.atoms[o].pos, s.anchor_pos);
+                assert!((d - 1.26).abs() < 1e-6, "C-O distance {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn zn4o_each_site_oxygen_bonded_to_zn() {
+        let n = zn4o_node();
+        let nb = n.molecule.neighbors();
+        for s in &n.sites {
+            for &o in &s.bond_to {
+                assert!(nb[o]
+                    .iter()
+                    .any(|&j| n.molecule.atoms[j].element == Element::Zn));
+            }
+        }
+    }
+
+    #[test]
+    fn znn6_minimal() {
+        let n = zn_n6_node();
+        assert_eq!(n.molecule.len(), 1);
+        assert_eq!(n.sites.len(), 6);
+        assert_eq!(n.r_conn, 0.0);
+    }
+}

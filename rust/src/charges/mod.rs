@@ -1,0 +1,13 @@
+//! `compute partial charges` step (Chargemol/DDEC6 stand-in; DESIGN.md §3).
+//!
+//! Charge-equilibration (QEq, Rappé & Goddard 1991): minimize
+//! E(q) = Σᵢ (χᵢ qᵢ + ½ Jᵢ qᵢ²) + Σᵢ<ⱼ qᵢqⱼ k/rᵢⱼ  subject to Σ qᵢ = 0,
+//! solved as a dense linear system with a Lagrange multiplier. Periodic
+//! interactions use the minimum image with a shielded kernel (the screened
+//! 1/√(r²+γ²) form keeps the matrix well-conditioned at bonded distances).
+//! MOFs whose solve fails — singular system or unphysical |q| — are
+//! discarded, exactly like failed Chargemol runs in the paper.
+
+pub mod qeq;
+
+pub use qeq::{assign_charges, QeqError, QeqSettings};

@@ -1,0 +1,171 @@
+//! QEq implementation. See charges/mod.rs for the method description.
+
+use crate::chem::cell::Framework;
+use crate::util::linalg::solve_dense;
+
+/// Coulomb constant, eV·Å/e²
+const K_E: f64 = 14.399_645;
+
+#[derive(Clone, Copy, Debug)]
+pub struct QeqSettings {
+    /// shielding length γ, Å
+    pub gamma: f64,
+    /// reject if any |q| exceeds this (e)
+    pub q_max: f64,
+    /// real-space interaction cutoff, Å
+    pub cutoff: f64,
+}
+
+impl Default for QeqSettings {
+    fn default() -> Self {
+        // γ=1.4 Å keeps the bonded-distance kernel shielded enough that
+        // dense MOF frameworks land in the DDEC-typical |q| < 1.5 range.
+        QeqSettings { gamma: 1.4, q_max: 3.0, cutoff: 10.0 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QeqError {
+    /// singular/ill-conditioned system
+    Singular,
+    /// solution contains unphysical charges
+    Unphysical,
+}
+
+/// Solve QEq for the framework; writes charges into a copy of the basis
+/// and returns it (the framework is not mutated).
+pub fn assign_charges(
+    fw: &Framework,
+    settings: &QeqSettings,
+) -> Result<Vec<f64>, QeqError> {
+    let n = fw.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let dim = n + 1; // + Lagrange multiplier for charge neutrality
+    let mut a = vec![0.0f64; dim * dim];
+    let mut b = vec![0.0f64; dim];
+
+    for i in 0..n {
+        let di = fw.basis.atoms[i].element.data();
+        a[i * dim + i] = di.qeq_j;
+        b[i] = -di.qeq_chi;
+        for j in i + 1..n {
+            let r = fw
+                .cell
+                .min_image_dist(fw.basis.atoms[i].pos, fw.basis.atoms[j].pos);
+            if r > settings.cutoff {
+                continue;
+            }
+            let kern = K_E / (r * r + settings.gamma * settings.gamma).sqrt();
+            a[i * dim + j] = kern;
+            a[j * dim + i] = kern;
+        }
+        // neutrality constraint rows/cols
+        a[i * dim + n] = 1.0;
+        a[n * dim + i] = 1.0;
+    }
+    b[n] = 0.0; // total charge
+
+    let sol = solve_dense(&a, &b, dim).ok_or(QeqError::Singular)?;
+    let q = &sol[..n];
+    if q.iter().any(|v| !v.is_finite() || v.abs() > settings.q_max) {
+        return Err(QeqError::Unphysical);
+    }
+    Ok(q.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::cell::{Cell, Framework};
+    use crate::chem::elements::Element::*;
+    use crate::chem::molecule::Molecule;
+
+    fn frame(atoms: &[(crate::chem::elements::Element, [f64; 3])], a: f64) -> Framework {
+        let mut m = Molecule::new();
+        for &(e, p) in atoms {
+            m.add_atom(e, p);
+        }
+        Framework::new(Cell::cubic(a), m)
+    }
+
+    #[test]
+    fn charges_sum_to_zero() {
+        let fw = frame(
+            &[
+                (Zn, [0.0, 0.0, 0.0]),
+                (O, [2.0, 0.0, 0.0]),
+                (C, [4.0, 0.0, 0.0]),
+                (N, [6.0, 0.0, 0.0]),
+            ],
+            12.0,
+        );
+        let q = assign_charges(&fw, &QeqSettings::default()).unwrap();
+        let total: f64 = q.iter().sum();
+        assert!(total.abs() < 1e-9, "net {total}");
+    }
+
+    #[test]
+    fn electronegative_atoms_negative() {
+        // Zn-O pair: O more electronegative -> q_O < 0 < q_Zn
+        let fw = frame(&[(Zn, [0.0; 3]), (O, [2.0, 0.0, 0.0])], 15.0);
+        let q = assign_charges(&fw, &QeqSettings::default()).unwrap();
+        assert!(q[1] < 0.0 && q[0] > 0.0, "q = {q:?}");
+    }
+
+    #[test]
+    fn symmetric_atoms_equal_charges() {
+        let fw = frame(
+            &[(O, [2.0, 0.0, 0.0]), (C, [0.0, 0.0, 0.0]), (O, [-2.0, 0.0, 0.0])],
+            15.0,
+        );
+        let q = assign_charges(&fw, &QeqSettings::default()).unwrap();
+        assert!((q[0] - q[2]).abs() < 1e-9);
+        assert!(q[1] > 0.0); // CO2-like: positive carbon
+    }
+
+    #[test]
+    fn homonuclear_yields_zero() {
+        let fw = frame(&[(C, [0.0; 3]), (C, [2.0, 0.0, 0.0])], 12.0);
+        let q = assign_charges(&fw, &QeqSettings::default()).unwrap();
+        assert!(q.iter().all(|v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn assembled_mof_gets_reasonable_charges() {
+        use crate::assembly::assemble_default;
+        use crate::genai::generator::SurrogateGenerator;
+        use crate::genai::{Family, LinkerGenerator};
+        use crate::linkerproc::process_linker;
+        let g = SurrogateGenerator::builtin(32);
+        g.set_params(vec![], 20);
+        let l = g
+            .generate(3)
+            .unwrap()
+            .into_iter()
+            .find(|l| l.family == Family::Bca)
+            .unwrap();
+        let mof = assemble_default(&process_linker(&l).unwrap()).unwrap();
+        let q = assign_charges(&mof.framework, &QeqSettings::default()).unwrap();
+        assert_eq!(q.len(), mof.framework.len());
+        assert!(q.iter().sum::<f64>().abs() < 1e-7);
+        // Zn positive, carboxylate O negative
+        for (i, a) in mof.framework.basis.atoms.iter().enumerate() {
+            if a.element == Zn {
+                assert!(q[i] > 0.0, "Zn charge {}", q[i]);
+            }
+        }
+        let o_mean: f64 = {
+            let idx = mof.framework.basis.atoms_of(O);
+            idx.iter().map(|&i| q[i]).sum::<f64>() / idx.len() as f64
+        };
+        assert!(o_mean < 0.0, "mean O charge {o_mean}");
+    }
+
+    #[test]
+    fn empty_framework_ok() {
+        let fw = frame(&[], 10.0);
+        assert!(assign_charges(&fw, &QeqSettings::default()).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,380 @@
+//! Bond imputation + chemical-validity screens (RDKit/OpenBabel stand-in).
+//!
+//! Paper §III-B: "We impute bonds for its given atomic coordinate structure
+//! … check that the generated MOF has reasonable bond lengths and angles …
+//! run a distance-based assessment [OChemDb threshold]". These are exactly
+//! the screens implemented here; linkerproc/ and assembly/ call them.
+
+use crate::chem::elements::Element;
+use crate::chem::molecule::{BondOrder, Molecule};
+use crate::util::linalg::{dist, dot, norm, sub};
+
+/// Tolerance factor on covalent-radius sums for bond detection.
+pub const BOND_TOL: f64 = 1.25;
+
+/// Minimum allowed interatomic separation (Å) — the OChemDb-derived
+/// overlap threshold from the paper's distance-based assessment.
+pub const MIN_SEPARATION: f64 = 0.75;
+
+/// Impute bonds from geometry: i–j bonded iff d < BOND_TOL * (r_i + r_j).
+/// Assigns aromatic order to ring C/N pairs at aromatic distances, triple
+/// to very short C≡N / C≡C contacts, double to short C=O, else single.
+pub fn impute_bonds(mol: &mut Molecule) {
+    mol.bonds.clear();
+    let n = mol.atoms.len();
+    for i in 0..n {
+        for j in i + 1..n {
+            let (a, b) = (&mol.atoms[i], &mol.atoms[j]);
+            if a.element.is_dummy() || b.element.is_dummy() {
+                continue; // dummies get explicit bonds from the assembler
+            }
+            let d = dist(a.pos, b.pos);
+            let rmax = BOND_TOL * (a.element.data().r_cov + b.element.data().r_cov);
+            if d < rmax && d > 0.1 {
+                let order = classify_order(a.element, b.element, d);
+                mol.add_bond(i, j, order);
+            }
+        }
+    }
+}
+
+/// Heuristic bond-order classification from elements + length.
+fn classify_order(a: Element, b: Element, d: f64) -> BondOrder {
+    use Element::*;
+    match (a.min(b), a.max(b)) {
+        (C, C) => {
+            if d < 1.26 {
+                BondOrder::Triple
+            } else if d < 1.36 {
+                BondOrder::Double
+            } else if d < 1.45 {
+                BondOrder::Aromatic
+            } else {
+                BondOrder::Single
+            }
+        }
+        (C, N) => {
+            if d < 1.22 {
+                BondOrder::Triple
+            } else if d < 1.31 {
+                BondOrder::Double
+            } else if d < 1.39 {
+                BondOrder::Aromatic
+            } else {
+                BondOrder::Single
+            }
+        }
+        (C, O) => {
+            if d < 1.28 {
+                BondOrder::Double
+            } else {
+                BondOrder::Single
+            }
+        }
+        _ => BondOrder::Single,
+    }
+}
+
+/// Bond-order reconciliation (OpenBabel's "determine the bond order" role):
+/// distance-based classification can over-assign Double/Triple on slightly
+/// compressed geometry; while any organic atom exceeds its max valence,
+/// downgrade its longest highest-order bond one step (Triple→Double→
+/// Aromatic→Single). Converges because total bond order strictly falls.
+pub fn reconcile_bond_orders(mol: &mut Molecule) {
+    fn downgrade(o: BondOrder) -> Option<BondOrder> {
+        match o {
+            BondOrder::Triple => Some(BondOrder::Double),
+            BondOrder::Double => Some(BondOrder::Aromatic),
+            BondOrder::Aromatic => Some(BondOrder::Single),
+            BondOrder::Single => None,
+        }
+    }
+    loop {
+        let val = mol.valences();
+        let mut worst: Option<(usize, f64)> = None; // bond index, length
+        for (i, a) in mol.atoms.iter().enumerate() {
+            if a.element.is_dummy() || a.element.is_metal() || a.element == Element::H {
+                continue;
+            }
+            if val[i] <= a.element.data().max_valence as f64 + 0.6 {
+                continue;
+            }
+            // over-valent: find its most-downgradable bond (highest order,
+            // then longest)
+            for (bi, b) in mol.bonds.iter().enumerate() {
+                if b.i != i && b.j != i {
+                    continue;
+                }
+                if downgrade(b.order).is_none() {
+                    continue;
+                }
+                let d = dist(mol.atoms[b.i].pos, mol.atoms[b.j].pos);
+                let score = b.order.valence() * 10.0 + d;
+                if worst.map(|(_, s)| score > s).unwrap_or(true) {
+                    worst = Some((bi, score));
+                }
+            }
+        }
+        match worst {
+            Some((bi, _)) => {
+                mol.bonds[bi].order = downgrade(mol.bonds[bi].order).unwrap();
+            }
+            None => break,
+        }
+    }
+}
+
+/// Outcome of a validity screen with a reason for rejection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Validity {
+    Ok,
+    Reject(&'static str),
+}
+
+impl Validity {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Validity::Ok)
+    }
+}
+
+/// Valence screen: every organic atom must have 1..=max_valence bonds
+/// (paper: "well-defined molecule with … valid valence number").
+pub fn check_valence(mol: &Molecule) -> Validity {
+    let val = mol.valences();
+    for (i, a) in mol.atoms.iter().enumerate() {
+        if a.element.is_dummy() || a.element.is_metal() {
+            continue;
+        }
+        let v = val[i];
+        if v < 0.5 {
+            return Validity::Reject("disconnected atom");
+        }
+        if v > a.element.data().max_valence as f64 + 0.6 {
+            return Validity::Reject("over-valent atom");
+        }
+    }
+    Validity::Ok
+}
+
+/// Formal-charge model: estimate net charge from valence deficits.
+/// An sp3 N with 4 bonds counts +1, an O with 1 bond counts −1 (alkoxide),
+/// everything at nominal valence is 0. The linker must be net-zero.
+pub fn net_charge(mol: &Molecule) -> i32 {
+    let val = mol.valences();
+    let mut q = 0i32;
+    for (i, a) in mol.atoms.iter().enumerate() {
+        match a.element {
+            Element::N if val[i] > 3.6 => q += 1,
+            Element::O if val[i] < 1.4 && val[i] > 0.0 => q -= 1,
+            _ => {}
+        }
+    }
+    q
+}
+
+/// Bond-length sanity: every imputed bond within [0.7, 1.4]× the covalent
+/// sum ("reasonable bond lengths").
+pub fn check_bond_lengths(mol: &Molecule) -> Validity {
+    for b in &mol.bonds {
+        let (ai, aj) = (&mol.atoms[b.i], &mol.atoms[b.j]);
+        if ai.element.is_dummy() || aj.element.is_dummy() {
+            continue;
+        }
+        let d = dist(ai.pos, aj.pos);
+        let rsum = ai.element.data().r_cov + aj.element.data().r_cov;
+        if d < 0.7 * rsum {
+            return Validity::Reject("bond too short");
+        }
+        if d > 1.4 * rsum {
+            return Validity::Reject("bond too long");
+        }
+    }
+    Validity::Ok
+}
+
+/// Angle sanity: no bonded angle below 45° ("reasonable … angles").
+pub fn check_bond_angles(mol: &Molecule) -> Validity {
+    let nb = mol.neighbors();
+    for (i, neigh) in nb.iter().enumerate() {
+        for a in 0..neigh.len() {
+            for b in a + 1..neigh.len() {
+                let v1 = sub(mol.atoms[neigh[a]].pos, mol.atoms[i].pos);
+                let v2 = sub(mol.atoms[neigh[b]].pos, mol.atoms[i].pos);
+                let n1 = norm(v1);
+                let n2 = norm(v2);
+                if n1 < 1e-9 || n2 < 1e-9 {
+                    return Validity::Reject("degenerate angle");
+                }
+                let cosang = (dot(v1, v2) / (n1 * n2)).clamp(-1.0, 1.0);
+                if cosang > (45.0f64).to_radians().cos() {
+                    return Validity::Reject("angle too acute");
+                }
+            }
+        }
+    }
+    Validity::Ok
+}
+
+/// OChemDb-style minimum-separation screen over all atom pairs.
+pub fn check_min_separation(mol: &Molecule, min_sep: f64) -> Validity {
+    let n = mol.atoms.len();
+    for i in 0..n {
+        for j in i + 1..n {
+            if dist(mol.atoms[i].pos, mol.atoms[j].pos) < min_sep {
+                return Validity::Reject("atomic overlap");
+            }
+        }
+    }
+    Validity::Ok
+}
+
+/// Periodic variant of the minimum-separation screen (assembled MOFs).
+pub fn check_min_separation_periodic(
+    fw: &crate::chem::cell::Framework,
+    min_sep: f64,
+) -> Validity {
+    let n = fw.basis.len();
+    for i in 0..n {
+        for j in i + 1..n {
+            let d = fw
+                .cell
+                .min_image_dist(fw.basis.atoms[i].pos, fw.basis.atoms[j].pos);
+            if d < min_sep {
+                return Validity::Reject("atomic overlap (periodic)");
+            }
+        }
+    }
+    Validity::Ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::elements::Element::*;
+
+    fn benzene_coords() -> Molecule {
+        let mut m = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        m
+    }
+
+    #[test]
+    fn impute_benzene_ring() {
+        let mut m = benzene_coords();
+        impute_bonds(&mut m);
+        assert_eq!(m.bonds.len(), 6);
+        assert!(m
+            .bonds
+            .iter()
+            .all(|b| b.order == BondOrder::Aromatic));
+        assert_eq!(m.ring_count(), 1);
+    }
+
+    #[test]
+    fn impute_classifies_orders() {
+        // C=O at 1.21 Å (carbonyl) -> Double; C-O at 1.43 -> Single
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        m.add_atom(O, [1.21, 0.0, 0.0]);
+        impute_bonds(&mut m);
+        assert_eq!(m.bonds[0].order, BondOrder::Double);
+
+        let mut m2 = Molecule::new();
+        m2.add_atom(C, [0.0, 0.0, 0.0]);
+        m2.add_atom(N, [1.16, 0.0, 0.0]); // nitrile
+        impute_bonds(&mut m2);
+        assert_eq!(m2.bonds[0].order, BondOrder::Triple);
+    }
+
+    #[test]
+    fn valence_screen_rejects_overvalent() {
+        // carbon with 5 close neighbours
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        let dirs = [
+            [1.5, 0.0, 0.0],
+            [-1.5, 0.0, 0.0],
+            [0.0, 1.5, 0.0],
+            [0.0, -1.5, 0.0],
+            [0.0, 0.0, 1.5],
+        ];
+        for d in dirs {
+            m.add_atom(H, d);
+        }
+        for i in 1..=5 {
+            m.add_bond(0, i, BondOrder::Single);
+        }
+        assert!(!check_valence(&m).is_ok());
+    }
+
+    #[test]
+    fn valence_screen_accepts_methane_like() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        let t = 1.09 / (3.0f64).sqrt();
+        for d in [[t, t, t], [-t, -t, t], [-t, t, -t], [t, -t, -t]] {
+            let h = m.add_atom(H, d);
+            m.add_bond(0, h, BondOrder::Single);
+        }
+        assert!(check_valence(&m).is_ok());
+        assert_eq!(net_charge(&m), 0);
+    }
+
+    #[test]
+    fn net_charge_detects_ions() {
+        // ammonium-like: N with 4 single bonds
+        let mut m = Molecule::new();
+        m.add_atom(N, [0.0, 0.0, 0.0]);
+        for k in 0..4 {
+            let h = m.add_atom(H, [1.0 + k as f64 * 0.01, k as f64, 0.0]);
+            m.add_bond(0, h, BondOrder::Single);
+        }
+        assert_eq!(net_charge(&m), 1);
+        // alkoxide-like O with 1 bond
+        let mut m2 = Molecule::new();
+        m2.add_atom(O, [0.0, 0.0, 0.0]);
+        let c = m2.add_atom(C, [1.4, 0.0, 0.0]);
+        m2.add_bond(0, c, BondOrder::Single);
+        assert_eq!(net_charge(&m2), -1);
+    }
+
+    #[test]
+    fn bond_length_screen() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        m.add_atom(C, [0.8, 0.0, 0.0]); // way too short for C-C
+        m.add_bond(0, 1, BondOrder::Single);
+        assert!(!check_bond_lengths(&m).is_ok());
+    }
+
+    #[test]
+    fn angle_screen_rejects_acute() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        m.add_atom(C, [1.5, 0.0, 0.0]);
+        m.add_atom(C, [1.5, 0.4, 0.0]); // ~15 degrees apart from atom 0
+        m.add_bond(0, 1, BondOrder::Single);
+        m.add_bond(0, 2, BondOrder::Single);
+        assert!(!check_bond_angles(&m).is_ok());
+    }
+
+    #[test]
+    fn min_separation_screen() {
+        let mut m = benzene_coords();
+        assert!(check_min_separation(&m, MIN_SEPARATION).is_ok());
+        m.add_atom(H, [1.39, 0.1, 0.0]); // overlapping first ring atom
+        assert!(!check_min_separation(&m, MIN_SEPARATION).is_ok());
+    }
+
+    #[test]
+    fn dummies_excluded_from_imputation() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0, 0.0, 0.0]);
+        m.add_atom(At, [1.4, 0.0, 0.0]);
+        impute_bonds(&mut m);
+        assert!(m.bonds.is_empty());
+    }
+}

@@ -1,0 +1,315 @@
+//! Periodic triclinic cell + framework (crystal = cell ⊗ basis atoms).
+//!
+//! Used by assembly (unit cell construction), md (NPT supercell dynamics,
+//! LLST strain) and gcmc (minimum-image + Ewald geometry).
+
+use crate::chem::molecule::Molecule;
+use crate::util::linalg::{det3, inv3, matvec, transpose, M3, V3};
+
+/// Triclinic cell: rows of `h` are the lattice vectors a, b, c (Å).
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub h: M3,
+    hinv: M3,
+    /// diagonal lengths when the cell is orthorhombic (fast min-image path
+    /// — §Perf: skips two 3x3 matvecs in the MD/GCMC inner loops)
+    ortho: Option<V3>,
+}
+
+impl Cell {
+    pub fn new(h: M3) -> Self {
+        let hinv = inv3(&h).expect("singular cell matrix");
+        let off: f64 = (0..3)
+            .flat_map(|i| (0..3).filter(move |&j| i != j).map(move |j| (i, j)))
+            .map(|(i, j)| h[i][j].abs())
+            .sum();
+        let ortho = if off < 1e-9 { Some([h[0][0], h[1][1], h[2][2]]) } else { None };
+        Cell { h, hinv, ortho }
+    }
+
+    pub fn cubic(a: f64) -> Self {
+        Cell::new([[a, 0.0, 0.0], [0.0, a, 0.0], [0.0, 0.0, a]])
+    }
+
+    pub fn orthorhombic(a: f64, b: f64, c: f64) -> Self {
+        Cell::new([[a, 0.0, 0.0], [0.0, b, 0.0], [0.0, 0.0, c]])
+    }
+
+    /// Rebuild after mutating `h`.
+    pub fn update(&mut self) {
+        *self = Cell::new(self.h);
+    }
+
+    pub fn volume(&self) -> f64 {
+        det3(&self.h).abs()
+    }
+
+    /// Lattice parameter lengths (|a|, |b|, |c|).
+    pub fn lengths(&self) -> V3 {
+        [
+            (self.h[0][0].powi(2) + self.h[0][1].powi(2) + self.h[0][2].powi(2)).sqrt(),
+            (self.h[1][0].powi(2) + self.h[1][1].powi(2) + self.h[1][2].powi(2)).sqrt(),
+            (self.h[2][0].powi(2) + self.h[2][1].powi(2) + self.h[2][2].powi(2)).sqrt(),
+        ]
+    }
+
+    /// Cartesian -> fractional.
+    #[inline]
+    pub fn to_frac(&self, r: V3) -> V3 {
+        // r = f · H (rows are lattice vectors) => f = r · H^{-1}
+        matvec(&transpose(&self.hinv), r)
+    }
+
+    /// Fractional -> Cartesian.
+    #[inline]
+    pub fn to_cart(&self, f: V3) -> V3 {
+        matvec(&transpose(&self.h), f)
+    }
+
+    /// Wrap a Cartesian position into the home cell.
+    pub fn wrap(&self, r: V3) -> V3 {
+        let mut f = self.to_frac(r);
+        for v in f.iter_mut() {
+            *v -= v.floor();
+        }
+        self.to_cart(f)
+    }
+
+    /// Minimum-image displacement r_j - r_i (valid for cells with
+    /// orthogonality good enough that the nearest image is within ±1 cell,
+    /// which holds for all frameworks MOFA assembles).
+    #[inline]
+    pub fn min_image(&self, ri: V3, rj: V3) -> V3 {
+        let d = [rj[0] - ri[0], rj[1] - ri[1], rj[2] - ri[2]];
+        if let Some(l) = self.ortho {
+            return [
+                d[0] - l[0] * (d[0] / l[0]).round(),
+                d[1] - l[1] * (d[1] / l[1]).round(),
+                d[2] - l[2] * (d[2] / l[2]).round(),
+            ];
+        }
+        let mut f = self.to_frac(d);
+        for v in f.iter_mut() {
+            *v -= v.round();
+        }
+        self.to_cart(f)
+    }
+
+    /// Minimum-image distance.
+    #[inline]
+    pub fn min_image_dist(&self, ri: V3, rj: V3) -> f64 {
+        let d = self.min_image(ri, rj);
+        (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt()
+    }
+
+    /// Perpendicular widths of the cell (for cutoff validity checks).
+    pub fn perpendicular_widths(&self) -> V3 {
+        let v = self.volume();
+        let a = self.h[0];
+        let b = self.h[1];
+        let c = self.h[2];
+        let cx = crate::util::linalg::cross(b, c);
+        let cy = crate::util::linalg::cross(c, a);
+        let cz = crate::util::linalg::cross(a, b);
+        [
+            v / crate::util::linalg::norm(cx),
+            v / crate::util::linalg::norm(cy),
+            v / crate::util::linalg::norm(cz),
+        ]
+    }
+}
+
+/// A periodic framework: cell + basis atoms (a Molecule whose bonds are the
+/// intra-cell bonds; images are implicit).
+#[derive(Clone, Debug)]
+pub struct Framework {
+    pub cell: Cell,
+    pub basis: Molecule,
+}
+
+impl Framework {
+    pub fn new(cell: Cell, basis: Molecule) -> Self {
+        Framework { cell, basis }
+    }
+
+    /// Atom count in the basis.
+    pub fn len(&self) -> usize {
+        self.basis.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.basis.is_empty()
+    }
+
+    /// Mass of one unit cell, g/mol.
+    pub fn mass(&self) -> f64 {
+        self.basis.mass()
+    }
+
+    /// Crystal density, g/cm³.
+    pub fn density(&self) -> f64 {
+        // g/mol / (Å^3 · N_A) with 1 Å^3 = 1e-24 cm^3
+        self.mass() / (self.cell.volume() * 0.602214076)
+    }
+
+    /// Build the nx×ny×nz supercell (replicated atoms + scaled cell).
+    /// Paper §III-B equilibrates a 2×2×2 supercell in LAMMPS.
+    pub fn supercell(&self, nx: usize, ny: usize, nz: usize) -> Framework {
+        let mut m = Molecule::new();
+        let h = self.cell.h;
+        for ix in 0..nx {
+            for iy in 0..ny {
+                for iz in 0..nz {
+                    let shift = [
+                        ix as f64 * h[0][0] + iy as f64 * h[1][0] + iz as f64 * h[2][0],
+                        ix as f64 * h[0][1] + iy as f64 * h[1][1] + iz as f64 * h[2][1],
+                        ix as f64 * h[0][2] + iy as f64 * h[1][2] + iz as f64 * h[2][2],
+                    ];
+                    let off = m.atoms.len();
+                    for a in &self.basis.atoms {
+                        let mut at = *a;
+                        at.pos = [a.pos[0] + shift[0], a.pos[1] + shift[1], a.pos[2] + shift[2]];
+                        m.atoms.push(at);
+                    }
+                    for b in &self.basis.bonds {
+                        m.add_bond(b.i + off, b.j + off, b.order);
+                    }
+                }
+            }
+        }
+        let sh = [
+            [h[0][0] * nx as f64, h[0][1] * nx as f64, h[0][2] * nx as f64],
+            [h[1][0] * ny as f64, h[1][1] * ny as f64, h[1][2] * ny as f64],
+            [h[2][0] * nz as f64, h[2][1] * nz as f64, h[2][2] * nz as f64],
+        ];
+        Framework::new(Cell::new(sh), m)
+    }
+
+    /// Helium-free ("geometric") void fraction estimate by grid sampling:
+    /// fraction of points farther than `probe` from every atom (periodic).
+    pub fn void_fraction(&self, probe: f64, grid: usize) -> f64 {
+        let mut free = 0usize;
+        let total = grid * grid * grid;
+        for ix in 0..grid {
+            for iy in 0..grid {
+                for iz in 0..grid {
+                    let f = [
+                        (ix as f64 + 0.5) / grid as f64,
+                        (iy as f64 + 0.5) / grid as f64,
+                        (iz as f64 + 0.5) / grid as f64,
+                    ];
+                    let p = self.cell.to_cart(f);
+                    let mut ok = true;
+                    for a in &self.basis.atoms {
+                        let d = self.cell.min_image_dist(p, a.pos);
+                        if d < probe + 0.7 * a.element.data().r_cov {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        free += 1;
+                    }
+                }
+            }
+        }
+        free as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::elements::Element::*;
+
+    #[test]
+    fn frac_cart_roundtrip() {
+        let c = Cell::new([[10.0, 0.0, 0.0], [2.0, 9.0, 0.0], [1.0, 1.0, 8.0]]);
+        let r = [3.3, 4.4, 5.5];
+        let f = c.to_frac(r);
+        let r2 = c.to_cart(f);
+        for k in 0..3 {
+            assert!((r[k] - r2[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn volume_cubic() {
+        assert!((Cell::cubic(10.0).volume() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wrap_into_cell() {
+        let c = Cell::cubic(10.0);
+        let w = c.wrap([12.0, -3.0, 25.0]);
+        assert!((w[0] - 2.0).abs() < 1e-9);
+        assert!((w[1] - 7.0).abs() < 1e-9);
+        assert!((w[2] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_image_shorter_than_direct() {
+        let c = Cell::cubic(10.0);
+        let d = c.min_image_dist([1.0, 0.0, 0.0], [9.0, 0.0, 0.0]);
+        assert!((d - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_image_triclinic() {
+        let c = Cell::new([[10.0, 0.0, 0.0], [3.0, 9.0, 0.0], [0.0, 0.0, 12.0]]);
+        // a point near a cell corner should be close to the image of origin
+        let d = c.min_image_dist([0.5, 0.5, 0.5], [12.4, 8.8, 11.8]);
+        assert!(d < 3.0, "d={d}");
+    }
+
+    #[test]
+    fn supercell_replication() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [1.0, 1.0, 1.0]);
+        m.add_atom(O, [2.0, 1.0, 1.0]);
+        m.add_bond(0, 1, crate::chem::molecule::BondOrder::Single);
+        let fw = Framework::new(Cell::cubic(5.0), m);
+        let sc = fw.supercell(2, 2, 2);
+        assert_eq!(sc.len(), 16);
+        assert_eq!(sc.basis.bonds.len(), 8);
+        assert!((sc.cell.volume() - 1000.0).abs() < 1e-9);
+        assert!((sc.density() - fw.density()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_known() {
+        // one Zn in a 10 Å cube: 65.38 / (1000 * 0.6022) ≈ 0.1086 g/cm3
+        let mut m = Molecule::new();
+        m.add_atom(Zn, [0.0; 3]);
+        let fw = Framework::new(Cell::cubic(10.0), m);
+        assert!((fw.density() - 0.1086).abs() < 0.001);
+    }
+
+    #[test]
+    fn void_fraction_empty_vs_filled() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [5.0, 5.0, 5.0]);
+        let fw = Framework::new(Cell::cubic(10.0), m);
+        let vf = fw.void_fraction(1.2, 8);
+        assert!(vf > 0.9, "single atom in big box: vf={vf}");
+        // dense packing
+        let mut dense = Molecule::new();
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    dense.add_atom(C, [i as f64 * 2.5, j as f64 * 2.5, k as f64 * 2.5]);
+                }
+            }
+        }
+        let fw2 = Framework::new(Cell::cubic(10.0), dense);
+        assert!(fw2.void_fraction(1.2, 8) < vf);
+    }
+
+    #[test]
+    fn perpendicular_widths_cubic() {
+        let w = Cell::cubic(7.0).perpendicular_widths();
+        for v in w {
+            assert!((v - 7.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! 38 chemical descriptors per linker (Fig. 9's "38 chemical properties").
+//!
+//! The paper embeds linkers with 38 RDKit properties and projects with
+//! UMAP; we compute 38 hand-built descriptors spanning the same families
+//! (composition, topology, geometry, electronics) and project with PCA
+//! (util/linalg::pca2). Only the *qualitative* overlap/novelty claim of
+//! Fig. 9 depends on this, so exact RDKit parity is not required.
+
+use crate::chem::elements::Element;
+use crate::chem::molecule::{BondOrder, Molecule};
+use crate::util::linalg::{dist, norm, sub};
+
+/// Number of descriptors (fixed; Fig. 9 parity).
+pub const N_DESCRIPTORS: usize = 38;
+
+/// Compute the 38-dim descriptor vector for a linker molecule.
+pub fn descriptors(mol: &Molecule) -> [f64; N_DESCRIPTORS] {
+    let mut d = [0.0f64; N_DESCRIPTORS];
+    let n = mol.len().max(1) as f64;
+    let nb = mol.neighbors();
+    let val = mol.valences();
+    let deg = mol.degrees();
+
+    // --- composition (0..9)
+    let count = |e: Element| mol.atoms.iter().filter(|a| a.element == e).count() as f64;
+    d[0] = n;
+    d[1] = count(Element::C);
+    d[2] = count(Element::N);
+    d[3] = count(Element::O);
+    d[4] = count(Element::S);
+    d[5] = count(Element::H);
+    d[6] = d[1] / n; // carbon fraction
+    d[7] = (d[2] + d[3] + d[4]) / n; // heteroatom fraction
+    d[8] = mol.mass();
+    d[9] = mol
+        .atoms
+        .iter()
+        .map(|a| a.element.data().qeq_chi)
+        .sum::<f64>()
+        / n; // mean electronegativity
+
+    // --- topology (10..19)
+    d[10] = mol.bonds.len() as f64;
+    d[11] = mol.ring_count() as f64;
+    d[12] = mol
+        .bonds
+        .iter()
+        .filter(|b| b.order == BondOrder::Aromatic)
+        .count() as f64;
+    d[13] = mol
+        .bonds
+        .iter()
+        .filter(|b| b.order == BondOrder::Double)
+        .count() as f64;
+    d[14] = mol
+        .bonds
+        .iter()
+        .filter(|b| b.order == BondOrder::Triple)
+        .count() as f64;
+    d[15] = deg.iter().map(|&x| x as f64).sum::<f64>() / n; // mean degree
+    d[16] = deg.iter().map(|&x| (x * x) as f64).sum::<f64>() / n; // 2nd moment
+    d[17] = deg.iter().filter(|&&x| x == 1).count() as f64; // terminal atoms
+    d[18] = deg.iter().filter(|&&x| x >= 3).count() as f64; // branch points
+    d[19] = val.iter().sum::<f64>() / n; // mean valence
+
+    // --- geometry (20..31)
+    let com = mol.center_of_mass();
+    let rg2 = mol
+        .atoms
+        .iter()
+        .map(|a| {
+            let r = sub(a.pos, com);
+            r[0] * r[0] + r[1] * r[1] + r[2] * r[2]
+        })
+        .sum::<f64>()
+        / n;
+    d[20] = rg2.sqrt(); // radius of gyration
+    let mut dmax = 0.0f64;
+    for i in 0..mol.len() {
+        for j in i + 1..mol.len() {
+            dmax = dmax.max(dist(mol.atoms[i].pos, mol.atoms[j].pos));
+        }
+    }
+    d[21] = dmax; // molecular diameter
+    let bl: Vec<f64> = mol
+        .bonds
+        .iter()
+        .map(|b| dist(mol.atoms[b.i].pos, mol.atoms[b.j].pos))
+        .collect();
+    d[22] = crate::util::stats::mean(&bl);
+    d[23] = crate::util::stats::std_dev(&bl);
+    // planarity: RMS deviation from best plane through z≈0 heuristic
+    // (use smallest principal inertia-like spread)
+    let mut cov = [[0.0f64; 3]; 3];
+    for a in &mol.atoms {
+        let r = sub(a.pos, com);
+        for i in 0..3 {
+            for j in 0..3 {
+                cov[i][j] += r[i] * r[j] / n;
+            }
+        }
+    }
+    let eig = crate::util::linalg::sym_eigenvalues3(&cov);
+    d[24] = eig[0].max(0.0).sqrt(); // out-of-plane spread (planarity)
+    d[25] = eig[2].max(0.0).sqrt(); // long-axis spread (linearity)
+    d[26] = if eig[2] > 1e-12 { eig[1] / eig[2] } else { 0.0 }; // aspect
+    // anchor geometry: distance between the two dummy/anchor atoms if any
+    let anchors: Vec<usize> = mol
+        .atoms
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.element.is_dummy())
+        .map(|(i, _)| i)
+        .collect();
+    d[27] = if anchors.len() >= 2 {
+        dist(mol.atoms[anchors[0]].pos, mol.atoms[anchors[1]].pos)
+    } else {
+        dmax
+    };
+    d[28] = anchors.len() as f64;
+    // nearest-neighbour stats
+    let mut nnd = Vec::new();
+    for i in 0..mol.len() {
+        let mut best = f64::INFINITY;
+        for j in 0..mol.len() {
+            if i != j {
+                best = best.min(dist(mol.atoms[i].pos, mol.atoms[j].pos));
+            }
+        }
+        if best.is_finite() {
+            nnd.push(best);
+        }
+    }
+    d[29] = crate::util::stats::mean(&nnd);
+    d[30] = crate::util::stats::std_dev(&nnd);
+    d[31] = if d[20] > 1e-9 { dmax / d[20] } else { 0.0 };
+
+    // --- electronics-ish (32..37)
+    let chi: Vec<f64> = mol.atoms.iter().map(|a| a.element.data().qeq_chi).collect();
+    d[32] = crate::util::stats::std_dev(&chi); // electronegativity spread
+    // crude dipole proxy: |sum chi_i * (r_i - com)|
+    let mut dip = [0.0; 3];
+    for (a, &x) in mol.atoms.iter().zip(&chi) {
+        let r = sub(a.pos, com);
+        for k in 0..3 {
+            dip[k] += (x - 5.3) * r[k];
+        }
+    }
+    d[33] = norm(dip);
+    d[34] = mol
+        .atoms
+        .iter()
+        .map(|a| a.element.data().uff_d)
+        .sum::<f64>(); // dispersion "stickiness"
+    d[35] = mol
+        .atoms
+        .iter()
+        .zip(&val)
+        .filter(|(a, &v)| a.element == Element::C && v > 3.4 && v < 4.6)
+        .count() as f64; // saturated-ish carbons
+    d[36] = nb.iter().filter(|x| x.len() == 2).count() as f64; // chain atoms
+    d[37] = d[11] * 6.0 / n.max(1.0); // ring density
+
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::bonding::impute_bonds;
+    use crate::chem::elements::Element::*;
+
+    fn benzene() -> Molecule {
+        let mut m = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        impute_bonds(&mut m);
+        m
+    }
+
+    #[test]
+    fn has_38_finite_entries() {
+        let d = descriptors(&benzene());
+        assert_eq!(d.len(), 38);
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn composition_counts() {
+        let d = descriptors(&benzene());
+        assert_eq!(d[0], 6.0); // atoms
+        assert_eq!(d[1], 6.0); // carbons
+        assert_eq!(d[11], 1.0); // one ring
+        assert_eq!(d[12], 6.0); // aromatic bonds
+    }
+
+    #[test]
+    fn planarity_zero_for_flat_ring() {
+        let d = descriptors(&benzene());
+        assert!(d[24] < 1e-9, "flat ring must have zero out-of-plane spread");
+    }
+
+    #[test]
+    fn invariant_under_rotation() {
+        let mut m = benzene();
+        let d1 = descriptors(&m);
+        m.rotate(&crate::util::rng::Rng::new(3).rotation3());
+        m.translate([5.0, 6.0, 7.0]);
+        let d2 = descriptors(&m);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn distinguishes_chemistry() {
+        let benz = descriptors(&benzene());
+        let mut thio = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            thio.add_atom(
+                if k < 2 { S } else { C },
+                [1.45 * ang.cos(), 1.45 * ang.sin(), 0.0],
+            );
+        }
+        impute_bonds(&mut thio);
+        let td = descriptors(&thio);
+        let diff: f64 = benz.iter().zip(&td).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1.0);
+    }
+}

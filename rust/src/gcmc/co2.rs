@@ -1,0 +1,92 @@
+//! Rigid three-site CO₂ model (TraPPE-flexible's rigid variant, the RASPA
+//! default the paper uses): C at the centre, O at ±1.16 Å, point charges
+//! q_C = +0.70 e / q_O = −0.35 e, LJ on every site.
+
+use crate::util::linalg::{add, scale, V3};
+
+/// C=O bond length, Å.
+pub const R_CO: f64 = 1.16;
+/// charges, e
+pub const Q_C: f64 = 0.70;
+pub const Q_O: f64 = -0.35;
+/// TraPPE LJ, kcal/mol and Å (ε converted from K: ε[K]·k_B)
+pub const EPS_C: f64 = 27.0 * 0.001_987_2;
+pub const SIG_C: f64 = 2.80;
+pub const EPS_O: f64 = 79.0 * 0.001_987_2;
+pub const SIG_O: f64 = 3.05;
+/// molar mass, g/mol
+pub const MASS: f64 = 44.009_5;
+
+/// A rigid CO₂: centre position + unit orientation vector.
+#[derive(Clone, Copy, Debug)]
+pub struct Co2 {
+    pub center: V3,
+    pub axis: V3,
+}
+
+/// Per-site (position, charge, sigma, epsilon).
+pub type Site = (V3, f64, f64, f64);
+
+impl Co2 {
+    pub fn new(center: V3, axis: V3) -> Self {
+        Co2 { center, axis }
+    }
+
+    /// The three interaction sites.
+    pub fn sites(&self) -> [Site; 3] {
+        [
+            (self.center, Q_C, SIG_C, EPS_C),
+            (add(self.center, scale(self.axis, R_CO)), Q_O, SIG_O, EPS_O),
+            (add(self.center, scale(self.axis, -R_CO)), Q_O, SIG_O, EPS_O),
+        ]
+    }
+
+    /// Charged sites only (for Ewald).
+    pub fn charged_sites(&self) -> [(V3, f64); 3] {
+        let s = self.sites();
+        [(s[0].0, s[0].1), (s[1].0, s[1].1), (s[2].0, s[2].1)]
+    }
+}
+
+/// Intramolecular Ewald correction constant per molecule (self + intra),
+/// kcal/mol. Subtracted once per inserted molecule (see gcmc/mod.rs).
+pub fn molecule_ewald_const(alpha: f64) -> f64 {
+    use crate::gcmc::ewald::{erf, K_E};
+    let q2_sum = Q_C * Q_C + 2.0 * Q_O * Q_O;
+    let self_term = K_E * alpha / std::f64::consts::PI.sqrt() * q2_sum;
+    // intra pairs: C-O ×2 at R_CO, O-O at 2 R_CO
+    let intra = K_E
+        * (2.0 * Q_C * Q_O * erf(alpha * R_CO) / R_CO
+            + Q_O * Q_O * erf(alpha * 2.0 * R_CO) / (2.0 * R_CO));
+    self_term + intra
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neutral_molecule() {
+        assert!((Q_C + 2.0 * Q_O).abs() < 1e-12);
+        let co2 = Co2::new([1.0, 2.0, 3.0], [0.0, 0.0, 1.0]);
+        let total: f64 = co2.sites().iter().map(|s| s.1).sum();
+        assert!(total.abs() < 1e-12);
+    }
+
+    #[test]
+    fn site_geometry() {
+        let co2 = Co2::new([0.0; 3], [1.0, 0.0, 0.0]);
+        let s = co2.sites();
+        assert_eq!(s[1].0, [R_CO, 0.0, 0.0]);
+        assert_eq!(s[2].0, [-R_CO, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ewald_const_positive_and_alpha_monotone() {
+        let a1 = molecule_ewald_const(0.2);
+        let a2 = molecule_ewald_const(0.4);
+        assert!(a1.is_finite() && a2.is_finite());
+        // self term grows linearly with alpha and dominates
+        assert!(a2 > a1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Decode model output tensors into candidate linker molecules.
+//!
+//! Model conventions (python/compile/model.py): atom slots 0 and 1 are the
+//! anchors; features are one-hot over [C, N, O, S] plus an anchor-flag
+//! channel; coordinates are Å, CoM-free. The anchor element determines the
+//! family: carbon anchors → BCA (future carboxylate C → At dummy), nitrogen
+//! anchors → BZN (nitrile N → Fr dummy 2 Å out).
+
+use crate::chem::elements::Element;
+use crate::chem::molecule::Molecule;
+use crate::genai::{Family, GenLinker};
+
+/// Decode one batch: x0 `[B,N,3]` (Å), h0 `[B,N,F]` logits, mask `[B,N]`
+/// (or `[B,N,1]`). Samples whose anchors decode inconsistently are dropped
+/// here (cheapest possible screen, before `process linkers` even runs).
+pub fn decode_batch(
+    x0: &[f32],
+    h0: &[f32],
+    mask: &[f32],
+    b: usize,
+    n: usize,
+    f: usize,
+    model_version: u64,
+) -> Vec<GenLinker> {
+    assert_eq!(x0.len(), b * n * 3);
+    assert_eq!(h0.len(), b * n * f);
+    assert!(mask.len() == b * n || mask.len() == b * n * 3 / 3);
+    let mut out = Vec::with_capacity(b);
+    for s in 0..b {
+        if let Some(l) = decode_one(
+            &x0[s * n * 3..(s + 1) * n * 3],
+            &h0[s * n * f..(s + 1) * n * f],
+            &mask[s * n..(s + 1) * n],
+            n,
+            f,
+            model_version,
+        ) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// Decode a single sample. Returns None when the anchor slots are masked
+/// out or decode to an element that cannot anchor either family.
+pub fn decode_one(
+    x: &[f32],
+    h: &[f32],
+    mask: &[f32],
+    n: usize,
+    f: usize,
+    model_version: u64,
+) -> Option<GenLinker> {
+    let n_real = mask.iter().filter(|&&m| m > 0.5).count();
+    if n_real < 3 {
+        return None;
+    }
+    // anchors must be real atoms
+    if mask[0] < 0.5 || mask[1] < 0.5 {
+        return None;
+    }
+    let mut mol = Molecule::new();
+    let mut kept = Vec::with_capacity(n_real);
+    for a in 0..n {
+        if mask[a] < 0.5 {
+            continue;
+        }
+        let logits = &h[a * f..a * f + (f - 1)];
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        let elem = Element::MODEL_VOCAB[best];
+        let pos = [x[a * 3] as f64, x[a * 3 + 1] as f64, x[a * 3 + 2] as f64];
+        kept.push(mol.add_atom(elem, pos));
+    }
+    // anchor slots are the first two kept atoms (slots 0,1 are unmasked)
+    let (a0, a1) = (kept[0], kept[1]);
+    let family = match (mol.atoms[a0].element, mol.atoms[a1].element) {
+        (Element::C, Element::C) => Family::Bca,
+        (Element::N, Element::N) => Family::Bzn,
+        _ => return None, // inconsistent anchors
+    };
+    Some(GenLinker { molecule: mol, family, anchors: [a0, a1], model_version })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn onehot(f: usize, idx: usize, anchor: bool) -> Vec<f32> {
+        let mut v = vec![0.0; f];
+        v[idx] = 1.0;
+        if anchor {
+            v[f - 1] = 1.0;
+        }
+        v
+    }
+
+    fn build_sample(
+        elems: &[usize],
+        n: usize,
+        f: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut x = vec![0.0f32; n * 3];
+        let mut h = vec![0.0f32; n * f];
+        let mut mask = vec![0.0f32; n];
+        for (a, &e) in elems.iter().enumerate() {
+            x[a * 3] = a as f32 * 1.4;
+            h[a * f..(a + 1) * f].copy_from_slice(&onehot(f, e, a < 2));
+            mask[a] = 1.0;
+        }
+        (x, h, mask)
+    }
+
+    #[test]
+    fn decodes_bca_from_carbon_anchors() {
+        let (x, h, mask) = build_sample(&[0, 0, 0, 1, 2], 16, 5);
+        let l = decode_one(&x, &h, &mask, 16, 5, 3).unwrap();
+        assert_eq!(l.family, Family::Bca);
+        assert_eq!(l.molecule.len(), 5);
+        assert_eq!(l.molecule.atoms[3].element, Element::N);
+        assert_eq!(l.model_version, 3);
+    }
+
+    #[test]
+    fn decodes_bzn_from_nitrogen_anchors() {
+        let (x, h, mask) = build_sample(&[1, 1, 0, 0, 0, 0], 16, 5);
+        let l = decode_one(&x, &h, &mask, 16, 5, 0).unwrap();
+        assert_eq!(l.family, Family::Bzn);
+    }
+
+    #[test]
+    fn rejects_mixed_anchors() {
+        let (x, h, mask) = build_sample(&[0, 1, 0, 0], 16, 5);
+        assert!(decode_one(&x, &h, &mask, 16, 5, 0).is_none());
+    }
+
+    #[test]
+    fn rejects_oxygen_anchors() {
+        let (x, h, mask) = build_sample(&[2, 2, 0, 0], 16, 5);
+        assert!(decode_one(&x, &h, &mask, 16, 5, 0).is_none());
+    }
+
+    #[test]
+    fn rejects_too_small() {
+        let (x, h, mask) = build_sample(&[0, 0], 16, 5);
+        assert!(decode_one(&x, &h, &mask, 16, 5, 0).is_none());
+    }
+
+    #[test]
+    fn argmax_picks_largest_logit() {
+        let n = 16;
+        let f = 5;
+        let mut x = vec![0.0f32; n * 3];
+        let mut h = vec![0.0f32; n * f];
+        let mut mask = vec![0.0f32; n];
+        for a in 0..4 {
+            mask[a] = 1.0;
+            x[a * 3] = a as f32 * 1.5;
+        }
+        // anchors C (channel 0 strongest)
+        for a in 0..2 {
+            h[a * f] = 0.9;
+            h[a * f + 1] = 0.2;
+        }
+        // atom 2: sulfur wins (channel 3)
+        h[2 * f + 3] = 2.0;
+        h[2 * f] = 1.5;
+        // atom 3: oxygen
+        h[3 * f + 2] = 0.4;
+        let l = decode_one(&x, &h, &mask, n, f, 0).unwrap();
+        assert_eq!(l.molecule.atoms[2].element, Element::S);
+        assert_eq!(l.molecule.atoms[3].element, Element::O);
+    }
+
+    #[test]
+    fn batch_decoding_skips_bad_samples() {
+        let n = 16;
+        let f = 5;
+        let (x1, h1, m1) = build_sample(&[0, 0, 0, 0, 1], n, f);
+        let (x2, h2, m2) = build_sample(&[0, 1, 0, 0], n, f); // mixed anchors
+        let x: Vec<f32> = [x1, x2].concat();
+        let h: Vec<f32> = [h1, h2].concat();
+        let m: Vec<f32> = [m1, m2].concat();
+        let out = decode_batch(&x, &h, &m, 2, n, f, 1);
+        assert_eq!(out.len(), 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! GenAI layer glue: decode model outputs into molecules, drive the PJRT
+//! sampler (generate-linkers task) and the PJRT trainer (retrain task).
+//!
+//! The [`LinkerGenerator`] / [`LinkerTrainer`] traits let the workflow run
+//! either against the real AOT-compiled MOFLinker ([`generator::HloGenerator`],
+//! [`trainer::HloTrainer`]) or against a fast procedural surrogate
+//! ([`generator::SurrogateGenerator`]) in unit tests and scheduler-focused
+//! experiments where model quality is held constant.
+
+pub mod corpus;
+pub mod decode;
+pub mod generator;
+pub mod trainer;
+
+use crate::chem::molecule::Molecule;
+
+/// Linker anchor family (paper §III-B): benzenecarboxylic-acid linkers
+/// anchor through carboxylate carbons (dummy At), benzonitrile linkers
+/// through nitrile nitrogens (dummy Fr placed 2 Å out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    Bca,
+    Bzn,
+}
+
+impl Family {
+    pub fn label(self) -> &'static str {
+        match self {
+            Family::Bca => "BCA",
+            Family::Bzn => "BZN",
+        }
+    }
+}
+
+/// A raw generated linker (model output after decoding, before processing).
+#[derive(Clone, Debug)]
+pub struct GenLinker {
+    pub molecule: Molecule,
+    pub family: Family,
+    /// atom indices of the two anchor atoms (model convention: slots 0, 1)
+    pub anchors: [usize; 2],
+    /// id of the model version that produced it (retrain generation count)
+    pub model_version: u64,
+}
+
+/// Training example for retraining: padded tensors in model layout.
+#[derive(Clone, Debug)]
+pub struct TrainExample {
+    /// (N,3) row-major coords, Å, CoM-free
+    pub x: Vec<f32>,
+    /// (N,F) one-hot features + anchor flag
+    pub h: Vec<f32>,
+    /// (N,1) mask
+    pub mask: Vec<f32>,
+}
+
+/// Abstract generator: one batch of linkers per call.
+pub trait LinkerGenerator: Send + Sync {
+    /// Generate a batch; `seed` must fully determine the output.
+    fn generate(&self, seed: u64) -> anyhow::Result<Vec<GenLinker>>;
+    /// Install new model parameters (after retraining). No-op for mocks.
+    fn set_params(&self, params: Vec<f32>, version: u64);
+    /// Current model version.
+    fn version(&self) -> u64;
+}
+
+/// Abstract trainer: one retraining run over a training set.
+pub trait LinkerTrainer: Send + Sync {
+    /// Run `steps` optimizer steps over `examples`; returns (params, loss).
+    fn retrain(
+        &self,
+        examples: &[TrainExample],
+        steps: usize,
+        seed: u64,
+    ) -> anyhow::Result<(Vec<f32>, f32)>;
+}

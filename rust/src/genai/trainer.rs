@@ -1,0 +1,188 @@
+//! Retraining (paper §III-B step 7): fine-tune MOFLinker on the linkers of
+//! the best MOFs found so far, starting from the pretrained weights.
+
+use crate::genai::{LinkerTrainer, TrainExample};
+use crate::runtime::actor::RuntimeHandle;
+use crate::util::rng::Rng;
+
+/// PJRT-backed trainer driving the AOT train_step executable.
+pub struct HloTrainer {
+    rt: RuntimeHandle,
+    /// weights retraining restarts from (pretrained on hMOF+GEOM stand-in)
+    base_params: Vec<f32>,
+}
+
+impl HloTrainer {
+    pub fn new(rt: RuntimeHandle, base_params: Vec<f32>) -> Self {
+        assert_eq!(base_params.len(), rt.meta.p_total);
+        HloTrainer { rt, base_params }
+    }
+}
+
+impl LinkerTrainer for HloTrainer {
+    fn retrain(
+        &self,
+        examples: &[TrainExample],
+        steps: usize,
+        seed: u64,
+    ) -> anyhow::Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(!examples.is_empty(), "empty training set");
+        let m = &self.rt.meta;
+        let (b, n, f, p) = (m.b_train, m.n_atoms, m.n_feats, m.p_total);
+        let mut rng = Rng::new(seed ^ 0x7E7A_12D5);
+
+        // Paper: "Retraining starts from the weights learned from
+        // pre-training on the hMOF and GEOM datasets".
+        let mut params = self.base_params.clone();
+        let mut mm = vec![0.0f32; p];
+        let mut vv = vec![0.0f32; p];
+        let mut step = 0.0f32;
+        let mut last_loss = f32::NAN;
+
+        let mut x0 = vec![0.0f32; b * n * 3];
+        let mut h0 = vec![0.0f32; b * n * f];
+        let mut mask = vec![0.0f32; b * n];
+        let mut nx = vec![0.0f32; b * n * 3];
+        let mut nh = vec![0.0f32; b * n * f];
+        for _ in 0..steps {
+            for s in 0..b {
+                let ex = rng.choice(examples);
+                x0[s * n * 3..(s + 1) * n * 3].copy_from_slice(&ex.x);
+                h0[s * n * f..(s + 1) * n * f].copy_from_slice(&ex.h);
+                mask[s * n..(s + 1) * n].copy_from_slice(&ex.mask);
+            }
+            let t_idx: Vec<i32> = (0..b).map(|_| rng.below(m.t_steps) as i32).collect();
+            rng.fill_normal_f32(&mut nx);
+            rng.fill_normal_f32(&mut nh);
+            let out = self
+                .rt
+                .train_step(&params, &mm, &vv, step, &x0, &h0, &mask, &t_idx, &nx, &nh)?;
+            params = out.params;
+            mm = out.m;
+            vv = out.v;
+            step = out.step;
+            last_loss = out.loss;
+            anyhow::ensure!(last_loss.is_finite(), "training diverged");
+        }
+        Ok((params, last_loss))
+    }
+}
+
+/// No-PJRT trainer for scheduler tests: returns base params untouched but
+/// reports a loss that shrinks with the training-set size (statistically
+/// plausible signal for the Thinker's policies).
+pub struct SurrogateTrainer;
+
+impl LinkerTrainer for SurrogateTrainer {
+    fn retrain(
+        &self,
+        examples: &[TrainExample],
+        steps: usize,
+        _seed: u64,
+    ) -> anyhow::Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(!examples.is_empty());
+        let loss = 1.0 / (1.0 + (examples.len() as f32).ln() + steps as f32 * 0.01);
+        Ok((Vec::new(), loss))
+    }
+}
+
+/// Pack linkers into padded training tensors (model layout) — the
+/// retrain-agent side of the "training set of linkers from the
+/// best-performing MOFs" curation.
+pub fn examples_from_linkers(
+    linkers: &[crate::genai::GenLinker],
+    n_slots: usize,
+    n_feats: usize,
+) -> Vec<TrainExample> {
+    linkers
+        .iter()
+        .filter(|l| l.molecule.len() <= n_slots && l.molecule.len() >= 3)
+        .map(|l| {
+            let mol = &l.molecule;
+            let n = mol.len();
+            let mut x = vec![0.0f32; n_slots * 3];
+            let mut h = vec![0.0f32; n_slots * n_feats];
+            let mut mask = vec![0.0f32; n_slots];
+            let mut com = [0.0f64; 3];
+            for a in &mol.atoms {
+                for c in 0..3 {
+                    com[c] += a.pos[c] / n as f64;
+                }
+            }
+            // anchors occupy slots 0,1 (reorder if needed)
+            let mut order: Vec<usize> = (0..n).collect();
+            order.swap(0, l.anchors[0]);
+            let second = order.iter().position(|&i| i == l.anchors[1]).unwrap();
+            order.swap(1, second);
+            for (slot, &ai) in order.iter().enumerate() {
+                let a = &mol.atoms[ai];
+                for c in 0..3 {
+                    x[slot * 3 + c] = (a.pos[c] - com[c]) as f32;
+                }
+                if let Some(idx) = a.element.model_index() {
+                    h[slot * n_feats + idx] = 1.0;
+                }
+                mask[slot] = 1.0;
+            }
+            h[n_feats - 1] = 1.0;
+            h[n_feats + n_feats - 1] = 1.0;
+            TrainExample { x, h, mask }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::elements::Element::*;
+    use crate::chem::molecule::Molecule;
+    use crate::genai::{Family, GenLinker};
+
+    fn linker() -> GenLinker {
+        let mut m = Molecule::new();
+        m.add_atom(C, [2.9, 0.0, 0.0]);
+        m.add_atom(C, [-2.9, 0.0, 0.0]);
+        for k in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * k as f64;
+            m.add_atom(C, [1.39 * ang.cos(), 1.39 * ang.sin(), 0.0]);
+        }
+        GenLinker { molecule: m, family: Family::Bca, anchors: [0, 1], model_version: 0 }
+    }
+
+    #[test]
+    fn packs_linkers_with_anchor_slots() {
+        let ex = examples_from_linkers(&[linker()], 16, 5);
+        assert_eq!(ex.len(), 1);
+        let e = &ex[0];
+        assert_eq!(e.mask.iter().filter(|&&v| v > 0.5).count(), 8);
+        // anchor flags on slots 0,1
+        assert_eq!(e.h[4], 1.0);
+        assert_eq!(e.h[9], 1.0);
+        // CoM-free
+        let sx: f32 = (0..8).map(|i| e.x[i * 3]).sum();
+        assert!(sx.abs() < 1e-4);
+    }
+
+    #[test]
+    fn skips_oversized_molecules() {
+        let mut l = linker();
+        for i in 0..20 {
+            l.molecule.add_atom(C, [i as f64, 5.0, 0.0]);
+        }
+        assert!(examples_from_linkers(&[l], 16, 5).is_empty());
+    }
+
+    #[test]
+    fn surrogate_trainer_loss_shrinks_with_set_size() {
+        let t = SurrogateTrainer;
+        let small: Vec<TrainExample> = (0..4)
+            .map(|_| TrainExample { x: vec![], h: vec![], mask: vec![] })
+            .collect();
+        let large: Vec<TrainExample> = (0..512)
+            .map(|_| TrainExample { x: vec![], h: vec![], mask: vec![] })
+            .collect();
+        let (_, l_small) = t.retrain(&small, 10, 0).unwrap();
+        let (_, l_large) = t.retrain(&large, 10, 0).unwrap();
+        assert!(l_large < l_small);
+    }
+}

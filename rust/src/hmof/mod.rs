@@ -1,0 +1,132 @@
+//! Synthetic hMOF reference population (DESIGN.md §3 substitution).
+//!
+//! The paper ranks MOFA's best MOFs against the 4547-structure "structurally
+//! similar" subset of the 137,652-MOF hMOF dataset: the best MOFA structure
+//! (4.05 mol/kg at 0.1 bar) lands in the top 5, and ten more in the top
+//! 10 % (1–2 mol/kg). We have no hMOF, so we generate a reference capacity
+//! distribution calibrated to the published quantiles: log-normal with
+//! median 0.30 mol/kg and σ=0.88, giving q90 ≈ 0.93 and a top-5 boundary
+//! (quantile 1 − 5/4547) ≈ 4.3 mol/kg — Fig. 8's *rank* claims are about
+//! these quantiles, not about individual structures.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Size of the "structurally similar subset" the paper compares against.
+pub const SUBSET_SIZE: usize = 4547;
+/// Size of the full hypothetical database (reported for context).
+pub const FULL_SIZE: usize = 137_652;
+
+/// Calibration constants (see module docs).
+pub const MEDIAN_MOL_KG: f64 = 0.30;
+pub const SIGMA_LN: f64 = 0.88;
+
+/// The reference population of CO₂ capacities at 0.1 bar, mol/kg.
+#[derive(Clone, Debug)]
+pub struct HmofReference {
+    /// capacities sorted descending (rank 1 = best)
+    pub capacities: Vec<f64>,
+}
+
+impl HmofReference {
+    /// Deterministically generate the reference subset.
+    pub fn generate(seed: u64) -> HmofReference {
+        Self::generate_sized(seed, SUBSET_SIZE)
+    }
+
+    pub fn generate_sized(seed: u64, n: usize) -> HmofReference {
+        let mut rng = Rng::new(seed ^ 0x4A4F_4653);
+        let mut capacities: Vec<f64> = (0..n)
+            .map(|_| MEDIAN_MOL_KG * (SIGMA_LN * rng.normal()).exp())
+            .collect();
+        capacities.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        HmofReference { capacities }
+    }
+
+    pub fn len(&self) -> usize {
+        self.capacities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.capacities.is_empty()
+    }
+
+    /// Rank of a capacity within the reference (1 = best).
+    pub fn rank(&self, capacity: f64) -> usize {
+        stats::rank_descending(&self.capacities, capacity)
+    }
+
+    /// Percentile position: 0.0 = best, 1.0 = worst.
+    pub fn percentile(&self, capacity: f64) -> f64 {
+        (self.rank(capacity) - 1) as f64 / self.len() as f64
+    }
+
+    /// True when the capacity lands in the top-k structures.
+    pub fn in_top_k(&self, capacity: f64, k: usize) -> bool {
+        self.rank(capacity) <= k
+    }
+
+    /// True when the capacity is in the top fraction (e.g. 0.10 = top 10%).
+    pub fn in_top_fraction(&self, capacity: f64, fraction: f64) -> bool {
+        self.percentile(capacity) < fraction
+    }
+
+    /// Capacity at a given quantile from the top (0.1 = top-10 % boundary).
+    pub fn top_quantile_boundary(&self, fraction: f64) -> f64 {
+        let idx = ((self.len() as f64 * fraction) as usize).min(self.len() - 1);
+        self.capacities[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = HmofReference::generate(1);
+        let b = HmofReference::generate(1);
+        assert_eq!(a.capacities, b.capacities);
+        assert_eq!(a.len(), SUBSET_SIZE);
+    }
+
+    #[test]
+    fn calibration_matches_paper_quantiles() {
+        let r = HmofReference::generate(0);
+        // top 10% boundary ~ 1 mol/kg (paper: top 10% spans 1-2 mol/kg)
+        let b10 = r.top_quantile_boundary(0.10);
+        assert!((0.7..1.4).contains(&b10), "top-10% boundary {b10}");
+        // top-5 boundary around ~4 mol/kg (paper's best MOF 4.05 is top 5)
+        let b5 = r.capacities[4];
+        assert!((2.8..6.5).contains(&b5), "top-5 boundary {b5}");
+        // the paper's 4.05 mol/kg MOF should land in (or near) the top 5
+        let rank = r.rank(4.05);
+        assert!(rank <= 12, "4.05 mol/kg ranks {rank}");
+        // and 1-2 mol/kg MOFs in the top 10%
+        assert!(r.in_top_fraction(1.5, 0.10));
+        assert!(!r.in_top_fraction(0.3, 0.10));
+    }
+
+    #[test]
+    fn rank_ordering() {
+        let r = HmofReference::generate(2);
+        assert_eq!(r.rank(f64::INFINITY), 1);
+        assert!(r.rank(0.0) > r.len() / 2);
+        assert!(r.percentile(r.capacities[0] + 1.0) == 0.0);
+    }
+
+    #[test]
+    fn sorted_descending() {
+        let r = HmofReference::generate(3);
+        for w in r.capacities.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn median_near_calibration() {
+        let r = HmofReference::generate(4);
+        let med = r.capacities[r.len() / 2];
+        assert!((med / MEDIAN_MOL_KG - 1.0).abs() < 0.15, "median {med}");
+    }
+}

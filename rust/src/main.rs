@@ -1,0 +1,190 @@
+//! `mofa` — campaign launcher CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   run        — run a MOFA campaign (virtual cluster, real substrates)
+//!   layout     — print the worker layout for a node count
+//!   artifacts  — check artifact presence / metadata
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+
+use mofa::config::ConfigMap;
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::resources::{layout, WorkerKind};
+use mofa::workflow::taskserver::TaskKind;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mofa <command> [options]\n\
+         \n\
+         commands:\n\
+           run        run a campaign\n\
+             --nodes N            cluster size (default 32)\n\
+             --hours H            virtual duration (default 3.0)\n\
+             --seed S             campaign seed (default 7)\n\
+             --config FILE        TOML campaign config\n\
+             --model hlo|surrogate|corpus   generator stack (default hlo)\n\
+             --no-retrain         disable online retraining (ablation)\n\
+             --scratch            start from untrained weights\n\
+             --db-out FILE        write the MOF database JSON\n\
+           layout --nodes N       print worker allocation\n\
+           artifacts              verify artifacts/ is complete"
+    );
+    std::process::exit(2);
+}
+
+fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("layout") => cmd_layout(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        _ => usage(),
+    }
+}
+
+fn cmd_layout(args: &[String]) {
+    let nodes: usize = arg_value(args, "--nodes")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let l = layout(nodes);
+    println!("layout for {nodes} nodes (32 CPU + 4 GPU each):");
+    println!("  generator slots : {}", l.generator_slots);
+    println!(
+        "  validate slots  : {} ({} nodes x 8 via MPS)",
+        l.validate_slots, l.validate_nodes
+    );
+    println!("  cpu slots       : {}", l.cpu_slots);
+    println!(
+        "  optimize slots  : {} ({} nodes, 2/worker)",
+        l.optimize_slots, l.optimize_nodes
+    );
+    println!("  trainer slots   : {}", l.trainer_slots);
+}
+
+fn cmd_artifacts() {
+    let paths = mofa::runtime::artifacts::ArtifactPaths::default_dir();
+    if !paths.all_present() {
+        eprintln!("artifacts missing in {:?} — run `make artifacts`", paths.dir);
+        std::process::exit(1);
+    }
+    match mofa::runtime::artifacts::load_meta(&paths.meta) {
+        Ok(m) => {
+            println!("artifacts OK: {:?}", paths.dir);
+            println!(
+                "  model: N={} F={} H={} L={} T={} P={}",
+                m.n_atoms, m.n_feats, m.hidden, m.layers, m.t_steps, m.p_total
+            );
+            println!(
+                "  pretrain loss: {:.4} -> {:.4}",
+                m.pretrain_loss_first, m.pretrain_loss_last
+            );
+        }
+        Err(e) => {
+            eprintln!("meta.json: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) {
+    let mut config: CampaignConfig = match arg_value(args, "--config") {
+        Some(path) => match ConfigMap::load(&path) {
+            Ok(c) => c.to_campaign_config(),
+            Err(e) => {
+                eprintln!("config: {e}");
+                std::process::exit(1);
+            }
+        },
+        None => CampaignConfig::default(),
+    };
+    if let Some(v) = arg_value(args, "--nodes").and_then(|v| v.parse().ok()) {
+        config.nodes = v;
+    }
+    if let Some(v) = arg_value(args, "--hours").and_then(|v| v.parse::<f64>().ok()) {
+        config.duration_s = v * 3600.0;
+    }
+    if let Some(v) = arg_value(args, "--seed").and_then(|v| v.parse().ok()) {
+        config.seed = v;
+    }
+    if has_flag(args, "--no-retrain") {
+        config.policy.retrain_enabled = false;
+    }
+    let mode = match arg_value(args, "--model").as_deref() {
+        Some("surrogate") => ModelMode::Surrogate,
+        Some("corpus") => ModelMode::SurrogateCorpus,
+        _ => ModelMode::Hlo,
+    };
+    let pretrained = !has_flag(args, "--scratch");
+
+    eprintln!(
+        "[mofa] campaign: {} nodes, {:.2} h virtual, model={mode:?}, retrain={}",
+        config.nodes,
+        config.duration_s / 3600.0,
+        config.policy.retrain_enabled
+    );
+    let engines = match build_engines(mode, pretrained) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engines: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let db_out = arg_value(args, "--db-out");
+    let report = run_campaign(config, engines);
+    let th = &report.thinker;
+
+    println!("== MOFA campaign report ==");
+    println!(
+        "nodes {}  virtual {:.2} h  wallclock {:.1} s",
+        report.config.nodes,
+        report.config.duration_s / 3600.0,
+        report.wallclock_s
+    );
+    println!(
+        "linkers: generated {}  survived processing {} ({:.1}%)",
+        th.linkers_generated,
+        th.linkers_survived,
+        100.0 * th.linkers_survived as f64 / th.linkers_generated.max(1) as f64
+    );
+    println!(
+        "MOFs: assembled {}  validated {}  stable(<10% strain) {}",
+        th.assembled_ok,
+        report.tasks_done[&TaskKind::ValidateStructure],
+        th.db.stable_count(th.cfg.stable_strain)
+    );
+    println!(
+        "adsorption estimates: {}  best CO2 capacity: {}",
+        th.db.adsorption_count(),
+        th.db
+            .best_capacity()
+            .map(|(_, c)| format!("{c:.2} mol/kg @0.1 bar"))
+            .unwrap_or_else(|| "n/a".into())
+    );
+    println!("model retrained {} times", th.model_version);
+    for k in WorkerKind::ALL {
+        println!(
+            "  {:<10} utilization {:>5.1}%",
+            k.label(),
+            100.0 * report.utilization_avg[&k]
+        );
+    }
+    if let Some(path) = db_out {
+        let json = th.db.to_json().to_string();
+        if let Err(e) = std::fs::write(&path, json) {
+            eprintln!("writing {path}: {e}");
+        } else {
+            println!("database written to {path}");
+        }
+    }
+}

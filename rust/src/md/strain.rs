@@ -1,0 +1,73 @@
+//! Linear Lagrangian Strain Tensor (paper §III-B, exact formula):
+//! S = 0.5 (e + eᵀ) with e = R₂ R₁⁻¹ − I, where R₁/R₂ are the unit-cell
+//! matrices before/after equilibration. The stability metric is the
+//! maximum |eigenvalue| of S.
+
+use crate::util::linalg::{inv3, matmul, sym_eigenvalues3, M3};
+
+/// Compute S from initial and final cell matrices.
+pub fn llst(h_initial: &M3, h_final: &M3) -> M3 {
+    let r1_inv = inv3(h_initial).expect("singular initial cell");
+    let e = matmul(h_final, &r1_inv);
+    let mut s = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            let eij = e[i][j] - if i == j { 1.0 } else { 0.0 };
+            let eji = e[j][i] - if i == j { 1.0 } else { 0.0 };
+            s[i][j] = 0.5 * (eij + eji);
+        }
+    }
+    s
+}
+
+/// Max |eigenvalue| of the LLST — the paper's lattice-distortion metric.
+pub fn llst_max_strain(h_initial: &M3, h_final: &M3) -> f64 {
+    let s = llst(h_initial, h_final);
+    let e = sym_eigenvalues3(&s);
+    e.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ID: M3 = [[10.0, 0.0, 0.0], [0.0, 10.0, 0.0], [0.0, 0.0, 10.0]];
+
+    #[test]
+    fn zero_strain_for_unchanged_cell() {
+        assert!(llst_max_strain(&ID, &ID) < 1e-12);
+    }
+
+    #[test]
+    fn isotropic_expansion() {
+        let h2 = [[11.0, 0.0, 0.0], [0.0, 11.0, 0.0], [0.0, 0.0, 11.0]];
+        // e = 0.1 I -> all eigenvalues 0.1
+        assert!((llst_max_strain(&ID, &h2) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniaxial_compression() {
+        let h2 = [[8.0, 0.0, 0.0], [0.0, 10.0, 0.0], [0.0, 0.0, 10.0]];
+        assert!((llst_max_strain(&ID, &h2) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shear_strain() {
+        let h2 = [[10.0, 1.0, 0.0], [0.0, 10.0, 0.0], [0.0, 0.0, 10.0]];
+        let s = llst(&ID, &h2);
+        // off-diagonal 0.05 each
+        assert!((s[0][1] - 0.05).abs() < 1e-12);
+        assert!(llst_max_strain(&ID, &h2) > 0.04);
+    }
+
+    #[test]
+    fn symmetric_output() {
+        let h2 = [[9.5, 0.3, -0.2], [0.1, 10.4, 0.0], [0.0, 0.2, 10.1]];
+        let s = llst(&ID, &h2);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((s[i][j] - s[j][i]).abs() < 1e-12);
+            }
+        }
+    }
+}

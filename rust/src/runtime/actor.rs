@@ -1,0 +1,207 @@
+//! Actor wrapper: the PJRT client is `Rc`-based (`!Send`), so the Runtime
+//! lives on a dedicated thread and the rest of the system talks to it via
+//! a cloneable, thread-safe [`RuntimeHandle`]. This mirrors the paper's
+//! resource layout anyway: generation owns one GPU, training one node —
+//! model executions are serialized on their own worker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::artifacts::{ArtifactPaths, ModelMeta};
+use super::{Runtime, Tensor, TrainOut};
+
+enum Request {
+    Sample {
+        params: Vec<f32>,
+        x: Vec<f32>,
+        h: Vec<f32>,
+        mask: Vec<f32>,
+        zx: Vec<f32>,
+        zh: Vec<f32>,
+        reply: mpsc::Sender<Result<(Tensor, Tensor)>>,
+    },
+    Denoise {
+        params: Vec<f32>,
+        x: Vec<f32>,
+        h: Vec<f32>,
+        mask: Vec<f32>,
+        t_frac: f32,
+        reply: mpsc::Sender<Result<(Tensor, Tensor)>>,
+    },
+    Train {
+        params: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        step: f32,
+        x0: Vec<f32>,
+        h0: Vec<f32>,
+        mask: Vec<f32>,
+        t_idx: Vec<i32>,
+        nx: Vec<f32>,
+        nh: Vec<f32>,
+        reply: mpsc::Sender<Result<TrainOut>>,
+    },
+    InitialParams {
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    RandomParams {
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the runtime actor.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    pub meta: ModelMeta,
+}
+
+impl RuntimeHandle {
+    /// Spawn the actor thread, loading + compiling artifacts there.
+    pub fn spawn(paths: ArtifactPaths) -> Result<RuntimeHandle> {
+        let meta = super::artifacts::load_meta(&paths.meta)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::load(paths) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Sample { params, x, h, mask, zx, zh, reply } => {
+                            let _ = reply.send(rt.sample(&params, &x, &h, &mask, &zx, &zh));
+                        }
+                        Request::Denoise { params, x, h, mask, t_frac, reply } => {
+                            let _ = reply.send(rt.denoise_step(&params, &x, &h, &mask, t_frac));
+                        }
+                        Request::Train {
+                            params, m, v, step, x0, h0, mask, t_idx, nx, nh, reply,
+                        } => {
+                            let _ = reply.send(rt.train_step(
+                                &params, &m, &v, step, &x0, &h0, &mask, &t_idx, &nx, &nh,
+                            ));
+                        }
+                        Request::InitialParams { reply } => {
+                            let _ = reply.send(rt.initial_params());
+                        }
+                        Request::RandomParams { reply } => {
+                            let _ = reply.send(rt.random_params());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv()??;
+        Ok(RuntimeHandle { tx: Arc::new(Mutex::new(tx)), meta })
+    }
+
+    /// Spawn against ./artifacts (or $MOFA_ARTIFACTS).
+    pub fn spawn_default() -> Result<RuntimeHandle> {
+        Self::spawn(ArtifactPaths::default_dir())
+    }
+
+    fn send(&self, req: Request) {
+        self.tx.lock().unwrap().send(req).expect("runtime actor died");
+    }
+
+    pub fn sample(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        h: &[f32],
+        mask: &[f32],
+        zx: &[f32],
+        zh: &[f32],
+    ) -> Result<(Tensor, Tensor)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Sample {
+            params: params.to_vec(),
+            x: x.to_vec(),
+            h: h.to_vec(),
+            mask: mask.to_vec(),
+            zx: zx.to_vec(),
+            zh: zh.to_vec(),
+            reply,
+        });
+        rx.recv()?
+    }
+
+    pub fn denoise_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        h: &[f32],
+        mask: &[f32],
+        t_frac: f32,
+    ) -> Result<(Tensor, Tensor)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Denoise {
+            params: params.to_vec(),
+            x: x.to_vec(),
+            h: h.to_vec(),
+            mask: mask.to_vec(),
+            t_frac,
+            reply,
+        });
+        rx.recv()?
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        x0: &[f32],
+        h0: &[f32],
+        mask: &[f32],
+        t_idx: &[i32],
+        nx: &[f32],
+        nh: &[f32],
+    ) -> Result<TrainOut> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Train {
+            params: params.to_vec(),
+            m: m.to_vec(),
+            v: v.to_vec(),
+            step,
+            x0: x0.to_vec(),
+            h0: h0.to_vec(),
+            mask: mask.to_vec(),
+            t_idx: t_idx.to_vec(),
+            nx: nx.to_vec(),
+            nh: nh.to_vec(),
+            reply,
+        });
+        rx.recv()?
+    }
+
+    pub fn initial_params(&self) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::InitialParams { reply });
+        rx.recv()?
+    }
+
+    pub fn random_params(&self) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::RandomParams { reply });
+        rx.recv()?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+    }
+}

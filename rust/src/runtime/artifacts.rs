@@ -1,0 +1,181 @@
+//! Artifact discovery + metadata (artifacts/ is produced by `make artifacts`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed artifacts/meta.json — the dims contract with python/compile.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub n_atoms: usize,
+    pub elements: Vec<String>,
+    pub n_feats: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub t_steps: usize,
+    pub b_gen: usize,
+    pub b_train: usize,
+    pub p_total: usize,
+    pub pretrain_loss_first: f64,
+    pub pretrain_loss_last: f64,
+    /// Å per reduced coordinate unit (network-internal scaling).
+    pub coord_scale: f64,
+    /// Diffusion schedule (length t_steps each) — the Rust side drives the
+    /// reverse-diffusion loop (HLO while-loops are broken in the 0.5.1
+    /// text path), so the schedule ships in meta.json.
+    pub alpha: Vec<f32>,
+    pub alpha_bar: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub sigma: Vec<f32>,
+}
+
+/// Locations of everything the runtime loads.
+#[derive(Clone, Debug)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+    pub sample_hlo: PathBuf,
+    pub denoise_hlo: PathBuf,
+    pub train_hlo: PathBuf,
+    pub params_init: PathBuf,
+    pub params_random: PathBuf,
+    pub meta: PathBuf,
+    pub seed_linkers: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn in_dir<P: AsRef<Path>>(dir: P) -> Self {
+        let d = dir.as_ref().to_path_buf();
+        ArtifactPaths {
+            sample_hlo: d.join("sample_step.hlo.txt"),
+            denoise_hlo: d.join("denoise_step.hlo.txt"),
+            train_hlo: d.join("train_step.hlo.txt"),
+            params_init: d.join("params_init.bin"),
+            params_random: d.join("params_random.bin"),
+            meta: d.join("meta.json"),
+            seed_linkers: d.join("seed_linkers.json"),
+            dir: d,
+        }
+    }
+
+    /// Default location: ./artifacts (falls back to MOFA_ARTIFACTS env).
+    pub fn default_dir() -> Self {
+        let dir = std::env::var("MOFA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::in_dir(dir)
+    }
+
+    pub fn all_present(&self) -> bool {
+        [
+            &self.sample_hlo,
+            &self.denoise_hlo,
+            &self.train_hlo,
+            &self.params_init,
+            &self.meta,
+        ]
+        .iter()
+        .all(|p| p.exists())
+    }
+}
+
+/// Load + validate meta.json.
+pub fn load_meta(path: &Path) -> Result<ModelMeta> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("meta.json parse: {e}"))?;
+    let elements: Vec<String> = j
+        .get("elements")
+        .and_then(Json::as_arr)
+        .context("meta.json: elements")?
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+    let sched = |name: &str| -> Result<Vec<f32>> {
+        Ok(j
+            .get(name)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("meta.json: {name}"))?
+            .iter()
+            .filter_map(|v| v.as_f64().map(|x| x as f32))
+            .collect())
+    };
+    let meta = ModelMeta {
+        alpha: sched("alpha")?,
+        alpha_bar: sched("alpha_bar")?,
+        beta: sched("beta")?,
+        sigma: sched("sigma")?,
+        coord_scale: j.req_f64("coord_scale"),
+        n_atoms: j.req_usize("n_atoms"),
+        n_feats: j.req_usize("n_feats"),
+        hidden: j.req_usize("hidden"),
+        layers: j.req_usize("layers"),
+        t_steps: j.req_usize("t_steps"),
+        b_gen: j.req_usize("b_gen"),
+        b_train: j.req_usize("b_train"),
+        p_total: j.req_usize("p_total"),
+        pretrain_loss_first: j.req_f64("pretrain_loss_first"),
+        pretrain_loss_last: j.req_f64("pretrain_loss_last"),
+        elements,
+    };
+    if meta.n_feats != meta.elements.len() + 1 {
+        bail!(
+            "meta.json inconsistent: n_feats {} != elements {} + anchor flag",
+            meta.n_feats,
+            meta.elements.len()
+        );
+    }
+    if meta.alpha.len() != meta.t_steps || meta.sigma.len() != meta.t_steps {
+        bail!("meta.json schedule length != t_steps");
+    }
+    Ok(meta)
+}
+
+/// Load a flat little-endian f32 parameter vector.
+pub fn load_params(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() != expect_len * 4 {
+        bail!(
+            "param file {path:?}: {} bytes, expected {} (P={})",
+            bytes.len(),
+            expect_len * 4,
+            expect_len
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_layout() {
+        let p = ArtifactPaths::in_dir("/tmp/x");
+        assert!(p.sample_hlo.ends_with("sample_step.hlo.txt"));
+        assert!(p.meta.ends_with("meta.json"));
+    }
+
+    #[test]
+    fn load_params_length_check() {
+        let tmp = std::env::temp_dir().join("mofa_test_params.bin");
+        std::fs::write(&tmp, [0u8; 12]).unwrap();
+        assert_eq!(load_params(&tmp, 3).unwrap(), vec![0.0, 0.0, 0.0]);
+        assert!(load_params(&tmp, 4).is_err());
+        let _ = std::fs::remove_file(&tmp);
+    }
+
+    #[test]
+    fn meta_parses_real_artifacts_when_present() {
+        let p = ArtifactPaths::in_dir("artifacts");
+        if !p.meta.exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let m = load_meta(&p.meta).unwrap();
+        assert_eq!(m.n_atoms, 16);
+        assert_eq!(m.elements, vec!["C", "N", "O", "S"]);
+        assert!(m.p_total > 10_000);
+        assert!(m.pretrain_loss_last < m.pretrain_loss_first);
+    }
+}

@@ -1,0 +1,510 @@
+//! Linear algebra for the simulation substrates: 3×3 cell math, symmetric
+//! eigenvalues (LLST strain metric), dense solves (QEq charges), L-BFGS
+//! (CP2K-substitute cell optimizer) and PCA (Fig. 9 projection).
+
+pub type V3 = [f64; 3];
+pub type M3 = [[f64; 3]; 3];
+
+#[inline]
+pub fn add(a: V3, b: V3) -> V3 {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2]]
+}
+
+#[inline]
+pub fn sub(a: V3, b: V3) -> V3 {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
+}
+
+#[inline]
+pub fn scale(a: V3, s: f64) -> V3 {
+    [a[0] * s, a[1] * s, a[2] * s]
+}
+
+#[inline]
+pub fn dot(a: V3, b: V3) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+#[inline]
+pub fn cross(a: V3, b: V3) -> V3 {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+#[inline]
+pub fn norm(a: V3) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[inline]
+pub fn normalize(a: V3) -> V3 {
+    let n = norm(a);
+    if n < 1e-300 {
+        [0.0; 3]
+    } else {
+        scale(a, 1.0 / n)
+    }
+}
+
+#[inline]
+pub fn dist(a: V3, b: V3) -> f64 {
+    norm(sub(a, b))
+}
+
+/// Matrix–vector product.
+#[inline]
+pub fn matvec(m: &M3, v: V3) -> V3 {
+    [dot(m[0], v), dot(m[1], v), dot(m[2], v)]
+}
+
+/// Matrix–matrix product.
+pub fn matmul(a: &M3, b: &M3) -> M3 {
+    let mut c = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            for (k, bk) in b.iter().enumerate() {
+                c[i][j] += a[i][k] * bk[j];
+            }
+        }
+    }
+    c
+}
+
+pub fn transpose(m: &M3) -> M3 {
+    let mut t = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            t[i][j] = m[j][i];
+        }
+    }
+    t
+}
+
+pub fn det3(m: &M3) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+/// Inverse of a 3×3 matrix (None if singular).
+pub fn inv3(m: &M3) -> Option<M3> {
+    let d = det3(m);
+    if d.abs() < 1e-300 {
+        return None;
+    }
+    let id = 1.0 / d;
+    let mut inv = [[0.0; 3]; 3];
+    inv[0][0] = (m[1][1] * m[2][2] - m[1][2] * m[2][1]) * id;
+    inv[0][1] = (m[0][2] * m[2][1] - m[0][1] * m[2][2]) * id;
+    inv[0][2] = (m[0][1] * m[1][2] - m[0][2] * m[1][1]) * id;
+    inv[1][0] = (m[1][2] * m[2][0] - m[1][0] * m[2][2]) * id;
+    inv[1][1] = (m[0][0] * m[2][2] - m[0][2] * m[2][0]) * id;
+    inv[1][2] = (m[0][2] * m[1][0] - m[0][0] * m[1][2]) * id;
+    inv[2][0] = (m[1][0] * m[2][1] - m[1][1] * m[2][0]) * id;
+    inv[2][1] = (m[0][1] * m[2][0] - m[0][0] * m[2][1]) * id;
+    inv[2][2] = (m[0][0] * m[1][1] - m[0][1] * m[1][0]) * id;
+    Some(inv)
+}
+
+/// Eigenvalues of a *symmetric* 3×3 matrix, ascending (analytic method,
+/// Smith's algorithm). Used for the LLST lattice-strain metric (paper §III-B).
+pub fn sym_eigenvalues3(m: &M3) -> [f64; 3] {
+    let p1 = m[0][1] * m[0][1] + m[0][2] * m[0][2] + m[1][2] * m[1][2];
+    if p1 < 1e-30 {
+        // diagonal
+        let mut e = [m[0][0], m[1][1], m[2][2]];
+        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        return e;
+    }
+    let q = (m[0][0] + m[1][1] + m[2][2]) / 3.0;
+    let p2 = (m[0][0] - q).powi(2) + (m[1][1] - q).powi(2) + (m[2][2] - q).powi(2) + 2.0 * p1;
+    let p = (p2 / 6.0).sqrt();
+    let mut b = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            b[i][j] = (m[i][j] - if i == j { q } else { 0.0 }) / p;
+        }
+    }
+    let r = (det3(&b) / 2.0).clamp(-1.0, 1.0);
+    let phi = r.acos() / 3.0;
+    let e1 = q + 2.0 * p * phi.cos();
+    let e3 = q + 2.0 * p * (phi + 2.0 * std::f64::consts::PI / 3.0).cos();
+    let e2 = 3.0 * q - e1 - e3;
+    let mut e = [e1, e2, e3];
+    e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    e
+}
+
+/// Solve A x = b by Gaussian elimination with partial pivoting.
+/// A is row-major n×n. Returns None if singular. (QEq charge solve.)
+pub fn solve_dense(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for row in col + 1..n {
+            let v = m[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            x.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for row in col + 1..n {
+            let f = m[row * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= f * m[col * n + k];
+            }
+            x[row] -= f * x[col];
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let mut s = x[col];
+        for k in col + 1..n {
+            s -= m[col * n + k] * x[k];
+        }
+        x[col] = s / m[col * n + col];
+    }
+    Some(x)
+}
+
+/// First two principal components of row-major data (n_samples × dim).
+/// Power iteration with deflation; returns (pc1, pc2, projected n×2).
+/// Fig. 9's UMAP substitute (DESIGN.md §3).
+pub fn pca2(data: &[f64], n: usize, dim: usize) -> (Vec<f64>, Vec<f64>, Vec<[f64; 2]>) {
+    assert_eq!(data.len(), n * dim);
+    // center
+    let mut mean = vec![0.0; dim];
+    for row in 0..n {
+        for d in 0..dim {
+            mean[d] += data[row * dim + d];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n.max(1) as f64;
+    }
+    let mut x = vec![0.0; n * dim];
+    for row in 0..n {
+        for d in 0..dim {
+            x[row * dim + d] = data[row * dim + d] - mean[d];
+        }
+    }
+    // covariance-free power iteration: v <- X^T (X v)
+    let power = |deflate: Option<&Vec<f64>>| -> Vec<f64> {
+        let mut v: Vec<f64> = (0..dim).map(|i| ((i * 7919 + 13) % 101) as f64 / 101.0 - 0.5).collect();
+        for _ in 0..200 {
+            if let Some(d) = deflate {
+                let p: f64 = v.iter().zip(d).map(|(a, b)| a * b).sum();
+                for (vi, di) in v.iter_mut().zip(d) {
+                    *vi -= p * di;
+                }
+            }
+            // y = X v (n), then w = X^T y (dim)
+            let mut w = vec![0.0; dim];
+            for row in 0..n {
+                let mut y = 0.0;
+                for d in 0..dim {
+                    y += x[row * dim + d] * v[d];
+                }
+                for d in 0..dim {
+                    w[d] += x[row * dim + d] * y;
+                }
+            }
+            let nrm = w.iter().map(|a| a * a).sum::<f64>().sqrt();
+            if nrm < 1e-30 {
+                break;
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / nrm;
+            }
+        }
+        v
+    };
+    let pc1 = power(None);
+    let pc2 = power(Some(&pc1));
+    let proj: Vec<[f64; 2]> = (0..n)
+        .map(|row| {
+            let mut p = [0.0; 2];
+            for d in 0..dim {
+                p[0] += x[row * dim + d] * pc1[d];
+                p[1] += x[row * dim + d] * pc2[d];
+            }
+            p
+        })
+        .collect();
+    (pc1, pc2, proj)
+}
+
+/// Limited-memory BFGS minimizer over a generic objective.
+///
+/// `f(x, grad_out) -> value` must fill `grad_out`. Returns (x_min, f_min,
+/// iterations). Backtracking Armijo line search; history size `m_hist`.
+pub fn lbfgs<F>(
+    x0: &[f64],
+    mut f: F,
+    max_iter: usize,
+    tol_grad: f64,
+    m_hist: usize,
+) -> (Vec<f64>, f64, usize)
+where
+    F: FnMut(&[f64], &mut [f64]) -> f64,
+{
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; n];
+    let mut fx = f(&x, &mut g);
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho: Vec<f64> = Vec::new();
+
+    for iter in 0..max_iter {
+        let gnorm = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if gnorm < tol_grad {
+            return (x, fx, iter);
+        }
+        // two-loop recursion
+        let mut q = g.clone();
+        let k = s_hist.len();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            let a = rho[i] * dotv(&s_hist[i], &q);
+            alpha[i] = a;
+            axpy(&mut q, -a, &y_hist[i]);
+        }
+        let gamma = if k > 0 {
+            let yy = dotv(&y_hist[k - 1], &y_hist[k - 1]);
+            if yy > 1e-300 {
+                dotv(&s_hist[k - 1], &y_hist[k - 1]) / yy
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        for v in q.iter_mut() {
+            *v *= gamma;
+        }
+        for i in 0..k {
+            let b = rho[i] * dotv(&y_hist[i], &q);
+            axpy(&mut q, alpha[i] - b, &s_hist[i]);
+        }
+        // q is now H·g; direction = -q
+        let mut dir_dot_g = -dotv(&q, &g);
+        let mut dir: Vec<f64> = q.iter().map(|v| -v).collect();
+        if dir_dot_g >= 0.0 {
+            // not a descent direction — restart with steepest descent
+            dir = g.iter().map(|v| -v).collect();
+            dir_dot_g = -dotv(&g, &g);
+            s_hist.clear();
+            y_hist.clear();
+            rho.clear();
+        }
+        // Armijo backtracking
+        let mut step = 1.0;
+        let c1 = 1e-4;
+        let mut x_new = vec![0.0; n];
+        let mut g_new = vec![0.0; n];
+        let mut f_new;
+        let mut ok = false;
+        for _ in 0..40 {
+            for i in 0..n {
+                x_new[i] = x[i] + step * dir[i];
+            }
+            f_new = f(&x_new, &mut g_new);
+            if f_new <= fx + c1 * step * dir_dot_g && f_new.is_finite() {
+                // accept
+                let mut s = vec![0.0; n];
+                let mut yv = vec![0.0; n];
+                for i in 0..n {
+                    s[i] = x_new[i] - x[i];
+                    yv[i] = g_new[i] - g[i];
+                }
+                let sy = dotv(&s, &yv);
+                if sy > 1e-10 {
+                    if s_hist.len() == m_hist {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                        rho.remove(0);
+                    }
+                    rho.push(1.0 / sy);
+                    s_hist.push(s);
+                    y_hist.push(yv);
+                }
+                x.copy_from_slice(&x_new);
+                g.copy_from_slice(&g_new);
+                fx = f_new;
+                ok = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !ok {
+            return (x, fx, iter); // line search failed: converged enough
+        }
+    }
+    (x, fx, max_iter)
+}
+
+#[inline]
+fn dotv(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv3_roundtrip() {
+        let m = [[2.0, 1.0, 0.0], [0.0, 3.0, 1.0], [1.0, 0.0, 4.0]];
+        let inv = inv3(&m).unwrap();
+        let id = matmul(&m, &inv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id[i][j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_has_no_inverse() {
+        let m = [[1.0, 2.0, 3.0], [2.0, 4.0, 6.0], [0.0, 1.0, 0.0]];
+        assert!(inv3(&m).is_none());
+    }
+
+    #[test]
+    fn eigenvalues_diagonal() {
+        let m = [[3.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 2.0]];
+        let e = sym_eigenvalues3(&m);
+        assert_eq!(e, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn eigenvalues_known() {
+        // eigenvalues of [[2,1,0],[1,2,0],[0,0,5]] are 1, 3, 5
+        let m = [[2.0, 1.0, 0.0], [1.0, 2.0, 0.0], [0.0, 0.0, 5.0]];
+        let e = sym_eigenvalues3(&m);
+        assert!((e[0] - 1.0).abs() < 1e-9);
+        assert!((e[1] - 3.0).abs() < 1e-9);
+        assert!((e[2] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigenvalue_trace_invariant() {
+        let m = [[1.0, 0.3, -0.2], [0.3, 2.0, 0.5], [-0.2, 0.5, 3.0]];
+        let e = sym_eigenvalues3(&m);
+        let tr = m[0][0] + m[1][1] + m[2][2];
+        assert!((e.iter().sum::<f64>() - tr).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_solve() {
+        // 3x3 system with known solution [1, -2, 3]
+        let a = [2.0, 1.0, 1.0, 1.0, 3.0, 2.0, 1.0, 0.0, 0.0];
+        let xs = [1.0, -2.0, 3.0];
+        let b: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| a[i * 3 + j] * xs[j]).sum())
+            .collect();
+        let x = solve_dense(&a, &b, 3).unwrap();
+        for i in 0..3 {
+            assert!((x[i] - xs[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dense_solve_singular() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert!(solve_dense(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn lbfgs_rosenbrock() {
+        let (x, fx, _) = lbfgs(
+            &[-1.2, 1.0],
+            |x, g| {
+                let (a, b) = (x[0], x[1]);
+                g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+                g[1] = 200.0 * (b - a * a);
+                (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+            },
+            2000,
+            1e-10,
+            10,
+        );
+        assert!(fx < 1e-10, "fx={fx}");
+        assert!((x[0] - 1.0).abs() < 1e-4);
+        assert!((x[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lbfgs_quadratic_fast() {
+        let (x, _, iters) = lbfgs(
+            &[5.0, -3.0, 2.0],
+            |x, g| {
+                let mut f = 0.0;
+                for i in 0..3 {
+                    g[i] = 2.0 * (i as f64 + 1.0) * x[i];
+                    f += (i as f64 + 1.0) * x[i] * x[i];
+                }
+                f
+            },
+            100,
+            1e-10,
+            8,
+        );
+        assert!(iters < 30);
+        for xi in x {
+            assert!(xi.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // points along (1,1)/sqrt(2) with small noise in orthogonal dir
+        let mut data = Vec::new();
+        for i in 0..100 {
+            let t = (i as f64 - 50.0) / 10.0;
+            let noise = ((i * 37) % 11) as f64 / 110.0 - 0.05;
+            data.push(t + noise);
+            data.push(t - noise);
+        }
+        let (pc1, _, proj) = pca2(&data, 100, 2);
+        let d = (pc1[0].abs() - pc1[1].abs()).abs();
+        assert!(d < 0.05, "pc1 {pc1:?}");
+        assert_eq!(proj.len(), 100);
+    }
+
+    #[test]
+    fn cross_orthogonal() {
+        let c = cross([1.0, 0.0, 0.0], [0.0, 1.0, 0.0]);
+        assert_eq!(c, [0.0, 0.0, 1.0]);
+    }
+}

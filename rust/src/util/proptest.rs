@@ -1,0 +1,73 @@
+//! Tiny property-testing helper (the `proptest` crate is unavailable in the
+//! offline vendor set — DESIGN.md §3). Runs an invariant over many seeded
+//! random cases and reports the first failing seed for reproduction.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop(rng, case_index)` for `cases` cases; panic with the failing
+/// seed on the first violation. `prop` returns `Err(msg)` to fail.
+pub fn check_cases<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64 * 0x9E37;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shorthand with DEFAULT_CASES.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check_cases(name, DEFAULT_CASES, prop)
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn case_indices_cover_range() {
+        let mut seen = 0usize;
+        check_cases("count", 10, |_, i| {
+            assert!(i < 10);
+            seen += 1;
+            Ok(())
+        });
+        assert_eq!(seen, 10);
+    }
+}

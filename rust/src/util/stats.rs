@@ -1,0 +1,179 @@
+//! Small statistics toolkit for the evaluation harness (Figs. 3–10).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0,1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile over pre-sorted data.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Inter-quartile range (q25, q75) — Fig. 6 plots mean + IQR.
+pub fn iqr(xs: &[f64]) -> (f64, f64) {
+    (quantile(xs, 0.25), quantile(xs, 0.75))
+}
+
+/// Ordinary least squares y = a + b x. Returns (intercept, slope, r2).
+/// Used to extract "sustained throughput" rates as in paper §V-B.
+pub fn linear_regression(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return (y.first().copied().unwrap_or(0.0), 0.0, 0.0);
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let sxx: f64 = x.iter().map(|v| (v - mx) * (v - mx)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let syy: f64 = y.iter().map(|v| (v - my) * (v - my)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0, 0.0);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Empirical CDF evaluated at the sample points: returns (sorted_x, F(x)).
+/// Fig. 10 plots these per-hour.
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let f = (1..=v.len()).map(|i| i as f64 / n).collect();
+    (v, f)
+}
+
+/// Fraction of `xs` that is <= threshold.
+pub fn fraction_below(xs: &[f64], threshold: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x <= threshold).count() as f64 / xs.len() as f64
+}
+
+/// Histogram with `bins` equal bins over [lo, hi]; returns counts.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        } else if (x - hi).abs() < 1e-12 {
+            h[bins - 1] += 1;
+        }
+    }
+    h
+}
+
+/// Rank of `value` within a *descending*-sorted reference population:
+/// 1 = best. Fig. 8 reports "top 5 / top 10%" against hMOF.
+pub fn rank_descending(population: &[f64], value: f64) -> usize {
+    population.iter().filter(|&&p| p > value).count() + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        let (lo, hi) = iqr(&xs);
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn regression_exact_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let (a, b, r2) = linear_regression(&x, &y);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_flat() {
+        let (a, b, _) = linear_regression(&[1.0, 2.0], &[5.0, 5.0]);
+        assert_eq!(b, 0.0);
+        assert_eq!(a, 5.0);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (x, f) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+        assert_eq!(f, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn fraction_below_works() {
+        assert!((fraction_below(&[0.05, 0.2, 0.3], 0.1) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9, 1.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn rank_desc() {
+        let pop = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(rank_descending(&pop, 4.5), 2);
+        assert_eq!(rank_descending(&pop, 10.0), 1);
+        assert_eq!(rank_descending(&pop, 0.0), 6);
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal work-stealing-free thread pool (tokio/rayon unavailable offline).
+//!
+//! The DES (workflow/event.rs) schedules tasks in virtual time; their *real*
+//! computation runs here so multi-core machines execute substrate work in
+//! parallel. Futures are plain channels: `spawn` returns a `JobHandle` the
+//! task-server joins when the virtual completion event fires.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size thread pool with FIFO dispatch.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Handle to a spawned job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes and return its output.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker panicked or pool dropped")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl ThreadPool {
+    /// Spawn `n` worker threads (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..n.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.pop_front() {
+                                break j;
+                            }
+                            if *sh.shutdown.lock().unwrap() {
+                                return;
+                            }
+                            q = sh.cv.wait(q).unwrap();
+                        }
+                    };
+                    // a panicking job must not kill the worker: the pool
+                    // would silently shrink and later joins would hang
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                })
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (cores, capped).
+    pub fn default_pool() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+            .min(32);
+        Self::new(n)
+    }
+
+    /// Submit a closure; returns a handle to its result.
+    pub fn spawn<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let out = f();
+            let _ = tx.send(out); // receiver may be gone; that's fine
+        });
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.cv.notify_one();
+        JobHandle { rx }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let handles: Vec<_> = (0..16).map(|i| pool.spawn(move || i * i)).collect();
+        let mut out: Vec<usize> = handles.into_iter().map(|h| h.join()).collect();
+        out.sort_unstable();
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_execution_uses_multiple_threads() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    // wait until all 4 jobs are in-flight simultaneously
+                    let t0 = std::time::Instant::now();
+                    while c.load(Ordering::SeqCst) < 4 {
+                        if t0.elapsed().as_secs() > 5 {
+                            return false;
+                        }
+                        std::hint::spin_loop();
+                    }
+                    true
+                })
+            })
+            .collect();
+        assert!(handles.into_iter().all(|h| h.join()));
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let h = pool.spawn(|| 7);
+        assert_eq!(h.join(), 7);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn try_join_eventually_ready() {
+        let pool = ThreadPool::new(1);
+        let h = pool.spawn(|| 42u32);
+        let t0 = std::time::Instant::now();
+        loop {
+            if let Some(v) = h.try_join() {
+                assert_eq!(v, 42);
+                break;
+            }
+            assert!(t0.elapsed().as_secs() < 5);
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! MOF database (paper Fig. 1: "the structures and their computed
+//! properties are collected in a database and used to retrain").
+
+use crate::genai::Family;
+use crate::util::json::Json;
+
+/// Lifecycle stage a record has reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    Assembled,
+    Validated,
+    Optimized,
+    Charged,
+    AdsorptionDone,
+    Discarded,
+}
+
+/// One MOF's accumulated results.
+#[derive(Clone, Debug)]
+pub struct MofRecord {
+    pub id: u64,
+    pub linker_key: String,
+    pub family: Family,
+    pub node_label: &'static str,
+    pub model_version: u64,
+    pub stage: Stage,
+    /// virtual timestamps
+    pub assembled_at: f64,
+    pub validated_at: Option<f64>,
+    /// LLST max-|eig| strain
+    pub strain: Option<f64>,
+    pub optimized_at: Option<f64>,
+    pub charges_ok: Option<bool>,
+    /// CO₂ uptake at 0.1 bar, mol/kg
+    pub capacity: Option<f64>,
+    pub adsorption_at: Option<f64>,
+}
+
+impl MofRecord {
+    pub fn is_stable(&self, threshold: f64) -> bool {
+        self.strain.map(|s| s < threshold).unwrap_or(false)
+    }
+}
+
+/// In-memory database with JSON export.
+#[derive(Clone, Debug, Default)]
+pub struct MofDatabase {
+    pub records: Vec<MofRecord>,
+    next_id: u64,
+}
+
+impl MofDatabase {
+    pub fn new() -> Self {
+        MofDatabase::default()
+    }
+
+    pub fn insert(
+        &mut self,
+        linker_key: String,
+        family: Family,
+        node_label: &'static str,
+        model_version: u64,
+        t: f64,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.records.push(MofRecord {
+            id,
+            linker_key,
+            family,
+            node_label,
+            model_version,
+            stage: Stage::Assembled,
+            assembled_at: t,
+            validated_at: None,
+            strain: None,
+            optimized_at: None,
+            charges_ok: None,
+            capacity: None,
+            adsorption_at: None,
+        });
+        id
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut MofRecord> {
+        self.records.iter_mut().find(|r| r.id == id)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&MofRecord> {
+        self.records.iter().find(|r| r.id == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Count of validated MOFs with strain below threshold.
+    pub fn stable_count(&self, threshold: f64) -> usize {
+        self.records.iter().filter(|r| r.is_stable(threshold)).count()
+    }
+
+    /// Count with completed adsorption estimates.
+    pub fn adsorption_count(&self) -> usize {
+        self.records.iter().filter(|r| r.capacity.is_some()).count()
+    }
+
+    /// Best capacity found so far.
+    pub fn best_capacity(&self) -> Option<(u64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.capacity.map(|c| (r.id, c)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Records eligible for the retraining pool: strain < threshold,
+    /// ranked per the paper's curation (see thinker.rs).
+    pub fn trainable(&self, strain_threshold: f64) -> Vec<&MofRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.is_stable(strain_threshold))
+            .collect()
+    }
+
+    /// Export to a JSON array (compact).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("linker_key", Json::Str(r.linker_key.clone())),
+                        ("family", Json::Str(r.family.label().to_string())),
+                        ("node", Json::Str(r.node_label.to_string())),
+                        ("model_version", Json::Num(r.model_version as f64)),
+                        (
+                            "strain",
+                            r.strain.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "capacity_mol_kg",
+                            r.capacity.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("assembled_at", Json::Num(r.assembled_at)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_with(n: usize) -> MofDatabase {
+        let mut db = MofDatabase::new();
+        for i in 0..n {
+            db.insert(format!("k{i}"), Family::Bca, "Zn4O", 0, i as f64);
+        }
+        db
+    }
+
+    #[test]
+    fn insert_assigns_unique_ids() {
+        let db = db_with(5);
+        let mut ids: Vec<u64> = db.records.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn stability_accounting() {
+        let mut db = db_with(3);
+        db.get_mut(0).unwrap().strain = Some(0.05);
+        db.get_mut(1).unwrap().strain = Some(0.30);
+        assert_eq!(db.stable_count(0.10), 1);
+        assert_eq!(db.stable_count(0.50), 2);
+        assert_eq!(db.trainable(0.25).len(), 1);
+    }
+
+    #[test]
+    fn best_capacity() {
+        let mut db = db_with(3);
+        db.get_mut(0).unwrap().capacity = Some(1.2);
+        db.get_mut(2).unwrap().capacity = Some(4.1);
+        assert_eq!(db.best_capacity(), Some((2, 4.1)));
+        assert_eq!(db.adsorption_count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let mut db = db_with(2);
+        db.get_mut(0).unwrap().strain = Some(0.07);
+        let j = db.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        assert!(
+            (parsed.as_arr().unwrap()[0].req_f64("strain") - 0.07).abs() < 1e-12
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Launcher helpers: build the engine stack (real PJRT model or the fast
+//! surrogate) for CLI, examples and benches.
+
+use std::sync::Arc;
+
+use crate::genai::generator::{HloGenerator, SurrogateGenerator};
+use crate::genai::trainer::{HloTrainer, SurrogateTrainer};
+use crate::genai::{corpus, LinkerGenerator};
+use crate::runtime::actor::RuntimeHandle;
+use crate::runtime::artifacts::ArtifactPaths;
+use crate::workflow::taskserver::Engines;
+
+/// Which model stack drives generation/retraining.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelMode {
+    /// AOT-compiled MOFLinker via PJRT (requires `make artifacts`)
+    Hlo,
+    /// procedural surrogate (scheduler experiments at scale; DESIGN.md §8)
+    Surrogate,
+    /// surrogate seeded from the real corpus file when present
+    SurrogateCorpus,
+}
+
+/// Build engines for the chosen mode. For `Hlo` this spawns the PJRT actor
+/// thread and loads the pretrained weights (or the random weights when
+/// `pretrained` is false — the retraining ablation's from-scratch arm).
+pub fn build_engines(mode: ModelMode, pretrained: bool) -> anyhow::Result<Arc<Engines>> {
+    match mode {
+        ModelMode::Hlo => {
+            let rt = RuntimeHandle::spawn_default()?;
+            let params = if pretrained {
+                rt.initial_params()?
+            } else {
+                rt.random_params()?
+            };
+            let base = params.clone();
+            let gen = HloGenerator::new(rt.clone(), params);
+            let trainer = HloTrainer::new(rt, base);
+            Ok(Arc::new(Engines::scaled(Arc::new(gen), Arc::new(trainer))))
+        }
+        ModelMode::Surrogate => Ok(Arc::new(Engines::scaled(
+            Arc::new(SurrogateGenerator::builtin(16)),
+            Arc::new(SurrogateTrainer),
+        ))),
+        ModelMode::SurrogateCorpus => {
+            let paths = ArtifactPaths::default_dir();
+            let gen: Arc<dyn LinkerGenerator> = if paths.seed_linkers.exists() {
+                let frags = corpus::load_seed_corpus(&paths.seed_linkers)?;
+                Arc::new(SurrogateGenerator::new(frags, 16))
+            } else {
+                Arc::new(SurrogateGenerator::builtin(16))
+            };
+            Ok(Arc::new(Engines::scaled(gen, Arc::new(SurrogateTrainer))))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surrogate_engines_build() {
+        let e = build_engines(ModelMode::Surrogate, true).unwrap();
+        assert!(e.generator.generate(1).unwrap().len() > 0);
+    }
+
+    #[test]
+    fn surrogate_corpus_falls_back() {
+        // works with or without artifacts present
+        let e = build_engines(ModelMode::SurrogateCorpus, true).unwrap();
+        assert!(!e.generator.generate(2).unwrap().is_empty());
+    }
+}

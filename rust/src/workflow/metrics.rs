@@ -1,0 +1,230 @@
+//! Campaign metrics: everything Figs. 3–7 and Table I need.
+//!
+//! Records per-task lifecycle events in virtual time, computes worker
+//! active-time (Fig. 3), per-type utilization (Fig. 4), stage throughputs
+//! (Fig. 5), the five §V-B latencies (Fig. 6) and the stable-MOF time
+//! series (Fig. 7).
+
+use crate::util::stats;
+use crate::workflow::taskserver::TaskKind;
+
+/// One completed task record.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRecord {
+    pub kind: TaskKind,
+    pub submitted_at: f64,
+    pub completed_at: f64,
+    /// items produced (linkers generated, MOFs assembled, …)
+    pub items_out: usize,
+}
+
+/// The five latency channels of Fig. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LatencyKind {
+    /// generate-batch done -> processed batch received by Thinker
+    ProcessLinkers,
+    /// LAMMPS done -> result stored in database
+    ValidateStore,
+    /// retrain done -> first generate task using the new model completes
+    Retrain,
+    /// optimize done -> adsorption-prep (charges) task starts
+    PartialCharges,
+    /// charges done -> adsorption estimation starts
+    Adsorption,
+}
+
+impl LatencyKind {
+    pub const ALL: [LatencyKind; 5] = [
+        LatencyKind::ProcessLinkers,
+        LatencyKind::ValidateStore,
+        LatencyKind::Retrain,
+        LatencyKind::PartialCharges,
+        LatencyKind::Adsorption,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LatencyKind::ProcessLinkers => "process_linkers",
+            LatencyKind::ValidateStore => "validate_store",
+            LatencyKind::Retrain => "retrain_to_use",
+            LatencyKind::PartialCharges => "partial_charges",
+            LatencyKind::Adsorption => "adsorption_start",
+        }
+    }
+}
+
+/// Metric accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub tasks: Vec<TaskRecord>,
+    latencies: std::collections::BTreeMap<LatencyKind, Vec<f64>>,
+    /// (virtual time, cumulative stable MOF count)
+    pub stable_series: Vec<(f64, usize)>,
+    /// (virtual time, strain) of every validated MOF — Fig. 10
+    pub strain_events: Vec<(f64, f64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_task(&mut self, rec: TaskRecord) {
+        self.tasks.push(rec);
+    }
+
+    pub fn record_latency(&mut self, kind: LatencyKind, value: f64) {
+        self.latencies.entry(kind).or_default().push(value);
+    }
+
+    pub fn record_stable(&mut self, t: f64) {
+        let n = self.stable_series.last().map(|&(_, n)| n + 1).unwrap_or(1);
+        self.stable_series.push((t, n));
+    }
+
+    pub fn record_strain(&mut self, t: f64, strain: f64) {
+        self.strain_events.push((t, strain));
+    }
+
+    /// Completed-task count per kind.
+    pub fn count(&self, kind: TaskKind) -> usize {
+        self.tasks.iter().filter(|r| r.kind == kind).count()
+    }
+
+    /// Total items produced by a stage (e.g. linkers generated).
+    pub fn items(&self, kind: TaskKind) -> usize {
+        self.tasks
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.items_out)
+            .sum()
+    }
+
+    /// Sustained stage throughput in items/hour via linear regression over
+    /// cumulative completions (paper §V-B methodology).
+    pub fn sustained_rate_per_hour(&self, kind: TaskKind) -> f64 {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        let mut cum = 0.0;
+        let mut recs: Vec<&TaskRecord> =
+            self.tasks.iter().filter(|r| r.kind == kind).collect();
+        recs.sort_by(|a, b| a.completed_at.partial_cmp(&b.completed_at).unwrap());
+        for r in recs {
+            cum += r.items_out as f64;
+            pts.push((r.completed_at, cum));
+        }
+        if pts.len() < 2 {
+            return 0.0;
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope, _) = stats::linear_regression(&xs, &ys);
+        slope * 3600.0
+    }
+
+    /// (mean, q25, q75) of a latency channel.
+    pub fn latency_stats(&self, kind: LatencyKind) -> (f64, f64, f64) {
+        match self.latencies.get(&kind) {
+            Some(v) if !v.is_empty() => {
+                let (lo, hi) = stats::iqr(v);
+                (stats::mean(v), lo, hi)
+            }
+            _ => (0.0, 0.0, 0.0),
+        }
+    }
+
+    pub fn latency_count(&self, kind: LatencyKind) -> usize {
+        self.latencies.get(&kind).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Stable MOFs found by time `t`.
+    pub fn stable_at(&self, t: f64) -> usize {
+        self.stable_series
+            .iter()
+            .rev()
+            .find(|&&(ts, _)| ts <= t)
+            .map(|&(_, n)| n)
+            .unwrap_or(0)
+    }
+
+    /// Strains recorded within [t0, t1) — Fig. 10 per-hour CDF input.
+    pub fn strains_between(&self, t0: f64, t1: f64) -> Vec<f64> {
+        self.strain_events
+            .iter()
+            .filter(|&&(t, _)| t >= t0 && t < t1)
+            .map(|&(_, s)| s)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_items() {
+        let mut m = Metrics::new();
+        m.record_task(TaskRecord {
+            kind: TaskKind::GenerateLinkers,
+            submitted_at: 0.0,
+            completed_at: 5.0,
+            items_out: 16,
+        });
+        m.record_task(TaskRecord {
+            kind: TaskKind::GenerateLinkers,
+            submitted_at: 5.0,
+            completed_at: 10.0,
+            items_out: 16,
+        });
+        assert_eq!(m.count(TaskKind::GenerateLinkers), 2);
+        assert_eq!(m.items(TaskKind::GenerateLinkers), 32);
+        assert_eq!(m.count(TaskKind::Retrain), 0);
+    }
+
+    #[test]
+    fn sustained_rate_linear_series() {
+        let mut m = Metrics::new();
+        // 10 items every 60 s -> 600/hour
+        for i in 1..=20 {
+            m.record_task(TaskRecord {
+                kind: TaskKind::AssembleMofs,
+                submitted_at: 0.0,
+                completed_at: i as f64 * 60.0,
+                items_out: 10,
+            });
+        }
+        let r = m.sustained_rate_per_hour(TaskKind::AssembleMofs);
+        assert!((r - 600.0).abs() < 1.0, "rate {r}");
+    }
+
+    #[test]
+    fn latency_stats_iqr() {
+        let mut m = Metrics::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            m.record_latency(LatencyKind::ProcessLinkers, v);
+        }
+        let (mean, lo, hi) = m.latency_stats(LatencyKind::ProcessLinkers);
+        assert!((mean - 3.0).abs() < 1e-12);
+        assert!(lo >= 1.0 && hi <= 5.0 && lo < hi);
+        assert_eq!(m.latency_count(LatencyKind::ProcessLinkers), 5);
+    }
+
+    #[test]
+    fn stable_series_monotone() {
+        let mut m = Metrics::new();
+        m.record_stable(10.0);
+        m.record_stable(20.0);
+        m.record_stable(30.0);
+        assert_eq!(m.stable_at(5.0), 0);
+        assert_eq!(m.stable_at(15.0), 1);
+        assert_eq!(m.stable_at(1e9), 3);
+    }
+
+    #[test]
+    fn strain_windowing() {
+        let mut m = Metrics::new();
+        m.record_strain(100.0, 0.05);
+        m.record_strain(3700.0, 0.02);
+        assert_eq!(m.strains_between(0.0, 3600.0), vec![0.05]);
+        assert_eq!(m.strains_between(3600.0, 7200.0), vec![0.02]);
+    }
+}

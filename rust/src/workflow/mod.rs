@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: MOFA's workflow-systems contribution.
+//!
+//! A Colmena-style Thinker ([`thinker`]) steers seven task types
+//! ([`taskserver`]) over a heterogeneous virtual cluster ([`resources`])
+//! through LIFO / stability-priority queues ([`queues`]) with
+//! ProxyStore-style control/data separation ([`proxystore`]); campaigns
+//! are driven by a discrete-event loop in [`mofa`], results accumulate in
+//! [`db`] and the evaluation metrics of Figs. 3–10 in [`metrics`].
+
+pub mod db;
+pub mod launch;
+pub mod metrics;
+pub mod mofa;
+pub mod proxystore;
+pub mod queues;
+pub mod resources;
+pub mod taskserver;
+pub mod thinker;

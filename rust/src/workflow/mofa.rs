@@ -1,0 +1,362 @@
+//! Campaign driver: the discrete-event loop that plays a MOFA run on a
+//! virtual cluster (paper §IV executed per DESIGN.md §8's virtual-time
+//! model). Real substrate computations run on a thread pool; completion
+//! order follows sampled Table-I virtual durations.
+
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::metrics::{LatencyKind, TaskRecord};
+use crate::workflow::resources::{Cluster, WorkerKind};
+use crate::workflow::taskserver::{
+    submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
+};
+use crate::workflow::thinker::{PolicyConfig, TaskRequest, Thinker};
+
+/// Campaign configuration.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// cluster size (paper sweeps 32…450)
+    pub nodes: usize,
+    /// virtual campaign duration, seconds (paper: 3 h)
+    pub duration_s: f64,
+    pub seed: u64,
+    pub policy: PolicyConfig,
+    /// real-compute threads (0 = all cores)
+    pub threads: usize,
+    /// utilization sampling cadence, virtual seconds
+    pub util_sample_dt: f64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            nodes: 32,
+            duration_s: 3.0 * 3600.0,
+            seed: 7,
+            policy: PolicyConfig::default(),
+            threads: 0,
+            util_sample_dt: 60.0,
+        }
+    }
+}
+
+/// Everything a campaign produces.
+pub struct CampaignReport {
+    pub config: CampaignConfig,
+    pub thinker: Thinker,
+    /// average busy fraction per worker kind over the campaign
+    pub utilization_avg: BTreeMap<WorkerKind, f64>,
+    /// sampled (t, busy fraction per kind) time series (Fig. 4)
+    pub util_series: Vec<(f64, [f64; 5])>,
+    /// completed tasks per kind
+    pub tasks_done: BTreeMap<TaskKind, usize>,
+    /// real elapsed wallclock, seconds
+    pub wallclock_s: f64,
+    /// final virtual time (≥ duration once drained)
+    pub final_vtime: f64,
+}
+
+impl CampaignReport {
+    /// Stable MOFs found within the first `t` virtual seconds.
+    pub fn stable_at(&self, t: f64) -> usize {
+        self.thinker.metrics.stable_at(t)
+    }
+}
+
+struct Flight {
+    inf: InFlight,
+    origin_t: f64,
+}
+
+/// Run one campaign to completion.
+pub fn run_campaign(config: CampaignConfig, engines: Arc<Engines>) -> CampaignReport {
+    let t_wall = std::time::Instant::now();
+    let pool = if config.threads == 0 {
+        ThreadPool::default_pool()
+    } else {
+        ThreadPool::new(config.threads)
+    };
+    let mut cluster = Cluster::new(config.nodes);
+    let layout = cluster.layout();
+    let mut thinker = Thinker::new(config.policy, layout.validate_slots);
+    let mut rng = Rng::new(config.seed);
+
+    let mut pending: BTreeMap<WorkerKind, VecDeque<TaskRequest>> = BTreeMap::new();
+    for k in WorkerKind::ALL {
+        pending.insert(k, VecDeque::new());
+    }
+    let mut flights: HashMap<u64, Flight> = HashMap::new();
+    // min-heap over (time_bits, task_id): f64 times are non-negative so the
+    // bit pattern preserves order
+    let mut heap: BinaryHeap<std::cmp::Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut next_task_id: u64 = 0;
+    let mut util_series: Vec<(f64, [f64; 5])> = Vec::new();
+    let mut next_sample = 0.0;
+
+    macro_rules! submit_req {
+        ($req:expr, $now:expr) => {{
+            let req: TaskRequest = $req;
+            let now: f64 = $now;
+            let kind = req.kind;
+            let worker = kind.worker();
+            let acquired = cluster.acquire(worker, now);
+            debug_assert!(acquired);
+            let task_id = next_task_id;
+            next_task_id += 1;
+            let seed = config.seed ^ task_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let set_size = match &req.payload {
+                Payload::Retrain { examples, .. } => examples.len(),
+                _ => 0,
+            };
+            let n_items = match &req.payload {
+                Payload::Generate { .. } => 16,
+                Payload::Process { linkers } => linkers.len(),
+                _ => 1,
+            };
+            let mut drng = rng.derive(task_id);
+            let dur = virtual_duration(kind, n_items, set_size, &mut drng);
+            // queue-start latency channels (paper Fig. 6 definitions)
+            match kind {
+                TaskKind::ComputeCharges => thinker.metrics.record_latency(
+                    LatencyKind::PartialCharges,
+                    now - req.origin_t + thinker.store.control_latency(),
+                ),
+                TaskKind::EstimateAdsorption => thinker.metrics.record_latency(
+                    LatencyKind::Adsorption,
+                    now - req.origin_t + thinker.store.control_latency(),
+                ),
+                _ => {}
+            }
+            let inf = submit(&pool, &engines, req.payload, task_id, kind, now, dur, seed);
+            heap.push(std::cmp::Reverse((inf.completes_at.to_bits(), task_id)));
+            flights.insert(task_id, Flight { inf, origin_t: req.origin_t });
+        }};
+    }
+
+    // dispatch pending + policy fills at the current time
+    macro_rules! dispatch {
+        ($now:expr) => {{
+            let now: f64 = $now;
+            // 1. queued follow-ups first (charges → adsorption chains)
+            for k in WorkerKind::ALL {
+                while cluster.free_slots(k) > 0 {
+                    let Some(req) = pending.get_mut(&k).unwrap().pop_front() else {
+                        break;
+                    };
+                    submit_req!(req, now);
+                }
+            }
+            if now < config.duration_s {
+                // 2. thinker policies (validate / assemble / optimize / retrain)
+                let reqs = {
+                    let free: [usize; 5] = [
+                        cluster.free_slots(WorkerKind::Generator),
+                        cluster.free_slots(WorkerKind::Validate),
+                        cluster.free_slots(WorkerKind::Cpu),
+                        cluster.free_slots(WorkerKind::Optimize),
+                        cluster.free_slots(WorkerKind::Trainer),
+                    ];
+                    let free_fn = move |k: WorkerKind| match k {
+                        WorkerKind::Generator => free[0],
+                        WorkerKind::Validate => free[1],
+                        WorkerKind::Cpu => free[2],
+                        WorkerKind::Optimize => free[3],
+                        WorkerKind::Trainer => free[4],
+                    };
+                    thinker.fill(&free_fn, now)
+                };
+                for req in reqs {
+                    let w = req.kind.worker();
+                    if cluster.free_slots(w) > 0 {
+                        submit_req!(req, now);
+                    } else {
+                        pending.get_mut(&w).unwrap().push_back(req);
+                    }
+                }
+                // 3. continuous generation (policy: "linkers are continuously
+                //    generated and processed")
+                while cluster.free_slots(WorkerKind::Generator) > 0 {
+                    let seed = rng.next_u64();
+                    submit_req!(
+                        TaskRequest {
+                            kind: TaskKind::GenerateLinkers,
+                            payload: Payload::Generate { seed },
+                            origin_t: now,
+                        },
+                        now
+                    );
+                }
+            }
+        }};
+    }
+
+    dispatch!(0.0);
+
+    let mut now = 0.0f64;
+    while let Some(std::cmp::Reverse((bits, task_id))) = heap.pop() {
+        now = f64::from_bits(bits);
+        let Flight { inf, origin_t } = flights.remove(&task_id).expect("flight");
+        let outcome = inf.handle.join();
+        cluster.release(inf.kind.worker(), now);
+        thinker.metrics.record_task(TaskRecord {
+            kind: inf.kind,
+            submitted_at: inf.submitted_at,
+            completed_at: now,
+            items_out: outcome.n_items(),
+        });
+        // install retrained weights into the generator before policy handling
+        if let Outcome::Retrained { params, version, .. } = &outcome {
+            engines.generator.set_params(params.clone(), *version);
+        }
+        // Fig. 6 channel: generate-batch done -> processed batch received
+        if let Outcome::Processed { .. } = &outcome {
+            let proxy = thinker.store.put(300_000); // processed batch payload
+            let resolve = thinker.store.resolve(proxy);
+            thinker.metrics.record_latency(
+                LatencyKind::ProcessLinkers,
+                now - origin_t + resolve + thinker.store.control_latency(),
+            );
+        }
+        let followups = thinker.handle(outcome, now);
+        for req in followups {
+            let w = req.kind.worker();
+            pending.get_mut(&w).unwrap().push_back(req);
+        }
+        // utilization sampling (Fig. 4)
+        while next_sample <= now && next_sample <= config.duration_s {
+            let mut row = [0.0f64; 5];
+            for (i, k) in WorkerKind::ALL.iter().enumerate() {
+                let total = cluster.total_slots(*k).max(1);
+                row[i] = (cluster.total_slots(*k) - cluster.free_slots(*k)) as f64
+                    / total as f64;
+            }
+            util_series.push((next_sample, row));
+            next_sample += config.util_sample_dt;
+        }
+        dispatch!(now);
+    }
+
+    // Utilization over the campaign window [0, duration]: busy time from
+    // task records clipped to the window (the drain tail after `duration`
+    // would otherwise dilute Fig. 3/4 numbers).
+    let mut utilization_avg = BTreeMap::new();
+    let dur = config.duration_s;
+    for k in WorkerKind::ALL {
+        let busy: f64 = thinker
+            .metrics
+            .tasks
+            .iter()
+            .filter(|r| r.kind.worker() == k)
+            .map(|r| (r.completed_at.min(dur) - r.submitted_at.min(dur)).max(0.0))
+            .sum();
+        let slots = cluster.total_slots(k).max(1) as f64;
+        utilization_avg.insert(k, busy / (slots * dur));
+    }
+    let mut tasks_done = BTreeMap::new();
+    for k in TaskKind::ALL {
+        tasks_done.insert(k, thinker.metrics.count(k));
+    }
+
+    CampaignReport {
+        config,
+        thinker,
+        utilization_avg,
+        util_series,
+        tasks_done,
+        wallclock_s: t_wall.elapsed().as_secs_f64(),
+        final_vtime: now,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genai::generator::SurrogateGenerator;
+    use crate::genai::trainer::SurrogateTrainer;
+
+    fn surrogate_engines() -> Arc<Engines> {
+        let mut e = Engines::scaled(
+            Arc::new(SurrogateGenerator::builtin(16)),
+            Arc::new(SurrogateTrainer),
+        );
+        // keep unit tests quick
+        e.md.steps = 60;
+        e.gcmc.equil_moves = 200;
+        e.gcmc.prod_moves = 400;
+        e
+            .opt
+            .max_steps = 10;
+        Arc::new(e)
+    }
+
+    fn quick_config(nodes: usize, dur: f64) -> CampaignConfig {
+        CampaignConfig {
+            nodes,
+            duration_s: dur,
+            seed: 11,
+            policy: PolicyConfig { retrain_min: 8, ..Default::default() },
+            threads: 0,
+            util_sample_dt: 60.0,
+        }
+    }
+
+    #[test]
+    fn short_campaign_produces_mofs() {
+        let report = run_campaign(quick_config(8, 1200.0), surrogate_engines());
+        let th = &report.thinker;
+        assert!(th.linkers_generated > 0, "no linkers generated");
+        assert!(th.linkers_survived > 0, "nothing survived processing");
+        assert!(th.assembled_ok > 0, "nothing assembled");
+        assert!(th.db.len() > 0, "db empty");
+        assert!(
+            report.tasks_done[&TaskKind::ValidateStructure] > 0,
+            "no validations ran"
+        );
+        assert!(report.final_vtime >= 1200.0 * 0.9);
+    }
+
+    #[test]
+    fn deterministic_campaigns() {
+        let a = run_campaign(quick_config(8, 600.0), surrogate_engines());
+        let b = run_campaign(quick_config(8, 600.0), surrogate_engines());
+        assert_eq!(a.thinker.linkers_generated, b.thinker.linkers_generated);
+        assert_eq!(a.thinker.assembled_ok, b.thinker.assembled_ok);
+        assert_eq!(a.thinker.db.len(), b.thinker.db.len());
+        assert_eq!(
+            a.thinker.db.stable_count(0.10),
+            b.thinker.db.stable_count(0.10)
+        );
+    }
+
+    #[test]
+    fn validate_workers_busy() {
+        // warmed generator (high survival) saturates the validate pool
+        use crate::genai::LinkerGenerator;
+        let gen = SurrogateGenerator::builtin(16);
+        gen.set_params(vec![], 6);
+        let mut e = Engines::scaled(Arc::new(gen), Arc::new(SurrogateTrainer));
+        e.md.steps = 60;
+        e.gcmc.equil_moves = 200;
+        e.gcmc.prod_moves = 400;
+        e.opt.max_steps = 10;
+        let report = run_campaign(quick_config(8, 1800.0), Arc::new(e));
+        let u = report.utilization_avg[&WorkerKind::Validate];
+        assert!(u > 0.5, "validate utilization {u}");
+    }
+
+    #[test]
+    fn more_nodes_more_throughput() {
+        let small = run_campaign(quick_config(8, 1200.0), surrogate_engines());
+        let large = run_campaign(quick_config(32, 1200.0), surrogate_engines());
+        assert!(
+            large.tasks_done[&TaskKind::ValidateStructure]
+                > small.tasks_done[&TaskKind::ValidateStructure],
+            "small {} large {}",
+            small.tasks_done[&TaskKind::ValidateStructure],
+            large.tasks_done[&TaskKind::ValidateStructure]
+        );
+    }
+}

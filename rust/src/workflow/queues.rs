@@ -1,0 +1,194 @@
+//! Workflow queues (paper Fig. 1 + §III-C):
+//! * a **LIFO** queue for assembled MOFs — stability runs on the *most
+//!   recently* assembled structure (freshest model output first);
+//! * a stability-ordered **priority** queue — adsorption runs on the *most
+//!   stable* MOF available.
+
+use std::collections::BinaryHeap;
+
+/// LIFO stack with a capacity bound (old entries are dropped from the
+/// bottom — the paper's "most up-to-date data" policy makes stale MOFs
+/// worthless anyway).
+#[derive(Clone, Debug)]
+pub struct LifoQueue<T> {
+    items: Vec<T>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl<T> LifoQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        LifoQueue { items: Vec::new(), cap, dropped: 0 }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.items.len() == self.cap {
+            self.items.remove(0);
+            self.dropped += 1;
+        }
+        self.items.push(item);
+    }
+
+    /// Most recent item.
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Entries evicted due to the capacity bound.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+}
+
+/// Min-by-score priority queue (lower score = higher priority; we use
+/// lattice strain, so the most stable MOF pops first).
+#[derive(Debug)]
+pub struct ScoredQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+struct Entry<T> {
+    score: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> std::fmt::Debug for Entry<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Entry(score={})", self.score)
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: invert so the *lowest* score pops first;
+        // ties break FIFO by sequence number (deterministic).
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> ScoredQueue<T> {
+    pub fn new() -> Self {
+        ScoredQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, score: f64, item: T) {
+        self.heap.push(Entry { score, seq: self.seq, item });
+        self.seq += 1;
+    }
+
+    /// Pop the lowest-score (most stable) item.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.score, e.item))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for ScoredQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_order() {
+        let mut q = LifoQueue::new(10);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(2));
+        q.push(4);
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lifo_capacity_drops_oldest() {
+        let mut q = LifoQueue::new(2);
+        q.push(1);
+        q.push(2);
+        q.push(3); // drops 1
+        assert_eq!(q.dropped(), 1);
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn scored_pops_most_stable_first() {
+        let mut q = ScoredQueue::new();
+        q.push(0.20, "b");
+        q.push(0.05, "a");
+        q.push(0.50, "c");
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b");
+        assert_eq!(q.pop().unwrap().1, "c");
+    }
+
+    #[test]
+    fn scored_ties_fifo() {
+        let mut q = ScoredQueue::new();
+        q.push(0.1, 1);
+        q.push(0.1, 2);
+        q.push(0.1, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn property_scored_always_min() {
+        crate::util::proptest::check("scored-min", |rng, _| {
+            let mut q = ScoredQueue::new();
+            let mut vals = Vec::new();
+            for _ in 0..rng.below(50) + 1 {
+                let v = rng.f64();
+                vals.push(v);
+                q.push(v, v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for want in vals {
+                let (s, _) = q.pop().ok_or("queue exhausted early")?;
+                crate::prop_assert!((s - want).abs() < 1e-15, "{s} != {want}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration: the full scientific pipeline, stage to stage, with no
+//! workflow engine — every substrate composes on real data.
+
+use mofa::assembly::assemble_default;
+use mofa::charges::{assign_charges, QeqSettings};
+use mofa::dftopt::{optimize_cell, OptSettings};
+use mofa::gcmc::{run_gcmc, GcmcSettings};
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::{Family, LinkerGenerator};
+use mofa::linkerproc::process_batch;
+use mofa::md::{run_npt, MdSettings};
+
+/// generate → process → assemble → validate → optimize → charges → GCMC
+#[test]
+fn full_chain_bca() {
+    let g = SurrogateGenerator::builtin(32);
+    g.set_params(vec![], 8); // good model quality
+    let gens = g.generate(5).unwrap();
+    let (processed, _) = process_batch(&gens);
+    assert!(!processed.is_empty(), "processing wiped the batch");
+
+    let p = processed.iter().find(|p| p.family == Family::Bca).unwrap();
+    let mof = assemble_default(p).expect("assembly");
+    assert!(mof.framework.len() > 20);
+
+    let md = MdSettings { steps: 150, supercell: 1, ..Default::default() };
+    let v = run_npt(&mof.framework, &md, 77);
+    assert!(v.sound);
+    assert!(v.strain < 0.5, "strain {}", v.strain);
+
+    let opt = optimize_cell(&v.relaxed, &OptSettings::default());
+    assert!(opt.energy.is_finite());
+
+    let q = assign_charges(&opt.optimized, &QeqSettings::default()).expect("charges");
+    assert_eq!(q.len(), opt.optimized.len());
+
+    let gc = GcmcSettings { equil_moves: 800, prod_moves: 1_500, ..Default::default() };
+    let r = run_gcmc(&opt.optimized, &q, &gc, 99);
+    assert!(r.uptake_mol_kg >= 0.0);
+    assert!(r.uptake_mol_kg < 100.0, "absurd uptake {}", r.uptake_mol_kg);
+    assert!(r.energy_drift < 1e-4 * (1.0 + r.mean_n), "drift {}", r.energy_drift);
+}
+
+#[test]
+fn full_chain_bzn() {
+    let g = SurrogateGenerator::builtin(32);
+    g.set_params(vec![], 8);
+    let mut mofs = Vec::new();
+    for seed in 0..12 {
+        let gens = g.generate(seed).unwrap();
+        let (processed, _) = process_batch(&gens);
+        for p in processed.iter().filter(|p| p.family == Family::Bzn) {
+            if let Ok(m) = assemble_default(p) {
+                mofs.push(m);
+            }
+        }
+        if !mofs.is_empty() {
+            break;
+        }
+    }
+    assert!(!mofs.is_empty(), "no BZN MOF assembled in 12 batches");
+    let md = MdSettings { steps: 120, supercell: 1, ..Default::default() };
+    let v = run_npt(&mofs[0].framework, &md, 5);
+    assert!(v.strain.is_finite());
+}
+
+/// model-quality gradient: a better generator yields more stable MOFs
+/// (the signal the whole online-learning loop rests on).
+#[test]
+fn quality_gradient_improves_survival_and_stability() {
+    let count_survivors = |version: u64| -> (usize, usize) {
+        let g = SurrogateGenerator::builtin(64);
+        g.set_params(vec![], version);
+        let mut processed_n = 0;
+        let mut assembled_n = 0;
+        for seed in 0..4 {
+            let gens = g.generate(seed).unwrap();
+            let (processed, _) = process_batch(&gens);
+            processed_n += processed.len();
+            assembled_n += processed
+                .iter()
+                .filter(|p| assemble_default(p).is_ok())
+                .count();
+        }
+        (processed_n, assembled_n)
+    };
+    let (p0, _a0) = count_survivors(0);
+    let (p8, a8) = count_survivors(8);
+    assert!(
+        p8 > p0,
+        "processing survival should improve with model quality: {p0} -> {p8}"
+    );
+    assert!(a8 > 0);
+}
+
+/// dedup keys stay stable across the pipeline (database identity).
+#[test]
+fn linker_keys_propagate_to_mofs() {
+    let g = SurrogateGenerator::builtin(16);
+    g.set_params(vec![], 10);
+    let gens = g.generate(2).unwrap();
+    let (processed, _) = process_batch(&gens);
+    for p in &processed {
+        if let Ok(m) = assemble_default(p) {
+            assert_eq!(m.linker_key, p.key);
+            assert!(!m.linker_key.is_empty());
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Randomized invariant tests across the substrates (util::proptest
+//! harness — the offline stand-in for `proptest`, DESIGN.md §3).
+
+use mofa::chem::cell::Cell;
+use mofa::chem::molecule::Molecule;
+use mofa::ff::uff::{FfParams, FfSystem, Space};
+use mofa::gcmc::ewald::{total_electrostatic, Ewald};
+use mofa::prop_assert;
+use mofa::util::linalg::{dist, solve_dense, sym_eigenvalues3};
+use mofa::util::proptest::check;
+use mofa::util::rng::Rng;
+
+fn random_cell(rng: &mut Rng) -> Cell {
+    if rng.chance(0.5) {
+        Cell::cubic(rng.range(8.0, 20.0))
+    } else {
+        // mildly triclinic
+        let a = rng.range(8.0, 16.0);
+        Cell::new([
+            [a, 0.0, 0.0],
+            [rng.range(-2.0, 2.0), a * rng.range(0.9, 1.2), 0.0],
+            [rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), a * rng.range(0.9, 1.2)],
+        ])
+    }
+}
+
+#[test]
+fn prop_min_image_never_longer_than_direct() {
+    check("min-image <= direct", |rng, _| {
+        let cell = random_cell(rng);
+        let p = [rng.range(0.0, 30.0), rng.range(0.0, 30.0), rng.range(0.0, 30.0)];
+        let q = [rng.range(0.0, 30.0), rng.range(0.0, 30.0), rng.range(0.0, 30.0)];
+        let mi = cell.min_image_dist(p, q);
+        let direct = dist(p, q);
+        prop_assert!(mi <= direct + 1e-9, "mi {mi} > direct {direct}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_min_image_symmetric() {
+    check("min-image symmetric", |rng, _| {
+        let cell = random_cell(rng);
+        let p = [rng.range(0.0, 25.0), rng.range(0.0, 25.0), rng.range(0.0, 25.0)];
+        let q = [rng.range(0.0, 25.0), rng.range(0.0, 25.0), rng.range(0.0, 25.0)];
+        let a = cell.min_image_dist(p, q);
+        let b = cell.min_image_dist(q, p);
+        prop_assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frac_cart_roundtrip() {
+    check("frac/cart roundtrip", |rng, _| {
+        let cell = random_cell(rng);
+        let r = [rng.range(-20.0, 20.0), rng.range(-20.0, 20.0), rng.range(-20.0, 20.0)];
+        let r2 = cell.to_cart(cell.to_frac(r));
+        for c in 0..3 {
+            prop_assert!((r[c] - r2[c]).abs() < 1e-9, "component {c}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wrap_is_idempotent_and_inside() {
+    check("wrap idempotent", |rng, _| {
+        let cell = random_cell(rng);
+        let r = [rng.range(-50.0, 50.0), rng.range(-50.0, 50.0), rng.range(-50.0, 50.0)];
+        let w = cell.wrap(r);
+        let f = cell.to_frac(w);
+        for c in 0..3 {
+            prop_assert!((-1e-9..1.0 + 1e-9).contains(&f[c]), "frac {}", f[c]);
+        }
+        let w2 = cell.wrap(w);
+        for c in 0..3 {
+            prop_assert!((w[c] - w2[c]).abs() < 1e-9, "idempotence");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_dense_random_systems() {
+    check("dense solve", |rng, _| {
+        let n = 2 + rng.below(8);
+        // diagonally dominant => well-conditioned
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = rng.range(-1.0, 1.0);
+            }
+            a[i * n + i] += n as f64;
+        }
+        let x_true: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+        let b: Vec<f64> = (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+            .collect();
+        let x = solve_dense(&a, &b, n).ok_or("singular")?;
+        for i in 0..n {
+            prop_assert!((x[i] - x_true[i]).abs() < 1e-8, "x[{i}]");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sym_eigenvalues_trace_and_order() {
+    check("eig trace/order", |rng, _| {
+        let mut m = [[0.0f64; 3]; 3];
+        for i in 0..3 {
+            for j in i..3 {
+                let v = rng.range(-3.0, 3.0);
+                m[i][j] = v;
+                m[j][i] = v;
+            }
+        }
+        let e = sym_eigenvalues3(&m);
+        let tr = m[0][0] + m[1][1] + m[2][2];
+        prop_assert!((e[0] + e[1] + e[2] - tr).abs() < 1e-9, "trace");
+        prop_assert!(e[0] <= e[1] && e[1] <= e[2], "order");
+        Ok(())
+    });
+}
+
+fn random_molecule(rng: &mut Rng, n: usize) -> Molecule {
+    use mofa::chem::elements::Element::*;
+    let mut m = Molecule::new();
+    for _ in 0..n {
+        let e = *rng.choice(&[C, C, C, N, O]);
+        m.add_atom(e, [rng.range(0.0, 6.0), rng.range(0.0, 6.0), rng.range(0.0, 6.0)]);
+    }
+    mofa::chem::bonding::impute_bonds(&mut m);
+    m
+}
+
+#[test]
+fn prop_ff_translation_invariance() {
+    check("FF translation invariant", |rng, case| {
+        let m = random_molecule(rng, 4 + case % 8);
+        let sys = FfSystem::molecular(&m);
+        let pos: Vec<[f64; 3]> = m.atoms.iter().map(|a| a.pos).collect();
+        let t = [rng.range(-9.0, 9.0), rng.range(-9.0, 9.0), rng.range(-9.0, 9.0)];
+        let shifted: Vec<[f64; 3]> = pos
+            .iter()
+            .map(|p| [p[0] + t[0], p[1] + t[1], p[2] + t[2]])
+            .collect();
+        let e0 = sys.energy(&pos);
+        let e1 = sys.energy(&shifted);
+        prop_assert!((e0 - e1).abs() < 1e-6 * (1.0 + e0.abs()), "{e0} vs {e1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ff_net_force_zero() {
+    check("FF net force zero", |rng, case| {
+        let m = random_molecule(rng, 4 + case % 6);
+        let sys = FfSystem::molecular(&m);
+        let pos: Vec<[f64; 3]> = m.atoms.iter().map(|a| a.pos).collect();
+        let mut f = Vec::new();
+        sys.energy_forces(&pos, &mut f);
+        for c in 0..3 {
+            let tot: f64 = f.iter().map(|v| v[c]).sum();
+            prop_assert!(tot.abs() < 1e-8, "net force {tot}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ff_periodic_energy_translation_invariant() {
+    check("periodic FF translation", |rng, case| {
+        let m = random_molecule(rng, 4 + case % 4);
+        let cell = Cell::cubic(12.0);
+        let sys = FfSystem::new(&m, FfParams::default(), Space::Periodic(cell));
+        let pos: Vec<[f64; 3]> = m.atoms.iter().map(|a| a.pos).collect();
+        let t = rng.range(0.0, 12.0);
+        let shifted: Vec<[f64; 3]> = pos.iter().map(|p| [p[0] + t, p[1], p[2]]).collect();
+        let e0 = sys.energy(&pos);
+        let e1 = sys.energy(&shifted);
+        prop_assert!((e0 - e1).abs() < 1e-6 * (1.0 + e0.abs()), "{e0} vs {e1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ewald_incremental_matches_rebuild() {
+    check("ewald incremental == rebuild", |rng, _| {
+        let cell = Cell::cubic(rng.range(9.0, 15.0));
+        let mut ew = Ewald::new(&cell, 0.4, 4);
+        let base: Vec<([f64; 3], f64)> = (0..6)
+            .map(|_| {
+                (
+                    [rng.range(0.0, 9.0), rng.range(0.0, 9.0), rng.range(0.0, 9.0)],
+                    rng.range(-1.0, 1.0),
+                )
+            })
+            .collect();
+        ew.init(&base);
+        let added: Vec<([f64; 3], f64)> = (0..3)
+            .map(|_| {
+                (
+                    [rng.range(0.0, 9.0), rng.range(0.0, 9.0), rng.range(0.0, 9.0)],
+                    rng.range(-0.5, 0.5),
+                )
+            })
+            .collect();
+        let de = ew.delta_energy(&[], &added);
+        ew.apply(&[], &added);
+        let e_inc = ew.recip_energy();
+        let mut ew2 = Ewald::new(&cell, 0.4, 4);
+        let mut all = base.clone();
+        all.extend_from_slice(&added);
+        ew2.init(&all);
+        let e_scratch = ew2.recip_energy();
+        prop_assert!(
+            (e_inc - e_scratch).abs() < 1e-8 * (1.0 + e_scratch.abs()),
+            "inc {e_inc} vs scratch {e_scratch} (de {de})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ewald_charge_scaling_quadratic() {
+    check("ewald quadratic in charge", |rng, _| {
+        let cell = Cell::cubic(12.0);
+        let sites: Vec<([f64; 3], f64)> = (0..4)
+            .map(|_| {
+                (
+                    [rng.range(0.0, 12.0), rng.range(0.0, 12.0), rng.range(0.0, 12.0)],
+                    rng.range(-1.0, 1.0),
+                )
+            })
+            .collect();
+        let e1 = total_electrostatic(&cell, &sites, 0.35, 4, 5.0, &[]);
+        let doubled: Vec<([f64; 3], f64)> = sites.iter().map(|&(p, q)| (p, 2.0 * q)).collect();
+        let e2 = total_electrostatic(&cell, &doubled, 0.35, 4, 5.0, &[]);
+        prop_assert!(
+            (e2 - 4.0 * e1).abs() < 1e-6 * (1.0 + e1.abs() * 4.0),
+            "E(2q) {e2} != 4 E(q) {}",
+            4.0 * e1
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_canonical_key_invariant_under_relabeling() {
+    check("smiles key permutation-invariant", |rng, case| {
+        let m = random_molecule(rng, 5 + case % 6);
+        let k1 = mofa::chem::smiles::canonical_key(&m);
+        // rebuild with shuffled atom order
+        let n = m.len();
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut inv = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut m2 = Molecule::new();
+        for &old in &perm {
+            m2.add_atom(m.atoms[old].element, m.atoms[old].pos);
+        }
+        for b in &m.bonds {
+            m2.add_bond(inv[b.i], inv[b.j], b.order);
+        }
+        let k2 = mofa::chem::smiles::canonical_key(&m2);
+        prop_assert!(k1 == k2, "{k1} != {k2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_descriptors_finite_on_random_molecules() {
+    check("descriptors finite", |rng, case| {
+        let m = random_molecule(rng, 3 + case % 10);
+        let d = mofa::chem::descriptors::descriptors(&m);
+        prop_assert!(d.iter().all(|v| v.is_finite()), "non-finite descriptor");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hmof_rank_consistent_with_percentile() {
+    check("hmof rank/percentile", |rng, _| {
+        let href = mofa::hmof::HmofReference::generate_sized(7, 500);
+        let c = rng.range(0.0, 6.0);
+        let rank = href.rank(c);
+        let pct = href.percentile(c);
+        prop_assert!(
+            (pct - (rank - 1) as f64 / 500.0).abs() < 1e-12,
+            "rank {rank} pct {pct}"
+        );
+        prop_assert!(href.in_top_k(c, rank), "must be in its own top-k");
+        Ok(())
+    });
+}

@@ -1,0 +1,143 @@
+//! Integration: the AOT bridge end-to-end. Loads artifacts/*.hlo.txt on the
+//! PJRT CPU client and checks numerics of all three entrypoints. Requires
+//! `make artifacts` (the Makefile test target guarantees this).
+
+use mofa::runtime::artifacts::ArtifactPaths;
+use mofa::runtime::Runtime;
+use mofa::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let paths = ArtifactPaths::default_dir();
+    if !paths.all_present() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(paths).expect("runtime load"))
+}
+
+fn gen_inputs(rt: &Runtime, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let m = &rt.meta;
+    let (b, n, f, t) = (m.b_gen, m.n_atoms, m.n_feats, m.t_steps);
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; b * n * 3];
+    let mut h = vec![0.0f32; b * n * f];
+    let mut zx = vec![0.0f32; t * b * n * 3];
+    let mut zh = vec![0.0f32; t * b * n * f];
+    rng.fill_normal_f32(&mut x);
+    rng.fill_normal_f32(&mut h);
+    rng.fill_normal_f32(&mut zx);
+    rng.fill_normal_f32(&mut zh);
+    // mask: 10 real atoms per sample
+    let mut mask = vec![0.0f32; b * n];
+    for s in 0..b {
+        for a in 0..10 {
+            mask[s * n + a] = 1.0;
+        }
+    }
+    (x, h, mask, zx, zh)
+}
+
+#[test]
+fn sample_shapes_and_finiteness() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.initial_params().unwrap();
+    let (x, h, mask, zx, zh) = gen_inputs(&rt, 42);
+    let (x0, h0) = rt.sample(&params, &x, &h, &mask, &zx, &zh).unwrap();
+    let m = &rt.meta;
+    assert_eq!(x0.shape, vec![m.b_gen, m.n_atoms, 3]);
+    assert_eq!(h0.shape, vec![m.b_gen, m.n_atoms, m.n_feats]);
+    assert!(x0.data.iter().all(|v| v.is_finite()));
+    assert!(h0.data.iter().all(|v| v.is_finite()));
+    // generated coordinates should be molecular-scale (a few Å), not wild
+    let max_abs = x0.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    assert!(max_abs > 0.1 && max_abs < 50.0, "max |x| = {max_abs}");
+}
+
+#[test]
+fn sample_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.initial_params().unwrap();
+    let (x, h, mask, zx, zh) = gen_inputs(&rt, 7);
+    let (a1, _) = rt.sample(&params, &x, &h, &mask, &zx, &zh).unwrap();
+    let (a2, _) = rt.sample(&params, &x, &h, &mask, &zx, &zh).unwrap();
+    assert_eq!(a1.data, a2.data);
+}
+
+#[test]
+fn sample_respects_mask() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.initial_params().unwrap();
+    let (x, h, mask, zx, zh) = gen_inputs(&rt, 9);
+    let (_, h0) = rt.sample(&params, &x, &h, &mask, &zx, &zh).unwrap();
+    let m = &rt.meta;
+    for s in 0..m.b_gen {
+        for a in 10..m.n_atoms {
+            for c in 0..m.n_feats {
+                let v = h0.data[(s * m.n_atoms + a) * m.n_feats + c];
+                assert!(v.abs() < 1e-5, "masked slot has feature {v}");
+            }
+        }
+    }
+}
+
+#[test]
+fn denoise_step_runs() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.initial_params().unwrap();
+    let (x, h, mask, _, _) = gen_inputs(&rt, 11);
+    let (ex, eh) = rt.denoise_step(&params, &x, &h, &mask, 0.5).unwrap();
+    assert_eq!(ex.shape, vec![rt.meta.b_gen, rt.meta.n_atoms, 3]);
+    assert_eq!(eh.shape, vec![rt.meta.b_gen, rt.meta.n_atoms, rt.meta.n_feats]);
+    assert!(ex.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.meta;
+    let (b, n, f) = (m.b_train, m.n_atoms, m.n_feats);
+    let mut rng = Rng::new(99);
+
+    // synthetic "linker-like" batch: ring-ish positions, one-hot C features
+    let mut x0 = vec![0.0f32; b * n * 3];
+    let mut h0 = vec![0.0f32; b * n * f];
+    let mut mask = vec![0.0f32; b * n];
+    for s in 0..b {
+        for a in 0..8 {
+            let ang = a as f64 * std::f64::consts::PI / 4.0;
+            x0[(s * n + a) * 3] = (1.8 * ang.cos()) as f32;
+            x0[(s * n + a) * 3 + 1] = (1.8 * ang.sin()) as f32;
+            h0[(s * n + a) * f] = 1.0; // carbon channel
+            mask[s * n + a] = 1.0;
+        }
+    }
+    let t_idx: Vec<i32> = (0..b).map(|_| rng.below(m.t_steps) as i32).collect();
+    let mut nx = vec![0.0f32; b * n * 3];
+    let mut nh = vec![0.0f32; b * n * f];
+    rng.fill_normal_f32(&mut nx);
+    rng.fill_normal_f32(&mut nh);
+
+    let mut params = rt.initial_params().unwrap();
+    let mut mm = vec![0.0f32; m.p_total];
+    let mut vv = vec![0.0f32; m.p_total];
+    let mut step = 0.0f32;
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..10 {
+        let out = rt
+            .train_step(&params, &mm, &vv, step, &x0, &h0, &mask, &t_idx, &nx, &nh)
+            .unwrap();
+        params = out.params;
+        mm = out.m;
+        vv = out.v;
+        step = out.step;
+        last = out.loss;
+        if first.is_none() {
+            first = Some(out.loss);
+        }
+    }
+    let first = first.unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert_eq!(step, 10.0);
+}

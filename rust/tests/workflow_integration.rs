@@ -1,0 +1,107 @@
+//! Integration: campaign-level invariants of the L3 coordinator.
+
+use std::sync::Arc;
+
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::resources::WorkerKind;
+use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn config(nodes: usize, dur: f64, retrain: bool) -> CampaignConfig {
+    CampaignConfig {
+        nodes,
+        duration_s: dur,
+        seed: 2024,
+        policy: PolicyConfig { retrain_enabled: retrain, retrain_min: 16, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 120.0,
+    }
+}
+
+#[test]
+fn funnel_is_monotonic() {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    let r = run_campaign(config(8, 1500.0, true), engines);
+    let th = &r.thinker;
+    // each stage can only shrink the population
+    assert!(th.linkers_generated >= th.linkers_survived);
+    assert!(th.linkers_survived >= th.assembled_ok || th.assembled_ok == 0);
+    let validated = r.tasks_done[&TaskKind::ValidateStructure];
+    assert!(th.db.len() >= validated);
+    assert!(validated >= th.db.stable_count(0.10));
+    assert!(th.db.stable_count(0.10) >= th.db.adsorption_count());
+}
+
+#[test]
+fn no_resource_oversubscription() {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    let r = run_campaign(config(8, 900.0, false), engines);
+    // utilization can never exceed 1.0 for any pool
+    for k in WorkerKind::ALL {
+        let u = r.utilization_avg[&k];
+        assert!((0.0..=1.0 + 1e-9).contains(&u), "{}: {u}", k.label());
+    }
+    for (_, row) in &r.util_series {
+        for v in row {
+            assert!(*v <= 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn timestamps_are_ordered() {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    let r = run_campaign(config(8, 900.0, true), engines);
+    for rec in &r.thinker.metrics.tasks {
+        assert!(rec.completed_at >= rec.submitted_at);
+        assert!(rec.submitted_at >= 0.0);
+    }
+    // stable series monotone in time and count
+    let s = &r.thinker.metrics.stable_series;
+    for w in s.windows(2) {
+        assert!(w[1].0 >= w[0].0);
+        assert!(w[1].1 == w[0].1 + 1);
+    }
+}
+
+#[test]
+fn retraining_installs_new_model_versions() {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    let gen = Arc::clone(&engines.generator);
+    let r = run_campaign(config(8, 2400.0, true), engines);
+    if r.tasks_done[&TaskKind::Retrain] > 0 {
+        assert!(r.thinker.model_version > 0, "retrain ran but version never bumped");
+        assert_eq!(gen.version(), r.thinker.model_version);
+    }
+}
+
+#[test]
+fn ablation_retrain_beats_no_retrain() {
+    // the paper's §V-C headline: retraining increases stable MOFs found
+    let on = run_campaign(
+        config(8, 3000.0, true),
+        build_engines(ModelMode::Surrogate, true).unwrap(),
+    );
+    let off = run_campaign(
+        config(8, 3000.0, false),
+        build_engines(ModelMode::Surrogate, true).unwrap(),
+    );
+    let s_on = on.thinker.db.stable_count(0.10);
+    let s_off = off.thinker.db.stable_count(0.10);
+    assert!(
+        s_on >= s_off,
+        "retraining should not hurt: ON {s_on} vs OFF {s_off}"
+    );
+    // and the model must actually have retrained in the ON arm
+    assert!(on.thinker.model_version > 0, "no retrain happened in 50 min");
+}
+
+#[test]
+fn db_json_export_parses() {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    let r = run_campaign(config(8, 600.0, false), engines);
+    let text = r.thinker.db.to_json().to_string();
+    let parsed = mofa::util::json::Json::parse(&text).unwrap();
+    assert_eq!(parsed.as_arr().unwrap().len(), r.thinker.db.len());
+}
