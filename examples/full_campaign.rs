@@ -1,54 +1,59 @@
 //! End-to-end driver (the headline validation run, EXPERIMENTS.md §E2E):
 //! a full MOFA campaign with the REAL three-layer stack — Rust coordinator
 //! steering the AOT-compiled MOFLinker (Pallas EGNN via PJRT) plus every
-//! simulation substrate — on a 32-node virtual cluster.
+//! simulation substrate — on a virtual cluster.
 //!
 //!     cargo run --release --example full_campaign [-- nodes hours]
 //!
+//! `nodes` may be a single count (default 32) or a comma-separated list
+//! (e.g. `8,16,32`): multiple campaigns run **concurrently** through
+//! `sim::sweep` on one shared compute pool, one engine stack each.
 //! Defaults to 32 nodes × 0.5 virtual hours (~5 min wallclock; generation
-//! serializes through the PJRT actor). Prints the paper-style report:
-//! linker funnel, stable-MOF curve, utilization, best CO₂ capacity + hMOF
-//! rank, and writes results to full_campaign_report.json.
+//! serializes through the PJRT actor). Prints the paper-style report per
+//! campaign: linker funnel, stable-MOF curve, utilization, best CO₂
+//! capacity + hMOF rank, and writes results to full_campaign_report.json
+//! (an object for a single campaign, an array for a sweep).
 
 use std::sync::Arc;
 
 use mofa::hmof::HmofReference;
+use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::json::Json;
+use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
-use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::mofa::{CampaignConfig, CampaignReport};
 use mofa::workflow::resources::WorkerKind;
 use mofa::workflow::taskserver::TaskKind;
 use mofa::workflow::thinker::PolicyConfig;
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let nodes: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(32);
-    let hours: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
-
-    println!("== MOFA full campaign (three-layer E2E) ==");
-    println!("loading AOT artifacts + PJRT runtime...");
-    let engines = build_engines(ModelMode::Hlo, true)?;
-
-    let config = CampaignConfig {
-        nodes,
-        duration_s: hours * 3600.0,
-        seed: 7,
-        policy: PolicyConfig {
-            // scaled thresholds: the scaled-down campaign sees fewer MOFs
-            // than 3 h on Polaris, so the first retrain fires earlier
-            retrain_min: 32,
-            adsorption_switch: 16,
-            ..Default::default()
-        },
-        threads: 0,
-        util_sample_dt: 60.0,
-    };
-    println!(
-        "campaign: {} nodes, {:.2} h virtual, online retraining ON",
-        nodes, hours
-    );
-    let report = run_campaign(config, Arc::clone(&engines));
+fn report_json(report: &CampaignReport, hours: f64) -> Json {
     let th = &report.thinker;
+    let stable = th.db.stable_count(th.cfg.stable_strain);
+    Json::obj(vec![
+        ("nodes", Json::Num(report.config.nodes as f64)),
+        ("virtual_hours", Json::Num(hours)),
+        ("linkers_generated", Json::Num(th.linkers_generated as f64)),
+        ("linkers_survived", Json::Num(th.linkers_survived as f64)),
+        ("assembled", Json::Num(th.assembled_ok as f64)),
+        (
+            "validated",
+            Json::Num(report.tasks_done[&TaskKind::ValidateStructure] as f64),
+        ),
+        ("stable", Json::Num(stable as f64)),
+        ("stable_per_hour", Json::Num(stable as f64 / hours)),
+        ("retrains", Json::Num(th.model_version as f64)),
+        (
+            "best_capacity_mol_kg",
+            th.db.best_capacity().map(|(_, c)| Json::Num(c)).unwrap_or(Json::Null),
+        ),
+        ("wallclock_s", Json::Num(report.wallclock_s)),
+        ("db", th.db.to_json()),
+    ])
+}
+
+fn print_report(report: &CampaignReport, hours: f64, href: &HmofReference) {
+    let th = &report.thinker;
+    println!("\n==== campaign report: {} nodes ====", report.config.nodes);
 
     println!("\n-- linker funnel (paper Table I shape) --");
     let survival = 100.0 * th.linkers_survived as f64 / th.linkers_generated.max(1) as f64;
@@ -79,15 +84,10 @@ fn main() -> anyhow::Result<()> {
     // stable-over-time curve (quarter marks)
     for f in [0.25, 0.5, 0.75, 1.0] {
         let t = report.config.duration_s * f;
-        println!(
-            "  t={:>5.0}s  stable={}",
-            t,
-            report.stable_at(t)
-        );
+        println!("  t={:>5.0}s  stable={}", t, report.stable_at(t));
     }
     println!("model retrains: {}", th.model_version);
 
-    let href = HmofReference::generate(0);
     match th.db.best_capacity() {
         Some((id, cap)) => {
             println!(
@@ -117,26 +117,73 @@ fn main() -> anyhow::Result<()> {
         th.store.transfer_time_total
     );
     println!("wallclock: {:.1} s", report.wallclock_s);
+}
 
-    // JSON report
-    let out = Json::obj(vec![
-        ("nodes", Json::Num(nodes as f64)),
-        ("virtual_hours", Json::Num(hours)),
-        ("linkers_generated", Json::Num(th.linkers_generated as f64)),
-        ("linkers_survived", Json::Num(th.linkers_survived as f64)),
-        ("assembled", Json::Num(th.assembled_ok as f64)),
-        ("validated", Json::Num(report.tasks_done[&TaskKind::ValidateStructure] as f64)),
-        ("stable", Json::Num(stable as f64)),
-        ("stable_per_hour", Json::Num(per_hour)),
-        ("retrains", Json::Num(th.model_version as f64)),
-        (
-            "best_capacity_mol_kg",
-            th.db.best_capacity().map(|(_, c)| Json::Num(c)).unwrap_or(Json::Null),
-        ),
-        ("wallclock_s", Json::Num(report.wallclock_s)),
-        ("db", th.db.to_json()),
-    ]);
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let node_counts: Vec<usize> = match args.first() {
+        Some(v) => {
+            let parsed: Result<Vec<usize>, _> =
+                v.split(',').map(|s| s.trim().parse::<usize>()).collect();
+            match parsed {
+                Ok(list) if !list.is_empty() => list,
+                _ => anyhow::bail!(
+                    "invalid nodes argument {v:?}: expected a count or comma-separated \
+                     counts, e.g. 32 or 8,16,32"
+                ),
+            }
+        }
+        None => vec![32],
+    };
+    let hours: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
+
+    println!("== MOFA full campaign (three-layer E2E) ==");
+    println!("loading AOT artifacts + PJRT runtime...");
+
+    let mut items = Vec::new();
+    for &nodes in &node_counts {
+        // one engine stack per campaign: retraining installs new weights
+        let engines = build_engines(ModelMode::Hlo, true)?;
+        items.push(SweepItem {
+            config: CampaignConfig {
+                nodes,
+                duration_s: hours * 3600.0,
+                seed: 7,
+                policy: PolicyConfig {
+                    // scaled thresholds: the scaled-down campaign sees fewer
+                    // MOFs than 3 h on Polaris, so the first retrain fires
+                    // earlier
+                    retrain_min: 32,
+                    adsorption_switch: 16,
+                    ..Default::default()
+                },
+                threads: 0,
+                util_sample_dt: 60.0,
+            },
+            engines,
+        });
+    }
+    println!(
+        "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online retraining ON, \
+         {} concurrent via sim::sweep",
+        node_counts.len()
+    );
+    let pool = Arc::new(ThreadPool::default_pool());
+    let reports = run_sweep(items, &pool);
+
+    let href = HmofReference::generate(0);
+    for report in &reports {
+        print_report(report, hours, &href);
+    }
+
+    // JSON report: object for a single campaign (back-compat), array for
+    // a sweep
+    let out = if reports.len() == 1 {
+        report_json(&reports[0], hours)
+    } else {
+        Json::Arr(reports.iter().map(|r| report_json(r, hours)).collect())
+    };
     std::fs::write("full_campaign_report.json", out.to_string())?;
-    println!("report written to full_campaign_report.json");
+    println!("\nreport written to full_campaign_report.json");
     Ok(())
 }

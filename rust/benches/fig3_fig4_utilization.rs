@@ -6,12 +6,17 @@
 //! run for all worker types except the single-node trainer (bursty early,
 //! then waits on new data).
 //!
+//! Driven through `sim::sweep` (single-item sweep on a shared pool) —
+//! the same path the concurrent scaling bench uses.
+//!
 //!     cargo bench --bench fig3_fig4_utilization [-- minutes]
 
 use std::sync::Arc;
 
+use mofa::sim::sweep::{run_sweep, SweepItem};
+use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
-use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::mofa::CampaignConfig;
 use mofa::workflow::resources::WorkerKind;
 use mofa::workflow::thinker::PolicyConfig;
 
@@ -34,7 +39,8 @@ fn main() -> anyhow::Result<()> {
         threads: 0,
         util_sample_dt: (minutes * 60.0 / 24.0).max(30.0),
     };
-    let report = run_campaign(config, Arc::clone(&engines));
+    let pool = Arc::new(ThreadPool::default_pool());
+    let report = run_sweep(vec![SweepItem { config, engines }], &pool).remove(0);
 
     println!("-- Fig. 3: mean active time per worker type --");
     for k in WorkerKind::ALL {

@@ -4,9 +4,14 @@
 //! and prints the paper's Table-I columns: the *Remain* percentages emerge
 //! from the real substrate screens; *Time* is the virtual-duration model
 //! (calibrated to Table I) alongside the measured real compute cost.
+//! A scheduler cross-check then replays a short campaign through
+//! `sim::sweep` and reports each task type's mean *scheduled* duration —
+//! the durations the event engine actually sampled and ordered.
 //!
-//!     cargo bench --bench table1_tasks
+//!     cargo bench --bench table1_tasks [-- campaign-minutes]
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use mofa::charges::{assign_charges, QeqSettings};
@@ -15,9 +20,13 @@ use mofa::gcmc::{run_gcmc, GcmcSettings};
 use mofa::genai::LinkerGenerator;
 use mofa::linkerproc::process_batch;
 use mofa::md::{run_npt, MdSettings};
+use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::rng::Rng;
+use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::CampaignConfig;
 use mofa::workflow::taskserver::{virtual_duration, TaskKind};
+use mofa::workflow::thinker::PolicyConfig;
 
 fn vmean(kind: TaskKind, n_items: usize) -> f64 {
     let mut rng = Rng::new(42);
@@ -27,7 +36,45 @@ fn vmean(kind: TaskKind, n_items: usize) -> f64 {
         / 400.0
 }
 
+/// Mean scheduled task duration and count per kind, measured from a
+/// short campaign replayed through the discrete-event engine.
+fn campaign_task_means(minutes: f64) -> anyhow::Result<BTreeMap<TaskKind, (f64, usize)>> {
+    let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
+    engines.generator.set_params(vec![], 3);
+    let config = CampaignConfig {
+        nodes: 16,
+        duration_s: minutes * 60.0,
+        seed: 42,
+        policy: PolicyConfig { retrain_min: 32, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 600.0,
+    };
+    let pool = Arc::new(ThreadPool::default_pool());
+    let report = run_sweep(vec![SweepItem { config, engines }], &pool).remove(0);
+    let mut out = BTreeMap::new();
+    for kind in TaskKind::ALL {
+        let durs: Vec<f64> = report
+            .thinker
+            .metrics
+            .tasks
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.completed_at - r.submitted_at)
+            .collect();
+        if !durs.is_empty() {
+            let mean = durs.iter().sum::<f64>() / durs.len() as f64;
+            out.insert(kind, (mean, durs.len()));
+        }
+    }
+    Ok(out)
+}
+
 fn main() -> anyhow::Result<()> {
+    let campaign_minutes: f64 = std::env::args()
+        .skip(1)
+        .find(|a| a != "--bench")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60.0);
     println!("== Table I: task types, remain %, time ==\n");
     let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
     // mid-campaign model quality (a few retrains in)
@@ -124,5 +171,27 @@ fn main() -> anyhow::Result<()> {
         "\npaper Table I virtual times: 0.37 / 0.12 / 3.02 / 224.5 / 1517.5 / 211.8 / 1892.9 / 96.5 s"
     );
     println!("paper remain%: 100 / 22.8 / 99.9 / 8.6 / 0.03-class / ~100 / 100");
+
+    // scheduler cross-check: mean per-task durations as the event engine
+    // actually scheduled them (generate/process tasks carry ~16-linker
+    // batches, so their per-task means are ~16x the per-structure row)
+    println!(
+        "\n-- scheduler cross-check ({campaign_minutes:.0} min campaign via sim::sweep) --"
+    );
+    let means = campaign_task_means(campaign_minutes)?;
+    println!("{:<22} {:>14} {:>8}", "Task", "SchedMean(s)", "Count");
+    for kind in TaskKind::ALL {
+        match means.get(&kind) {
+            Some((mean, n)) => {
+                println!("{:<22} {:>14.2} {:>8}", kind.label(), mean, n)
+            }
+            None => println!(
+                "{:<22} {:>14} {:>8}  (none completed in window)",
+                kind.label(),
+                "-",
+                0
+            ),
+        }
+    }
     Ok(())
 }

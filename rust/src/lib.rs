@@ -34,6 +34,7 @@ pub mod chem {
 }
 
 pub mod runtime;
+pub mod sim;
 pub mod ff;
 pub mod genai;
 pub mod linkerproc;

@@ -8,14 +8,23 @@
 //! Thread-safety: the PJRT CPU client serializes executions behind a mutex
 //! (MOFA's generator and trainer occupy dedicated resources in the paper
 //! too — one GPU for generation, one node for training).
+//!
+//! Feature gating: the `xla` PJRT bindings are not part of the offline
+//! vendor set, so the real implementation is behind the `pjrt` cargo
+//! feature (enabling it requires adding the `xla` dependency to
+//! Cargo.toml). Without the feature, a stub [`Runtime`] with the same
+//! API fails fast at `load`, and everything built on the surrogate
+//! model path is unaffected.
 
 pub mod actor;
 pub mod artifacts;
 
-use anyhow::{Context, Result};
-use std::sync::Mutex;
-
-use artifacts::{ArtifactPaths, ModelMeta};
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the `xla` PJRT bindings, which are not in the \
+     offline vendor set: add `xla` to rust/Cargo.toml [dependencies] and remove \
+     this compile_error (rust/src/runtime/mod.rs)"
+);
 
 /// A tensor result: shape + row-major f32 data.
 #[derive(Clone, Debug)]
@@ -31,213 +40,6 @@ impl Tensor {
     }
 }
 
-struct Executables {
-    sample: xla::PjRtLoadedExecutable,
-    denoise: xla::PjRtLoadedExecutable,
-    train: xla::PjRtLoadedExecutable,
-}
-
-/// The loaded model runtime (client + compiled executables + metadata).
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    exes: Mutex<Executables>,
-    pub meta: ModelMeta,
-    pub paths: ArtifactPaths,
-}
-
-fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
-}
-
-fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
-}
-
-fn literal_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-impl Runtime {
-    /// Load artifacts from the default directory (./artifacts).
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(ArtifactPaths::default_dir())
-    }
-
-    /// Load + compile all three executables.
-    pub fn load(paths: ArtifactPaths) -> Result<Runtime> {
-        let meta = artifacts::load_meta(&paths.meta)?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let compile = |p: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(p)
-                .with_context(|| format!("parsing HLO text {p:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let exes = Executables {
-            sample: compile(&paths.sample_hlo)?,
-            denoise: compile(&paths.denoise_hlo)?,
-            train: compile(&paths.train_hlo)?,
-        };
-        Ok(Runtime { client, exes: Mutex::new(exes), meta, paths })
-    }
-
-    /// Load the pretrained parameter vector.
-    pub fn initial_params(&self) -> Result<Vec<f32>> {
-        artifacts::load_params(&self.paths.params_init, self.meta.p_total)
-    }
-
-    /// Load the untrained parameter vector (retraining ablation).
-    pub fn random_params(&self) -> Result<Vec<f32>> {
-        artifacts::load_params(&self.paths.params_random, self.meta.p_total)
-    }
-
-    fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        let result = exe.execute::<xla::Literal>(args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True: unpack the result tuple.
-        let parts = lit.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|p| {
-                let shape = p.shape()?;
-                let dims: Vec<usize> = match &shape {
-                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
-                    _ => vec![],
-                };
-                let data = p.to_vec::<f32>()?;
-                Ok(Tensor::new(dims, data))
-            })
-            .collect()
-    }
-
-    /// Full reverse diffusion: generate a batch of linker point clouds.
-    ///
-    /// The T-step loop runs HERE, not in the HLO: `lax.scan`-lowered while
-    /// loops silently produce NaN through the HLO-text → xla_extension
-    /// 0.5.1 interchange path (verified with a trivial cumulative-sum scan),
-    /// so the AOT artifact is a single `sample_step` and Rust feeds it the
-    /// schedule scalars for each t (exported in meta.json).
-    ///
-    /// Inputs: params `[P]`, x_init `[B,N,3]` ~N(0,1), h_init `[B,N,F]`,
-    /// mask `[B,N,1]`, zs_x `[T,B,N,3]`, zs_h `[T,B,N,F]`.
-    /// Returns (x0 `[B,N,3]` in Å, h0 `[B,N,F]` feature logits).
-    pub fn sample(
-        &self,
-        params: &[f32],
-        x_init: &[f32],
-        h_init: &[f32],
-        mask: &[f32],
-        zs_x: &[f32],
-        zs_h: &[f32],
-    ) -> Result<(Tensor, Tensor)> {
-        let m = &self.meta;
-        let (b, n, f, t_steps) = (m.b_gen, m.n_atoms, m.n_feats, m.t_steps);
-        let (nx, nh) = (b * n * 3, b * n * f);
-        anyhow::ensure!(zs_x.len() == t_steps * nx && zs_h.len() == t_steps * nh);
-
-        let params_lit = literal_f32(params, &[m.p_total])?;
-        let mask_lit = literal_f32(mask, &[b, n, 1])?;
-        let mut x = x_init.to_vec();
-        let mut h = h_init.to_vec();
-        let exes = self.exes.lock().unwrap();
-        for (step_idx, t) in (0..t_steps).rev().enumerate() {
-            let args = vec![
-                params_lit.clone(),
-                literal_f32(&x, &[b, n, 3])?,
-                literal_f32(&h, &[b, n, f])?,
-                mask_lit.clone(),
-                literal_scalar((t as f32 + 1.0) / t_steps as f32),
-                literal_scalar(m.alpha[t]),
-                literal_scalar(m.alpha_bar[t]),
-                literal_scalar(m.beta[t]),
-                literal_scalar(m.sigma[t]),
-                literal_scalar(if t > 0 { 1.0 } else { 0.0 }),
-                literal_f32(&zs_x[step_idx * nx..(step_idx + 1) * nx], &[b, n, 3])?,
-                literal_f32(&zs_h[step_idx * nh..(step_idx + 1) * nh], &[b, n, f])?,
-            ];
-            let mut out = Self::run(&exes.sample, &args)?;
-            anyhow::ensure!(out.len() == 2, "sample_step returned {}", out.len());
-            h = out.pop().unwrap().data;
-            x = out.pop().unwrap().data;
-        }
-        // carried state is in reduced units; emit Å
-        let scale = m.coord_scale as f32;
-        for v in x.iter_mut() {
-            *v *= scale;
-        }
-        Ok((Tensor::new(vec![b, n, 3], x), Tensor::new(vec![b, n, f], h)))
-    }
-
-    /// Single denoise step (tests/benches): returns (eps_x, eps_h).
-    pub fn denoise_step(
-        &self,
-        params: &[f32],
-        x: &[f32],
-        h: &[f32],
-        mask: &[f32],
-        t_frac: f32,
-    ) -> Result<(Tensor, Tensor)> {
-        let m = &self.meta;
-        let (b, n, f) = (m.b_gen, m.n_atoms, m.n_feats);
-        let args = vec![
-            literal_f32(params, &[m.p_total])?,
-            literal_f32(x, &[b, n, 3])?,
-            literal_f32(h, &[b, n, f])?,
-            literal_f32(mask, &[b, n, 1])?,
-            literal_scalar(t_frac),
-        ];
-        let exes = self.exes.lock().unwrap();
-        let mut out = Self::run(&exes.denoise, &args)?;
-        anyhow::ensure!(out.len() == 2, "denoise returned {} tensors", out.len());
-        let eh = out.pop().unwrap();
-        let ex = out.pop().unwrap();
-        Ok((ex, eh))
-    }
-
-    /// One Adam step. Returns (params', m', v', step', loss).
-    #[allow(clippy::too_many_arguments)]
-    pub fn train_step(
-        &self,
-        params: &[f32],
-        m_state: &[f32],
-        v_state: &[f32],
-        step: f32,
-        x0: &[f32],
-        h0: &[f32],
-        mask: &[f32],
-        t_idx: &[i32],
-        noise_x: &[f32],
-        noise_h: &[f32],
-    ) -> Result<TrainOut> {
-        let m = &self.meta;
-        let (b, n, f, p) = (m.b_train, m.n_atoms, m.n_feats, m.p_total);
-        let args = vec![
-            literal_f32(params, &[p])?,
-            literal_f32(m_state, &[p])?,
-            literal_f32(v_state, &[p])?,
-            literal_scalar(step),
-            literal_f32(x0, &[b, n, 3])?,
-            literal_f32(h0, &[b, n, f])?,
-            literal_f32(mask, &[b, n, 1])?,
-            literal_i32(t_idx, &[b])?,
-            literal_f32(noise_x, &[b, n, 3])?,
-            literal_f32(noise_h, &[b, n, f])?,
-        ];
-        let exes = self.exes.lock().unwrap();
-        let mut out = Self::run(&exes.train, &args)?;
-        anyhow::ensure!(out.len() == 5, "train returned {} tensors", out.len());
-        let loss = out.pop().unwrap().data[0];
-        let step_out = out.pop().unwrap().data[0];
-        let v_out = out.pop().unwrap().data;
-        let m_out = out.pop().unwrap().data;
-        let p_out = out.pop().unwrap().data;
-        Ok(TrainOut { params: p_out, m: m_out, v: v_out, step: step_out, loss })
-    }
-}
-
 /// Output of one training step.
 pub struct TrainOut {
     pub params: Vec<f32>,
@@ -246,3 +48,309 @@ pub struct TrainOut {
     pub step: f32,
     pub loss: f32,
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{Context, Result};
+    use std::sync::Mutex;
+
+    use super::artifacts::{self, ArtifactPaths, ModelMeta};
+    use super::{Tensor, TrainOut};
+
+    struct Executables {
+        sample: xla::PjRtLoadedExecutable,
+        denoise: xla::PjRtLoadedExecutable,
+        train: xla::PjRtLoadedExecutable,
+    }
+
+    /// The loaded model runtime (client + compiled executables + metadata).
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        exes: Mutex<Executables>,
+        pub meta: ModelMeta,
+        pub paths: ArtifactPaths,
+    }
+
+    fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    }
+
+    fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    }
+
+    fn literal_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    impl Runtime {
+        /// Load artifacts from the default directory (./artifacts).
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(ArtifactPaths::default_dir())
+        }
+
+        /// Load + compile all three executables.
+        pub fn load(paths: ArtifactPaths) -> Result<Runtime> {
+            let meta = artifacts::load_meta(&paths.meta)?;
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let compile = |p: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(p)
+                    .with_context(|| format!("parsing HLO text {p:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            let exes = Executables {
+                sample: compile(&paths.sample_hlo)?,
+                denoise: compile(&paths.denoise_hlo)?,
+                train: compile(&paths.train_hlo)?,
+            };
+            Ok(Runtime { client, exes: Mutex::new(exes), meta, paths })
+        }
+
+        /// Load the pretrained parameter vector.
+        pub fn initial_params(&self) -> Result<Vec<f32>> {
+            artifacts::load_params(&self.paths.params_init, self.meta.p_total)
+        }
+
+        /// Load the untrained parameter vector (retraining ablation).
+        pub fn random_params(&self) -> Result<Vec<f32>> {
+            artifacts::load_params(&self.paths.params_random, self.meta.p_total)
+        }
+
+        fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+            let result = exe.execute::<xla::Literal>(args)?;
+            let lit = result[0][0].to_literal_sync()?;
+            // Lowered with return_tuple=True: unpack the result tuple.
+            let parts = lit.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|p| {
+                    let shape = p.shape()?;
+                    let dims: Vec<usize> = match &shape {
+                        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                        _ => vec![],
+                    };
+                    let data = p.to_vec::<f32>()?;
+                    Ok(Tensor::new(dims, data))
+                })
+                .collect()
+        }
+
+        /// Full reverse diffusion: generate a batch of linker point clouds.
+        ///
+        /// The T-step loop runs HERE, not in the HLO: `lax.scan`-lowered while
+        /// loops silently produce NaN through the HLO-text → xla_extension
+        /// 0.5.1 interchange path (verified with a trivial cumulative-sum scan),
+        /// so the AOT artifact is a single `sample_step` and Rust feeds it the
+        /// schedule scalars for each t (exported in meta.json).
+        ///
+        /// Inputs: params `[P]`, x_init `[B,N,3]` ~N(0,1), h_init `[B,N,F]`,
+        /// mask `[B,N,1]`, zs_x `[T,B,N,3]`, zs_h `[T,B,N,F]`.
+        /// Returns (x0 `[B,N,3]` in Å, h0 `[B,N,F]` feature logits).
+        pub fn sample(
+            &self,
+            params: &[f32],
+            x_init: &[f32],
+            h_init: &[f32],
+            mask: &[f32],
+            zs_x: &[f32],
+            zs_h: &[f32],
+        ) -> Result<(Tensor, Tensor)> {
+            let m = &self.meta;
+            let (b, n, f, t_steps) = (m.b_gen, m.n_atoms, m.n_feats, m.t_steps);
+            let (nx, nh) = (b * n * 3, b * n * f);
+            anyhow::ensure!(zs_x.len() == t_steps * nx && zs_h.len() == t_steps * nh);
+
+            let params_lit = literal_f32(params, &[m.p_total])?;
+            let mask_lit = literal_f32(mask, &[b, n, 1])?;
+            let mut x = x_init.to_vec();
+            let mut h = h_init.to_vec();
+            let exes = self.exes.lock().unwrap();
+            for (step_idx, t) in (0..t_steps).rev().enumerate() {
+                let args = vec![
+                    params_lit.clone(),
+                    literal_f32(&x, &[b, n, 3])?,
+                    literal_f32(&h, &[b, n, f])?,
+                    mask_lit.clone(),
+                    literal_scalar((t as f32 + 1.0) / t_steps as f32),
+                    literal_scalar(m.alpha[t]),
+                    literal_scalar(m.alpha_bar[t]),
+                    literal_scalar(m.beta[t]),
+                    literal_scalar(m.sigma[t]),
+                    literal_scalar(if t > 0 { 1.0 } else { 0.0 }),
+                    literal_f32(&zs_x[step_idx * nx..(step_idx + 1) * nx], &[b, n, 3])?,
+                    literal_f32(&zs_h[step_idx * nh..(step_idx + 1) * nh], &[b, n, f])?,
+                ];
+                let mut out = Self::run(&exes.sample, &args)?;
+                anyhow::ensure!(out.len() == 2, "sample_step returned {}", out.len());
+                h = out.pop().unwrap().data;
+                x = out.pop().unwrap().data;
+            }
+            // carried state is in reduced units; emit Å
+            let scale = m.coord_scale as f32;
+            for v in x.iter_mut() {
+                *v *= scale;
+            }
+            Ok((Tensor::new(vec![b, n, 3], x), Tensor::new(vec![b, n, f], h)))
+        }
+
+        /// Single denoise step (tests/benches): returns (eps_x, eps_h).
+        pub fn denoise_step(
+            &self,
+            params: &[f32],
+            x: &[f32],
+            h: &[f32],
+            mask: &[f32],
+            t_frac: f32,
+        ) -> Result<(Tensor, Tensor)> {
+            let m = &self.meta;
+            let (b, n, f) = (m.b_gen, m.n_atoms, m.n_feats);
+            let args = vec![
+                literal_f32(params, &[m.p_total])?,
+                literal_f32(x, &[b, n, 3])?,
+                literal_f32(h, &[b, n, f])?,
+                literal_f32(mask, &[b, n, 1])?,
+                literal_scalar(t_frac),
+            ];
+            let exes = self.exes.lock().unwrap();
+            let mut out = Self::run(&exes.denoise, &args)?;
+            anyhow::ensure!(out.len() == 2, "denoise returned {} tensors", out.len());
+            let eh = out.pop().unwrap();
+            let ex = out.pop().unwrap();
+            Ok((ex, eh))
+        }
+
+        /// One Adam step. Returns (params', m', v', step', loss).
+        #[allow(clippy::too_many_arguments)]
+        pub fn train_step(
+            &self,
+            params: &[f32],
+            m_state: &[f32],
+            v_state: &[f32],
+            step: f32,
+            x0: &[f32],
+            h0: &[f32],
+            mask: &[f32],
+            t_idx: &[i32],
+            noise_x: &[f32],
+            noise_h: &[f32],
+        ) -> Result<TrainOut> {
+            let m = &self.meta;
+            let (b, n, f, p) = (m.b_train, m.n_atoms, m.n_feats, m.p_total);
+            let args = vec![
+                literal_f32(params, &[p])?,
+                literal_f32(m_state, &[p])?,
+                literal_f32(v_state, &[p])?,
+                literal_scalar(step),
+                literal_f32(x0, &[b, n, 3])?,
+                literal_f32(h0, &[b, n, f])?,
+                literal_f32(mask, &[b, n, 1])?,
+                literal_i32(t_idx, &[b])?,
+                literal_f32(noise_x, &[b, n, 3])?,
+                literal_f32(noise_h, &[b, n, f])?,
+            ];
+            let exes = self.exes.lock().unwrap();
+            let mut out = Self::run(&exes.train, &args)?;
+            anyhow::ensure!(out.len() == 5, "train returned {} tensors", out.len());
+            let loss = out.pop().unwrap().data[0];
+            let step_out = out.pop().unwrap().data[0];
+            let v_out = out.pop().unwrap().data;
+            let m_out = out.pop().unwrap().data;
+            let p_out = out.pop().unwrap().data;
+            Ok(TrainOut { params: p_out, m: m_out, v: v_out, step: step_out, loss })
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    //! Offline stub: same API as the PJRT-backed [`Runtime`], but `load`
+    //! fails fast with a clear error. Surrogate-model campaigns (the
+    //! default for benches/tests) never reach this.
+
+    use anyhow::{bail, Result};
+
+    use super::artifacts::{self, ArtifactPaths, ModelMeta};
+    use super::{Tensor, TrainOut};
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` \
+         feature (enabling it requires the `xla` bindings, which are not in the \
+         offline vendor set). Use the surrogate model modes instead.";
+
+    /// Stub runtime; see the module docs.
+    pub struct Runtime {
+        pub meta: ModelMeta,
+        pub paths: ArtifactPaths,
+    }
+
+    impl Runtime {
+        /// Load artifacts from the default directory (./artifacts).
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(ArtifactPaths::default_dir())
+        }
+
+        /// Always fails: the PJRT backend is compiled out.
+        pub fn load(paths: ArtifactPaths) -> Result<Runtime> {
+            // still validate metadata so artifact problems surface first
+            let _meta = artifacts::load_meta(&paths.meta)?;
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn initial_params(&self) -> Result<Vec<f32>> {
+            artifacts::load_params(&self.paths.params_init, self.meta.p_total)
+        }
+
+        pub fn random_params(&self) -> Result<Vec<f32>> {
+            artifacts::load_params(&self.paths.params_random, self.meta.p_total)
+        }
+
+        pub fn sample(
+            &self,
+            _params: &[f32],
+            _x_init: &[f32],
+            _h_init: &[f32],
+            _mask: &[f32],
+            _zs_x: &[f32],
+            _zs_h: &[f32],
+        ) -> Result<(Tensor, Tensor)> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn denoise_step(
+            &self,
+            _params: &[f32],
+            _x: &[f32],
+            _h: &[f32],
+            _mask: &[f32],
+            _t_frac: f32,
+        ) -> Result<(Tensor, Tensor)> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn train_step(
+            &self,
+            _params: &[f32],
+            _m_state: &[f32],
+            _v_state: &[f32],
+            _step: f32,
+            _x0: &[f32],
+            _h0: &[f32],
+            _mask: &[f32],
+            _t_idx: &[i32],
+            _noise_x: &[f32],
+            _noise_h: &[f32],
+        ) -> Result<TrainOut> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::Runtime;

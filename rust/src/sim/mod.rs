@@ -1,0 +1,35 @@
+//! Reusable discrete-event simulation layer: **mechanics**, not policy.
+//!
+//! The MOFA campaign loop used to be a monolith in `workflow/mofa.rs` —
+//! macros for submit/dispatch, a raw `f64::to_bits` binary heap, slot
+//! and queue bookkeeping all tangled with Thinker policy decisions. This
+//! module carves the event engine out into three pieces:
+//!
+//! * [`vtime`] — [`vtime::VirtualTime`], a validated, totally-ordered
+//!   time axis (NaN/negative durations assert instead of corrupting heap
+//!   order), and [`vtime::EventHeap`], the deterministic min-heap of
+//!   completion events keyed `(time, task id)`.
+//! * [`scheduler`] — [`scheduler::Scheduler`] owns event ordering,
+//!   per-worker slot pools, overflow FIFOs, in-flight tasks and
+//!   utilization sampling. What to run next is delegated to the
+//!   [`scheduler::Policy`] trait (`fill` offers idle capacity, `handle`
+//!   consumes completions); the Colmena-style Thinker is its first
+//!   implementor via [`crate::workflow::mofa::MofaPolicy`].
+//! * [`sweep`] — runs many independent campaigns concurrently on one
+//!   shared thread pool. Campaigns are deterministic in virtual time, so
+//!   a concurrent sweep is bit-identical to a sequential one.
+//!
+//! The policy/mechanics split is the contract: policies never touch the
+//! heap or slot counters, and the scheduler never inspects payloads
+//! beyond sizing their duration sample. New scheduling policies (e.g.
+//! priority preemption, checkpoint/replay, multi-tenant campaign
+//! serving) plug in as `Policy` implementors without touching the
+//! engine.
+
+pub mod scheduler;
+pub mod sweep;
+pub mod vtime;
+
+pub use scheduler::{Completion, Policy, Scheduler, SimOutcome, SimParams};
+pub use sweep::{run_sweep, sweep_nodes, SweepItem};
+pub use vtime::{EventHeap, VirtualTime};

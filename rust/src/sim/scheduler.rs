@@ -1,0 +1,356 @@
+//! Discrete-event scheduler: the campaign-loop **mechanics**, separated
+//! from campaign **policy**.
+//!
+//! The scheduler owns event ordering ([`EventHeap`]), per-[`WorkerKind`]
+//! slot accounting ([`Cluster`]), overflow FIFOs for requests that found
+//! no free slot, in-flight task bookkeeping, and utilization sampling.
+//! Everything MOFA-specific — *which* task to run next, what to do with
+//! a result — lives behind the [`Policy`] trait; the Colmena-style
+//! Thinker is its first implementor
+//! ([`crate::workflow::mofa::MofaPolicy`]).
+//!
+//! Real substrate computation runs on a shared [`ThreadPool`]; the
+//! scheduler joins each job when its *virtual* completion event fires,
+//! so results are consumed in virtual-time order regardless of wallclock
+//! scheduling. That property makes campaigns deterministic and lets
+//! [`crate::sim::sweep`] run many of them concurrently on one pool.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::sim::vtime::{EventHeap, VirtualTime};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::resources::{Cluster, WorkerKind};
+use crate::workflow::taskserver::{
+    submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
+};
+use crate::workflow::thinker::TaskRequest;
+
+/// A completed task as delivered to [`Policy::handle`]: the substrate
+/// outcome plus the scheduling metadata the mechanics tracked for it.
+pub struct Completion {
+    pub task_id: u64,
+    pub kind: TaskKind,
+    /// virtual time the task started executing
+    pub submitted_at: f64,
+    /// virtual time the completion event fired (current `now`)
+    pub completed_at: f64,
+    /// virtual timestamp of the event that requested the task
+    pub origin_t: f64,
+    pub outcome: Outcome,
+}
+
+/// Campaign policy: decides *what* to run; the scheduler decides *when*.
+///
+/// Contract: `fill` may return more requests than there are free slots —
+/// the scheduler dispatches what fits and queues the rest FIFO per worker
+/// kind. `handle` returns follow-up requests, which are always queued
+/// (they dispatch in the same event step, after the queue drain).
+pub trait Policy {
+    /// Fill idle capacity at virtual time `now`. `free(kind)` is the
+    /// number of open slots per worker pool at the time of the call.
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest>;
+
+    /// Consume a completed task; returns follow-up requests.
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest>;
+
+    /// Hook: a request was dispatched to a slot (latency attribution).
+    #[allow(unused_variables)]
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {}
+}
+
+/// Scheduler parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// campaign seed: task seeds and duration streams derive from it
+    pub seed: u64,
+    /// the policy stops being offered capacity past this horizon; the
+    /// event loop still drains whatever is in flight
+    pub horizon_s: f64,
+    /// utilization sampling cadence, virtual seconds (> 0)
+    pub util_sample_dt: f64,
+}
+
+struct Flight {
+    inf: InFlight,
+    origin_t: f64,
+}
+
+/// What the mechanics hand back once the event loop drains.
+pub struct SimOutcome {
+    /// final cluster state (slot totals + busy-time integrals)
+    pub cluster: Cluster,
+    /// sampled `(t, busy fraction per worker kind)` rows (Fig. 4)
+    pub util_series: Vec<(f64, [f64; 5])>,
+    /// virtual time of the last completion (≥ horizon once drained)
+    pub final_vtime: f64,
+    /// total tasks submitted over the run
+    pub tasks_submitted: u64,
+}
+
+/// The discrete-event engine. See the module docs for the split.
+pub struct Scheduler {
+    cluster: Cluster,
+    engines: Arc<Engines>,
+    pool: Arc<ThreadPool>,
+    params: SimParams,
+    pending: BTreeMap<WorkerKind, VecDeque<TaskRequest>>,
+    flights: HashMap<u64, Flight>,
+    heap: EventHeap,
+    /// base stream; per-task duration streams derive from it by task id
+    rng: Rng,
+    next_task_id: u64,
+    util_series: Vec<(f64, [f64; 5])>,
+    next_sample: f64,
+    now: f64,
+}
+
+impl Scheduler {
+    pub fn new(
+        cluster: Cluster,
+        engines: Arc<Engines>,
+        pool: Arc<ThreadPool>,
+        params: SimParams,
+    ) -> Scheduler {
+        assert!(
+            params.util_sample_dt > 0.0,
+            "util_sample_dt must be positive (got {})",
+            params.util_sample_dt
+        );
+        let mut pending = BTreeMap::new();
+        for k in WorkerKind::ALL {
+            pending.insert(k, VecDeque::new());
+        }
+        Scheduler {
+            cluster,
+            engines,
+            pool,
+            params,
+            pending,
+            flights: HashMap::new(),
+            heap: EventHeap::new(),
+            rng: Rng::new(params.seed),
+            next_task_id: 0,
+            util_series: Vec::new(),
+            next_sample: 0.0,
+            now: 0.0,
+        }
+    }
+
+    /// Run the event loop to quiescence: dispatch at t=0, then pop
+    /// completion events in virtual-time order until nothing is in
+    /// flight and nothing can be dispatched.
+    pub fn run<P: Policy>(mut self, policy: &mut P) -> SimOutcome {
+        self.dispatch(policy, 0.0);
+        while let Some((t, task_id)) = self.heap.pop() {
+            let now = t.seconds();
+            self.now = now;
+            let Flight { inf, origin_t } = self.flights.remove(&task_id).expect("in-flight task");
+            let outcome = inf.handle.join();
+            self.cluster.release(inf.kind.worker(), now);
+            let followups = policy.handle(Completion {
+                task_id,
+                kind: inf.kind,
+                submitted_at: inf.submitted_at,
+                completed_at: now,
+                origin_t,
+                outcome,
+            });
+            for req in followups {
+                let w = req.kind.worker();
+                self.pending.get_mut(&w).unwrap().push_back(req);
+            }
+            self.sample_utilization(now);
+            self.dispatch(policy, now);
+        }
+        SimOutcome {
+            cluster: self.cluster,
+            util_series: self.util_series,
+            final_vtime: self.now,
+            tasks_submitted: self.next_task_id,
+        }
+    }
+
+    /// Dispatch at the current time: drain overflow FIFOs first (queued
+    /// follow-ups — e.g. charges → adsorption chains — beat new policy
+    /// fills), then offer remaining capacity to the policy while inside
+    /// the campaign horizon.
+    fn dispatch<P: Policy>(&mut self, policy: &mut P, now: f64) {
+        for k in WorkerKind::ALL {
+            while self.cluster.free_slots(k) > 0 {
+                let Some(req) = self.pending.get_mut(&k).unwrap().pop_front() else {
+                    break;
+                };
+                self.submit_request(policy, req, now);
+            }
+        }
+        if now < self.params.horizon_s {
+            let free: [usize; 5] = [
+                self.cluster.free_slots(WorkerKind::Generator),
+                self.cluster.free_slots(WorkerKind::Validate),
+                self.cluster.free_slots(WorkerKind::Cpu),
+                self.cluster.free_slots(WorkerKind::Optimize),
+                self.cluster.free_slots(WorkerKind::Trainer),
+            ];
+            let free_fn = move |k: WorkerKind| match k {
+                WorkerKind::Generator => free[0],
+                WorkerKind::Validate => free[1],
+                WorkerKind::Cpu => free[2],
+                WorkerKind::Optimize => free[3],
+                WorkerKind::Trainer => free[4],
+            };
+            for req in policy.fill(&free_fn, now) {
+                let w = req.kind.worker();
+                if self.cluster.free_slots(w) > 0 {
+                    self.submit_request(policy, req, now);
+                } else {
+                    self.pending.get_mut(&w).unwrap().push_back(req);
+                }
+            }
+        }
+    }
+
+    /// Acquire a slot, sample the task's virtual duration from its
+    /// per-task stream, start the real computation on the pool, and
+    /// schedule the completion event.
+    fn submit_request<P: Policy>(&mut self, policy: &mut P, req: TaskRequest, now: f64) {
+        let kind = req.kind;
+        let worker = kind.worker();
+        let acquired = self.cluster.acquire(worker, now);
+        debug_assert!(acquired, "submit_request without a free {worker:?} slot");
+        let task_id = self.next_task_id;
+        self.next_task_id += 1;
+        let seed = self.params.seed ^ task_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let set_size = match &req.payload {
+            Payload::Retrain { examples, .. } => examples.len(),
+            _ => 0,
+        };
+        let n_items = match &req.payload {
+            Payload::Generate { .. } => 16,
+            Payload::Process { linkers } => linkers.len(),
+            _ => 1,
+        };
+        let mut drng = self.rng.derive(task_id);
+        let completes_at = VirtualTime::new(now)
+            .advance(virtual_duration(kind, n_items, set_size, &mut drng));
+        policy.on_dispatch(kind, req.origin_t, now);
+        let dur = completes_at.seconds() - now;
+        let inf = submit(&self.pool, &self.engines, req.payload, task_id, kind, now, dur, seed);
+        self.heap.push(completes_at, task_id);
+        self.flights.insert(task_id, Flight { inf, origin_t: req.origin_t });
+    }
+
+    /// Emit `(t, busy fraction per kind)` rows for every sample point up
+    /// to `now` within the horizon (Fig. 4).
+    fn sample_utilization(&mut self, now: f64) {
+        while self.next_sample <= now && self.next_sample <= self.params.horizon_s {
+            let mut row = [0.0f64; 5];
+            for (i, k) in WorkerKind::ALL.iter().enumerate() {
+                let total = self.cluster.total_slots(*k).max(1);
+                row[i] =
+                    (self.cluster.total_slots(*k) - self.cluster.free_slots(*k)) as f64
+                        / total as f64;
+            }
+            self.util_series.push((self.next_sample, row));
+            self.next_sample += self.params.util_sample_dt;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genai::generator::SurrogateGenerator;
+    use crate::genai::trainer::SurrogateTrainer;
+
+    fn engines() -> Arc<Engines> {
+        Arc::new(Engines::scaled(
+            Arc::new(SurrogateGenerator::builtin(16)),
+            Arc::new(SurrogateTrainer),
+        ))
+    }
+
+    /// Minimal policy: keep generator slots fed, ignore results.
+    struct GenerateOnly {
+        submitted: usize,
+        handled: usize,
+        seed: Rng,
+    }
+
+    impl Policy for GenerateOnly {
+        fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+            let mut out = Vec::new();
+            for _ in 0..free(WorkerKind::Generator) {
+                out.push(TaskRequest {
+                    kind: TaskKind::GenerateLinkers,
+                    payload: Payload::Generate { seed: self.seed.next_u64() },
+                    origin_t: now,
+                });
+                self.submitted += 1;
+            }
+            out
+        }
+
+        fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+            assert_eq!(done.kind, TaskKind::GenerateLinkers);
+            assert!(done.completed_at >= done.submitted_at);
+            self.handled += 1;
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn generate_only_policy_runs_and_drains() {
+        let cluster = Cluster::new(8);
+        let slots = cluster.total_slots(WorkerKind::Generator);
+        let sched = Scheduler::new(
+            cluster,
+            engines(),
+            Arc::new(ThreadPool::new(2)),
+            SimParams { seed: 3, horizon_s: 30.0, util_sample_dt: 10.0 },
+        );
+        let mut policy = GenerateOnly { submitted: 0, handled: 0, seed: Rng::new(3) };
+        let out = sched.run(&mut policy);
+        // the generator pool stays saturated inside the horizon
+        assert!(policy.submitted >= slots);
+        assert_eq!(policy.submitted, policy.handled);
+        assert_eq!(out.tasks_submitted as usize, policy.submitted);
+        assert!(out.final_vtime >= 30.0, "horizon not reached: {}", out.final_vtime);
+        assert!(!out.util_series.is_empty());
+        // drained: all slots free again
+        assert_eq!(out.cluster.free_slots(WorkerKind::Generator), slots);
+    }
+
+    #[test]
+    fn events_complete_in_virtual_time_order() {
+        struct OrderCheck {
+            last: f64,
+            seed: Rng,
+        }
+        impl Policy for OrderCheck {
+            fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+                (0..free(WorkerKind::Generator))
+                    .map(|_| TaskRequest {
+                        kind: TaskKind::GenerateLinkers,
+                        payload: Payload::Generate { seed: self.seed.next_u64() },
+                        origin_t: now,
+                    })
+                    .collect()
+            }
+            fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+                assert!(done.completed_at >= self.last, "time went backwards");
+                self.last = done.completed_at;
+                Vec::new()
+            }
+        }
+        let sched = Scheduler::new(
+            Cluster::new(16),
+            engines(),
+            Arc::new(ThreadPool::new(4)),
+            SimParams { seed: 9, horizon_s: 20.0, util_sample_dt: 5.0 },
+        );
+        let mut policy = OrderCheck { last: 0.0, seed: Rng::new(9) };
+        sched.run(&mut policy);
+    }
+}

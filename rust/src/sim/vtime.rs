@@ -1,0 +1,176 @@
+//! Virtual-time primitives for the discrete-event scheduler.
+//!
+//! [`VirtualTime`] is a totally-ordered newtype over `f64` seconds. The
+//! old campaign loop ordered its event heap on raw `f64::to_bits`, which
+//! silently corrupts heap order the moment a NaN or negative duration
+//! slips out of the duration model; here construction is validated
+//! (debug builds assert, release builds clamp) and comparison uses
+//! `total_cmp`, so [`EventHeap`] ordering is total by construction.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A point in virtual time, in seconds since campaign start.
+///
+/// Invariant: finite and non-negative. Violations are a bug in the
+/// duration model ([`crate::workflow::taskserver::virtual_duration`]):
+/// debug builds panic, release builds clamp to keep the heap sound.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VirtualTime(f64);
+
+/// Clamp a sampled duration into the valid range. NaN, infinite, or
+/// negative durations would corrupt event ordering; debug builds assert
+/// so the offending model is caught at the source.
+pub fn sanitize_duration(d: f64) -> f64 {
+    debug_assert!(
+        d.is_finite() && d >= 0.0,
+        "invalid virtual duration {d}: the duration model must yield finite, non-negative seconds"
+    );
+    if d.is_finite() {
+        d.max(0.0)
+    } else {
+        0.0
+    }
+}
+
+impl VirtualTime {
+    /// Campaign start.
+    pub const ZERO: VirtualTime = VirtualTime(0.0);
+
+    /// A validated point in time.
+    pub fn new(seconds: f64) -> VirtualTime {
+        debug_assert!(
+            seconds.is_finite() && seconds >= 0.0,
+            "invalid virtual time {seconds}"
+        );
+        VirtualTime(if seconds.is_finite() { seconds.max(0.0) } else { 0.0 })
+    }
+
+    /// Seconds since campaign start.
+    pub fn seconds(self) -> f64 {
+        self.0
+    }
+
+    /// This instant plus a sampled task duration.
+    pub fn advance(self, duration_s: f64) -> VirtualTime {
+        VirtualTime(self.0 + sanitize_duration(duration_s))
+    }
+}
+
+impl PartialEq for VirtualTime {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for VirtualTime {}
+
+impl Ord for VirtualTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for VirtualTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of `(completion time, event id)` pairs. Ties on time pop in
+/// event-id order, so the pop sequence is fully deterministic.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<std::cmp::Reverse<(VirtualTime, u64)>>,
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap { heap: BinaryHeap::new() }
+    }
+
+    /// Schedule event `id` at time `at`.
+    pub fn push(&mut self, at: VirtualTime, id: u64) {
+        self.heap.push(std::cmp::Reverse((at, id)));
+    }
+
+    /// Pop the earliest event (lowest time, then lowest id).
+    pub fn pop(&mut self) -> Option<(VirtualTime, u64)> {
+        self.heap.pop().map(|std::cmp::Reverse(p)| p)
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek(&self) -> Option<VirtualTime> {
+        self.heap.peek().map(|std::cmp::Reverse((t, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_total_and_numeric() {
+        let a = VirtualTime::new(1.0);
+        let b = VirtualTime::new(2.0);
+        assert!(a < b);
+        assert!(a == VirtualTime::new(1.0));
+        assert_eq!(VirtualTime::ZERO.seconds(), 0.0);
+    }
+
+    #[test]
+    fn advance_accumulates() {
+        let t = VirtualTime::ZERO.advance(2.5).advance(0.5);
+        assert!((t.seconds() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heap_pops_in_time_then_id_order() {
+        let mut h = EventHeap::new();
+        h.push(VirtualTime::new(5.0), 1);
+        h.push(VirtualTime::new(1.0), 2);
+        h.push(VirtualTime::new(5.0), 0);
+        h.push(VirtualTime::new(3.0), 3);
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.peek(), Some(VirtualTime::new(1.0)));
+        let order: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id)| id).collect();
+        assert_eq!(order, vec![2, 3, 0, 1]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn heap_order_survives_many_random_times() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut h = EventHeap::new();
+        for id in 0..500 {
+            h.push(VirtualTime::new(rng.f64() * 1e6), id);
+        }
+        let mut last = -1.0f64;
+        while let Some((t, _)) = h.pop() {
+            assert!(t.seconds() >= last);
+            last = t.seconds();
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "invalid virtual duration")]
+    fn nan_duration_asserts_in_debug() {
+        let _ = VirtualTime::ZERO.advance(f64::NAN);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "invalid virtual duration")]
+    fn negative_duration_asserts_in_debug() {
+        let _ = VirtualTime::ZERO.advance(-1.0);
+    }
+}

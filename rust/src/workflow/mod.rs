@@ -4,8 +4,9 @@
 //! ([`taskserver`]) over a heterogeneous virtual cluster ([`resources`])
 //! through LIFO / stability-priority queues ([`queues`]) with
 //! ProxyStore-style control/data separation ([`proxystore`]); campaigns
-//! are driven by a discrete-event loop in [`mofa`], results accumulate in
-//! [`db`] and the evaluation metrics of Figs. 3–10 in [`metrics`].
+//! are driven by the reusable discrete-event engine in [`crate::sim`]
+//! (the [`mofa`] module is the thin policy adapter), results accumulate
+//! in [`db`] and the evaluation metrics of Figs. 3–10 in [`metrics`].
 
 pub mod db;
 pub mod launch;

@@ -1,18 +1,23 @@
-//! Campaign driver: the discrete-event loop that plays a MOFA run on a
-//! virtual cluster (paper §IV executed per DESIGN.md §8's virtual-time
-//! model). Real substrate computations run on a thread pool; completion
-//! order follows sampled Table-I virtual durations.
+//! Campaign driver: a thin adapter that wires MOFA **policy** (the
+//! Colmena-style [`Thinker`]) and the campaign's substrate
+//! ([`Cluster`] + [`Engines`]) into the reusable discrete-event engine
+//! in [`crate::sim`] (paper §IV executed per DESIGN.md §8's virtual-time
+//! model).
+//!
+//! All event ordering, slot dispatch and pending-queue mechanics live in
+//! [`crate::sim::scheduler`]; this module only translates between the
+//! Thinker's vocabulary and the [`Policy`] trait, and assembles the
+//! paper-style [`CampaignReport`].
 
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::sim::scheduler::{Completion, Policy, Scheduler, SimParams};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use crate::workflow::metrics::{LatencyKind, TaskRecord};
 use crate::workflow::resources::{Cluster, WorkerKind};
-use crate::workflow::taskserver::{
-    submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
-};
+use crate::workflow::taskserver::{Engines, Outcome, Payload, TaskKind};
 use crate::workflow::thinker::{PolicyConfig, TaskRequest, Thinker};
 
 /// Campaign configuration.
@@ -24,7 +29,8 @@ pub struct CampaignConfig {
     pub duration_s: f64,
     pub seed: u64,
     pub policy: PolicyConfig,
-    /// real-compute threads (0 = all cores)
+    /// real-compute threads (0 = all cores); ignored when the caller
+    /// supplies a shared pool ([`run_campaign_on`] / [`crate::sim::sweep`])
     pub threads: usize,
     /// utilization sampling cadence, virtual seconds
     pub util_sample_dt: f64,
@@ -66,178 +72,122 @@ impl CampaignReport {
     }
 }
 
-struct Flight {
-    inf: InFlight,
-    origin_t: f64,
+/// The Thinker as a scheduler [`Policy`]: §III-C policy fills plus
+/// continuous linker generation, with the campaign-level bookkeeping
+/// (task metrics, retrained-weight installation, Fig. 6 latency
+/// channels) that the old event loop carried inline.
+pub struct MofaPolicy {
+    pub thinker: Thinker,
+    engines: Arc<Engines>,
+    /// seed stream for continuous generation requests
+    gen_rng: Rng,
 }
 
-/// Run one campaign to completion.
+impl MofaPolicy {
+    pub fn new(thinker: Thinker, engines: Arc<Engines>, seed: u64) -> MofaPolicy {
+        MofaPolicy { thinker, engines, gen_rng: Rng::new(seed) }
+    }
+
+    pub fn into_thinker(self) -> Thinker {
+        self.thinker
+    }
+}
+
+impl Policy for MofaPolicy {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        // thinker policies (validate / assemble / optimize / retrain);
+        // these never consume generator slots
+        let mut reqs = self.thinker.fill(free, now);
+        // continuous generation (policy: "linkers are continuously
+        // generated and processed")
+        for _ in 0..free(WorkerKind::Generator) {
+            reqs.push(TaskRequest {
+                kind: TaskKind::GenerateLinkers,
+                payload: Payload::Generate { seed: self.gen_rng.next_u64() },
+                origin_t: now,
+            });
+        }
+        reqs
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        let now = done.completed_at;
+        self.thinker.metrics.record_task(TaskRecord {
+            kind: done.kind,
+            submitted_at: done.submitted_at,
+            completed_at: now,
+            items_out: done.outcome.n_items(),
+        });
+        // install retrained weights into the generator before policy
+        // handling (the campaign owns the engine stack)
+        if let Outcome::Retrained { params, version, .. } = &done.outcome {
+            self.engines.generator.set_params(params.clone(), *version);
+        }
+        // Fig. 6 channel: generate-batch done -> processed batch received
+        if let Outcome::Processed { .. } = &done.outcome {
+            let proxy = self.thinker.store.put(300_000); // processed batch payload
+            let resolve = self.thinker.store.resolve(proxy);
+            self.thinker.metrics.record_latency(
+                LatencyKind::ProcessLinkers,
+                now - done.origin_t + resolve + self.thinker.store.control_latency(),
+            );
+        }
+        self.thinker.handle(done.outcome, now)
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        // queue-start latency channels (paper Fig. 6 definitions)
+        match kind {
+            TaskKind::ComputeCharges => self.thinker.metrics.record_latency(
+                LatencyKind::PartialCharges,
+                now - origin_t + self.thinker.store.control_latency(),
+            ),
+            TaskKind::EstimateAdsorption => self.thinker.metrics.record_latency(
+                LatencyKind::Adsorption,
+                now - origin_t + self.thinker.store.control_latency(),
+            ),
+            _ => {}
+        }
+    }
+}
+
+/// Run one campaign to completion on its own pool (`config.threads`).
 pub fn run_campaign(config: CampaignConfig, engines: Arc<Engines>) -> CampaignReport {
-    let t_wall = std::time::Instant::now();
-    let pool = if config.threads == 0 {
+    let pool = Arc::new(if config.threads == 0 {
         ThreadPool::default_pool()
     } else {
         ThreadPool::new(config.threads)
-    };
-    let mut cluster = Cluster::new(config.nodes);
+    });
+    run_campaign_on(config, engines, &pool)
+}
+
+/// Run one campaign on a caller-supplied (possibly shared) pool.
+/// [`crate::sim::sweep`] uses this to run many campaigns concurrently.
+pub fn run_campaign_on(
+    config: CampaignConfig,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+) -> CampaignReport {
+    let t_wall = std::time::Instant::now();
+    let cluster = Cluster::new(config.nodes);
     let layout = cluster.layout();
-    let mut thinker = Thinker::new(config.policy, layout.validate_slots);
-    let mut rng = Rng::new(config.seed);
-
-    let mut pending: BTreeMap<WorkerKind, VecDeque<TaskRequest>> = BTreeMap::new();
-    for k in WorkerKind::ALL {
-        pending.insert(k, VecDeque::new());
-    }
-    let mut flights: HashMap<u64, Flight> = HashMap::new();
-    // min-heap over (time_bits, task_id): f64 times are non-negative so the
-    // bit pattern preserves order
-    let mut heap: BinaryHeap<std::cmp::Reverse<(u64, u64)>> = BinaryHeap::new();
-    let mut next_task_id: u64 = 0;
-    let mut util_series: Vec<(f64, [f64; 5])> = Vec::new();
-    let mut next_sample = 0.0;
-
-    macro_rules! submit_req {
-        ($req:expr, $now:expr) => {{
-            let req: TaskRequest = $req;
-            let now: f64 = $now;
-            let kind = req.kind;
-            let worker = kind.worker();
-            let acquired = cluster.acquire(worker, now);
-            debug_assert!(acquired);
-            let task_id = next_task_id;
-            next_task_id += 1;
-            let seed = config.seed ^ task_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            let set_size = match &req.payload {
-                Payload::Retrain { examples, .. } => examples.len(),
-                _ => 0,
-            };
-            let n_items = match &req.payload {
-                Payload::Generate { .. } => 16,
-                Payload::Process { linkers } => linkers.len(),
-                _ => 1,
-            };
-            let mut drng = rng.derive(task_id);
-            let dur = virtual_duration(kind, n_items, set_size, &mut drng);
-            // queue-start latency channels (paper Fig. 6 definitions)
-            match kind {
-                TaskKind::ComputeCharges => thinker.metrics.record_latency(
-                    LatencyKind::PartialCharges,
-                    now - req.origin_t + thinker.store.control_latency(),
-                ),
-                TaskKind::EstimateAdsorption => thinker.metrics.record_latency(
-                    LatencyKind::Adsorption,
-                    now - req.origin_t + thinker.store.control_latency(),
-                ),
-                _ => {}
-            }
-            let inf = submit(&pool, &engines, req.payload, task_id, kind, now, dur, seed);
-            heap.push(std::cmp::Reverse((inf.completes_at.to_bits(), task_id)));
-            flights.insert(task_id, Flight { inf, origin_t: req.origin_t });
-        }};
-    }
-
-    // dispatch pending + policy fills at the current time
-    macro_rules! dispatch {
-        ($now:expr) => {{
-            let now: f64 = $now;
-            // 1. queued follow-ups first (charges → adsorption chains)
-            for k in WorkerKind::ALL {
-                while cluster.free_slots(k) > 0 {
-                    let Some(req) = pending.get_mut(&k).unwrap().pop_front() else {
-                        break;
-                    };
-                    submit_req!(req, now);
-                }
-            }
-            if now < config.duration_s {
-                // 2. thinker policies (validate / assemble / optimize / retrain)
-                let reqs = {
-                    let free: [usize; 5] = [
-                        cluster.free_slots(WorkerKind::Generator),
-                        cluster.free_slots(WorkerKind::Validate),
-                        cluster.free_slots(WorkerKind::Cpu),
-                        cluster.free_slots(WorkerKind::Optimize),
-                        cluster.free_slots(WorkerKind::Trainer),
-                    ];
-                    let free_fn = move |k: WorkerKind| match k {
-                        WorkerKind::Generator => free[0],
-                        WorkerKind::Validate => free[1],
-                        WorkerKind::Cpu => free[2],
-                        WorkerKind::Optimize => free[3],
-                        WorkerKind::Trainer => free[4],
-                    };
-                    thinker.fill(&free_fn, now)
-                };
-                for req in reqs {
-                    let w = req.kind.worker();
-                    if cluster.free_slots(w) > 0 {
-                        submit_req!(req, now);
-                    } else {
-                        pending.get_mut(&w).unwrap().push_back(req);
-                    }
-                }
-                // 3. continuous generation (policy: "linkers are continuously
-                //    generated and processed")
-                while cluster.free_slots(WorkerKind::Generator) > 0 {
-                    let seed = rng.next_u64();
-                    submit_req!(
-                        TaskRequest {
-                            kind: TaskKind::GenerateLinkers,
-                            payload: Payload::Generate { seed },
-                            origin_t: now,
-                        },
-                        now
-                    );
-                }
-            }
-        }};
-    }
-
-    dispatch!(0.0);
-
-    let mut now = 0.0f64;
-    while let Some(std::cmp::Reverse((bits, task_id))) = heap.pop() {
-        now = f64::from_bits(bits);
-        let Flight { inf, origin_t } = flights.remove(&task_id).expect("flight");
-        let outcome = inf.handle.join();
-        cluster.release(inf.kind.worker(), now);
-        thinker.metrics.record_task(TaskRecord {
-            kind: inf.kind,
-            submitted_at: inf.submitted_at,
-            completed_at: now,
-            items_out: outcome.n_items(),
-        });
-        // install retrained weights into the generator before policy handling
-        if let Outcome::Retrained { params, version, .. } = &outcome {
-            engines.generator.set_params(params.clone(), *version);
-        }
-        // Fig. 6 channel: generate-batch done -> processed batch received
-        if let Outcome::Processed { .. } = &outcome {
-            let proxy = thinker.store.put(300_000); // processed batch payload
-            let resolve = thinker.store.resolve(proxy);
-            thinker.metrics.record_latency(
-                LatencyKind::ProcessLinkers,
-                now - origin_t + resolve + thinker.store.control_latency(),
-            );
-        }
-        let followups = thinker.handle(outcome, now);
-        for req in followups {
-            let w = req.kind.worker();
-            pending.get_mut(&w).unwrap().push_back(req);
-        }
-        // utilization sampling (Fig. 4)
-        while next_sample <= now && next_sample <= config.duration_s {
-            let mut row = [0.0f64; 5];
-            for (i, k) in WorkerKind::ALL.iter().enumerate() {
-                let total = cluster.total_slots(*k).max(1);
-                row[i] = (cluster.total_slots(*k) - cluster.free_slots(*k)) as f64
-                    / total as f64;
-            }
-            util_series.push((next_sample, row));
-            next_sample += config.util_sample_dt;
-        }
-        dispatch!(now);
-    }
+    let mut policy = MofaPolicy::new(
+        Thinker::new(config.policy, layout.validate_slots),
+        Arc::clone(&engines),
+        config.seed,
+    );
+    let sched = Scheduler::new(
+        cluster,
+        engines,
+        Arc::clone(pool),
+        SimParams {
+            seed: config.seed,
+            horizon_s: config.duration_s,
+            util_sample_dt: config.util_sample_dt,
+        },
+    );
+    let sim = sched.run(&mut policy);
+    let thinker = policy.into_thinker();
 
     // Utilization over the campaign window [0, duration]: busy time from
     // task records clipped to the window (the drain tail after `duration`
@@ -252,7 +202,7 @@ pub fn run_campaign(config: CampaignConfig, engines: Arc<Engines>) -> CampaignRe
             .filter(|r| r.kind.worker() == k)
             .map(|r| (r.completed_at.min(dur) - r.submitted_at.min(dur)).max(0.0))
             .sum();
-        let slots = cluster.total_slots(k).max(1) as f64;
+        let slots = sim.cluster.total_slots(k).max(1) as f64;
         utilization_avg.insert(k, busy / (slots * dur));
     }
     let mut tasks_done = BTreeMap::new();
@@ -264,10 +214,10 @@ pub fn run_campaign(config: CampaignConfig, engines: Arc<Engines>) -> CampaignRe
         config,
         thinker,
         utilization_avg,
-        util_series,
+        util_series: sim.util_series,
         tasks_done,
         wallclock_s: t_wall.elapsed().as_secs_f64(),
-        final_vtime: now,
+        final_vtime: sim.final_vtime,
     }
 }
 
@@ -286,9 +236,7 @@ mod tests {
         e.md.steps = 60;
         e.gcmc.equil_moves = 200;
         e.gcmc.prod_moves = 400;
-        e
-            .opt
-            .max_steps = 10;
+        e.opt.max_steps = 10;
         Arc::new(e)
     }
 

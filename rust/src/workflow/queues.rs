@@ -4,34 +4,36 @@
 //! * a stability-ordered **priority** queue — adsorption runs on the *most
 //!   stable* MOF available.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// LIFO stack with a capacity bound (old entries are dropped from the
 /// bottom — the paper's "most up-to-date data" policy makes stale MOFs
-/// worthless anyway).
+/// worthless anyway). Backed by a `VecDeque` so the at-capacity eviction
+/// is O(1) — this sits on the hot assembly path with cap 4096, where a
+/// `Vec::remove(0)` would shift the whole buffer on every push.
 #[derive(Clone, Debug)]
 pub struct LifoQueue<T> {
-    items: Vec<T>,
+    items: VecDeque<T>,
     cap: usize,
     dropped: usize,
 }
 
 impl<T> LifoQueue<T> {
     pub fn new(cap: usize) -> Self {
-        LifoQueue { items: Vec::new(), cap, dropped: 0 }
+        LifoQueue { items: VecDeque::new(), cap, dropped: 0 }
     }
 
     pub fn push(&mut self, item: T) {
         if self.items.len() == self.cap {
-            self.items.remove(0);
+            self.items.pop_front();
             self.dropped += 1;
         }
-        self.items.push(item);
+        self.items.push_back(item);
     }
 
     /// Most recent item.
     pub fn pop(&mut self) -> Option<T> {
-        self.items.pop()
+        self.items.pop_back()
     }
 
     pub fn len(&self) -> usize {
@@ -149,6 +151,24 @@ mod tests {
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lifo_capacity_bound_holds_under_load() {
+        let mut q = LifoQueue::new(64);
+        for i in 0..10_000 {
+            q.push(i);
+            assert!(q.len() <= 64);
+        }
+        assert_eq!(q.dropped(), 10_000 - 64);
+        // newest first, oldest surviving entry is 10_000 - 64
+        assert_eq!(q.pop(), Some(9_999));
+        let mut last = 9_999;
+        while let Some(v) = q.pop() {
+            assert_eq!(v, last - 1);
+            last = v;
+        }
+        assert_eq!(last, 10_000 - 64);
     }
 
     #[test]

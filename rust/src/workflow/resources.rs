@@ -240,4 +240,56 @@ mod tests {
     fn too_few_nodes_panics() {
         layout(2);
     }
+
+    /// Property: under random acquire/release sequences, a pool never
+    /// oversubscribes (`busy ≤ total`), `free_slots` mirrors the live
+    /// task count, and the busy-time integral equals the sum of the
+    /// per-task busy intervals clipped at the observation time.
+    #[test]
+    fn property_slot_accounting_and_busy_integral() {
+        crate::util::proptest::check("cluster-slot-accounting", |rng, _| {
+            let mut c = Cluster::new(8);
+            let kind = *rng.choice(&WorkerKind::ALL);
+            let total = c.total_slots(kind);
+            let mut t = 0.0f64;
+            // start times of live tasks + completed (start, end) intervals
+            let mut active: Vec<f64> = Vec::new();
+            let mut done: Vec<(f64, f64)> = Vec::new();
+            for _ in 0..rng.below(80) + 1 {
+                t += rng.f64() * 10.0;
+                let try_acquire = active.is_empty() || rng.chance(0.5);
+                if try_acquire {
+                    let ok = c.acquire(kind, t);
+                    crate::prop_assert!(
+                        ok == (active.len() < total),
+                        "acquire at t={t}: ok={ok} with {}/{total} busy",
+                        active.len()
+                    );
+                    if ok {
+                        active.push(t);
+                    }
+                } else {
+                    let start = active.pop().unwrap();
+                    c.release(kind, t);
+                    done.push((start, t));
+                }
+                let busy = total - c.free_slots(kind);
+                crate::prop_assert!(busy <= total, "busy {busy} > total {total}");
+                crate::prop_assert!(
+                    busy == active.len(),
+                    "busy {busy} != live tasks {}",
+                    active.len()
+                );
+            }
+            let t_end = t + 1.0;
+            let want: f64 = done.iter().map(|(s, e)| e - s).sum::<f64>()
+                + active.iter().map(|s| t_end - s).sum::<f64>();
+            let got = c.utilization(kind, t_end) * total as f64 * t_end;
+            crate::prop_assert!(
+                (got - want).abs() < 1e-6 * want.max(1.0),
+                "busy integral {got} != clipped task-interval sum {want}"
+            );
+            Ok(())
+        });
+    }
 }

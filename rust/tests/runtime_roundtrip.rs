@@ -7,6 +7,10 @@ use mofa::runtime::Runtime;
 use mofa::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (PJRT runtime stubbed out)");
+        return None;
+    }
     let paths = ArtifactPaths::default_dir();
     if !paths.all_present() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");

@@ -1,0 +1,106 @@
+//! Integration: the concurrent sweep driver must not change campaign
+//! results. Campaigns are deterministic in virtual time (event order is
+//! `(completion time, task id)`, never wallclock), so running a node
+//! sweep concurrently on one shared pool must reproduce the same
+//! campaigns run sequentially, bit for bit.
+
+use std::sync::Arc;
+
+use mofa::sim::sweep::{run_sweep, SweepItem};
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::mofa::{run_campaign, CampaignConfig};
+use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn config(nodes: usize) -> CampaignConfig {
+    CampaignConfig {
+        nodes,
+        duration_s: 900.0,
+        seed: 4242,
+        // retraining off (the Fig. 5 configuration): bit-identity requires
+        // engine state frozen for the run — with retraining on, which model
+        // version an in-flight generate task observes depends on pool
+        // contention (see sim::sweep module docs)
+        policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 120.0,
+    }
+}
+
+#[test]
+fn concurrent_sweep_matches_sequential_runs() {
+    let node_counts = [8usize, 16];
+
+    // concurrent: both campaigns share one pool
+    let pool = Arc::new(ThreadPool::default_pool());
+    let items: Vec<SweepItem> = node_counts
+        .iter()
+        .map(|&n| SweepItem {
+            config: config(n),
+            engines: build_engines(ModelMode::Surrogate, true).unwrap(),
+        })
+        .collect();
+    let concurrent = run_sweep(items, &pool);
+
+    // sequential: same configs, fresh engines, one at a time
+    for (i, &nodes) in node_counts.iter().enumerate() {
+        let seq = run_campaign(config(nodes), build_engines(ModelMode::Surrogate, true).unwrap());
+        let con = &concurrent[i];
+        assert_eq!(
+            con.thinker.linkers_generated, seq.thinker.linkers_generated,
+            "{nodes} nodes: linkers_generated diverged"
+        );
+        assert_eq!(
+            con.thinker.db.len(),
+            seq.thinker.db.len(),
+            "{nodes} nodes: db size diverged"
+        );
+        assert_eq!(
+            con.thinker.db.stable_count(0.10),
+            seq.thinker.db.stable_count(0.10),
+            "{nodes} nodes: stable count diverged"
+        );
+        assert_eq!(
+            con.final_vtime, seq.final_vtime,
+            "{nodes} nodes: final virtual time diverged"
+        );
+        // full per-task trace identical, not just the aggregates
+        assert_eq!(
+            con.thinker.metrics.tasks.len(),
+            seq.thinker.metrics.tasks.len(),
+            "{nodes} nodes: task trace length diverged"
+        );
+        for (a, b) in con.thinker.metrics.tasks.iter().zip(&seq.thinker.metrics.tasks) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+            assert_eq!(a.completed_at.to_bits(), b.completed_at.to_bits());
+            assert_eq!(a.items_out, b.items_out);
+        }
+        // and the exported database serializes byte-identically
+        assert_eq!(
+            con.thinker.db.to_json().to_string(),
+            seq.thinker.db.to_json().to_string(),
+            "{nodes} nodes: db JSON diverged"
+        );
+    }
+}
+
+#[test]
+fn sweep_scales_throughput_with_nodes() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let items: Vec<SweepItem> = [8usize, 32]
+        .iter()
+        .map(|&n| SweepItem {
+            config: config(n),
+            engines: build_engines(ModelMode::Surrogate, true).unwrap(),
+        })
+        .collect();
+    let reports = run_sweep(items, &pool);
+    let small = reports[0].tasks_done[&TaskKind::ValidateStructure];
+    let large = reports[1].tasks_done[&TaskKind::ValidateStructure];
+    assert!(
+        large > small,
+        "more nodes should validate more structures: 8 -> {small}, 32 -> {large}"
+    );
+}
