@@ -3,7 +3,7 @@
 //! steering the AOT-compiled MOFLinker (Pallas EGNN via PJRT) plus every
 //! simulation substrate — on a virtual cluster.
 //!
-//!     cargo run --release --example full_campaign [-- nodes hours]
+//!     cargo run --release --example full_campaign [-- nodes hours [--service N]]
 //!
 //! `nodes` may be a single count (default 32) or a comma-separated list
 //! (e.g. `8,16,32`): multiple campaigns run **concurrently** through
@@ -13,10 +13,18 @@
 //! campaign: linker funnel, stable-MOF curve, utilization, best CO₂
 //! capacity + hMOF rank, and writes results to full_campaign_report.json
 //! (an object for a single campaign, an array for a sweep).
+//!
+//! With `--service N` the campaigns are instead *served*: submitted as
+//! requests to a long-lived `sim::service::CampaignService` whose
+//! driver-side semaphore admits at most `N` concurrent campaigns
+//! (default 2), with scheduling policies assigned round-robin
+//! (mofa → priority → fair-share) to exercise all three `PolicyKind`s.
 
 use std::sync::Arc;
 
 use mofa::hmof::HmofReference;
+use mofa::sim::policy::PriorityClasses;
+use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind};
 use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
@@ -120,7 +128,25 @@ fn print_report(report: &CampaignReport, hours: f64, href: &HmofReference) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // --service [N]: serve campaigns through a CampaignService instead of
+    // a one-shot sweep; N bounds concurrent in-flight campaigns
+    let mut service_max: Option<usize> = None;
+    if let Some(i) = args.iter().position(|a| a == "--service") {
+        args.remove(i);
+        let n = if i < args.len() {
+            match args[i].parse::<usize>() {
+                Ok(n) => {
+                    args.remove(i);
+                    n
+                }
+                Err(_) => 2,
+            }
+        } else {
+            2
+        };
+        service_max = Some(n.max(1));
+    }
     let node_counts: Vec<usize> = match args.first() {
         Some(v) => {
             let parsed: Result<Vec<usize>, _> =
@@ -163,13 +189,55 @@ fn main() -> anyhow::Result<()> {
             engines,
         });
     }
-    println!(
-        "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online retraining ON, \
-         {} concurrent via sim::sweep",
-        node_counts.len()
-    );
     let pool = Arc::new(ThreadPool::default_pool());
-    let reports = run_sweep(items, &pool);
+    let reports = match service_max {
+        Some(max_in_flight) => {
+            // service mode: queue the campaigns as requests with mixed
+            // scheduling policies, bounded by the driver-side semaphore
+            let kinds = [
+                PolicyKind::Mofa,
+                PolicyKind::Priority(PriorityClasses::default()),
+                PolicyKind::FairShare { weight: 1, weight_total: 2 },
+            ];
+            println!(
+                "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online \
+                 retraining ON, served via CampaignService (max {max_in_flight} in flight)"
+            );
+            let svc = CampaignService::new(Arc::clone(&pool), max_in_flight);
+            let tickets: Vec<_> = items
+                .into_iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    let policy = kinds[i % kinds.len()];
+                    println!(
+                        "  request {i}: {} nodes, policy {}",
+                        item.config.nodes,
+                        policy.label()
+                    );
+                    svc.submit(CampaignRequest {
+                        config: item.config,
+                        engines: item.engines,
+                        policy,
+                    })
+                })
+                .collect();
+            let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            println!(
+                "service: {} completed, peak {} in flight (bound {max_in_flight})",
+                svc.completed(),
+                svc.peak_in_flight()
+            );
+            reports
+        }
+        None => {
+            println!(
+                "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online \
+                 retraining ON, {} concurrent via sim::sweep",
+                node_counts.len()
+            );
+            run_sweep(items, &pool)
+        }
+    };
 
     let href = HmofReference::generate(0);
     for report in &reports {

@@ -15,6 +15,8 @@
 
 use std::sync::Arc;
 
+use mofa::sim::policy::PriorityClasses;
+use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
 use mofa::sim::sweep::sweep_nodes;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
@@ -43,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let pool = Arc::new(ThreadPool::default_pool());
-    let base = CampaignConfig {
+    let base_config = CampaignConfig {
         nodes: node_counts[0],
         duration_s: minutes * 60.0,
         seed: 13,
@@ -52,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         util_sample_dt: 300.0,
     };
     let t_sweep = std::time::Instant::now();
-    let reports = sweep_nodes(&node_counts, &base, &pool, |_| {
+    let reports = sweep_nodes(&node_counts, &base_config, &pool, |_| {
         let engines =
             build_engines(ModelMode::SurrogateCorpus, true).expect("engine stack build");
         engines.generator.set_params(vec![], 3); // steady-state model quality
@@ -64,15 +66,15 @@ fn main() -> anyhow::Result<()> {
         "{:>6} {:>18} {:>18} {:>20} {:>16}",
         "nodes", stages[0].1, stages[1].1, stages[2].1, stages[3].1
     );
-    let mut base: Option<[f64; 4]> = None;
+    let mut base_rates: Option<[f64; 4]> = None;
     let mut rows = Vec::new();
     for (nodes, report) in node_counts.iter().zip(&reports) {
         let mut rates = [0.0f64; 4];
         for (i, (kind, _)) in stages.iter().enumerate() {
             rates[i] = report.thinker.metrics.sustained_rate_per_hour(*kind);
         }
-        if base.is_none() {
-            base = Some(rates);
+        if base_rates.is_none() {
+            base_rates = Some(rates);
         }
         println!(
             "{:>6} {:>18.0} {:>18.0} {:>20.0} {:>16.1}",
@@ -82,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ideal-scaling comparison from the smallest node count
-    let base = base.unwrap();
+    let base_rates = base_rates.unwrap();
     let n0 = node_counts[0] as f64;
     println!("\n-- measured / ideal (ideal = smallest-count rate x nodes/{}) --", node_counts[0]);
     println!(
@@ -92,8 +94,8 @@ fn main() -> anyhow::Result<()> {
     for (nodes, rates) in &rows {
         let s = *nodes as f64 / n0;
         let ratio = |i: usize| {
-            if base[i] > 0.0 {
-                rates[i] / (base[i] * s)
+            if base_rates[i] > 0.0 {
+                rates[i] / (base_rates[i] * s)
             } else {
                 0.0
             }
@@ -114,5 +116,42 @@ fn main() -> anyhow::Result<()> {
         reports.len()
     );
     println!("paper claim: linear scaling 32 -> 450 nodes (ratios ~= 1.0)");
+
+    // -- scheduling-policy cross-check (smallest node count) --
+    // the same campaign under each PolicyKind: `mofa` must reproduce the
+    // sweep row exactly (same config/seed, FIFO pending queues), while
+    // priority/fair-share show how reordering/quotas move the rates
+    println!("\n-- policy cross-check at {} nodes (items/hour) --", node_counts[0]);
+    println!(
+        "{:>12} {:>18} {:>18} {:>20} {:>16}",
+        "policy", stages[0].1, stages[1].1, stages[2].1, stages[3].1
+    );
+    let policies = [
+        PolicyKind::Mofa,
+        PolicyKind::Priority(PriorityClasses::default()),
+        PolicyKind::FairShare { weight: 1, weight_total: 2 },
+    ];
+    for kind in policies {
+        let engines =
+            build_engines(ModelMode::SurrogateCorpus, true).expect("engine stack build");
+        engines.generator.set_params(vec![], 3);
+        let report = run_campaign_request(
+            CampaignRequest { config: base_config.clone(), engines, policy: kind },
+            &pool,
+        );
+        let mut rates = [0.0f64; 4];
+        for (i, (k, _)) in stages.iter().enumerate() {
+            rates[i] = report.thinker.metrics.sustained_rate_per_hour(*k);
+        }
+        println!(
+            "{:>12} {:>18.0} {:>18.0} {:>20.0} {:>16.1}",
+            kind.label(),
+            rates[0],
+            rates[1],
+            rates[2],
+            rates[3]
+        );
+    }
+    println!("(fair-share row: weight 1 of 2 — the tenant sees half of every slot pool)");
     Ok(())
 }

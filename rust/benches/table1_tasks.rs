@@ -20,7 +20,8 @@ use mofa::gcmc::{run_gcmc, GcmcSettings};
 use mofa::genai::LinkerGenerator;
 use mofa::linkerproc::process_batch;
 use mofa::md::{run_npt, MdSettings};
-use mofa::sim::sweep::{run_sweep, SweepItem};
+use mofa::sim::policy::PriorityClasses;
+use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
 use mofa::util::rng::Rng;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
@@ -37,8 +38,13 @@ fn vmean(kind: TaskKind, n_items: usize) -> f64 {
 }
 
 /// Mean scheduled task duration and count per kind, measured from a
-/// short campaign replayed through the discrete-event engine.
-fn campaign_task_means(minutes: f64) -> anyhow::Result<BTreeMap<TaskKind, (f64, usize)>> {
+/// short campaign replayed through the discrete-event engine under the
+/// given scheduling policy.
+fn campaign_task_means(
+    minutes: f64,
+    policy: PolicyKind,
+    pool: &Arc<ThreadPool>,
+) -> anyhow::Result<BTreeMap<TaskKind, (f64, usize)>> {
     let engines = build_engines(ModelMode::SurrogateCorpus, true)?;
     engines.generator.set_params(vec![], 3);
     let config = CampaignConfig {
@@ -49,8 +55,7 @@ fn campaign_task_means(minutes: f64) -> anyhow::Result<BTreeMap<TaskKind, (f64, 
         threads: 0,
         util_sample_dt: 600.0,
     };
-    let pool = Arc::new(ThreadPool::default_pool());
-    let report = run_sweep(vec![SweepItem { config, engines }], &pool).remove(0);
+    let report = run_campaign_request(CampaignRequest { config, engines, policy }, pool);
     let mut out = BTreeMap::new();
     for kind in TaskKind::ALL {
         let durs: Vec<f64> = report
@@ -172,25 +177,38 @@ fn main() -> anyhow::Result<()> {
     );
     println!("paper remain%: 100 / 22.8 / 99.9 / 8.6 / 0.03-class / ~100 / 100");
 
-    // scheduler cross-check: mean per-task durations as the event engine
-    // actually scheduled them (generate/process tasks carry ~16-linker
-    // batches, so their per-task means are ~16x the per-structure row)
-    println!(
-        "\n-- scheduler cross-check ({campaign_minutes:.0} min campaign via sim::sweep) --"
-    );
-    let means = campaign_task_means(campaign_minutes)?;
-    println!("{:<22} {:>14} {:>8}", "Task", "SchedMean(s)", "Count");
-    for kind in TaskKind::ALL {
-        match means.get(&kind) {
-            Some((mean, n)) => {
-                println!("{:<22} {:>14.2} {:>8}", kind.label(), mean, n)
+    // scheduler cross-check, one section per scheduling policy: mean
+    // per-task durations as the event engine actually scheduled them
+    // (generate/process tasks carry ~16-linker batches, so their per-task
+    // means are ~16x the per-structure row). The duration *model* is
+    // policy-independent — what moves across sections is the per-kind
+    // completion Count (priority reorders contended queues, fair-share
+    // halves the slot quotas)
+    let pool = Arc::new(ThreadPool::default_pool());
+    let policies = [
+        PolicyKind::Mofa,
+        PolicyKind::Priority(PriorityClasses::default()),
+        PolicyKind::FairShare { weight: 1, weight_total: 2 },
+    ];
+    for policy in policies {
+        println!(
+            "\n-- scheduler cross-check ({campaign_minutes:.0} min campaign, policy: {}) --",
+            policy.label()
+        );
+        let means = campaign_task_means(campaign_minutes, policy, &pool)?;
+        println!("{:<22} {:>14} {:>8}", "Task", "SchedMean(s)", "Count");
+        for kind in TaskKind::ALL {
+            match means.get(&kind) {
+                Some((mean, n)) => {
+                    println!("{:<22} {:>14.2} {:>8}", kind.label(), mean, n)
+                }
+                None => println!(
+                    "{:<22} {:>14} {:>8}  (none completed in window)",
+                    kind.label(),
+                    "-",
+                    0
+                ),
             }
-            None => println!(
-                "{:<22} {:>14} {:>8}  (none completed in window)",
-                kind.label(),
-                "-",
-                0
-            ),
         }
     }
     Ok(())

@@ -4,7 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::genai::corpus::SeedFragment;
-use crate::genai::{decode, Family, GenLinker, LinkerGenerator};
+use crate::genai::{decode, Family, GenLinker, LinkerGenerator, ModelSnapshot};
 use crate::runtime::actor::RuntimeHandle;
 use crate::util::rng::Rng;
 
@@ -45,7 +45,14 @@ impl HloGenerator {
 }
 
 impl LinkerGenerator for HloGenerator {
-    fn generate(&self, seed: u64) -> anyhow::Result<Vec<GenLinker>> {
+    fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            params: self.current_params(),
+            version: self.version.load(Ordering::Acquire),
+        }
+    }
+
+    fn generate_with(&self, model: &ModelSnapshot, seed: u64) -> anyhow::Result<Vec<GenLinker>> {
         let m = &self.rt.meta;
         let (b, n, f, t) = (m.b_gen, m.n_atoms, m.n_feats, m.t_steps);
         let mut rng = Rng::new(seed ^ 0xD1F7_11E5);
@@ -70,10 +77,8 @@ impl LinkerGenerator for HloGenerator {
                 mask[s * n + a] = 1.0;
             }
         }
-        let params = self.current_params();
-        let (x0, h0) = self.rt.sample(&params, &x, &h, &mask, &zx, &zh)?;
-        let version = self.version.load(Ordering::Acquire);
-        Ok(decode::decode_batch(&x0.data, &h0.data, &mask, b, n, f, version))
+        let (x0, h0) = self.rt.sample(&model.params, &x, &h, &mask, &zx, &zh)?;
+        Ok(decode::decode_batch(&x0.data, &h0.data, &mask, b, n, f, model.version))
     }
 
     fn set_params(&self, params: Vec<f32>, version: u64) {
@@ -135,8 +140,16 @@ impl SurrogateGenerator {
 }
 
 impl LinkerGenerator for SurrogateGenerator {
-    fn generate(&self, seed: u64) -> anyhow::Result<Vec<GenLinker>> {
-        let version = self.version.load(Ordering::Acquire);
+    fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            // the surrogate has no weight tensor; version alone sets quality
+            params: Arc::new(Vec::new()),
+            version: self.version.load(Ordering::Acquire),
+        }
+    }
+
+    fn generate_with(&self, model: &ModelSnapshot, seed: u64) -> anyhow::Result<Vec<GenLinker>> {
+        let version = model.version;
         let noise = self.noise0 * self.decay.powi(version.min(8) as i32);
         let mut rng = Rng::new(seed ^ 0x5A5A_0F0F);
         let mut out = Vec::with_capacity(self.batch);

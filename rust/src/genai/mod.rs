@@ -12,6 +12,8 @@ pub mod decode;
 pub mod generator;
 pub mod trainer;
 
+use std::sync::Arc;
+
 use crate::chem::molecule::Molecule;
 
 /// Linker anchor family (paper §III-B): benzenecarboxylic-acid linkers
@@ -54,10 +56,41 @@ pub struct TrainExample {
     pub mask: Vec<f32>,
 }
 
+/// An immutable snapshot of generator parameters + version.
+///
+/// Captured at task-*submit* (virtual) time and carried inside the task
+/// payload, so the pool-thread execution is a pure function of the
+/// payload: which model an in-flight generate task uses can never depend
+/// on wallclock interleaving with a concurrent retrain install. This is
+/// what makes campaigns with online retraining bit-reproducible under
+/// the shared-pool concurrency of [`crate::sim::sweep`] and
+/// [`crate::sim::service`].
+///
+/// Params are shared via `Arc`: a snapshot is a cheap pointer copy, not
+/// a weight-tensor clone.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// flat parameter vector (empty for surrogate generators)
+    pub params: Arc<Vec<f32>>,
+    /// model version the params correspond to (retrain generation count)
+    pub version: u64,
+}
+
 /// Abstract generator: one batch of linkers per call.
 pub trait LinkerGenerator: Send + Sync {
-    /// Generate a batch; `seed` must fully determine the output.
-    fn generate(&self, seed: u64) -> anyhow::Result<Vec<GenLinker>>;
+    /// Capture the current params + version. Called on the campaign
+    /// driver thread at submit (virtual) time; the returned snapshot is
+    /// immutable and safe to execute from concurrently.
+    fn snapshot(&self) -> ModelSnapshot;
+    /// Generate a batch from an explicit snapshot; `(model, seed)` must
+    /// fully determine the output.
+    fn generate_with(&self, model: &ModelSnapshot, seed: u64) -> anyhow::Result<Vec<GenLinker>>;
+    /// Generate a batch from the *current* params; `seed` must fully
+    /// determine the output given a fixed model version. Prefer
+    /// [`LinkerGenerator::generate_with`] on concurrent paths.
+    fn generate(&self, seed: u64) -> anyhow::Result<Vec<GenLinker>> {
+        self.generate_with(&self.snapshot(), seed)
+    }
     /// Install new model parameters (after retraining). No-op for mocks.
     fn set_params(&self, params: Vec<f32>, version: u64);
     /// Current model version.

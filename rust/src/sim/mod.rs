@@ -3,33 +3,49 @@
 //! The MOFA campaign loop used to be a monolith in `workflow/mofa.rs` —
 //! macros for submit/dispatch, a raw `f64::to_bits` binary heap, slot
 //! and queue bookkeeping all tangled with Thinker policy decisions. This
-//! module carves the event engine out into three pieces:
+//! module carves the event engine out into five pieces:
 //!
 //! * [`vtime`] — [`vtime::VirtualTime`], a validated, totally-ordered
 //!   time axis (NaN/negative durations assert instead of corrupting heap
 //!   order), and [`vtime::EventHeap`], the deterministic min-heap of
 //!   completion events keyed `(time, task id)`.
 //! * [`scheduler`] — [`scheduler::Scheduler`] owns event ordering,
-//!   per-worker slot pools, overflow FIFOs, in-flight tasks and
-//!   utilization sampling. What to run next is delegated to the
-//!   [`scheduler::Policy`] trait (`fill` offers idle capacity, `handle`
-//!   consumes completions); the Colmena-style Thinker is its first
-//!   implementor via [`crate::workflow::mofa::MofaPolicy`].
-//! * [`sweep`] — runs many independent campaigns concurrently on one
-//!   shared thread pool. Campaigns are deterministic in virtual time, so
-//!   a concurrent sweep is bit-identical to a sequential one.
+//!   per-worker slot pools, priority-aware pending queues, in-flight
+//!   tasks and utilization sampling. What to run next is delegated to
+//!   the [`scheduler::Policy`] trait (`fill` offers idle capacity,
+//!   `handle` consumes completions, `priority` classes pending work);
+//!   the Colmena-style Thinker is its first implementor via
+//!   [`crate::workflow::mofa::MofaPolicy`].
+//! * [`policy`] — scheduling decorators over any `Policy`:
+//!   [`policy::PriorityPolicy`] (class-ordered pending queues) and
+//!   [`policy::FairSharePolicy`] (weighted multi-tenant slot shares).
+//! * [`sweep`] — one-shot batch driver: run many independent campaigns
+//!   concurrently on one shared thread pool.
+//! * [`service`] — [`service::CampaignService`], the long-lived serving
+//!   layer: campaign requests queue up and run concurrently on one
+//!   shared pool under a driver-side semaphore, each with a per-request
+//!   [`service::PolicyKind`].
 //!
 //! The policy/mechanics split is the contract: policies never touch the
 //! heap or slot counters, and the scheduler never inspects payloads
-//! beyond sizing their duration sample. New scheduling policies (e.g.
-//! priority preemption, checkpoint/replay, multi-tenant campaign
-//! serving) plug in as `Policy` implementors without touching the
-//! engine.
+//! beyond sizing their duration sample.
+//!
+//! Determinism holds even with online retraining: generate tasks carry a
+//! [`crate::genai::ModelSnapshot`] captured at submit (virtual) time, so
+//! pool-thread execution is a pure function of the payload and a
+//! concurrent sweep or a loaded service replays every campaign
+//! bit-identically (docs/ARCHITECTURE.md, `tests/sim_sweep.rs`,
+//! `tests/campaign_service.rs`).
+#![warn(missing_docs)]
 
+pub mod policy;
 pub mod scheduler;
+pub mod service;
 pub mod sweep;
 pub mod vtime;
 
+pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 pub use scheduler::{Completion, Policy, Scheduler, SimOutcome, SimParams};
+pub use service::{CampaignRequest, CampaignService, PolicyKind, Ticket};
 pub use sweep::{run_sweep, sweep_nodes, SweepItem};
 pub use vtime::{EventHeap, VirtualTime};

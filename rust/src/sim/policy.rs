@@ -1,0 +1,304 @@
+//! Pluggable scheduling policies beyond the Thinker: decorators that
+//! wrap any inner [`Policy`] (in practice
+//! [`crate::workflow::mofa::MofaPolicy`]) and change *scheduling*
+//! behavior without touching campaign logic.
+//!
+//! * [`PriorityPolicy`] assigns each task kind a priority class; the
+//!   scheduler's pending queues then dispatch class-first instead of
+//!   FIFO (see [`Policy::priority`]). The default classes favor the
+//!   screening-chain tail — finish structures already in the cascade
+//!   before admitting fresh generation.
+//! * [`FairSharePolicy`] models a multi-tenant cluster: a campaign
+//!   declares a weighted share of the slot pools and the decorator clamps
+//!   the free capacity its inner policy is offered, so several campaigns
+//!   running concurrently through [`crate::sim::service`] split one
+//!   notional cluster in proportion to their weights.
+//!
+//! Both decorators are deterministic: they read only request metadata and
+//! their own counters, never wallclock or cross-campaign state, so a
+//! decorated campaign replays bit-identically.
+
+use crate::sim::scheduler::{Completion, Policy};
+use crate::workflow::resources::WorkerKind;
+use crate::workflow::taskserver::TaskKind;
+use crate::workflow::thinker::TaskRequest;
+
+/// Position of a task kind in [`TaskKind::ALL`] (class-table index).
+fn kind_idx(kind: TaskKind) -> usize {
+    match kind {
+        TaskKind::GenerateLinkers => 0,
+        TaskKind::ProcessLinkers => 1,
+        TaskKind::AssembleMofs => 2,
+        TaskKind::ValidateStructure => 3,
+        TaskKind::OptimizeCells => 4,
+        TaskKind::ComputeCharges => 5,
+        TaskKind::EstimateAdsorption => 6,
+        TaskKind::Retrain => 7,
+    }
+}
+
+/// Position of a worker kind in [`WorkerKind::ALL`] (quota-table index).
+fn worker_idx(kind: WorkerKind) -> usize {
+    match kind {
+        WorkerKind::Generator => 0,
+        WorkerKind::Validate => 1,
+        WorkerKind::Cpu => 2,
+        WorkerKind::Optimize => 3,
+        WorkerKind::Trainer => 4,
+    }
+}
+
+/// Per-task-kind priority classes (lower class dispatches first; ties
+/// within a class stay FIFO, so ordering is deterministic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PriorityClasses {
+    /// class per task kind, indexed in [`TaskKind::ALL`] order
+    pub classes: [u8; 8],
+}
+
+impl Default for PriorityClasses {
+    /// Chain-tail-first: the further a structure is down the screening
+    /// cascade, the sooner its next task runs. Contended Cpu slots then
+    /// prefer finishing adsorption estimates over admitting new linker
+    /// batches (the "finish what you started" discipline).
+    fn default() -> Self {
+        let mut classes = [0u8; 8];
+        classes[kind_idx(TaskKind::EstimateAdsorption)] = 0;
+        classes[kind_idx(TaskKind::ComputeCharges)] = 1;
+        classes[kind_idx(TaskKind::OptimizeCells)] = 2;
+        classes[kind_idx(TaskKind::ValidateStructure)] = 3;
+        classes[kind_idx(TaskKind::AssembleMofs)] = 4;
+        classes[kind_idx(TaskKind::ProcessLinkers)] = 5;
+        classes[kind_idx(TaskKind::GenerateLinkers)] = 6;
+        classes[kind_idx(TaskKind::Retrain)] = 7;
+        PriorityClasses { classes }
+    }
+}
+
+impl PriorityClasses {
+    /// Class assigned to a task kind.
+    pub fn class(&self, kind: TaskKind) -> u8 {
+        self.classes[kind_idx(kind)]
+    }
+
+    /// Builder-style override of one kind's class.
+    pub fn with_class(mut self, kind: TaskKind, class: u8) -> Self {
+        self.classes[kind_idx(kind)] = class;
+        self
+    }
+}
+
+/// Decorator: delegates all campaign decisions to the inner policy but
+/// reorders the scheduler's pending queues by task-kind priority class.
+pub struct PriorityPolicy<P> {
+    inner: P,
+    classes: PriorityClasses,
+}
+
+impl<P: Policy> PriorityPolicy<P> {
+    /// Wrap `inner` with the given class table.
+    pub fn new(inner: P, classes: PriorityClasses) -> Self {
+        PriorityPolicy { inner, classes }
+    }
+
+    /// Unwrap the inner policy (to recover e.g. the Thinker for reports).
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+}
+
+impl<P: Policy> Policy for PriorityPolicy<P> {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        self.inner.fill(free, now)
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        self.inner.handle(done)
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.inner.on_dispatch(kind, origin_t, now);
+    }
+
+    fn priority(&self, req: &TaskRequest) -> u8 {
+        self.classes.class(req.kind)
+    }
+}
+
+/// Decorator: weighted multi-tenant slot shares. The campaign is offered
+/// at most `total_slots(kind) · weight / weight_total` slots of each pool
+/// (minimum 1, so no tenant starves outright), counting everything it has
+/// in flight — so several concurrent campaigns with weights summing to
+/// `weight_total` split one notional cluster proportionally.
+///
+/// The quota clamps what `fill` is *offered*; follow-up chains already in
+/// flight (optimize → charges → adsorption) still complete, which can
+/// overshoot the quota transiently — admission then pauses until the
+/// campaign is back under its share.
+pub struct FairSharePolicy<P> {
+    inner: P,
+    /// per-worker-kind slot cap, indexed in [`WorkerKind::ALL`] order
+    quota: [usize; 5],
+    /// dispatched-but-not-completed tasks per worker kind
+    outstanding: [usize; 5],
+}
+
+impl<P: Policy> FairSharePolicy<P> {
+    /// Wrap `inner` with quotas `max(1, totals[k] · weight / weight_total)`
+    /// where `totals` are the cluster's slot counts in
+    /// [`WorkerKind::ALL`] order.
+    pub fn new(inner: P, totals: [usize; 5], weight: u32, weight_total: u32) -> Self {
+        assert!(weight >= 1, "fair-share weight must be >= 1");
+        assert!(
+            weight <= weight_total,
+            "fair-share weight {weight} exceeds weight_total {weight_total}"
+        );
+        let mut quota = [0usize; 5];
+        for (q, &t) in quota.iter_mut().zip(totals.iter()) {
+            *q = ((t * weight as usize) / weight_total as usize).max(1);
+        }
+        FairSharePolicy { inner, quota, outstanding: [0; 5] }
+    }
+
+    /// Unwrap the inner policy (to recover e.g. the Thinker for reports).
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    /// This tenant's slot cap for a worker kind.
+    pub fn quota(&self, kind: WorkerKind) -> usize {
+        self.quota[worker_idx(kind)]
+    }
+
+    /// Currently dispatched-but-not-completed tasks on a worker kind.
+    pub fn outstanding(&self, kind: WorkerKind) -> usize {
+        self.outstanding[worker_idx(kind)]
+    }
+}
+
+impl<P: Policy> Policy for FairSharePolicy<P> {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        let quota = self.quota;
+        let out = self.outstanding;
+        let clamped = move |k: WorkerKind| {
+            let i = worker_idx(k);
+            free(k).min(quota[i].saturating_sub(out[i]))
+        };
+        self.inner.fill(&clamped, now)
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        let i = worker_idx(done.kind.worker());
+        self.outstanding[i] = self.outstanding[i].saturating_sub(1);
+        self.inner.handle(done)
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.outstanding[worker_idx(kind.worker())] += 1;
+        self.inner.on_dispatch(kind, origin_t, now);
+    }
+
+    fn priority(&self, req: &TaskRequest) -> u8 {
+        self.inner.priority(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::taskserver::{Outcome, Payload};
+
+    /// Inner probe: records the free capacity it is offered per kind.
+    struct Probe {
+        seen: Vec<[usize; 5]>,
+    }
+
+    impl Policy for Probe {
+        fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, _now: f64) -> Vec<TaskRequest> {
+            let mut row = [0usize; 5];
+            for (i, k) in WorkerKind::ALL.iter().enumerate() {
+                row[i] = free(*k);
+            }
+            self.seen.push(row);
+            Vec::new()
+        }
+        fn handle(&mut self, _done: Completion) -> Vec<TaskRequest> {
+            Vec::new()
+        }
+    }
+
+    fn req(kind: TaskKind) -> TaskRequest {
+        TaskRequest {
+            kind,
+            payload: Payload::Process { linkers: Vec::new() },
+            origin_t: 0.0,
+        }
+    }
+
+    fn completion(kind: TaskKind) -> Completion {
+        Completion {
+            task_id: 0,
+            kind,
+            submitted_at: 0.0,
+            completed_at: 1.0,
+            origin_t: 0.0,
+            outcome: Outcome::Failed { kind, reason: "test".into() },
+        }
+    }
+
+    #[test]
+    fn default_classes_prefer_the_chain_tail() {
+        let c = PriorityClasses::default();
+        assert!(c.class(TaskKind::EstimateAdsorption) < c.class(TaskKind::ComputeCharges));
+        assert!(c.class(TaskKind::ComputeCharges) < c.class(TaskKind::OptimizeCells));
+        assert!(c.class(TaskKind::ValidateStructure) < c.class(TaskKind::AssembleMofs));
+        assert!(c.class(TaskKind::AssembleMofs) < c.class(TaskKind::GenerateLinkers));
+    }
+
+    #[test]
+    fn priority_policy_maps_request_kind_to_class() {
+        let classes = PriorityClasses::default().with_class(TaskKind::Retrain, 0);
+        let p = PriorityPolicy::new(Probe { seen: Vec::new() }, classes);
+        assert_eq!(p.priority(&req(TaskKind::Retrain)), 0);
+        assert_eq!(
+            p.priority(&req(TaskKind::GenerateLinkers)),
+            classes.class(TaskKind::GenerateLinkers)
+        );
+    }
+
+    #[test]
+    fn fair_share_clamps_offered_capacity() {
+        // half share of a 10-slot-per-kind cluster -> quota 5 per kind
+        let mut p = FairSharePolicy::new(Probe { seen: Vec::new() }, [10; 5], 1, 2);
+        assert_eq!(p.quota(WorkerKind::Cpu), 5);
+        p.fill(&|_| 10, 0.0);
+        assert_eq!(p.inner.seen[0], [5; 5], "fill must see the quota, not raw free");
+
+        // three Cpu dispatches outstanding -> Cpu offer shrinks to 2
+        for _ in 0..3 {
+            p.on_dispatch(TaskKind::AssembleMofs, 0.0, 0.0);
+        }
+        p.fill(&|_| 10, 1.0);
+        let row = p.inner.seen[1];
+        assert_eq!(row[worker_idx(WorkerKind::Cpu)], 2);
+        assert_eq!(row[worker_idx(WorkerKind::Validate)], 5);
+
+        // raw free below quota wins the min
+        p.fill(&|_| 1, 2.0);
+        assert_eq!(p.inner.seen[2], [1; 5]);
+
+        // completion restores headroom
+        p.handle(completion(TaskKind::AssembleMofs));
+        assert_eq!(p.outstanding(WorkerKind::Cpu), 2);
+        p.fill(&|_| 10, 3.0);
+        assert_eq!(p.inner.seen[3][worker_idx(WorkerKind::Cpu)], 3);
+    }
+
+    #[test]
+    fn fair_share_quota_never_zero() {
+        let p = FairSharePolicy::new(Probe { seen: Vec::new() }, [1, 1, 1, 1, 1], 1, 100);
+        for k in WorkerKind::ALL {
+            assert_eq!(p.quota(k), 1, "a tenant must never starve outright");
+        }
+    }
+}

@@ -15,12 +15,13 @@
 //! scheduling. That property makes campaigns deterministic and lets
 //! [`crate::sim::sweep`] run many of them concurrently on one pool.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use crate::sim::vtime::{EventHeap, VirtualTime};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
+use crate::workflow::queues::ScoredQueue;
 use crate::workflow::resources::{Cluster, WorkerKind};
 use crate::workflow::taskserver::{
     submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
@@ -30,7 +31,9 @@ use crate::workflow::thinker::TaskRequest;
 /// A completed task as delivered to [`Policy::handle`]: the substrate
 /// outcome plus the scheduling metadata the mechanics tracked for it.
 pub struct Completion {
+    /// scheduler-assigned task id (the deterministic event-heap tie-break)
     pub task_id: u64,
+    /// which of the seven MOFA task types completed
     pub kind: TaskKind,
     /// virtual time the task started executing
     pub submitted_at: f64,
@@ -38,15 +41,17 @@ pub struct Completion {
     pub completed_at: f64,
     /// virtual timestamp of the event that requested the task
     pub origin_t: f64,
+    /// the substrate result computed on the pool
     pub outcome: Outcome,
 }
 
 /// Campaign policy: decides *what* to run; the scheduler decides *when*.
 ///
 /// Contract: `fill` may return more requests than there are free slots —
-/// the scheduler dispatches what fits and queues the rest FIFO per worker
-/// kind. `handle` returns follow-up requests, which are always queued
-/// (they dispatch in the same event step, after the queue drain).
+/// the scheduler dispatches what fits and queues the rest per worker
+/// kind, ordered by [`Policy::priority`] (FIFO within a class). `handle`
+/// returns follow-up requests, which are always queued (they dispatch in
+/// the same event step, after the queue drain).
 pub trait Policy {
     /// Fill idle capacity at virtual time `now`. `free(kind)` is the
     /// number of open slots per worker pool at the time of the call.
@@ -58,6 +63,16 @@ pub trait Policy {
     /// Hook: a request was dispatched to a slot (latency attribution).
     #[allow(unused_variables)]
     fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {}
+
+    /// Priority class for a request that must wait in a pending queue
+    /// (lower = dispatched first; ties pop FIFO). The default — one class
+    /// for everything — reproduces plain FIFO overflow queues;
+    /// [`crate::sim::policy::PriorityPolicy`] overrides it to reorder
+    /// pending work by task class.
+    #[allow(unused_variables)]
+    fn priority(&self, req: &TaskRequest) -> u8 {
+        0
+    }
 }
 
 /// Scheduler parameters.
@@ -95,7 +110,9 @@ pub struct Scheduler {
     engines: Arc<Engines>,
     pool: Arc<ThreadPool>,
     params: SimParams,
-    pending: BTreeMap<WorkerKind, VecDeque<TaskRequest>>,
+    /// overflow queues per worker kind, ordered by `Policy::priority`
+    /// class then FIFO (a uniform class degenerates to plain FIFO)
+    pending: BTreeMap<WorkerKind, ScoredQueue<TaskRequest>>,
     flights: HashMap<u64, Flight>,
     heap: EventHeap,
     /// base stream; per-task duration streams derive from it by task id
@@ -107,6 +124,8 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Build an engine over a cluster's slot pools. Real compute runs on
+    /// `pool`; virtual durations and task seeds derive from `params.seed`.
     pub fn new(
         cluster: Cluster,
         engines: Arc<Engines>,
@@ -120,7 +139,7 @@ impl Scheduler {
         );
         let mut pending = BTreeMap::new();
         for k in WorkerKind::ALL {
-            pending.insert(k, VecDeque::new());
+            pending.insert(k, ScoredQueue::new());
         }
         Scheduler {
             cluster,
@@ -159,7 +178,8 @@ impl Scheduler {
             });
             for req in followups {
                 let w = req.kind.worker();
-                self.pending.get_mut(&w).unwrap().push_back(req);
+                let class = policy.priority(&req) as f64;
+                self.pending.get_mut(&w).unwrap().push(class, req);
             }
             self.sample_utilization(now);
             self.dispatch(policy, now);
@@ -172,14 +192,14 @@ impl Scheduler {
         }
     }
 
-    /// Dispatch at the current time: drain overflow FIFOs first (queued
-    /// follow-ups — e.g. charges → adsorption chains — beat new policy
-    /// fills), then offer remaining capacity to the policy while inside
-    /// the campaign horizon.
+    /// Dispatch at the current time: drain overflow queues first in
+    /// priority-class order (queued follow-ups — e.g. charges →
+    /// adsorption chains — beat new policy fills), then offer remaining
+    /// capacity to the policy while inside the campaign horizon.
     fn dispatch<P: Policy>(&mut self, policy: &mut P, now: f64) {
         for k in WorkerKind::ALL {
             while self.cluster.free_slots(k) > 0 {
-                let Some(req) = self.pending.get_mut(&k).unwrap().pop_front() else {
+                let Some((_, req)) = self.pending.get_mut(&k).unwrap().pop() else {
                     break;
                 };
                 self.submit_request(policy, req, now);
@@ -205,7 +225,8 @@ impl Scheduler {
                 if self.cluster.free_slots(w) > 0 {
                     self.submit_request(policy, req, now);
                 } else {
-                    self.pending.get_mut(&w).unwrap().push_back(req);
+                    let class = policy.priority(&req) as f64;
+                    self.pending.get_mut(&w).unwrap().push(class, req);
                 }
             }
         }
@@ -276,6 +297,7 @@ mod tests {
         submitted: usize,
         handled: usize,
         seed: Rng,
+        model: crate::genai::ModelSnapshot,
     }
 
     impl Policy for GenerateOnly {
@@ -284,7 +306,10 @@ mod tests {
             for _ in 0..free(WorkerKind::Generator) {
                 out.push(TaskRequest {
                     kind: TaskKind::GenerateLinkers,
-                    payload: Payload::Generate { seed: self.seed.next_u64() },
+                    payload: Payload::Generate {
+                        seed: self.seed.next_u64(),
+                        model: self.model.clone(),
+                    },
                     origin_t: now,
                 });
                 self.submitted += 1;
@@ -304,13 +329,15 @@ mod tests {
     fn generate_only_policy_runs_and_drains() {
         let cluster = Cluster::new(8);
         let slots = cluster.total_slots(WorkerKind::Generator);
+        let eng = engines();
+        let model = eng.generator.snapshot();
         let sched = Scheduler::new(
             cluster,
-            engines(),
+            eng,
             Arc::new(ThreadPool::new(2)),
             SimParams { seed: 3, horizon_s: 30.0, util_sample_dt: 10.0 },
         );
-        let mut policy = GenerateOnly { submitted: 0, handled: 0, seed: Rng::new(3) };
+        let mut policy = GenerateOnly { submitted: 0, handled: 0, seed: Rng::new(3), model };
         let out = sched.run(&mut policy);
         // the generator pool stays saturated inside the horizon
         assert!(policy.submitted >= slots);
@@ -327,13 +354,17 @@ mod tests {
         struct OrderCheck {
             last: f64,
             seed: Rng,
+            model: crate::genai::ModelSnapshot,
         }
         impl Policy for OrderCheck {
             fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
                 (0..free(WorkerKind::Generator))
                     .map(|_| TaskRequest {
                         kind: TaskKind::GenerateLinkers,
-                        payload: Payload::Generate { seed: self.seed.next_u64() },
+                        payload: Payload::Generate {
+                            seed: self.seed.next_u64(),
+                            model: self.model.clone(),
+                        },
                         origin_t: now,
                     })
                     .collect()
@@ -344,13 +375,91 @@ mod tests {
                 Vec::new()
             }
         }
+        let eng = engines();
+        let model = eng.generator.snapshot();
         let sched = Scheduler::new(
             Cluster::new(16),
-            engines(),
+            eng,
             Arc::new(ThreadPool::new(4)),
             SimParams { seed: 9, horizon_s: 20.0, util_sample_dt: 5.0 },
         );
-        let mut policy = OrderCheck { last: 0.0, seed: Rng::new(9) };
+        let mut policy = OrderCheck { last: 0.0, seed: Rng::new(9), model };
         sched.run(&mut policy);
+    }
+
+    /// The pending queues must honor `Policy::priority`: requests that
+    /// overflow free capacity dispatch class-first (FIFO within a class),
+    /// not in arrival order.
+    #[test]
+    fn pending_queue_dispatches_by_priority_class() {
+        struct Flood {
+            fired: bool,
+            dispatched: std::rc::Rc<std::cell::RefCell<Vec<TaskKind>>>,
+        }
+        impl Policy for Flood {
+            fn fill(&mut self, _free: &dyn Fn(WorkerKind) -> usize, _now: f64) -> Vec<TaskRequest> {
+                if self.fired {
+                    return Vec::new();
+                }
+                self.fired = true;
+                // 6 assemble then 6 process requests, all for the Cpu pool
+                let mut out = Vec::new();
+                for _ in 0..6 {
+                    out.push(TaskRequest {
+                        kind: TaskKind::AssembleMofs,
+                        payload: Payload::Assemble { linkers: Vec::new() },
+                        origin_t: 0.0,
+                    });
+                }
+                for _ in 0..6 {
+                    out.push(TaskRequest {
+                        kind: TaskKind::ProcessLinkers,
+                        payload: Payload::Process { linkers: Vec::new() },
+                        origin_t: 0.0,
+                    });
+                }
+                out
+            }
+            fn handle(&mut self, _done: Completion) -> Vec<TaskRequest> {
+                Vec::new()
+            }
+            fn on_dispatch(&mut self, kind: TaskKind, _origin_t: f64, _now: f64) {
+                self.dispatched.borrow_mut().push(kind);
+            }
+            fn priority(&self, req: &TaskRequest) -> u8 {
+                // process beats assemble once both sit in the queue
+                match req.kind {
+                    TaskKind::ProcessLinkers => 0,
+                    _ => 1,
+                }
+            }
+        }
+        // a cluster shape with exactly 4 Cpu slots so 8 requests queue
+        let mut cluster = Cluster::new(8);
+        while cluster.free_slots(WorkerKind::Cpu) > 4 {
+            assert!(cluster.acquire(WorkerKind::Cpu, 0.0));
+        }
+        let dispatched = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let sched = Scheduler::new(
+            cluster,
+            engines(),
+            Arc::new(ThreadPool::new(2)),
+            // horizon below the shortest completion: fill runs once at t=0
+            SimParams { seed: 5, horizon_s: 1e-6, util_sample_dt: 10.0 },
+        );
+        let mut policy = Flood { fired: false, dispatched: std::rc::Rc::clone(&dispatched) };
+        sched.run(&mut policy);
+        let order = dispatched.borrow();
+        // pre-acquired slots are never released, so exactly 4 dispatch at
+        // t=0 in arrival order (assemble first) and 8 queue...
+        assert_eq!(order.len(), 12, "all requests must eventually dispatch");
+        assert!(order[..4].iter().all(|k| *k == TaskKind::AssembleMofs));
+        // ...then the queue drains class-first: all 6 process before the
+        // 2 remaining assemble
+        assert!(
+            order[4..10].iter().all(|k| *k == TaskKind::ProcessLinkers),
+            "priority class 0 must drain before class 1: {order:?}"
+        );
+        assert!(order[10..].iter().all(|k| *k == TaskKind::AssembleMofs));
     }
 }

@@ -1,0 +1,338 @@
+//! Campaign **service**: a long-lived server that owns one shared
+//! compute pool and executes many campaign requests concurrently behind
+//! a submission queue.
+//!
+//! [`crate::sim::sweep`] is one-shot: you hand it a batch, it spawns a
+//! driver per campaign and returns when all finish. The service inverts
+//! that for online serving (the "many concurrent discovery requests"
+//! regime of the agentic follow-up work): requests arrive over time via
+//! [`CampaignService::submit`], each returns a [`Ticket`] immediately,
+//! and a dispatcher thread admits queued requests under a **driver-side
+//! semaphore** — hundreds of queued requests never spawn hundreds of
+//! driver threads; at most `max_in_flight` campaigns run at once while
+//! the rest wait in the queue.
+//!
+//! Each request picks its scheduling policy via [`PolicyKind`]: the
+//! plain Thinker ([`MofaPolicy`]), a priority-class wrapper
+//! ([`crate::sim::policy::PriorityPolicy`]), or a weighted multi-tenant
+//! share ([`crate::sim::policy::FairSharePolicy`]). Campaigns remain
+//! deterministic per request — virtual-time event order plus
+//! submit-time weight snapshots make the result a pure function of the
+//! request, independent of queue wait and pool contention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::sim::policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
+use crate::sim::scheduler::{Scheduler, SimParams};
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::mofa::{assemble_report, CampaignConfig, CampaignReport, MofaPolicy};
+use crate::workflow::resources::Cluster;
+use crate::workflow::taskserver::Engines;
+use crate::workflow::thinker::Thinker;
+
+/// Scheduling policy a campaign request runs under.
+#[derive(Clone, Copy, Debug)]
+pub enum PolicyKind {
+    /// the paper's Thinker policy, FIFO pending queues
+    Mofa,
+    /// Thinker decisions with class-ordered pending queues
+    Priority(PriorityClasses),
+    /// Thinker decisions under a weighted multi-tenant slot share
+    FairShare {
+        /// this tenant's weight (≥ 1)
+        weight: u32,
+        /// sum of weights across the tenants sharing the cluster
+        weight_total: u32,
+    },
+}
+
+impl PolicyKind {
+    /// Short label for reports and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Mofa => "mofa",
+            PolicyKind::Priority(_) => "priority",
+            PolicyKind::FairShare { .. } => "fair-share",
+        }
+    }
+}
+
+/// One campaign request: config + dedicated engine stack + policy.
+///
+/// Engines must **not** be shared between requests — online retraining
+/// installs new generator weights, so a shared generator would couple
+/// campaigns (same rule as [`crate::sim::sweep::SweepItem`]).
+pub struct CampaignRequest {
+    /// campaign configuration (`config.threads` is ignored; the service
+    /// pool is shared)
+    pub config: CampaignConfig,
+    /// engine stack owned by this request
+    pub engines: Arc<Engines>,
+    /// scheduling policy for this request
+    pub policy: PolicyKind,
+}
+
+/// Handle to a submitted request's eventual report.
+pub struct Ticket {
+    rx: mpsc::Receiver<CampaignReport>,
+}
+
+impl Ticket {
+    /// Block until the campaign completes and return its report.
+    pub fn wait(self) -> CampaignReport {
+        self.rx.recv().expect("campaign driver dropped before reporting")
+    }
+
+    /// Non-blocking poll: `Some(report)` once the campaign finished.
+    pub fn try_wait(&self) -> Option<CampaignReport> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Counting semaphore bounding concurrent campaign drivers.
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut n = self.permits.lock().unwrap();
+        while *n == 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n -= 1;
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Service counters (all monotonic except `in_flight`).
+#[derive(Default)]
+struct ServiceStats {
+    submitted: AtomicUsize,
+    completed: AtomicUsize,
+    in_flight: AtomicUsize,
+    peak_in_flight: AtomicUsize,
+}
+
+/// RAII permit: settles the service counters and releases the semaphore
+/// exactly once per admitted campaign — **including when the driver
+/// panics** (unwinding drops the guard), so a failed campaign can never
+/// wedge the admission gate or leak an in-flight count.
+struct PermitGuard {
+    sem: Arc<Semaphore>,
+    stats: Arc<ServiceStats>,
+}
+
+impl Drop for PermitGuard {
+    fn drop(&mut self) {
+        self.stats.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.stats.completed.fetch_add(1, Ordering::SeqCst);
+        self.sem.release();
+    }
+}
+
+type Submission = (CampaignRequest, mpsc::Sender<CampaignReport>);
+
+/// The long-lived campaign server. See the module docs for the model.
+///
+/// Dropping the service closes the submission queue, waits for queued
+/// and in-flight campaigns to finish, and joins the dispatcher.
+pub struct CampaignService {
+    tx: Option<mpsc::Sender<Submission>>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl CampaignService {
+    /// Start a service over a shared pool, admitting at most
+    /// `max_in_flight` concurrent campaigns (≥ 1).
+    pub fn new(pool: Arc<ThreadPool>, max_in_flight: usize) -> Self {
+        assert!(max_in_flight >= 1, "max_in_flight must be >= 1");
+        let (tx, rx) = mpsc::channel::<Submission>();
+        let stats = Arc::new(ServiceStats::default());
+        let sem = Arc::new(Semaphore::new(max_in_flight));
+        let st = Arc::clone(&stats);
+        let dispatcher = thread::spawn(move || {
+            let mut drivers: Vec<thread::JoinHandle<()>> = Vec::new();
+            while let Ok((req, done_tx)) = rx.recv() {
+                // the semaphore is the admission gate: this blocks until a
+                // permit frees, so queue depth never becomes thread count
+                sem.acquire();
+                let n = st.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                st.peak_in_flight.fetch_max(n, Ordering::SeqCst);
+                // reap drivers that already finished
+                let (done, live): (Vec<_>, Vec<_>) =
+                    drivers.drain(..).partition(|h| h.is_finished());
+                for h in done {
+                    let _ = h.join();
+                }
+                drivers = live;
+                let guard = PermitGuard { sem: Arc::clone(&sem), stats: Arc::clone(&st) };
+                let pool2 = Arc::clone(&pool);
+                drivers.push(thread::spawn(move || {
+                    let report = run_campaign_request(req, &pool2);
+                    // settle the counters and free the permit BEFORE the
+                    // report is observable: once Ticket::wait returns,
+                    // completed()/in_flight() reflect this campaign
+                    drop(guard);
+                    let _ = done_tx.send(report); // ticket may be dropped
+                }));
+            }
+            for h in drivers {
+                let _ = h.join();
+            }
+        });
+        CampaignService { tx: Some(tx), dispatcher: Some(dispatcher), stats }
+    }
+
+    /// Enqueue a request; returns immediately with a [`Ticket`].
+    pub fn submit(&self, req: CampaignRequest) -> Ticket {
+        let (done_tx, done_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service already shut down")
+            .send((req, done_tx))
+            .expect("dispatcher thread gone");
+        self.stats.submitted.fetch_add(1, Ordering::SeqCst);
+        Ticket { rx: done_rx }
+    }
+
+    /// Requests accepted so far.
+    pub fn submitted(&self) -> usize {
+        self.stats.submitted.load(Ordering::SeqCst)
+    }
+
+    /// Campaigns settled so far (report delivered, or driver failed).
+    pub fn completed(&self) -> usize {
+        self.stats.completed.load(Ordering::SeqCst)
+    }
+
+    /// Campaigns currently running.
+    pub fn in_flight(&self) -> usize {
+        self.stats.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of concurrent campaigns (≤ `max_in_flight` by
+    /// construction — the semaphore is acquired before the counter).
+    pub fn peak_in_flight(&self) -> usize {
+        self.stats.peak_in_flight.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for CampaignService {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; dispatcher drains and exits
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one request synchronously on a caller-supplied pool: build the
+/// [`MofaPolicy`], wrap it per the request's [`PolicyKind`], run the
+/// scheduler to quiescence and assemble the report. The service calls
+/// this from its drivers; benches call it directly for per-policy
+/// cross-checks.
+pub fn run_campaign_request(req: CampaignRequest, pool: &Arc<ThreadPool>) -> CampaignReport {
+    let t_wall = std::time::Instant::now();
+    let CampaignRequest { config, engines, policy } = req;
+    let cluster = Cluster::new(config.nodes);
+    let layout = cluster.layout();
+    let base = MofaPolicy::new(
+        Thinker::new(config.policy, layout.validate_slots),
+        Arc::clone(&engines),
+        config.seed,
+    );
+    let sched = Scheduler::new(
+        cluster,
+        engines,
+        Arc::clone(pool),
+        SimParams {
+            seed: config.seed,
+            horizon_s: config.duration_s,
+            util_sample_dt: config.util_sample_dt,
+        },
+    );
+    let (thinker, sim) = match policy {
+        PolicyKind::Mofa => {
+            let mut p = base;
+            let sim = sched.run(&mut p);
+            (p.into_thinker(), sim)
+        }
+        PolicyKind::Priority(classes) => {
+            let mut p = PriorityPolicy::new(base, classes);
+            let sim = sched.run(&mut p);
+            (p.into_inner().into_thinker(), sim)
+        }
+        PolicyKind::FairShare { weight, weight_total } => {
+            let totals = [
+                layout.generator_slots,
+                layout.validate_slots,
+                layout.cpu_slots,
+                layout.optimize_slots,
+                layout.trainer_slots,
+            ];
+            let mut p = FairSharePolicy::new(base, totals, weight, weight_total);
+            let sim = sched.run(&mut p);
+            (p.into_inner().into_thinker(), sim)
+        }
+    };
+    assemble_report(config, thinker, sim, t_wall.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(3));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..12)
+            .map(|_| {
+                let (sem, live, peak) = (Arc::clone(&sem), Arc::clone(&live), Arc::clone(&peak));
+                thread::spawn(move || {
+                    sem.acquire();
+                    let n = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(n, Ordering::SeqCst);
+                    thread::sleep(std::time::Duration::from_millis(5));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    sem.release();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 3, "semaphore leaked permits");
+        assert!(peak.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn policy_kind_labels() {
+        assert_eq!(PolicyKind::Mofa.label(), "mofa");
+        assert_eq!(PolicyKind::Priority(PriorityClasses::default()).label(), "priority");
+        assert_eq!(PolicyKind::FairShare { weight: 1, weight_total: 2 }.label(), "fair-share");
+    }
+
+    #[test]
+    fn empty_service_shuts_down_cleanly() {
+        let svc = CampaignService::new(Arc::new(ThreadPool::new(2)), 2);
+        assert_eq!(svc.submitted(), 0);
+        assert_eq!(svc.in_flight(), 0);
+        drop(svc); // must not hang
+    }
+}

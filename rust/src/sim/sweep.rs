@@ -11,15 +11,15 @@
 //!
 //! Determinism: virtual-time event order is independent of wallclock
 //! thread scheduling, and every task's real computation is a pure
-//! function of its payload + derived seed — so as long as no engine
-//! state mutates mid-run, a concurrent sweep is bit-identical to
-//! running the same campaigns sequentially (`tests/sim_sweep.rs` locks
-//! this in with retraining off, the Fig. 5 configuration). With online
-//! retraining ON, the generator reads its weights at *execution*
-//! (wallclock) time while `set_params` lands at the retrain's *virtual*
-//! completion, so which model version an in-flight generate task sees
-//! can depend on pool contention — a race inherited from the seed
-//! design; the submit-time weight-snapshot fix is a ROADMAP open item.
+//! function of its payload + derived seed — so a concurrent sweep is
+//! bit-identical to running the same campaigns sequentially. This holds
+//! **with online retraining on**: generate payloads carry a
+//! [`crate::genai::ModelSnapshot`] captured at submit (virtual) time, so
+//! which model version a task uses is fixed by virtual-time order, never
+//! by pool contention. (The seed design read mutable generator weights
+//! at execution time — a wallclock race `tests/sim_sweep.rs` now proves
+//! closed in both the retraining-off Fig. 5 configuration and the
+//! retraining-on one.)
 
 use std::sync::Arc;
 
@@ -33,7 +33,9 @@ use crate::workflow::taskserver::Engines;
 /// installs new generator weights, so a shared generator would couple
 /// campaigns and break per-campaign determinism.
 pub struct SweepItem {
+    /// campaign configuration (`config.threads` is ignored in a sweep)
     pub config: CampaignConfig,
+    /// engine stack owned by this campaign
     pub engines: Arc<Engines>,
 }
 

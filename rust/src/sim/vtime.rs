@@ -85,6 +85,7 @@ pub struct EventHeap {
 }
 
 impl EventHeap {
+    /// An empty heap.
     pub fn new() -> EventHeap {
         EventHeap { heap: BinaryHeap::new() }
     }
@@ -104,10 +105,12 @@ impl EventHeap {
         self.heap.peek().map(|std::cmp::Reverse((t, _))| *t)
     }
 
+    /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when no events are scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -99,11 +99,17 @@ impl Policy for MofaPolicy {
         // these never consume generator slots
         let mut reqs = self.thinker.fill(free, now);
         // continuous generation (policy: "linkers are continuously
-        // generated and processed")
+        // generated and processed"); the weight snapshot is captured HERE,
+        // at submit (virtual) time — retrain installs land between events
+        // on this same driver thread, so the model a task sees is fixed by
+        // virtual-time order, not by pool contention
         for _ in 0..free(WorkerKind::Generator) {
             reqs.push(TaskRequest {
                 kind: TaskKind::GenerateLinkers,
-                payload: Payload::Generate { seed: self.gen_rng.next_u64() },
+                payload: Payload::Generate {
+                    seed: self.gen_rng.next_u64(),
+                    model: self.engines.generator.snapshot(),
+                },
                 origin_t: now,
             });
         }
@@ -187,8 +193,18 @@ pub fn run_campaign_on(
         },
     );
     let sim = sched.run(&mut policy);
-    let thinker = policy.into_thinker();
+    assemble_report(config, policy.into_thinker(), sim, t_wall.elapsed().as_secs_f64())
+}
 
+/// Assemble the paper-style report from a drained scheduler run. Shared
+/// by [`run_campaign_on`] and [`crate::sim::service`] (which wraps the
+/// [`MofaPolicy`] in per-request scheduling decorators before running).
+pub fn assemble_report(
+    config: CampaignConfig,
+    thinker: Thinker,
+    sim: crate::sim::scheduler::SimOutcome,
+    wallclock_s: f64,
+) -> CampaignReport {
     // Utilization over the campaign window [0, duration]: busy time from
     // task records clipped to the window (the drain tail after `duration`
     // would otherwise dilute Fig. 3/4 numbers).
@@ -216,7 +232,7 @@ pub fn run_campaign_on(
         utilization_avg,
         util_series: sim.util_series,
         tasks_done,
-        wallclock_s: t_wall.elapsed().as_secs_f64(),
+        wallclock_s,
         final_vtime: sim.final_vtime,
     }
 }

@@ -171,6 +171,50 @@ mod tests {
         assert_eq!(last, 10_000 - 64);
     }
 
+    /// Property: under random interleaved push/pop sequences the
+    /// VecDeque-backed LIFO behaves exactly like a reference model — pops
+    /// return newest-first, the capacity bound always holds, evictions
+    /// drop the *oldest* surviving entry, and the dropped counter matches.
+    #[test]
+    fn property_lifo_matches_reference_model() {
+        crate::util::proptest::check("lifo-reference-model", |rng, _| {
+            let cap = rng.below(8) + 1;
+            let mut q = LifoQueue::new(cap);
+            let mut model: Vec<u64> = Vec::new(); // oldest..newest
+            let mut dropped = 0usize;
+            let mut next = 0u64;
+            for _ in 0..rng.below(200) + 1 {
+                if rng.chance(0.6) {
+                    if model.len() == cap {
+                        model.remove(0); // evict oldest from the bottom
+                        dropped += 1;
+                    }
+                    model.push(next);
+                    q.push(next);
+                    next += 1;
+                } else {
+                    let want = model.pop(); // newest first
+                    let got = q.pop();
+                    crate::prop_assert!(got == want, "pop {got:?} != model {want:?}");
+                }
+                crate::prop_assert!(q.len() == model.len(), "len {} != {}", q.len(), model.len());
+                crate::prop_assert!(q.len() <= cap, "capacity bound broken: {} > {cap}", q.len());
+                crate::prop_assert!(
+                    q.dropped() == dropped,
+                    "dropped {} != model {dropped}",
+                    q.dropped()
+                );
+            }
+            // full drain agrees element-for-element
+            while let Some(want) = model.pop() {
+                let got = q.pop().ok_or("queue drained early")?;
+                crate::prop_assert!(got == want, "drain {got} != {want}");
+            }
+            crate::prop_assert!(q.pop().is_none() && q.is_empty(), "queue not empty after drain");
+            Ok(())
+        });
+    }
+
     #[test]
     fn scored_pops_most_stable_first() {
         let mut q = ScoredQueue::new();

@@ -12,7 +12,7 @@ use crate::assembly::{assemble_default, AssembledMof};
 use crate::charges::{assign_charges, QeqSettings};
 use crate::dftopt::{optimize_cell, OptResult, OptSettings};
 use crate::gcmc::{run_gcmc, GcmcResult, GcmcSettings};
-use crate::genai::{GenLinker, LinkerGenerator, LinkerTrainer, TrainExample};
+use crate::genai::{GenLinker, LinkerGenerator, LinkerTrainer, ModelSnapshot, TrainExample};
 use crate::linkerproc::{process_batch, ProcessedLinker, RejectReason};
 use crate::md::{run_npt, MdResult, MdSettings};
 use crate::util::rng::Rng;
@@ -84,8 +84,13 @@ impl TaskKind {
 }
 
 /// Work request payloads.
+///
+/// `Generate` carries a [`ModelSnapshot`] captured at submit (virtual)
+/// time: pool-thread execution must be a pure function of the payload,
+/// never of mutable engine state (see the determinism model in
+/// docs/ARCHITECTURE.md).
 pub enum Payload {
-    Generate { seed: u64 },
+    Generate { seed: u64, model: ModelSnapshot },
     Process { linkers: Vec<GenLinker> },
     Assemble { linkers: Vec<ProcessedLinker> },
     Validate { mof: Box<AssembledMof>, record_id: u64 },
@@ -155,13 +160,17 @@ impl Engines {
 /// Execute a task's real computation (called on a pool worker thread).
 pub fn execute(payload: Payload, engines: &Engines, seed: u64) -> Outcome {
     match payload {
-        Payload::Generate { seed } => match engines.generator.generate(seed) {
-            Ok(linkers) => Outcome::Generated {
-                linkers,
-                model_version: engines.generator.version(),
-            },
-            Err(e) => Outcome::Failed { kind: TaskKind::GenerateLinkers, reason: e.to_string() },
-        },
+        Payload::Generate { seed, model } => {
+            // executes from the submit-time snapshot, never from the
+            // generator's current (mutable) weights — a concurrent retrain
+            // install cannot change what this task produces
+            match engines.generator.generate_with(&model, seed) {
+                Ok(linkers) => Outcome::Generated { linkers, model_version: model.version },
+                Err(e) => {
+                    Outcome::Failed { kind: TaskKind::GenerateLinkers, reason: e.to_string() }
+                }
+            }
+        }
         Payload::Process { linkers } => {
             let input_count = linkers.len();
             let (ok, rejects) = process_batch(&linkers);
@@ -321,7 +330,11 @@ mod tests {
     #[test]
     fn generate_then_process_pipeline() {
         let eng = engines();
-        let out = execute(Payload::Generate { seed: 3 }, &eng, 3);
+        let out = execute(
+            Payload::Generate { seed: 3, model: eng.generator.snapshot() },
+            &eng,
+            3,
+        );
         let linkers = match out {
             Outcome::Generated { linkers, .. } => linkers,
             _ => panic!("wrong outcome"),
@@ -337,13 +350,31 @@ mod tests {
     }
 
     #[test]
+    fn generate_executes_from_submit_time_snapshot() {
+        let eng = engines();
+        let payload = Payload::Generate { seed: 5, model: eng.generator.snapshot() };
+        // a retrain install lands between submit and pool execution; the
+        // task must still see the weights it was submitted with
+        eng.generator.set_params(vec![], 4);
+        match execute(payload, &eng, 5) {
+            Outcome::Generated { linkers, model_version } => {
+                assert_eq!(model_version, 0, "execution read post-install version");
+                assert!(linkers.iter().all(|l| l.model_version == 0));
+            }
+            _ => panic!("wrong outcome"),
+        }
+        // a snapshot taken *after* the install sees the new version
+        assert_eq!(eng.generator.snapshot().version, 4);
+    }
+
+    #[test]
     fn submit_runs_on_pool() {
         let pool = ThreadPool::new(2);
         let eng = engines();
         let inf = submit(
             &pool,
             &eng,
-            Payload::Generate { seed: 9 },
+            Payload::Generate { seed: 9, model: eng.generator.snapshot() },
             1,
             TaskKind::GenerateLinkers,
             0.0,

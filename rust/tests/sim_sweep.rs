@@ -2,15 +2,18 @@
 //! results. Campaigns are deterministic in virtual time (event order is
 //! `(completion time, task id)`, never wallclock), so running a node
 //! sweep concurrently on one shared pool must reproduce the same
-//! campaigns run sequentially, bit for bit.
+//! campaigns run sequentially, bit for bit — including with online
+//! retraining ON, because generate tasks execute from the weight
+//! snapshot captured at submit (virtual) time rather than reading
+//! mutable generator state under pool contention.
 
 use std::sync::Arc;
 
 use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
-use mofa::workflow::mofa::{run_campaign, CampaignConfig};
-use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::mofa::{run_campaign, CampaignConfig, CampaignReport};
+use mofa::workflow::taskserver::{Engines, TaskKind};
 use mofa::workflow::thinker::PolicyConfig;
 
 fn config(nodes: usize) -> CampaignConfig {
@@ -18,14 +21,47 @@ fn config(nodes: usize) -> CampaignConfig {
         nodes,
         duration_s: 900.0,
         seed: 4242,
-        // retraining off (the Fig. 5 configuration): bit-identity requires
-        // engine state frozen for the run — with retraining on, which model
-        // version an in-flight generate task observes depends on pool
-        // contention (see sim::sweep module docs)
+        // retraining off: the Fig. 5 configuration
         policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
         threads: 0,
         util_sample_dt: 120.0,
     }
+}
+
+/// Assert two reports carry the bit-identical campaign: full per-task
+/// trace, database JSON, and model-version history — not just aggregates.
+fn assert_bit_identical(con: &CampaignReport, seq: &CampaignReport, nodes: usize) {
+    assert_eq!(
+        con.thinker.linkers_generated, seq.thinker.linkers_generated,
+        "{nodes} nodes: linkers_generated diverged"
+    );
+    assert_eq!(con.thinker.db.len(), seq.thinker.db.len(), "{nodes} nodes: db size diverged");
+    assert_eq!(
+        con.thinker.db.stable_count(0.10),
+        seq.thinker.db.stable_count(0.10),
+        "{nodes} nodes: stable count diverged"
+    );
+    assert_eq!(
+        con.thinker.model_version, seq.thinker.model_version,
+        "{nodes} nodes: model version diverged"
+    );
+    assert_eq!(con.final_vtime, seq.final_vtime, "{nodes} nodes: final virtual time diverged");
+    assert_eq!(
+        con.thinker.metrics.tasks.len(),
+        seq.thinker.metrics.tasks.len(),
+        "{nodes} nodes: task trace length diverged"
+    );
+    for (a, b) in con.thinker.metrics.tasks.iter().zip(&seq.thinker.metrics.tasks) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+        assert_eq!(a.completed_at.to_bits(), b.completed_at.to_bits());
+        assert_eq!(a.items_out, b.items_out);
+    }
+    assert_eq!(
+        con.thinker.db.to_json().to_string(),
+        seq.thinker.db.to_json().to_string(),
+        "{nodes} nodes: db JSON diverged"
+    );
 }
 
 #[test]
@@ -46,43 +82,63 @@ fn concurrent_sweep_matches_sequential_runs() {
     // sequential: same configs, fresh engines, one at a time
     for (i, &nodes) in node_counts.iter().enumerate() {
         let seq = run_campaign(config(nodes), build_engines(ModelMode::Surrogate, true).unwrap());
-        let con = &concurrent[i];
-        assert_eq!(
-            con.thinker.linkers_generated, seq.thinker.linkers_generated,
-            "{nodes} nodes: linkers_generated diverged"
-        );
-        assert_eq!(
-            con.thinker.db.len(),
-            seq.thinker.db.len(),
-            "{nodes} nodes: db size diverged"
-        );
-        assert_eq!(
-            con.thinker.db.stable_count(0.10),
-            seq.thinker.db.stable_count(0.10),
-            "{nodes} nodes: stable count diverged"
-        );
-        assert_eq!(
-            con.final_vtime, seq.final_vtime,
-            "{nodes} nodes: final virtual time diverged"
-        );
-        // full per-task trace identical, not just the aggregates
-        assert_eq!(
-            con.thinker.metrics.tasks.len(),
-            seq.thinker.metrics.tasks.len(),
-            "{nodes} nodes: task trace length diverged"
-        );
-        for (a, b) in con.thinker.metrics.tasks.iter().zip(&seq.thinker.metrics.tasks) {
-            assert_eq!(a.kind, b.kind);
-            assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
-            assert_eq!(a.completed_at.to_bits(), b.completed_at.to_bits());
-            assert_eq!(a.items_out, b.items_out);
-        }
-        // and the exported database serializes byte-identically
-        assert_eq!(
-            con.thinker.db.to_json().to_string(),
-            seq.thinker.db.to_json().to_string(),
-            "{nodes} nodes: db JSON diverged"
-        );
+        assert_bit_identical(&concurrent[i], &seq, nodes);
+    }
+}
+
+/// The retraining-on configuration: a warmed generator so the trainable
+/// pool fills fast, and a low retrain threshold so several retrains fire
+/// inside the window.
+fn retrain_config(nodes: usize) -> CampaignConfig {
+    CampaignConfig {
+        nodes,
+        duration_s: 1200.0,
+        seed: 7171,
+        policy: PolicyConfig {
+            retrain_enabled: true,
+            retrain_min: 8,
+            adsorption_switch: 16,
+            ..Default::default()
+        },
+        threads: 0,
+        util_sample_dt: 300.0,
+    }
+}
+
+fn warmed_engines() -> Arc<Engines> {
+    let engines = build_engines(ModelMode::Surrogate, true).unwrap();
+    // high model quality -> high linker survival -> the trainable pool
+    // crosses retrain_min within the first validate waves
+    engines.generator.set_params(vec![], 6);
+    engines
+}
+
+/// The headline determinism claim with the feedback loop CLOSED: online
+/// retraining installs new generator weights mid-campaign, yet the
+/// concurrent sweep still replays bit-identically because every generate
+/// task executes from its submit-time `ModelSnapshot`. Under the seed
+/// design (weights read at pool-execution time) this test races.
+#[test]
+fn concurrent_sweep_bit_identical_with_retraining_on() {
+    let node_counts = [8usize, 16];
+
+    let pool = Arc::new(ThreadPool::default_pool());
+    let items: Vec<SweepItem> = node_counts
+        .iter()
+        .map(|&n| SweepItem { config: retrain_config(n), engines: warmed_engines() })
+        .collect();
+    let concurrent = run_sweep(items, &pool);
+
+    // the test must actually exercise the snapshot path: at least one
+    // campaign has to install retrained weights mid-run
+    assert!(
+        concurrent.iter().any(|r| r.thinker.model_version >= 1),
+        "no retrain fired in any campaign — the retraining path was not exercised"
+    );
+
+    for (i, &nodes) in node_counts.iter().enumerate() {
+        let seq = run_campaign(retrain_config(nodes), warmed_engines());
+        assert_bit_identical(&concurrent[i], &seq, nodes);
     }
 }
 
