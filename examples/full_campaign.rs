@@ -14,21 +14,32 @@
 //! capacity + hMOF rank, and writes results to full_campaign_report.json
 //! (an object for a single campaign, an array for a sweep).
 //!
-//! With `--service N` the campaigns are instead *served*: submitted as
-//! requests to a long-lived `sim::service::CampaignService` whose
-//! driver-side semaphore admits at most `N` concurrent campaigns
-//! (default 2), with scheduling policies assigned round-robin
-//! (mofa → priority → fair-share) to exercise all three `PolicyKind`s.
+//! With `--service N` the campaigns are instead *served*: submitted
+//! through the admission-controlled front door of a long-lived
+//! `sim::service::CampaignService` whose driver-side semaphore admits at
+//! most `N` concurrent campaigns (default 2), with scheduling policies
+//! assigned round-robin (mofa → priority → fair-share) to exercise all
+//! three `PolicyKind`s.
+//!
+//! With `--service-load OFFERED,BOUND,SHED` the example runs an
+//! **overload demo** instead: OFFERED short surrogate campaigns are
+//! burst-submitted against a queue bounded at BOUND under shed policy
+//! SHED (`reject-newest` | `drop-lowest` | `deadline-first`), and the
+//! final `ServiceStats` table (per-tenant admitted/shed/rejected/
+//! cancelled, goodput, p50/p99 turnaround) is printed. Example:
+//!
+//!     cargo run --release --example full_campaign -- --service-load 12,4,deadline-first
 
 use std::sync::Arc;
 
 use mofa::hmof::HmofReference;
+use mofa::sim::admission::ShedPolicy;
 use mofa::sim::policy::PriorityClasses;
-use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind};
+use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind, ServiceConfig};
 use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
-use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::launch::{build_engines, build_quick_surrogate_engines, ModelMode};
 use mofa::workflow::mofa::{CampaignConfig, CampaignReport};
 use mofa::workflow::resources::WorkerKind;
 use mofa::workflow::taskserver::TaskKind;
@@ -127,8 +138,115 @@ fn print_report(report: &CampaignReport, hours: f64, href: &HmofReference) {
     println!("wallclock: {:.1} s", report.wallclock_s);
 }
 
+/// `--service-load OFFERED,BOUND,SHED`: burst OFFERED short campaigns at
+/// an admission queue bounded at BOUND under the given shed policy, then
+/// print the `ServiceStats` table. One request is also cancelled mid-queue
+/// to exercise the ticket path.
+fn service_load_demo(spec: &str) -> anyhow::Result<()> {
+    let parts: Vec<&str> = spec.split(',').collect();
+    let [offered, bound, shed] = parts[..] else {
+        anyhow::bail!("--service-load expects OFFERED,BOUND,SHED (e.g. 12,4,deadline-first)");
+    };
+    let offered: usize = offered.trim().parse().map_err(|_| {
+        anyhow::anyhow!("--service-load: bad offered count {offered:?}")
+    })?;
+    let bound: usize = bound.trim().parse().map_err(|_| {
+        anyhow::anyhow!("--service-load: bad queue bound {bound:?}")
+    })?;
+    let shed = ShedPolicy::from_label(shed.trim()).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--service-load: unknown shed policy {shed:?} \
+             (reject-newest | drop-lowest | deadline-first)"
+        )
+    })?;
+
+    const DUR_S: f64 = 120.0;
+    let tenants = ["argonne", "campus", "edge"];
+    println!("== service overload demo ==");
+    println!(
+        "offered {offered} campaigns ({DUR_S:.0} s virtual each), queue bound {bound}, \
+         shed policy {}, max 2 in flight, per-tenant quota 4",
+        shed.label()
+    );
+
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(
+        Arc::clone(&pool),
+        ServiceConfig::new(2).queue_bound(bound).shed(shed).tenant_quota(4),
+    );
+    let mut tickets = Vec::new();
+    for i in 0..offered {
+        let config = CampaignConfig {
+            nodes: 8,
+            duration_s: DUR_S,
+            seed: 500 + i as u64,
+            policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
+            threads: 0,
+            util_sample_dt: 30.0,
+        };
+        let mut req = CampaignRequest::new(config)
+            .tenant(tenants[i % tenants.len()])
+            .class((i % 3) as u8);
+        if i % 2 == 0 {
+            req = req.deadline(2.0 * DUR_S); // tight: ~2 campaigns of headroom
+        }
+        match svc.try_submit(req, build_quick_surrogate_engines()) {
+            Ok(t) => {
+                println!("  request {i:>2} ({:>7}): admitted", tenants[i % tenants.len()]);
+                tickets.push(t);
+            }
+            Err(reason) => {
+                let tenant = tenants[i % tenants.len()];
+                println!("  request {i:>2} ({tenant:>7}): rejected — {reason}");
+            }
+        }
+    }
+    // exercise cancellation: unqueue the most recently admitted request
+    // still waiting, if any
+    if let Some(t) = tickets.last() {
+        println!("  cancelling the last admitted request -> {:?}", t.cancel());
+    }
+    for t in tickets {
+        let _ = t.wait();
+    }
+
+    let s = svc.stats();
+    println!("\n-- ServiceStats --");
+    println!(
+        "queue depth {} (peak {}), submitted {}, admitted {}, rejected {}, shed {}, \
+         cancelled {}, completed {}",
+        s.queue_depth, s.peak_queue_depth, s.submitted, s.admitted, s.rejected, s.shed,
+        s.cancelled, s.completed
+    );
+    println!(
+        "goodput {:.1}%  turnaround p50 {:.2} s  p99 {:.2} s",
+        100.0 * s.goodput(),
+        s.turnaround_quantile(0.50),
+        s.turnaround_quantile(0.99)
+    );
+    println!(
+        "{:>10} {:>9} {:>9} {:>6} {:>10} {:>10}",
+        "tenant", "admitted", "rejected", "shed", "cancelled", "completed"
+    );
+    for (tenant, t) in &s.per_tenant {
+        println!(
+            "{:>10} {:>9} {:>9} {:>6} {:>10} {:>10}",
+            tenant, t.admitted, t.rejected, t.shed, t.cancelled, t.completed
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // --service-load OFFERED,BOUND,SHED: run the overload demo and exit
+    if let Some(i) = args.iter().position(|a| a == "--service-load") {
+        let spec = args
+            .get(i + 1)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("--service-load needs OFFERED,BOUND,SHED"))?;
+        return service_load_demo(&spec);
+    }
     // --service [N]: serve campaigns through a CampaignService instead of
     // a one-shot sweep; N bounds concurrent in-flight campaigns
     let mut service_max: Option<usize> = None;
@@ -203,7 +321,8 @@ fn main() -> anyhow::Result<()> {
                 "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online \
                  retraining ON, served via CampaignService (max {max_in_flight} in flight)"
             );
-            let svc = CampaignService::new(Arc::clone(&pool), max_in_flight);
+            let svc =
+                CampaignService::new(Arc::clone(&pool), ServiceConfig::new(max_in_flight));
             let tickets: Vec<_> = items
                 .into_iter()
                 .enumerate()
@@ -214,14 +333,19 @@ fn main() -> anyhow::Result<()> {
                         item.config.nodes,
                         policy.label()
                     );
-                    svc.submit(CampaignRequest {
-                        config: item.config,
-                        engines: item.engines,
-                        policy,
-                    })
+                    svc.try_submit(
+                        CampaignRequest::new(item.config)
+                            .policy(policy)
+                            .tenant(format!("sweep-{i}")),
+                        item.engines,
+                    )
+                    .expect("the default queue bound admits a node sweep")
                 })
                 .collect();
-            let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            let reports: Vec<_> = tickets
+                .into_iter()
+                .map(|t| t.wait().report().expect("uncontended requests are never shed"))
+                .collect();
             println!(
                 "service: {} completed, peak {} in flight (bound {max_in_flight})",
                 svc.completed(),

@@ -11,15 +11,22 @@
 //! the sum of all of them. Per-campaign results are identical to a
 //! sequential run (see tests/sim_sweep.rs).
 //!
+//! A final **overload** section exercises the service front door: offered
+//! load × admission-queue bound per shed policy, reporting goodput, shed
+//! rate and p50/p99 turnaround from the `ServiceStats` snapshot.
+//!
 //!     cargo bench --bench fig5_scaling [-- minutes]
 
 use std::sync::Arc;
 
+use mofa::sim::admission::ShedPolicy;
 use mofa::sim::policy::PriorityClasses;
-use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
+use mofa::sim::service::{
+    run_campaign_request, CampaignRequest, CampaignService, PolicyKind, ServiceConfig,
+};
 use mofa::sim::sweep::sweep_nodes;
 use mofa::util::threadpool::ThreadPool;
-use mofa::workflow::launch::{build_engines, ModelMode};
+use mofa::workflow::launch::{build_engines, build_quick_surrogate_engines, ModelMode};
 use mofa::workflow::mofa::CampaignConfig;
 use mofa::workflow::taskserver::TaskKind;
 use mofa::workflow::thinker::PolicyConfig;
@@ -136,7 +143,8 @@ fn main() -> anyhow::Result<()> {
             build_engines(ModelMode::SurrogateCorpus, true).expect("engine stack build");
         engines.generator.set_params(vec![], 3);
         let report = run_campaign_request(
-            CampaignRequest { config: base_config.clone(), engines, policy: kind },
+            CampaignRequest::new(base_config.clone()).policy(kind),
+            engines,
             &pool,
         );
         let mut rates = [0.0f64; 4];
@@ -153,5 +161,89 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("(fair-share row: weight 1 of 2 — the tenant sees half of every slot pool)");
+
+    overload_section(&pool);
     Ok(())
+}
+
+/// Overload behavior of the service front door: sweep offered load ×
+/// admission-queue bound for each shed policy. Requests are submitted as
+/// one burst against `max_in_flight = 2`, so offered load beyond ~2
+/// campaigns is pure queue pressure; every outcome and turnaround comes
+/// from the `ServiceStats` snapshot.
+fn overload_section(pool: &Arc<ThreadPool>) {
+    const DUR_S: f64 = 90.0; // virtual seconds per campaign
+    let shed_policies = [
+        ShedPolicy::RejectNewest,
+        ShedPolicy::DropLowestPriority,
+        ShedPolicy::DeadlineFirst,
+    ];
+    let offered_loads = [4usize, 12];
+    let bounds = [2usize, 4];
+
+    println!("\n== overload: offered load x queue bound per shed policy ==");
+    println!(
+        "({DUR_S:.0} s virtual campaigns, max 2 in flight, burst submission; \
+         deadline column: half the requests carry a 2-campaign virtual deadline)\n"
+    );
+    println!(
+        "{:>14} {:>8} {:>6} {:>9} {:>6} {:>9} {:>9} {:>8} {:>8}",
+        "policy", "offered", "bound", "admitted", "shed", "rejected", "goodput%", "p50(s)", "p99(s)"
+    );
+    for shed in shed_policies {
+        for &offered in &offered_loads {
+            for &bound in &bounds {
+                let svc = CampaignService::new(
+                    Arc::clone(pool),
+                    ServiceConfig::new(2).queue_bound(bound).shed(shed),
+                );
+                let tickets: Vec<_> = (0..offered)
+                    .filter_map(|i| {
+                        let config = CampaignConfig {
+                            nodes: 8,
+                            duration_s: DUR_S,
+                            seed: 100 + i as u64,
+                            policy: PolicyConfig {
+                                retrain_enabled: false,
+                                ..Default::default()
+                            },
+                            threads: 0,
+                            util_sample_dt: 30.0,
+                        };
+                        let mut req = CampaignRequest::new(config)
+                            .tenant(["argonne", "campus", "edge"][i % 3])
+                            .class((i % 3) as u8);
+                        if i % 2 == 0 {
+                            // tight virtual deadline: two campaigns of
+                            // dispatched work ahead and the request sheds
+                            req = req.deadline(2.0 * DUR_S);
+                        }
+                        svc.try_submit(req, build_quick_surrogate_engines()).ok()
+                    })
+                    .collect();
+                for t in tickets {
+                    let _ = t.wait();
+                }
+                let s = svc.stats();
+                println!(
+                    "{:>14} {:>8} {:>6} {:>9} {:>6} {:>9} {:>8.1}% {:>8.2} {:>8.2}",
+                    shed.label(),
+                    offered,
+                    bound,
+                    s.admitted,
+                    s.shed,
+                    s.rejected,
+                    100.0 * s.goodput(),
+                    s.turnaround_quantile(0.50),
+                    s.turnaround_quantile(0.99),
+                );
+            }
+        }
+    }
+    println!(
+        "\n(goodput = completed/offered; shed+rejected+completed = offered. \
+         reject-newest bounces newcomers, drop-lowest evicts the worst class, \
+         deadline-first evicts the latest deadline and expires queued requests \
+         whose virtual deadline passed)"
+    );
 }

@@ -55,7 +55,7 @@ fn campaign_task_means(
         threads: 0,
         util_sample_dt: 600.0,
     };
-    let report = run_campaign_request(CampaignRequest { config, engines, policy }, pool);
+    let report = run_campaign_request(CampaignRequest::new(config).policy(policy), engines, pool);
     let mut out = BTreeMap::new();
     for kind in TaskKind::ALL {
         let durs: Vec<f64> = report

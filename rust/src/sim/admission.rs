@@ -1,0 +1,625 @@
+//! Admission control for the campaign service front door: a **bounded**
+//! request queue with pluggable overload (shed) policies, per-tenant
+//! in-queue quotas, and virtual deadlines — pure state, no threads.
+//!
+//! [`crate::sim::service::CampaignService`] wraps an [`AdmissionQueue`]
+//! behind its submission lock; keeping the state machine free of
+//! synchronization makes every admission decision a pure function of the
+//! push/pop sequence and the request fields, which is what lets the
+//! service keep the PR-2 determinism guarantee (and what makes this
+//! module property-testable against a reference model, below).
+//!
+//! The queue orders and sheds by a single per-policy **score** (computed
+//! by [`ShedPolicy::score`]): requests pop lowest-score-first (FIFO
+//! within a score), and when the queue is full the *highest*-score entry
+//! is the shed victim — with ties favoring whoever is already queued.
+//! Time for deadlines is **virtual service time**: a monotonic clock that
+//! advances by each dispatched request's declared cost (its campaign
+//! duration), so "deadline 3600" means *shed me if an hour of virtual
+//! campaign work was dispatched before my turn*. Wallclock never enters
+//! an admission decision.
+
+use std::collections::BTreeMap;
+
+use crate::workflow::queues::BoundedScoredQueue;
+
+/// Lifecycle of one service request (docs/ARCHITECTURE.md §2 has the
+/// transition diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// admitted, waiting in the bounded queue
+    Queued,
+    /// dispatched; its campaign is running
+    Running,
+    /// campaign finished; the report is available
+    Done,
+    /// refused at the front door (`try_submit` returned the reason —
+    /// rejected requests never hold a queue slot or a ticket)
+    Rejected,
+    /// admitted but dropped under overload: evicted by a fuller queue or
+    /// expired past its virtual deadline at pop time
+    Shed,
+    /// cancelled by its ticket: a queued request unqueues and never runs,
+    /// a running one finishes but its report is discarded. Also the
+    /// defensive settlement for a crashed campaign driver (a never-path —
+    /// substrate panics are converted to failed task outcomes upstream),
+    /// so waiters can never hang
+    Cancelled,
+}
+
+impl RequestStatus {
+    /// True once the status can no longer change.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, RequestStatus::Queued | RequestStatus::Running)
+    }
+
+    /// Short label for tables and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestStatus::Queued => "queued",
+            RequestStatus::Running => "running",
+            RequestStatus::Done => "done",
+            RequestStatus::Rejected => "rejected",
+            RequestStatus::Shed => "shed",
+            RequestStatus::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// What to do when a request arrives and the bounded queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// refuse the newcomer; the queue is strictly FIFO
+    RejectNewest,
+    /// shed the lowest-priority queued request (highest class value,
+    /// newest among ties); the newcomer is refused instead if its class
+    /// is no better than the worst queued one. Pops are class-ordered.
+    DropLowestPriority,
+    /// earliest-deadline-first: pops are deadline-ordered, the overflow
+    /// victim is the *latest*-deadline entry (no deadline = latest), and
+    /// requests whose virtual deadline already passed are shed at pop
+    /// time instead of dispatched
+    DeadlineFirst,
+}
+
+impl ShedPolicy {
+    /// Queue score for a request under this policy: lower pops first,
+    /// highest is the overflow victim.
+    pub fn score(&self, class: u8, deadline: Option<f64>) -> f64 {
+        match self {
+            ShedPolicy::RejectNewest => 0.0,
+            ShedPolicy::DropLowestPriority => class as f64,
+            ShedPolicy::DeadlineFirst => deadline.unwrap_or(f64::INFINITY),
+        }
+    }
+
+    /// Short label for tables and CLI flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNewest => "reject-newest",
+            ShedPolicy::DropLowestPriority => "drop-lowest",
+            ShedPolicy::DeadlineFirst => "deadline-first",
+        }
+    }
+
+    /// Parse a CLI label (the inverse of [`ShedPolicy::label`]).
+    pub fn from_label(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "reject-newest" => Some(ShedPolicy::RejectNewest),
+            "drop-lowest" => Some(ShedPolicy::DropLowestPriority),
+            "deadline-first" => Some(ShedPolicy::DeadlineFirst),
+            _ => None,
+        }
+    }
+}
+
+/// Why `try_submit` refused a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the queue is at its bound and the shed policy chose the newcomer
+    /// as the victim
+    QueueFull {
+        /// the queue bound that was hit
+        bound: usize,
+    },
+    /// the tenant already has `quota` requests waiting in the queue
+    TenantOverQuota {
+        /// tenant whose quota was exhausted
+        tenant: String,
+        /// the per-tenant in-queue quota
+        quota: usize,
+    },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { bound } => {
+                write!(f, "admission queue full (bound {bound})")
+            }
+            RejectReason::TenantOverQuota { tenant, quota } => {
+                write!(f, "tenant '{tenant}' at its in-queue quota ({quota})")
+            }
+        }
+    }
+}
+
+// so `try_submit(...)?` works in anyhow-style mains
+impl std::error::Error for RejectReason {}
+
+/// Admission-queue parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// maximum queued (not running) requests
+    pub bound: usize,
+    /// overload policy when a request arrives at the bound
+    pub shed: ShedPolicy,
+    /// maximum queued requests per tenant (`None` = unlimited)
+    pub tenant_quota: Option<usize>,
+}
+
+/// A queued request's admission metadata plus the caller's payload.
+struct Queued<T> {
+    tenant: String,
+    deadline: Option<f64>,
+    cost: f64,
+    item: T,
+}
+
+/// Successful admission: the entry's handle plus the victim this push
+/// evicted, if the shed policy dropped a queued request to make room.
+pub struct Admitted<T> {
+    /// handle for [`AdmissionQueue::cancel`]
+    pub seq: u64,
+    /// `(victim handle, victim payload)` evicted by this admission
+    pub shed: Option<(u64, T)>,
+}
+
+/// One pop step: the next request in policy order, and its verdict.
+pub enum Popped<T> {
+    /// dispatch this request (the clock advanced by its cost)
+    Run {
+        /// the entry's admission handle
+        seq: u64,
+        /// the caller's payload
+        item: T,
+    },
+    /// this request's virtual deadline expired while it waited — shed it
+    /// and keep popping
+    Shed {
+        /// the entry's admission handle
+        seq: u64,
+        /// the caller's payload
+        item: T,
+    },
+}
+
+/// The bounded admission queue: shed policies, tenant quotas, and the
+/// virtual service clock. Generic over the queued payload so the service
+/// can store its ticket state and tests can store plain markers.
+pub struct AdmissionQueue<T> {
+    cfg: AdmissionConfig,
+    q: BoundedScoredQueue<Queued<T>>,
+    /// queued (not running) requests per tenant; entries removed at zero
+    tenant_queued: BTreeMap<String, usize>,
+    /// virtual service time: total cost dispatched so far
+    clock: f64,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// An empty queue with the given bound/shed/quota configuration.
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionQueue {
+            q: BoundedScoredQueue::new(cfg.bound),
+            cfg,
+            tenant_queued: BTreeMap::new(),
+            clock: 0.0,
+        }
+    }
+
+    fn note_removed(&mut self, tenant: &str) {
+        let n = self.tenant_queued.get_mut(tenant).expect("tenant count underflow");
+        *n -= 1;
+        if *n == 0 {
+            self.tenant_queued.remove(tenant);
+        }
+    }
+
+    /// Admit a request or reject it with a reason. Checked in order:
+    /// tenant quota first, then the queue bound (where the shed policy
+    /// picks a victim — possibly the newcomer). `cost` is the virtual
+    /// service time this request will consume once dispatched.
+    pub fn try_push(
+        &mut self,
+        tenant: &str,
+        class: u8,
+        deadline: Option<f64>,
+        cost: f64,
+        item: T,
+    ) -> Result<Admitted<T>, RejectReason> {
+        if let Some(quota) = self.cfg.tenant_quota {
+            if self.tenant_queued.get(tenant).copied().unwrap_or(0) >= quota {
+                return Err(RejectReason::TenantOverQuota {
+                    tenant: tenant.to_string(),
+                    quota,
+                });
+            }
+        }
+        let score = self.cfg.shed.score(class, deadline);
+        let mut shed = None;
+        if self.q.len() == self.cfg.bound {
+            let reject = RejectReason::QueueFull { bound: self.cfg.bound };
+            if matches!(self.cfg.shed, ShedPolicy::RejectNewest) {
+                return Err(reject);
+            }
+            let (worst_score, _, _) = self.q.peek_worst().expect("bound >= 1");
+            // ties favor whoever already holds a slot
+            if score >= worst_score {
+                return Err(reject);
+            }
+            let (_, vseq, victim) = self.q.evict_worst().expect("queue was full");
+            self.note_removed(&victim.tenant);
+            shed = Some((vseq, victim.item));
+        }
+        let queued = Queued { tenant: tenant.to_string(), deadline, cost, item };
+        let seq = match self.q.push(score, queued) {
+            Ok(seq) => seq,
+            Err(_) => unreachable!("room was made above"),
+        };
+        *self.tenant_queued.entry(tenant.to_string()).or_insert(0) += 1;
+        Ok(Admitted { seq, shed })
+    }
+
+    /// Pop the next request in policy order. `Run` advances the virtual
+    /// clock by the request's cost; `Shed` means its deadline expired
+    /// while it waited (the caller should keep popping). Deadline expiry
+    /// is honored under every shed policy — `DeadlineFirst` only changes
+    /// the pop order and the overflow victim. `None` when empty.
+    pub fn pop(&mut self) -> Option<Popped<T>> {
+        let (_, seq, q) = self.q.pop()?;
+        self.note_removed(&q.tenant);
+        if let Some(d) = q.deadline {
+            if self.clock > d {
+                return Some(Popped::Shed { seq, item: q.item });
+            }
+        }
+        self.clock += q.cost;
+        Some(Popped::Run { seq, item: q.item })
+    }
+
+    /// Unqueue the entry admitted with handle `seq`; `None` if it already
+    /// left the queue (dispatched, shed, or previously cancelled).
+    pub fn cancel(&mut self, seq: u64) -> Option<T> {
+        let q = self.q.remove(seq)?;
+        self.note_removed(&q.tenant);
+        Some(q.item)
+    }
+
+    /// Requests currently queued.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// High-water mark of queue depth (≤ the bound by construction).
+    pub fn peak_depth(&self) -> usize {
+        self.q.peak()
+    }
+
+    /// The configured queue bound.
+    pub fn bound(&self) -> usize {
+        self.cfg.bound
+    }
+
+    /// Virtual service time dispatched so far (the deadline clock).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Requests a tenant currently has in the queue.
+    pub fn queued_for(&self, tenant: &str) -> usize {
+        self.tenant_queued.get(tenant).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bound: usize, shed: ShedPolicy, quota: Option<usize>) -> AdmissionConfig {
+        AdmissionConfig { bound, shed, tenant_quota: quota }
+    }
+
+    #[test]
+    fn reject_newest_is_fifo_and_rejects_at_bound() {
+        let mut q = AdmissionQueue::new(cfg(2, ShedPolicy::RejectNewest, None));
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        q.try_push("a", 9, None, 1.0, "r1").unwrap();
+        let err = q.try_push("a", 0, None, 1.0, "r2").unwrap_err();
+        assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+        // FIFO regardless of class
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "r0", .. })));
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "r1", .. })));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn drop_lowest_priority_sheds_worst_class_newest_tie() {
+        let mut q = AdmissionQueue::new(cfg(2, ShedPolicy::DropLowestPriority, None));
+        q.try_push("a", 1, None, 1.0, "mid").unwrap();
+        q.try_push("a", 2, None, 1.0, "low").unwrap();
+        // a better-class newcomer evicts the worst queued entry
+        let adm = q.try_push("a", 0, None, 1.0, "high").unwrap();
+        assert_eq!(adm.shed.map(|(_, it)| it), Some("low"));
+        // a no-better newcomer is rejected (ties favor the queued)
+        let err = q.try_push("a", 1, None, 1.0, "tied").unwrap_err();
+        assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+        // pops are class-ordered
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "high", .. })));
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "mid", .. })));
+    }
+
+    #[test]
+    fn deadline_first_sheds_latest_deadline_and_expires_at_pop() {
+        let mut q = AdmissionQueue::new(cfg(2, ShedPolicy::DeadlineFirst, None));
+        q.try_push("a", 0, Some(50.0), 600.0, "tight").unwrap();
+        q.try_push("a", 0, None, 600.0, "open").unwrap();
+        // no-deadline entry is the latest-deadline victim
+        let adm = q.try_push("a", 0, Some(10_000.0), 600.0, "loose").unwrap();
+        assert_eq!(adm.shed.map(|(_, it)| it), Some("open"));
+        // a later-deadline newcomer is rejected instead
+        let err = q.try_push("a", 0, Some(20_000.0), 600.0, "later").unwrap_err();
+        assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+        // earliest deadline pops first and still makes it (clock 0 ≤ 50)
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "tight", .. })));
+        assert_eq!(q.clock(), 600.0);
+        // "loose" survives: clock 600 ≤ 10_000
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "loose", .. })));
+        // an expired entry sheds at pop time
+        q.try_push("a", 0, Some(100.0), 1.0, "expired").unwrap();
+        assert!(matches!(q.pop(), Some(Popped::Shed { item: "expired", .. })));
+        assert_eq!(q.clock(), 1200.0, "shed pops must not advance the clock");
+    }
+
+    #[test]
+    fn tenant_quota_counts_queue_only_and_frees_on_exit() {
+        let mut q = AdmissionQueue::new(cfg(8, ShedPolicy::RejectNewest, Some(2)));
+        q.try_push("alice", 0, None, 1.0, 0u32).unwrap();
+        let a1 = q.try_push("alice", 0, None, 1.0, 1u32).unwrap();
+        let err = q.try_push("alice", 0, None, 1.0, 2u32).unwrap_err();
+        assert_eq!(err, RejectReason::TenantOverQuota { tenant: "alice".into(), quota: 2 });
+        // other tenants are unaffected
+        q.try_push("bob", 0, None, 1.0, 3u32).unwrap();
+        // cancelling frees the quota slot
+        assert_eq!(q.cancel(a1.seq), Some(1u32));
+        assert_eq!(q.queued_for("alice"), 1);
+        q.try_push("alice", 0, None, 1.0, 4u32).unwrap();
+        // popping frees it too
+        while q.pop().is_some() {}
+        assert_eq!(q.queued_for("alice"), 0);
+        assert_eq!(q.queued_for("bob"), 0);
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_only_hits_queued_entries() {
+        let mut q = AdmissionQueue::new(cfg(4, ShedPolicy::RejectNewest, None));
+        let a = q.try_push("a", 0, None, 1.0, "x").unwrap();
+        assert_eq!(q.cancel(a.seq), Some("x"));
+        assert_eq!(q.cancel(a.seq), None);
+        let b = q.try_push("a", 0, None, 1.0, "y").unwrap();
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        assert_eq!(q.cancel(b.seq), None, "a dispatched entry cannot be unqueued");
+    }
+
+    /// Reference model for the full admission state machine: a linear
+    /// scan over `(score, seq, tenant, deadline)` rows replicates quota
+    /// checks, shed-victim selection, pop order, and deadline expiry.
+    /// Invariants per step: the bound always holds, every
+    /// admit/reject/shed/pop outcome matches the model exactly, and
+    /// per-tenant accounting returns to zero after a full drain.
+    #[test]
+    fn property_admission_matches_reference_model() {
+        #[derive(Clone)]
+        struct Row {
+            score: f64,
+            seq: u64,
+            tenant: usize,
+            deadline: Option<f64>,
+            cost: f64,
+            id: u64,
+        }
+        crate::util::proptest::check_cases("admission-reference-model", 96, |rng, _| {
+            let bound = rng.below(4) + 1;
+            let shed = match rng.below(3) {
+                0 => ShedPolicy::RejectNewest,
+                1 => ShedPolicy::DropLowestPriority,
+                _ => ShedPolicy::DeadlineFirst,
+            };
+            let quota = if rng.chance(0.5) { Some(rng.below(3) + 1) } else { None };
+            let tenants = ["a", "b", "c"];
+            let mut q: AdmissionQueue<u64> = AdmissionQueue::new(cfg(bound, shed, quota));
+            let mut model: Vec<Row> = Vec::new();
+            let mut clock = 0.0f64;
+            let mut next_id = 0u64;
+            for _ in 0..rng.below(150) + 20 {
+                match rng.below(5) {
+                    0..=2 => {
+                        // --- push ---
+                        let tenant = rng.below(3);
+                        let class = rng.below(4) as u8;
+                        let deadline = if rng.chance(0.5) {
+                            Some(rng.below(8) as f64)
+                        } else {
+                            None
+                        };
+                        let cost = (rng.below(3) + 1) as f64;
+                        let id = next_id;
+                        next_id += 1;
+                        let got = q.try_push(tenants[tenant], class, deadline, cost, id);
+                        // model: quota check
+                        let tcount = model.iter().filter(|r| r.tenant == tenant).count();
+                        if quota.is_some_and(|n| tcount >= n) {
+                            let want = RejectReason::TenantOverQuota {
+                                tenant: tenants[tenant].into(),
+                                quota: quota.unwrap(),
+                            };
+                            match &got {
+                                Err(e) => crate::prop_assert!(*e == want, "wrong reject: {e}"),
+                                Ok(_) => return Err("quota reject expected, got admit".into()),
+                            }
+                            continue;
+                        }
+                        let score = shed.score(class, deadline);
+                        // model: overflow handling
+                        if model.len() == bound {
+                            let full = RejectReason::QueueFull { bound };
+                            if matches!(shed, ShedPolicy::RejectNewest) {
+                                crate::prop_assert!(
+                                    matches!(&got, Err(e) if *e == full),
+                                    "expected full-queue reject"
+                                );
+                                continue;
+                            }
+                            // victim: max score, then max seq
+                            let vi = model
+                                .iter()
+                                .enumerate()
+                                .max_by(|(_, x), (_, y)| {
+                                    x.score
+                                        .partial_cmp(&y.score)
+                                        .unwrap()
+                                        .then(x.seq.cmp(&y.seq))
+                                })
+                                .map(|(i, _)| i)
+                                .unwrap();
+                            if score >= model[vi].score {
+                                crate::prop_assert!(
+                                    matches!(&got, Err(e) if *e == full),
+                                    "ties must favor the queued"
+                                );
+                                continue;
+                            }
+                            let victim = model.remove(vi);
+                            let adm = got.map_err(|e| format!("expected evict-admit: {e}"))?;
+                            crate::prop_assert!(
+                                adm.shed == Some((victim.seq, victim.id)),
+                                "wrong shed victim: {:?} != ({}, {})",
+                                adm.shed,
+                                victim.seq,
+                                victim.id
+                            );
+                            model.push(Row {
+                                score,
+                                seq: adm.seq,
+                                tenant,
+                                deadline,
+                                cost,
+                                id,
+                            });
+                            continue;
+                        }
+                        let adm = got.map_err(|e| format!("expected admit: {e}"))?;
+                        crate::prop_assert!(adm.shed.is_none(), "shed below the bound");
+                        model.push(Row { score, seq: adm.seq, tenant, deadline, cost, id });
+                    }
+                    3 => {
+                        // --- pop ---
+                        let got = q.pop();
+                        // model: min score, then min seq
+                        let pi = model
+                            .iter()
+                            .enumerate()
+                            .min_by(|(_, x), (_, y)| {
+                                x.score
+                                    .partial_cmp(&y.score)
+                                    .unwrap()
+                                    .then(x.seq.cmp(&y.seq))
+                            })
+                            .map(|(i, _)| i);
+                        match pi {
+                            None => crate::prop_assert!(got.is_none(), "pop from empty"),
+                            Some(i) => {
+                                let row = model.remove(i);
+                                let expired = row.deadline.is_some_and(|d| clock > d);
+                                match got {
+                                    Some(Popped::Shed { seq, item }) => {
+                                        crate::prop_assert!(
+                                            expired && seq == row.seq && item == row.id,
+                                            "unexpected shed of ({seq}, {item})"
+                                        );
+                                    }
+                                    Some(Popped::Run { seq, item }) => {
+                                        crate::prop_assert!(
+                                            !expired && seq == row.seq && item == row.id,
+                                            "unexpected run of ({seq}, {item})"
+                                        );
+                                        clock += row.cost;
+                                    }
+                                    None => return Err("pop returned None".into()),
+                                }
+                            }
+                        }
+                        crate::prop_assert!(
+                            q.clock() == clock,
+                            "clock {} != model {clock}",
+                            q.clock()
+                        );
+                    }
+                    _ => {
+                        // --- cancel a random live entry (or a bogus handle) ---
+                        if model.is_empty() || rng.chance(0.2) {
+                            crate::prop_assert!(
+                                q.cancel(next_id + 1000).is_none(),
+                                "bogus cancel must be None"
+                            );
+                        } else {
+                            let i = rng.below(model.len());
+                            let row = model.remove(i);
+                            crate::prop_assert!(
+                                q.cancel(row.seq) == Some(row.id),
+                                "cancel({}) lost item {}",
+                                row.seq,
+                                row.id
+                            );
+                        }
+                    }
+                }
+                // step invariants
+                crate::prop_assert!(
+                    q.len() == model.len(),
+                    "len {} != model {}",
+                    q.len(),
+                    model.len()
+                );
+                crate::prop_assert!(q.len() <= bound, "bound broken: {} > {bound}", q.len());
+                crate::prop_assert!(
+                    q.peak_depth() <= bound,
+                    "peak {} > bound {bound}",
+                    q.peak_depth()
+                );
+                for (t, name) in tenants.iter().enumerate() {
+                    let want = model.iter().filter(|r| r.tenant == t).count();
+                    crate::prop_assert!(
+                        q.queued_for(name) == want,
+                        "tenant {name}: {} != {want}",
+                        q.queued_for(name)
+                    );
+                }
+            }
+            // full drain: quota accounting returns to zero
+            while q.pop().is_some() {}
+            crate::prop_assert!(q.is_empty(), "queue not empty after drain");
+            for name in tenants {
+                crate::prop_assert!(
+                    q.queued_for(name) == 0,
+                    "tenant {name} count nonzero after drain"
+                );
+            }
+            Ok(())
+        });
+    }
+}

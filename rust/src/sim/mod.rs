@@ -21,10 +21,16 @@
 //!   [`policy::FairSharePolicy`] (weighted multi-tenant slot shares).
 //! * [`sweep`] — one-shot batch driver: run many independent campaigns
 //!   concurrently on one shared thread pool.
+//! * [`admission`] — pure admission-control state for the service front
+//!   door: the bounded request queue, shed policies
+//!   ([`admission::ShedPolicy`]), per-tenant in-queue quotas, and the
+//!   virtual service-time deadline clock.
 //! * [`service`] — [`service::CampaignService`], the long-lived serving
-//!   layer: campaign requests queue up and run concurrently on one
-//!   shared pool under a driver-side semaphore, each with a per-request
-//!   [`service::PolicyKind`].
+//!   layer: requests enter through the fallible
+//!   [`service::CampaignService::try_submit`] front door into a bounded
+//!   admission queue, and run concurrently on one shared pool under a
+//!   driver-side semaphore, each with a per-request
+//!   [`service::PolicyKind`] and a cancellable [`service::Ticket`].
 //!
 //! The policy/mechanics split is the contract: policies never touch the
 //! heap or slot counters, and the scheduler never inspects payloads
@@ -38,14 +44,19 @@
 //! `tests/campaign_service.rs`).
 #![warn(missing_docs)]
 
+pub mod admission;
 pub mod policy;
 pub mod scheduler;
 pub mod service;
 pub mod sweep;
 pub mod vtime;
 
+pub use admission::{RejectReason, RequestStatus, ShedPolicy};
 pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 pub use scheduler::{Completion, Policy, Scheduler, SimOutcome, SimParams};
-pub use service::{CampaignRequest, CampaignService, PolicyKind, Ticket};
+pub use service::{
+    run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
+    ServiceConfig, ServiceStats, TenantStats, Ticket,
+};
 pub use sweep::{run_sweep, sweep_nodes, SweepItem};
 pub use vtime::{EventHeap, VirtualTime};

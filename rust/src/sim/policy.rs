@@ -86,6 +86,29 @@ impl PriorityClasses {
         self.classes[kind_idx(kind)] = class;
         self
     }
+
+    /// Serialize as an 8-element array in [`TaskKind::ALL`] order.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Arr(
+            self.classes.iter().map(|c| crate::util::json::Json::Num(*c as f64)).collect(),
+        )
+    }
+
+    /// Parse the representation written by [`PriorityClasses::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<PriorityClasses, String> {
+        let arr = v.as_arr().ok_or_else(|| "priority classes: expected an array".to_string())?;
+        if arr.len() != 8 {
+            return Err(format!("priority classes: expected 8 entries, got {}", arr.len()));
+        }
+        let mut classes = [0u8; 8];
+        for (slot, item) in classes.iter_mut().zip(arr) {
+            *slot = item
+                .as_f64()
+                .ok_or_else(|| "priority classes: non-numeric entry".to_string())?
+                as u8;
+        }
+        Ok(PriorityClasses { classes })
+    }
 }
 
 /// Decorator: delegates all campaign decisions to the inner policy but
@@ -253,6 +276,16 @@ mod tests {
         assert!(c.class(TaskKind::ComputeCharges) < c.class(TaskKind::OptimizeCells));
         assert!(c.class(TaskKind::ValidateStructure) < c.class(TaskKind::AssembleMofs));
         assert!(c.class(TaskKind::AssembleMofs) < c.class(TaskKind::GenerateLinkers));
+    }
+
+    #[test]
+    fn priority_classes_json_round_trips() {
+        let classes = PriorityClasses::default().with_class(TaskKind::Retrain, 3);
+        let text = classes.to_json().to_string();
+        let parsed =
+            PriorityClasses::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, classes, "round-trip changed {text}");
+        assert!(PriorityClasses::from_json(&crate::util::json::Json::Arr(vec![])).is_err());
     }
 
     #[test]

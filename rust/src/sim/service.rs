@@ -1,39 +1,56 @@
 //! Campaign **service**: a long-lived server that owns one shared
-//! compute pool and executes many campaign requests concurrently behind
-//! a submission queue.
+//! compute pool and executes campaign requests behind an
+//! **admission-controlled** front door.
 //!
 //! [`crate::sim::sweep`] is one-shot: you hand it a batch, it spawns a
 //! driver per campaign and returns when all finish. The service inverts
-//! that for online serving (the "many concurrent discovery requests"
-//! regime of the agentic follow-up work): requests arrive over time via
-//! [`CampaignService::submit`], each returns a [`Ticket`] immediately,
-//! and a dispatcher thread admits queued requests under a **driver-side
-//! semaphore** — hundreds of queued requests never spawn hundreds of
-//! driver threads; at most `max_in_flight` campaigns run at once while
-//! the rest wait in the queue.
+//! that for online serving — and, unlike a fire-and-forget queue, it
+//! models **overload** (the ROADMAP's "heavy traffic" regime): requests
+//! enter through [`CampaignService::try_submit`], which either admits
+//! them into a *bounded* queue or rejects them with a [`RejectReason`]
+//! (per-tenant quota exhausted, or queue full under the configured
+//! [`ShedPolicy`]). Admitted requests get a [`Ticket`] with non-blocking
+//! [`Ticket::poll`], blocking [`Ticket::wait`], and [`Ticket::cancel`];
+//! a dispatcher thread pops requests in policy order under a driver-side
+//! semaphore, so at most `max_in_flight` campaigns run at once.
 //!
-//! Each request picks its scheduling policy via [`PolicyKind`]: the
-//! plain Thinker ([`MofaPolicy`]), a priority-class wrapper
-//! ([`crate::sim::policy::PriorityPolicy`]), or a weighted multi-tenant
-//! share ([`crate::sim::policy::FairSharePolicy`]). Campaigns remain
-//! deterministic per request — virtual-time event order plus
-//! submit-time weight snapshots make the result a pure function of the
-//! request, independent of queue wait and pool contention.
+//! A request is built with the [`CampaignRequest`] builder: campaign
+//! config plus service metadata — `tenant` (quota accounting), `class`
+//! (shed priority), `deadline` (virtual service-time budget; see
+//! [`crate::sim::admission`]) and a per-request scheduling
+//! [`PolicyKind`]. Requests are plain data and round-trip through
+//! [`crate::util::json`], the first step toward an external front door.
+//!
+//! Determinism: campaigns remain bit-identical to standalone runs —
+//! virtual-time event order plus submit-time weight snapshots make each
+//! report a pure function of its request. Admission layers on top
+//! without touching that: every admit/reject/shed decision is computed
+//! by the lock-serialized [`crate::sim::admission::AdmissionQueue`] as a
+//! pure function of the push/pop sequence and request fields — wallclock
+//! never enters a decision, so a saturated service sheds the same
+//! requests on every replay of the same submission sequence.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
 
+use crate::sim::admission::{
+    AdmissionConfig, AdmissionQueue, Popped, RejectReason, RequestStatus, ShedPolicy,
+};
 use crate::sim::policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 use crate::sim::scheduler::{Scheduler, SimParams};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use crate::workflow::mofa::{assemble_report, CampaignConfig, CampaignReport, MofaPolicy};
+use crate::workflow::mofa::{
+    assemble_report, CampaignConfig, CampaignReport, MofaPolicy, RequestMeta,
+};
 use crate::workflow::resources::Cluster;
 use crate::workflow::taskserver::Engines;
 use crate::workflow::thinker::Thinker;
 
 /// Scheduling policy a campaign request runs under.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PolicyKind {
     /// the paper's Thinker policy, FIFO pending queues
     Mofa,
@@ -57,37 +74,429 @@ impl PolicyKind {
             PolicyKind::FairShare { .. } => "fair-share",
         }
     }
+
+    /// Serialize as a tagged object (`{"kind": "mofa"}`, …).
+    pub fn to_json(&self) -> Json {
+        match self {
+            PolicyKind::Mofa => Json::obj(vec![("kind", Json::Str("mofa".into()))]),
+            PolicyKind::Priority(classes) => Json::obj(vec![
+                ("kind", Json::Str("priority".into())),
+                ("classes", classes.to_json()),
+            ]),
+            PolicyKind::FairShare { weight, weight_total } => Json::obj(vec![
+                ("kind", Json::Str("fair-share".into())),
+                ("weight", Json::Num(*weight as f64)),
+                ("weight_total", Json::Num(*weight_total as f64)),
+            ]),
+        }
+    }
+
+    /// Parse the representation written by [`PolicyKind::to_json`].
+    pub fn from_json(v: &Json) -> Result<PolicyKind, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "policy: missing 'kind'".to_string())?;
+        match kind {
+            "mofa" => Ok(PolicyKind::Mofa),
+            "priority" => {
+                let classes = v
+                    .get("classes")
+                    .ok_or_else(|| "priority policy: missing 'classes'".to_string())?;
+                Ok(PolicyKind::Priority(PriorityClasses::from_json(classes)?))
+            }
+            "fair-share" => {
+                // validate here so a bad request file fails at parse
+                // time instead of panicking a driver at dispatch time
+                // (FairSharePolicy::new asserts the same invariants)
+                let field = |key: &str| -> Result<u32, String> {
+                    let n = v
+                        .get(key)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("fair-share policy: missing '{key}'"))?;
+                    if n.fract() != 0.0 || !(1.0..=u32::MAX as f64).contains(&n) {
+                        return Err(format!(
+                            "fair-share policy: '{key}' must be a positive integer, got {n}"
+                        ));
+                    }
+                    Ok(n as u32)
+                };
+                let weight = field("weight")?;
+                let weight_total = field("weight_total")?;
+                if weight > weight_total {
+                    return Err(format!(
+                        "fair-share policy: weight {weight} exceeds weight_total {weight_total}"
+                    ));
+                }
+                Ok(PolicyKind::FairShare { weight, weight_total })
+            }
+            other => Err(format!("unknown policy kind '{other}'")),
+        }
+    }
 }
 
-/// One campaign request: config + dedicated engine stack + policy.
+/// Tenant name used when the builder is not given one.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One campaign request: the campaign config plus the service-level
+/// metadata admission control reads. Built fluently:
 ///
-/// Engines must **not** be shared between requests — online retraining
-/// installs new generator weights, so a shared generator would couple
-/// campaigns (same rule as [`crate::sim::sweep::SweepItem`]).
+/// ```ignore
+/// let req = CampaignRequest::new(config)
+///     .policy(PolicyKind::Priority(PriorityClasses::default()))
+///     .tenant("alice")
+///     .class(1)
+///     .deadline(4.0 * 3600.0);
+/// ```
+///
+/// Requests are plain data (engines are supplied separately at submit
+/// time) and round-trip through [`CampaignRequest::to_json`] /
+/// [`CampaignRequest::from_json`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct CampaignRequest {
     /// campaign configuration (`config.threads` is ignored; the service
     /// pool is shared)
     pub config: CampaignConfig,
-    /// engine stack owned by this request
-    pub engines: Arc<Engines>,
     /// scheduling policy for this request
     pub policy: PolicyKind,
+    /// tenant this request is billed to (per-tenant quotas + stats)
+    pub tenant: String,
+    /// shed-priority class: lower is more important
+    /// ([`ShedPolicy::DropLowestPriority`] evicts the highest class)
+    pub class: u8,
+    /// virtual service-time deadline: shed at pop time once that much
+    /// dispatched campaign work is ahead of this request (`None` = never)
+    pub deadline: Option<f64>,
 }
 
-/// Handle to a submitted request's eventual report.
+impl CampaignRequest {
+    /// A request for `config` with neutral metadata: [`PolicyKind::Mofa`],
+    /// the [`DEFAULT_TENANT`], class 0, no deadline.
+    pub fn new(config: CampaignConfig) -> Self {
+        CampaignRequest {
+            config,
+            policy: PolicyKind::Mofa,
+            tenant: DEFAULT_TENANT.to_string(),
+            class: 0,
+            deadline: None,
+        }
+    }
+
+    /// Set the scheduling policy.
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the tenant this request is billed to.
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Set the shed-priority class (lower = more important).
+    pub fn class(mut self, class: u8) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Set the virtual service-time deadline.
+    pub fn deadline(mut self, deadline: f64) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Serialize the full request (config + metadata, no engines).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("policy", self.policy.to_json()),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("class", Json::Num(self.class as f64)),
+            (
+                "deadline",
+                self.deadline.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Parse the representation written by [`CampaignRequest::to_json`].
+    /// Missing metadata fields take the builder defaults; a field that is
+    /// present with the wrong type is an error, never a silent default —
+    /// a mistyped `class` or `tenant` would otherwise silently change
+    /// who gets shed or billed.
+    pub fn from_json(v: &Json) -> Result<CampaignRequest, String> {
+        let config = CampaignConfig::from_json(
+            v.get("config").ok_or_else(|| "request: missing 'config'".to_string())?,
+        )?;
+        let policy = PolicyKind::from_json(
+            v.get("policy").ok_or_else(|| "request: missing 'policy'".to_string())?,
+        )?;
+        let tenant = match v.get("tenant") {
+            None => DEFAULT_TENANT.to_string(),
+            Some(t) => t
+                .as_str()
+                .ok_or_else(|| "request: field 'tenant' must be a string".to_string())?
+                .to_string(),
+        };
+        let class = match v.get("class") {
+            None => 0,
+            Some(c) => {
+                let n = c
+                    .as_f64()
+                    .ok_or_else(|| "request: field 'class' must be a number".to_string())?;
+                if n.fract() != 0.0 || !(0.0..=u8::MAX as f64).contains(&n) {
+                    return Err(format!("request: 'class' must be an integer in 0..=255, got {n}"));
+                }
+                n as u8
+            }
+        };
+        let deadline = match v.get("deadline") {
+            None | Some(Json::Null) => None,
+            Some(d) => Some(
+                d.as_f64()
+                    .ok_or_else(|| "request: field 'deadline' must be a number".to_string())?,
+            ),
+        };
+        Ok(CampaignRequest { config, policy, tenant, class, deadline })
+    }
+}
+
+/// Service configuration: concurrency bound plus admission parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// campaigns allowed to run concurrently (≥ 1)
+    pub max_in_flight: usize,
+    /// bounded admission-queue depth (≥ 1)
+    pub queue_bound: usize,
+    /// what to do when a request arrives at the bound
+    pub shed: ShedPolicy,
+    /// per-tenant in-queue quota (`None` = unlimited)
+    pub tenant_quota: Option<usize>,
+}
+
+impl ServiceConfig {
+    /// Defaults: queue bound 1024, [`ShedPolicy::RejectNewest`], no
+    /// tenant quota.
+    pub fn new(max_in_flight: usize) -> Self {
+        ServiceConfig {
+            max_in_flight,
+            queue_bound: 1024,
+            shed: ShedPolicy::RejectNewest,
+            tenant_quota: None,
+        }
+    }
+
+    /// Set the admission-queue bound.
+    pub fn queue_bound(mut self, bound: usize) -> Self {
+        self.queue_bound = bound;
+        self
+    }
+
+    /// Set the overload shed policy.
+    pub fn shed(mut self, shed: ShedPolicy) -> Self {
+        self.shed = shed;
+        self
+    }
+
+    /// Set the per-tenant in-queue quota.
+    pub fn tenant_quota(mut self, quota: usize) -> Self {
+        self.tenant_quota = Some(quota);
+        self
+    }
+}
+
+/// Per-tenant admission counters (all monotonic).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// requests admitted into the queue
+    pub admitted: usize,
+    /// requests refused at the front door (quota or queue-full)
+    pub rejected: usize,
+    /// admitted requests dropped under overload
+    pub shed: usize,
+    /// requests cancelled via their ticket
+    pub cancelled: usize,
+    /// campaigns that ran to completion with the report delivered
+    pub completed: usize,
+}
+
+/// A point-in-time snapshot of the service counters
+/// ([`CampaignService::stats`]) — what the overload benches plot.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// requests currently waiting in the admission queue
+    pub queue_depth: usize,
+    /// high-water mark of the queue depth (≤ the bound by construction)
+    pub peak_queue_depth: usize,
+    /// `try_submit` calls (admitted + rejected)
+    pub submitted: usize,
+    /// requests admitted into the queue
+    pub admitted: usize,
+    /// requests refused at the front door
+    pub rejected: usize,
+    /// admitted requests dropped under overload
+    pub shed: usize,
+    /// requests cancelled via their ticket (queued or running)
+    pub cancelled: usize,
+    /// campaigns completed with the report delivered
+    pub completed: usize,
+    /// campaigns currently running
+    pub in_flight: usize,
+    /// high-water mark of concurrent campaigns (≤ `max_in_flight`)
+    pub peak_in_flight: usize,
+    /// per-tenant breakdown of the counters above
+    pub per_tenant: BTreeMap<String, TenantStats>,
+    /// wallclock submit→report turnaround per completed request, in
+    /// completion order; the service keeps the most recent
+    /// [`TURNAROUND_WINDOW`] values so a long-lived server's memory
+    /// stays bounded
+    pub turnaround_s: Vec<f64>,
+}
+
+/// Completed-request turnarounds retained for [`ServiceStats`] (a
+/// sliding window, newest kept).
+pub const TURNAROUND_WINDOW: usize = 4096;
+
+impl ServiceStats {
+    /// Completed / submitted: the fraction of offered load that produced
+    /// a report.
+    pub fn goodput(&self) -> f64 {
+        self.completed as f64 / self.submitted.max(1) as f64
+    }
+
+    /// Turnaround quantile (`q` in [0, 1]) over completed requests; NaN
+    /// when none completed.
+    pub fn turnaround_quantile(&self, q: f64) -> f64 {
+        if self.turnaround_s.is_empty() {
+            f64::NAN
+        } else {
+            crate::util::stats::quantile(&self.turnaround_s, q)
+        }
+    }
+}
+
+/// Terminal result a [`Ticket`] resolves to. The report is boxed: it is
+/// orders of magnitude larger than the overload variants.
+pub enum RequestOutcome {
+    /// the campaign ran; here is its report
+    Done(Box<CampaignReport>),
+    /// dropped under overload before running (evicted or deadline-expired)
+    Shed,
+    /// cancelled: a queued request never ran; a running one finished but
+    /// its report was discarded
+    Cancelled,
+}
+
+impl RequestOutcome {
+    /// The report, if the request completed.
+    pub fn report(self) -> Option<CampaignReport> {
+        match self {
+            RequestOutcome::Done(r) => Some(*r),
+            _ => None,
+        }
+    }
+
+    /// Short label for tables and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestOutcome::Done(_) => "done",
+            RequestOutcome::Shed => "shed",
+            RequestOutcome::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Per-request shared state behind a [`Ticket`].
+struct RequestState {
+    inner: Mutex<ReqInner>,
+    cv: Condvar,
+}
+
+struct ReqInner {
+    status: RequestStatus,
+    report: Option<CampaignReport>,
+    cancel_requested: bool,
+}
+
+impl RequestState {
+    fn new() -> Self {
+        RequestState {
+            inner: Mutex::new(ReqInner {
+                status: RequestStatus::Queued,
+                report: None,
+                cancel_requested: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Move to a terminal (or Running) status and wake waiters.
+    fn set(&self, status: RequestStatus, report: Option<CampaignReport>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.status = status;
+        inner.report = report;
+        self.cv.notify_all();
+    }
+}
+
+/// What sits in the admission queue per request.
+struct QueuedItem {
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    state: Arc<RequestState>,
+    submitted: Instant,
+}
+
+/// Handle to a submitted request: observe, await, or cancel it.
 pub struct Ticket {
-    rx: mpsc::Receiver<CampaignReport>,
+    seq: u64,
+    state: Arc<RequestState>,
+    svc: Arc<ServiceInner>,
 }
 
 impl Ticket {
-    /// Block until the campaign completes and return its report.
-    pub fn wait(self) -> CampaignReport {
-        self.rx.recv().expect("campaign driver dropped before reporting")
+    /// Non-blocking status probe.
+    pub fn poll(&self) -> RequestStatus {
+        self.state.inner.lock().unwrap().status
     }
 
-    /// Non-blocking poll: `Some(report)` once the campaign finished.
-    pub fn try_wait(&self) -> Option<CampaignReport> {
-        self.rx.try_recv().ok()
+    /// Block until the request reaches a terminal status and return its
+    /// outcome.
+    pub fn wait(self) -> RequestOutcome {
+        let mut inner = self.state.inner.lock().unwrap();
+        while !inner.status.is_terminal() {
+            inner = self.state.cv.wait(inner).unwrap();
+        }
+        match inner.status {
+            RequestStatus::Done => RequestOutcome::Done(Box::new(
+                inner.report.take().expect("Done without a report"),
+            )),
+            RequestStatus::Shed => RequestOutcome::Shed,
+            RequestStatus::Cancelled => RequestOutcome::Cancelled,
+            s => unreachable!("non-terminal status {s:?} after terminal wait"),
+        }
+    }
+
+    /// Cancel the request and return its status after the attempt:
+    /// a queued request unqueues immediately (`Cancelled`, it will never
+    /// run); a running one keeps running but its eventual report is
+    /// discarded and the ticket resolves `Cancelled`; terminal requests
+    /// are left as-is.
+    pub fn cancel(&self) -> RequestStatus {
+        let mut st = self.svc.state.lock().unwrap();
+        if let Some(item) = st.adm.cancel(self.seq) {
+            st.cancelled += 1;
+            st.tenant_mut(&item.req.tenant).cancelled += 1;
+            item.state.set(RequestStatus::Cancelled, None);
+            return RequestStatus::Cancelled;
+        }
+        drop(st);
+        let mut inner = self.state.inner.lock().unwrap();
+        if inner.status == RequestStatus::Running {
+            inner.cancel_requested = true;
+        }
+        inner.status
     }
 }
 
@@ -116,61 +525,154 @@ impl Semaphore {
     }
 }
 
-/// Service counters (all monotonic except `in_flight`).
-#[derive(Default)]
-struct ServiceStats {
-    submitted: AtomicUsize,
-    completed: AtomicUsize,
-    in_flight: AtomicUsize,
-    peak_in_flight: AtomicUsize,
+/// Mutable service state, all behind one lock so every admission
+/// decision and counter update is serialized (see module docs).
+struct SvcState {
+    adm: AdmissionQueue<QueuedItem>,
+    shutting_down: bool,
+    submitted: usize,
+    admitted: usize,
+    rejected: usize,
+    shed: usize,
+    cancelled: usize,
+    completed: usize,
+    in_flight: usize,
+    peak_in_flight: usize,
+    per_tenant: BTreeMap<String, TenantStats>,
+    turnaround_s: VecDeque<f64>,
 }
 
-/// RAII permit: settles the service counters and releases the semaphore
-/// exactly once per admitted campaign — **including when the driver
-/// panics** (unwinding drops the guard), so a failed campaign can never
-/// wedge the admission gate or leak an in-flight count.
-struct PermitGuard {
+impl SvcState {
+    fn tenant_mut(&mut self, tenant: &str) -> &mut TenantStats {
+        self.per_tenant.entry(tenant.to_string()).or_default()
+    }
+
+    /// Record a completed request's turnaround, keeping only the most
+    /// recent [`TURNAROUND_WINDOW`] values.
+    fn note_turnaround(&mut self, turnaround: f64) {
+        if self.turnaround_s.len() == TURNAROUND_WINDOW {
+            self.turnaround_s.pop_front();
+        }
+        self.turnaround_s.push_back(turnaround);
+    }
+
+    /// Settle a request shed by the admission queue (eviction or
+    /// deadline expiry).
+    fn note_shed(&mut self, item: &QueuedItem) {
+        self.shed += 1;
+        self.tenant_mut(&item.req.tenant).shed += 1;
+        item.state.set(RequestStatus::Shed, None);
+    }
+}
+
+struct ServiceInner {
+    state: Mutex<SvcState>,
+    /// submitters signal the dispatcher: work arrived / shutdown
+    cv: Condvar,
+}
+
+/// Releases the driver permit when a campaign driver exits — **including
+/// when it panics** (unwinding drops the guard) — and settles the ticket
+/// on the unwind path so waiters never hang on a dead driver. A crashed
+/// driver settles as `Cancelled` (the closest terminal state the
+/// lifecycle has): this is a never-path in practice, because substrate
+/// panics are caught in the task server and surface as failed task
+/// outcomes, not unwinds.
+struct DriverGuard {
     sem: Arc<Semaphore>,
-    stats: Arc<ServiceStats>,
+    inner: Arc<ServiceInner>,
+    state: Arc<RequestState>,
+    tenant: String,
+    settled: bool,
 }
 
-impl Drop for PermitGuard {
+impl Drop for DriverGuard {
     fn drop(&mut self) {
-        self.stats.in_flight.fetch_sub(1, Ordering::SeqCst);
-        self.stats.completed.fetch_add(1, Ordering::SeqCst);
+        if !self.settled {
+            // unwind path: account the campaign as cancelled so the
+            // in-flight count and the ticket both settle
+            let mut st = self.inner.state.lock().unwrap();
+            st.in_flight -= 1;
+            st.cancelled += 1;
+            st.tenant_mut(&self.tenant).cancelled += 1;
+            self.state.set(RequestStatus::Cancelled, None);
+        }
         self.sem.release();
     }
 }
 
-type Submission = (CampaignRequest, mpsc::Sender<CampaignReport>);
-
 /// The long-lived campaign server. See the module docs for the model.
 ///
-/// Dropping the service closes the submission queue, waits for queued
-/// and in-flight campaigns to finish, and joins the dispatcher.
+/// Dropping the service closes the front door, drains queued and
+/// in-flight campaigns (shedding whatever admission would shed), and
+/// joins the dispatcher.
 pub struct CampaignService {
-    tx: Option<mpsc::Sender<Submission>>,
+    inner: Arc<ServiceInner>,
     dispatcher: Option<thread::JoinHandle<()>>,
-    stats: Arc<ServiceStats>,
 }
 
 impl CampaignService {
-    /// Start a service over a shared pool, admitting at most
-    /// `max_in_flight` concurrent campaigns (≥ 1).
-    pub fn new(pool: Arc<ThreadPool>, max_in_flight: usize) -> Self {
-        assert!(max_in_flight >= 1, "max_in_flight must be >= 1");
-        let (tx, rx) = mpsc::channel::<Submission>();
-        let stats = Arc::new(ServiceStats::default());
-        let sem = Arc::new(Semaphore::new(max_in_flight));
-        let st = Arc::clone(&stats);
+    /// Start a service over a shared pool with the given admission
+    /// configuration.
+    pub fn new(pool: Arc<ThreadPool>, cfg: ServiceConfig) -> Self {
+        assert!(cfg.max_in_flight >= 1, "max_in_flight must be >= 1");
+        let inner = Arc::new(ServiceInner {
+            state: Mutex::new(SvcState {
+                adm: AdmissionQueue::new(AdmissionConfig {
+                    bound: cfg.queue_bound,
+                    shed: cfg.shed,
+                    tenant_quota: cfg.tenant_quota,
+                }),
+                shutting_down: false,
+                submitted: 0,
+                admitted: 0,
+                rejected: 0,
+                shed: 0,
+                cancelled: 0,
+                completed: 0,
+                in_flight: 0,
+                peak_in_flight: 0,
+                per_tenant: BTreeMap::new(),
+                turnaround_s: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+        });
+        let sem = Arc::new(Semaphore::new(cfg.max_in_flight));
+        let inner2 = Arc::clone(&inner);
         let dispatcher = thread::spawn(move || {
             let mut drivers: Vec<thread::JoinHandle<()>> = Vec::new();
-            while let Ok((req, done_tx)) = rx.recv() {
-                // the semaphore is the admission gate: this blocks until a
-                // permit frees, so queue depth never becomes thread count
+            loop {
+                // a permit first: the queue is only popped when a driver
+                // slot is free, so shed-at-pop decisions happen at
+                // dispatch time, not speculatively
                 sem.acquire();
-                let n = st.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
-                st.peak_in_flight.fetch_max(n, Ordering::SeqCst);
+                let next = {
+                    let mut st = inner2.state.lock().unwrap();
+                    loop {
+                        match st.adm.pop() {
+                            Some(Popped::Shed { item, .. }) => {
+                                st.note_shed(&item);
+                                continue;
+                            }
+                            Some(Popped::Run { item, .. }) => {
+                                st.in_flight += 1;
+                                st.peak_in_flight = st.peak_in_flight.max(st.in_flight);
+                                item.state.set(RequestStatus::Running, None);
+                                break Some(item);
+                            }
+                            None => {
+                                if st.shutting_down {
+                                    break None;
+                                }
+                                st = inner2.cv.wait(st).unwrap();
+                            }
+                        }
+                    }
+                };
+                let Some(item) = next else {
+                    sem.release();
+                    break;
+                };
                 // reap drivers that already finished
                 let (done, live): (Vec<_>, Vec<_>) =
                     drivers.drain(..).partition(|h| h.is_finished());
@@ -178,61 +680,145 @@ impl CampaignService {
                     let _ = h.join();
                 }
                 drivers = live;
-                let guard = PermitGuard { sem: Arc::clone(&sem), stats: Arc::clone(&st) };
+                let QueuedItem { req, engines, state, submitted } = item;
+                let mut guard = DriverGuard {
+                    sem: Arc::clone(&sem),
+                    inner: Arc::clone(&inner2),
+                    state: Arc::clone(&state),
+                    tenant: req.tenant.clone(),
+                    settled: false,
+                };
                 let pool2 = Arc::clone(&pool);
                 drivers.push(thread::spawn(move || {
-                    let report = run_campaign_request(req, &pool2);
-                    // settle the counters and free the permit BEFORE the
-                    // report is observable: once Ticket::wait returns,
-                    // completed()/in_flight() reflect this campaign
-                    drop(guard);
-                    let _ = done_tx.send(report); // ticket may be dropped
+                    let mut report = run_campaign_request(req, engines, &pool2);
+                    let turnaround = submitted.elapsed().as_secs_f64();
+                    if let Some(meta) = report.request_meta.as_mut() {
+                        meta.turnaround_s = turnaround; // include queue wait
+                    }
+                    // settle counters and the ticket under ONE service
+                    // lock, so the instant Ticket::wait returns,
+                    // completed() and in_flight() already reflect this
+                    // campaign; the flag check and the terminal-status
+                    // write share ONE request lock, so a cancel() racing
+                    // this settlement either lands (flag seen, ticket
+                    // resolves Cancelled) or observes the terminal status
+                    // — it can never report Running and then see Done
+                    let mut st = guard.inner.state.lock().unwrap();
+                    st.in_flight -= 1;
+                    let mut inner = state.inner.lock().unwrap();
+                    if inner.cancel_requested {
+                        st.cancelled += 1;
+                        st.tenant_mut(&guard.tenant).cancelled += 1;
+                        inner.status = RequestStatus::Cancelled;
+                        inner.report = None;
+                    } else {
+                        st.completed += 1;
+                        st.tenant_mut(&guard.tenant).completed += 1;
+                        st.note_turnaround(turnaround);
+                        inner.status = RequestStatus::Done;
+                        inner.report = Some(report);
+                    }
+                    state.cv.notify_all();
+                    drop(inner);
+                    guard.settled = true;
+                    drop(st);
+                    drop(guard); // releases the permit
                 }));
             }
             for h in drivers {
                 let _ = h.join();
             }
         });
-        CampaignService { tx: Some(tx), dispatcher: Some(dispatcher), stats }
+        CampaignService { inner, dispatcher: Some(dispatcher) }
     }
 
-    /// Enqueue a request; returns immediately with a [`Ticket`].
-    pub fn submit(&self, req: CampaignRequest) -> Ticket {
-        let (done_tx, done_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service already shut down")
-            .send((req, done_tx))
-            .expect("dispatcher thread gone");
-        self.stats.submitted.fetch_add(1, Ordering::SeqCst);
-        Ticket { rx: done_rx }
+    /// The admission-controlled front door: admit `req` into the bounded
+    /// queue (possibly shedding a queued victim per the [`ShedPolicy`])
+    /// and return a [`Ticket`], or reject it with a [`RejectReason`].
+    /// Never blocks on campaign execution.
+    pub fn try_submit(
+        &self,
+        req: CampaignRequest,
+        engines: Arc<Engines>,
+    ) -> Result<Ticket, RejectReason> {
+        let state = Arc::new(RequestState::new());
+        let mut st = self.inner.state.lock().unwrap();
+        st.submitted += 1;
+        let tenant = req.tenant.clone();
+        let (class, deadline, cost) = (req.class, req.deadline, req.config.duration_s);
+        let item = QueuedItem {
+            req,
+            engines,
+            state: Arc::clone(&state),
+            submitted: Instant::now(),
+        };
+        match st.adm.try_push(&tenant, class, deadline, cost, item) {
+            Ok(admitted) => {
+                st.admitted += 1;
+                st.tenant_mut(&tenant).admitted += 1;
+                if let Some((_, victim)) = admitted.shed {
+                    st.note_shed(&victim);
+                }
+                drop(st);
+                self.inner.cv.notify_all();
+                Ok(Ticket { seq: admitted.seq, state, svc: Arc::clone(&self.inner) })
+            }
+            Err(reason) => {
+                st.rejected += 1;
+                st.tenant_mut(&tenant).rejected += 1;
+                Err(reason)
+            }
+        }
     }
 
-    /// Requests accepted so far.
-    pub fn submitted(&self) -> usize {
-        self.stats.submitted.load(Ordering::SeqCst)
+    /// Snapshot every service counter (see [`ServiceStats`]).
+    pub fn stats(&self) -> ServiceStats {
+        let st = self.inner.state.lock().unwrap();
+        ServiceStats {
+            queue_depth: st.adm.len(),
+            peak_queue_depth: st.adm.peak_depth(),
+            submitted: st.submitted,
+            admitted: st.admitted,
+            rejected: st.rejected,
+            shed: st.shed,
+            cancelled: st.cancelled,
+            completed: st.completed,
+            in_flight: st.in_flight,
+            peak_in_flight: st.peak_in_flight,
+            per_tenant: st.per_tenant.clone(),
+            turnaround_s: st.turnaround_s.iter().copied().collect(),
+        }
     }
 
-    /// Campaigns settled so far (report delivered, or driver failed).
+    /// Requests currently waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().adm.len()
+    }
+
+    /// Campaigns completed with the report delivered.
     pub fn completed(&self) -> usize {
-        self.stats.completed.load(Ordering::SeqCst)
+        self.inner.state.lock().unwrap().completed
     }
 
     /// Campaigns currently running.
     pub fn in_flight(&self) -> usize {
-        self.stats.in_flight.load(Ordering::SeqCst)
+        self.inner.state.lock().unwrap().in_flight
     }
 
     /// High-water mark of concurrent campaigns (≤ `max_in_flight` by
-    /// construction — the semaphore is acquired before the counter).
+    /// construction — a permit is acquired before the queue is popped).
     pub fn peak_in_flight(&self) -> usize {
-        self.stats.peak_in_flight.load(Ordering::SeqCst)
+        self.inner.state.lock().unwrap().peak_in_flight
     }
 }
 
 impl Drop for CampaignService {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the queue; dispatcher drains and exits
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutting_down = true;
+        }
+        self.inner.cv.notify_all();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -241,12 +827,16 @@ impl Drop for CampaignService {
 
 /// Run one request synchronously on a caller-supplied pool: build the
 /// [`MofaPolicy`], wrap it per the request's [`PolicyKind`], run the
-/// scheduler to quiescence and assemble the report. The service calls
-/// this from its drivers; benches call it directly for per-policy
-/// cross-checks.
-pub fn run_campaign_request(req: CampaignRequest, pool: &Arc<ThreadPool>) -> CampaignReport {
-    let t_wall = std::time::Instant::now();
-    let CampaignRequest { config, engines, policy } = req;
+/// scheduler to quiescence and assemble the report (with the request's
+/// metadata attached as [`RequestMeta`]). The service calls this from
+/// its drivers; benches call it directly for per-policy cross-checks.
+pub fn run_campaign_request(
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+) -> CampaignReport {
+    let t_wall = Instant::now();
+    let CampaignRequest { config, policy, tenant, class, deadline } = req;
     let cluster = Cluster::new(config.nodes);
     let layout = cluster.layout();
     let base = MofaPolicy::new(
@@ -288,13 +878,22 @@ pub fn run_campaign_request(req: CampaignRequest, pool: &Arc<ThreadPool>) -> Cam
             (p.into_inner().into_thinker(), sim)
         }
     };
-    assemble_report(config, thinker, sim, t_wall.elapsed().as_secs_f64())
+    let wallclock = t_wall.elapsed().as_secs_f64();
+    let mut report = assemble_report(config, thinker, sim, wallclock);
+    report.request_meta = Some(RequestMeta {
+        tenant,
+        class,
+        deadline,
+        policy: policy.label(),
+        turnaround_s: wallclock, // the service adds queue wait on top
+    });
+    report
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn semaphore_bounds_concurrency() {
@@ -330,9 +929,83 @@ mod tests {
 
     #[test]
     fn empty_service_shuts_down_cleanly() {
-        let svc = CampaignService::new(Arc::new(ThreadPool::new(2)), 2);
-        assert_eq!(svc.submitted(), 0);
-        assert_eq!(svc.in_flight(), 0);
+        let svc = CampaignService::new(Arc::new(ThreadPool::new(2)), ServiceConfig::new(2));
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 0);
+        assert_eq!(stats.in_flight, 0);
+        assert_eq!(stats.queue_depth, 0);
         drop(svc); // must not hang
+    }
+
+    #[test]
+    fn request_builder_defaults_and_setters() {
+        let req = CampaignRequest::new(CampaignConfig::default());
+        assert_eq!(req.policy, PolicyKind::Mofa);
+        assert_eq!(req.tenant, DEFAULT_TENANT);
+        assert_eq!(req.class, 0);
+        assert_eq!(req.deadline, None);
+        let req = req
+            .policy(PolicyKind::FairShare { weight: 1, weight_total: 3 })
+            .tenant("alice")
+            .class(2)
+            .deadline(3600.0);
+        assert_eq!(req.policy, PolicyKind::FairShare { weight: 1, weight_total: 3 });
+        assert_eq!(req.tenant, "alice");
+        assert_eq!(req.class, 2);
+        assert_eq!(req.deadline, Some(3600.0));
+    }
+
+    #[test]
+    fn policy_kind_json_round_trips() {
+        let kinds = [
+            PolicyKind::Mofa,
+            PolicyKind::Priority(
+                PriorityClasses::default()
+                    .with_class(crate::workflow::taskserver::TaskKind::Retrain, 0),
+            ),
+            PolicyKind::FairShare { weight: 3, weight_total: 7 },
+        ];
+        for kind in kinds {
+            let text = kind.to_json().to_string();
+            let parsed = PolicyKind::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, kind, "round-trip changed {text}");
+        }
+        assert!(PolicyKind::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
+        // bad fair-share weights fail at parse time, not at dispatch time
+        for bad in [
+            r#"{"kind":"fair-share","weight":0.5,"weight_total":2}"#,
+            r#"{"kind":"fair-share","weight":0,"weight_total":2}"#,
+            r#"{"kind":"fair-share","weight":3,"weight_total":2}"#,
+        ] {
+            assert!(
+                PolicyKind::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn campaign_request_json_round_trips() {
+        let req = CampaignRequest::new(CampaignConfig {
+            nodes: 64,
+            duration_s: 1234.5,
+            seed: u64::MAX - 7, // beyond f64's integer range: seeds travel as strings
+            policy: Default::default(),
+            threads: 0,
+            util_sample_dt: 30.0,
+        })
+        .policy(PolicyKind::Priority(PriorityClasses::default()))
+        .tenant("bob")
+        .class(3)
+        .deadline(7200.0);
+        let text = req.to_json().to_string();
+        let parsed = CampaignRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, req, "round-trip changed {text}");
+
+        // no deadline serializes as null and comes back as None
+        let req = CampaignRequest::new(CampaignConfig::default());
+        let text = req.to_json().to_string();
+        let parsed = CampaignRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, req);
     }
 }

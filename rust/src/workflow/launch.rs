@@ -55,6 +55,21 @@ pub fn build_engines(mode: ModelMode, pretrained: bool) -> anyhow::Result<Arc<En
     }
 }
 
+/// Shrunk surrogate engine stack for quick demo campaigns (the overload
+/// bench and `--service-load` example burst many tiny campaigns):
+/// substrate settings are cut to test scale so each campaign stays cheap.
+pub fn build_quick_surrogate_engines() -> Arc<Engines> {
+    let mut e = Engines::scaled(
+        Arc::new(SurrogateGenerator::builtin(16)),
+        Arc::new(SurrogateTrainer),
+    );
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    Arc::new(e)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,7 +77,7 @@ mod tests {
     #[test]
     fn surrogate_engines_build() {
         let e = build_engines(ModelMode::Surrogate, true).unwrap();
-        assert!(e.generator.generate(1).unwrap().len() > 0);
+        assert!(!e.generator.generate(1).unwrap().is_empty());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::sim::scheduler::{Completion, Policy, Scheduler, SimParams};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use crate::workflow::metrics::{LatencyKind, TaskRecord};
@@ -21,7 +22,7 @@ use crate::workflow::taskserver::{Engines, Outcome, Payload, TaskKind};
 use crate::workflow::thinker::{PolicyConfig, TaskRequest, Thinker};
 
 /// Campaign configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CampaignConfig {
     /// cluster size (paper sweeps 32…450)
     pub nodes: usize,
@@ -49,6 +50,76 @@ impl Default for CampaignConfig {
     }
 }
 
+impl CampaignConfig {
+    /// Serialize for request files / service front doors. The `seed`
+    /// travels as a string: `u64` seeds above 2^53 would lose bits as a
+    /// JSON number.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("seed", Json::Str(self.seed.to_string())),
+            ("policy", self.policy.to_json()),
+            ("threads", Json::Num(self.threads as f64)),
+            ("util_sample_dt", Json::Num(self.util_sample_dt)),
+        ])
+    }
+
+    /// Parse the representation written by [`CampaignConfig::to_json`].
+    /// `seed` accepts both the string form and a plain number (for
+    /// hand-written request files).
+    pub fn from_json(v: &Json) -> Result<CampaignConfig, String> {
+        let seed = match v.get("seed") {
+            Some(Json::Str(s)) => {
+                s.parse::<u64>().map_err(|e| format!("config: bad seed '{s}': {e}"))?
+            }
+            Some(Json::Num(n)) => {
+                if n.fract() != 0.0 || *n < 0.0 {
+                    return Err(format!("config: seed must be a non-negative integer, got {n}"));
+                }
+                *n as u64
+            }
+            _ => return Err("config: missing 'seed'".into()),
+        };
+        Ok(CampaignConfig {
+            nodes: v
+                .get("nodes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| "config: missing 'nodes'".to_string())?,
+            duration_s: v
+                .get("duration_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "config: missing 'duration_s'".to_string())?,
+            seed,
+            policy: PolicyConfig::from_json(
+                v.get("policy").ok_or_else(|| "config: missing 'policy'".to_string())?,
+            )?,
+            threads: v.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            util_sample_dt: v
+                .get("util_sample_dt")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "config: missing 'util_sample_dt'".to_string())?,
+        })
+    }
+}
+
+/// Service-request metadata attached to a report that ran through the
+/// [`crate::sim::service`] front door (`None` for standalone runs).
+#[derive(Clone, Debug)]
+pub struct RequestMeta {
+    /// tenant the request was billed to
+    pub tenant: String,
+    /// shed-priority class (lower = more important)
+    pub class: u8,
+    /// virtual service-time deadline the request carried, if any
+    pub deadline: Option<f64>,
+    /// scheduling-policy label (`mofa` / `priority` / `fair-share`)
+    pub policy: &'static str,
+    /// wallclock submit→report turnaround, seconds (queue wait included
+    /// when served; equals `wallclock_s` for direct runs)
+    pub turnaround_s: f64,
+}
+
 /// Everything a campaign produces.
 pub struct CampaignReport {
     pub config: CampaignConfig,
@@ -63,6 +134,9 @@ pub struct CampaignReport {
     pub wallclock_s: f64,
     /// final virtual time (≥ duration once drained)
     pub final_vtime: f64,
+    /// service-request metadata when run through the campaign service
+    /// (`None` for standalone runs)
+    pub request_meta: Option<RequestMeta>,
 }
 
 impl CampaignReport {
@@ -234,6 +308,7 @@ pub fn assemble_report(
         tasks_done,
         wallclock_s,
         final_vtime: sim.final_vtime,
+        request_meta: None,
     }
 }
 
@@ -268,13 +343,49 @@ mod tests {
     }
 
     #[test]
+    fn campaign_config_json_round_trips() {
+        let cfg = CampaignConfig {
+            nodes: 450,
+            duration_s: 3.0 * 3600.0,
+            seed: u64::MAX, // must survive: seeds serialize as strings
+            policy: PolicyConfig { retrain_min: 12, retrain_enabled: false, ..Default::default() },
+            threads: 4,
+            util_sample_dt: 15.0,
+        };
+        let text = cfg.to_json().to_string();
+        let parsed = CampaignConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, cfg, "round-trip changed {text}");
+        // numeric seeds are accepted in hand-written files
+        let hand = r#"{"nodes":8,"duration_s":60,"seed":7,
+                       "policy":{"stable_strain":0.1,"trainable_strain":0.25,
+                                 "retrain_min":64,"retrain_max":8192,
+                                 "adsorption_switch":64,"assembly_batch":4,
+                                 "assembly_ratio":64,"optimize_eligible":0.1,
+                                 "lifo_cap":4096,"retrain_enabled":true},
+                       "util_sample_dt":60}"#;
+        let parsed = CampaignConfig::from_json(&Json::parse(hand).unwrap()).unwrap();
+        assert_eq!(parsed.seed, 7);
+        assert_eq!(parsed.threads, 0, "threads defaults when omitted");
+        assert_eq!(parsed.policy, PolicyConfig::default());
+        // an omitted policy field defaults, but a mistyped one errors
+        let sparse = r#"{"nodes":8,"duration_s":60,"seed":7,"policy":{"retrain_min":128},
+                        "util_sample_dt":60}"#;
+        let parsed = CampaignConfig::from_json(&Json::parse(sparse).unwrap()).unwrap();
+        assert_eq!(parsed.policy.retrain_min, 128);
+        assert_eq!(parsed.policy.retrain_max, PolicyConfig::default().retrain_max);
+        let mistyped = r#"{"nodes":8,"duration_s":60,"seed":7,
+                          "policy":{"retrain_min":"128"},"util_sample_dt":60}"#;
+        assert!(CampaignConfig::from_json(&Json::parse(mistyped).unwrap()).is_err());
+    }
+
+    #[test]
     fn short_campaign_produces_mofs() {
         let report = run_campaign(quick_config(8, 1200.0), surrogate_engines());
         let th = &report.thinker;
         assert!(th.linkers_generated > 0, "no linkers generated");
         assert!(th.linkers_survived > 0, "nothing survived processing");
         assert!(th.assembled_ok > 0, "nothing assembled");
-        assert!(th.db.len() > 0, "db empty");
+        assert!(!th.db.is_empty(), "db empty");
         assert!(
             report.tasks_done[&TaskKind::ValidateStructure] > 0,
             "no validations ran"

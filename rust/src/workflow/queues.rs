@@ -2,7 +2,11 @@
 //! * a **LIFO** queue for assembled MOFs — stability runs on the *most
 //!   recently* assembled structure (freshest model output first);
 //! * a stability-ordered **priority** queue — adsorption runs on the *most
-//!   stable* MOF available.
+//!   stable* MOF available;
+//! * a **bounded** scored queue for service admission control — same
+//!   min-score/FIFO-tie ordering as [`ScoredQueue`], plus the operations
+//!   overload handling needs: capacity-checked push, worst-entry
+//!   eviction, and removal by handle (cancellation).
 
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -123,6 +127,124 @@ impl<T> Default for ScoredQueue<T> {
     }
 }
 
+/// Bounded priority queue for admission control: at most `bound` entries,
+/// ordered exactly like [`ScoredQueue`] (lowest score pops first, ties
+/// FIFO by sequence number) but with the extra operations an overloaded
+/// service front door needs:
+///
+/// * [`push`](BoundedScoredQueue::push) fails when full instead of
+///   growing — the *caller* decides whether to reject the newcomer or
+///   evict a queued entry;
+/// * [`evict_worst`](BoundedScoredQueue::evict_worst) removes the
+///   highest-score entry (newest among ties) — the shed victim;
+/// * [`remove`](BoundedScoredQueue::remove) takes out an entry by the
+///   sequence handle `push` returned — cancellation.
+///
+/// Backed by a plain `Vec` with O(n) min/max scans: admission bounds are
+/// small (tens of requests), and a `BinaryHeap` cannot evict its worst
+/// element. The ordering is shared with [`ScoredQueue`] via [`Entry`], so
+/// both queues agree on what "pops first" means.
+#[derive(Debug)]
+pub struct BoundedScoredQueue<T> {
+    entries: Vec<Entry<T>>,
+    bound: usize,
+    seq: u64,
+    peak: usize,
+}
+
+impl<T> BoundedScoredQueue<T> {
+    /// A queue admitting at most `bound` entries (≥ 1).
+    pub fn new(bound: usize) -> Self {
+        assert!(bound >= 1, "queue bound must be >= 1");
+        BoundedScoredQueue { entries: Vec::new(), bound, seq: 0, peak: 0 }
+    }
+
+    /// Index of the entry that pops first (lowest score, oldest tie).
+    fn best_idx(&self) -> Option<usize> {
+        // Entry::cmp sorts pops-first entries as the *maximum*
+        self.entries
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.cmp(b))
+            .map(|(i, _)| i)
+    }
+
+    /// Index of the shed victim (highest score, newest tie).
+    fn worst_idx(&self) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.cmp(b))
+            .map(|(i, _)| i)
+    }
+
+    /// Try to enqueue; `Err(item)` hands the item back when the queue is
+    /// at its bound. On success returns the entry's sequence handle
+    /// (usable with [`remove`](BoundedScoredQueue::remove)).
+    pub fn push(&mut self, score: f64, item: T) -> Result<u64, T> {
+        if self.entries.len() == self.bound {
+            return Err(item);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.entries.push(Entry { score, seq, item });
+        self.peak = self.peak.max(self.entries.len());
+        Ok(seq)
+    }
+
+    /// Pop the lowest-score entry (FIFO within a score).
+    pub fn pop(&mut self) -> Option<(f64, u64, T)> {
+        let i = self.best_idx()?;
+        let e = self.entries.swap_remove(i);
+        Some((e.score, e.seq, e.item))
+    }
+
+    /// The shed victim without removing it: highest score, newest tie.
+    pub fn peek_worst(&self) -> Option<(f64, u64, &T)> {
+        let i = self.worst_idx()?;
+        let e = &self.entries[i];
+        Some((e.score, e.seq, &e.item))
+    }
+
+    /// Remove and return the shed victim (highest score, newest tie).
+    pub fn evict_worst(&mut self) -> Option<(f64, u64, T)> {
+        let i = self.worst_idx()?;
+        let e = self.entries.swap_remove(i);
+        Some((e.score, e.seq, e.item))
+    }
+
+    /// Remove the entry whose `push` returned `seq` (cancellation).
+    pub fn remove(&mut self, seq: u64) -> Option<T> {
+        let i = self.entries.iter().position(|e| e.seq == seq)?;
+        Some(self.entries.swap_remove(i).item)
+    }
+
+    /// Entries currently queued.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The capacity bound.
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// High-water mark of the queue depth (≤ bound by construction).
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Iterate `(score, seq, &item)` in arbitrary order (stats/snapshots).
+    pub fn iter(&self) -> impl Iterator<Item = (f64, u64, &T)> {
+        self.entries.iter().map(|e| (e.score, e.seq, &e.item))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +357,120 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
         assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn bounded_rejects_at_bound_and_orders_like_scored() {
+        let mut q = BoundedScoredQueue::new(3);
+        assert_eq!(q.push(0.3, "c"), Ok(0));
+        assert_eq!(q.push(0.1, "a"), Ok(1));
+        assert_eq!(q.push(0.2, "b"), Ok(2));
+        assert_eq!(q.push(0.0, "x"), Err("x"), "push at bound must hand the item back");
+        assert_eq!(q.peak(), 3);
+        assert_eq!(q.pop(), Some((0.1, 1, "a")));
+        assert_eq!(q.pop(), Some((0.2, 2, "b")));
+        assert_eq!(q.pop(), Some((0.3, 0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_evicts_highest_score_newest_tie() {
+        let mut q = BoundedScoredQueue::new(4);
+        q.push(1.0, "old-low").unwrap();
+        q.push(5.0, "old-high").unwrap();
+        q.push(5.0, "new-high").unwrap();
+        q.push(2.0, "mid").unwrap();
+        assert_eq!(q.peek_worst().map(|(s, _, i)| (s, *i)), Some((5.0, "new-high")));
+        assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("new-high"));
+        assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("old-high"));
+        assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("mid"));
+        assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("old-low"));
+        assert_eq!(q.evict_worst().map(|(_, _, i)| i), None);
+    }
+
+    #[test]
+    fn bounded_remove_by_seq() {
+        let mut q = BoundedScoredQueue::new(3);
+        let a = q.push(0.1, "a").unwrap();
+        let b = q.push(0.2, "b").unwrap();
+        assert_eq!(q.remove(b), Some("b"));
+        assert_eq!(q.remove(b), None, "double-remove must be a no-op");
+        assert_eq!(q.remove(999), None);
+        assert_eq!(q.pop(), Some((0.1, a, "a")));
+        assert!(q.is_empty());
+    }
+
+    /// Property: against a reference model, the bound always holds, pop
+    /// returns min-score (FIFO tie), and evict_worst returns max-score
+    /// (newest tie).
+    #[test]
+    fn property_bounded_matches_reference_model() {
+        crate::util::proptest::check("bounded-scored-reference-model", |rng, _| {
+            let bound = rng.below(6) + 1;
+            let mut q = BoundedScoredQueue::new(bound);
+            // model entries: (score, seq)
+            let mut model: Vec<(f64, u64)> = Vec::new();
+            for _ in 0..rng.below(150) + 1 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let score = (rng.below(4) as f64) * 0.5; // force score ties
+                        let full = model.len() == bound;
+                        match q.push(score, ()) {
+                            Ok(seq) => {
+                                crate::prop_assert!(!full, "push succeeded at bound");
+                                model.push((score, seq));
+                            }
+                            Err(()) => crate::prop_assert!(full, "push failed below bound"),
+                        }
+                    }
+                    2 => {
+                        // model pop: min score, then min seq
+                        let want = model
+                            .iter()
+                            .enumerate()
+                            .min_by(|(_, a), (_, b)| {
+                                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                            })
+                            .map(|(i, _)| i);
+                        let got = q.pop();
+                        match want {
+                            Some(i) => {
+                                let (score, seq) = model.remove(i);
+                                crate::prop_assert!(
+                                    got.map(|(s, sq, ())| (s, sq)) == Some((score, seq)),
+                                    "pop {got:?} != model ({score}, {seq})"
+                                );
+                            }
+                            None => crate::prop_assert!(got.is_none(), "pop from empty"),
+                        }
+                    }
+                    _ => {
+                        // model evict: max score, then max seq
+                        let want = model
+                            .iter()
+                            .enumerate()
+                            .max_by(|(_, a), (_, b)| {
+                                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                            })
+                            .map(|(i, _)| i);
+                        let got = q.evict_worst();
+                        match want {
+                            Some(i) => {
+                                let (score, seq) = model.remove(i);
+                                crate::prop_assert!(
+                                    got.map(|(s, sq, ())| (s, sq)) == Some((score, seq)),
+                                    "evict {got:?} != model ({score}, {seq})"
+                                );
+                            }
+                            None => crate::prop_assert!(got.is_none(), "evict from empty"),
+                        }
+                    }
+                }
+                crate::prop_assert!(q.len() == model.len(), "len {} != {}", q.len(), model.len());
+                crate::prop_assert!(q.len() <= bound, "bound broken: {} > {bound}", q.len());
+            }
+            Ok(())
+        });
     }
 
     #[test]

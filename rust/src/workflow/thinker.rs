@@ -28,7 +28,7 @@ use crate::workflow::resources::WorkerKind;
 use crate::workflow::taskserver::{Outcome, Payload, TaskKind};
 
 /// Policy constants (paper §III-B/C defaults).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PolicyConfig {
     /// LLST threshold for "stable" (Fig. 7): 10 %
     pub stable_strain: f64,
@@ -70,6 +70,63 @@ impl Default for PolicyConfig {
             lifo_cap: 4096,
             retrain_enabled: true,
         }
+    }
+}
+
+impl PolicyConfig {
+    /// Serialize for request files (see [`crate::sim::service`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("stable_strain", Json::Num(self.stable_strain)),
+            ("trainable_strain", Json::Num(self.trainable_strain)),
+            ("retrain_min", Json::Num(self.retrain_min as f64)),
+            ("retrain_max", Json::Num(self.retrain_max as f64)),
+            ("adsorption_switch", Json::Num(self.adsorption_switch as f64)),
+            ("assembly_batch", Json::Num(self.assembly_batch as f64)),
+            ("assembly_ratio", Json::Num(self.assembly_ratio as f64)),
+            ("optimize_eligible", Json::Num(self.optimize_eligible)),
+            ("lifo_cap", Json::Num(self.lifo_cap as f64)),
+            ("retrain_enabled", Json::Bool(self.retrain_enabled)),
+        ])
+    }
+
+    /// Parse the representation written by [`PolicyConfig::to_json`].
+    /// Missing fields fall back to the paper defaults, so hand-written
+    /// request files only need to name what they override — but a field
+    /// that is present with the wrong type is an error, never a silent
+    /// default.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<PolicyConfig, String> {
+        use crate::util::json::Json;
+        if !matches!(v, Json::Obj(_)) {
+            return Err("policy config: expected an object".into());
+        }
+        let d = PolicyConfig::default();
+        let num = |key: &str, fallback: f64| -> Result<f64, String> {
+            match v.get(key) {
+                None => Ok(fallback),
+                Some(j) => j
+                    .as_f64()
+                    .ok_or_else(|| format!("policy config: field '{key}' must be a number")),
+            }
+        };
+        Ok(PolicyConfig {
+            stable_strain: num("stable_strain", d.stable_strain)?,
+            trainable_strain: num("trainable_strain", d.trainable_strain)?,
+            retrain_min: num("retrain_min", d.retrain_min as f64)? as usize,
+            retrain_max: num("retrain_max", d.retrain_max as f64)? as usize,
+            adsorption_switch: num("adsorption_switch", d.adsorption_switch as f64)? as usize,
+            assembly_batch: num("assembly_batch", d.assembly_batch as f64)? as usize,
+            assembly_ratio: num("assembly_ratio", d.assembly_ratio as f64)? as usize,
+            optimize_eligible: num("optimize_eligible", d.optimize_eligible)?,
+            lifo_cap: num("lifo_cap", d.lifo_cap as f64)? as usize,
+            retrain_enabled: match v.get("retrain_enabled") {
+                None => d.retrain_enabled,
+                Some(j) => j.as_bool().ok_or_else(|| {
+                    "policy config: field 'retrain_enabled' must be a boolean".to_string()
+                })?,
+            },
+        })
     }
 }
 

@@ -1,16 +1,26 @@
-//! Integration: the campaign service must serve many queued requests
-//! with mixed scheduling policies on ONE shared pool, honor its
-//! driver-side semaphore bound, and leave per-request results exactly
-//! as deterministic as a standalone run.
+//! Integration: the admission-controlled campaign service. Proves the
+//! acceptance criteria of the front-door redesign:
+//!
+//! (a) the bounded queue is never exceeded and each `ShedPolicy` sheds
+//!     its documented victim;
+//! (b) per-tenant quota rejections are deterministic given submission
+//!     order;
+//! (c) a cancelled queued request never runs;
+//! (d) admitted requests stay bit-identical to standalone `run_campaign`
+//!     runs — including with deadlines and shedding active.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use mofa::sim::admission::{RejectReason, RequestStatus, ShedPolicy};
 use mofa::sim::policy::PriorityClasses;
-use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind};
+use mofa::sim::service::{
+    CampaignRequest, CampaignService, PolicyKind, RequestOutcome, ServiceConfig, Ticket,
+};
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
 use mofa::workflow::mofa::{run_campaign, CampaignConfig};
-use mofa::workflow::taskserver::TaskKind;
+use mofa::workflow::taskserver::{Engines, TaskKind};
 use mofa::workflow::thinker::PolicyConfig;
 
 fn config() -> CampaignConfig {
@@ -24,57 +34,90 @@ fn config() -> CampaignConfig {
     }
 }
 
-fn request(policy: PolicyKind) -> CampaignRequest {
-    CampaignRequest {
-        config: config(),
-        engines: build_engines(ModelMode::Surrogate, true).unwrap(),
-        policy,
+fn engines() -> Arc<Engines> {
+    build_engines(ModelMode::Surrogate, true).unwrap()
+}
+
+/// Poll until the ticket reaches `want` (the dispatcher runs on its own
+/// thread, so Queued→Running is asynchronous).
+fn wait_status(t: &Ticket, want: RequestStatus) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while t.poll() != want {
+        assert!(Instant::now() < deadline, "timed out waiting for {want:?}, at {:?}", t.poll());
+        std::thread::sleep(Duration::from_millis(2));
     }
 }
 
+/// (d) — the PR-2 identity guarantee under the new API: mixed-policy
+/// requests served through a loaded, deadline-aware service equal
+/// standalone runs bit for bit; the semaphore bound holds throughout.
 #[test]
-fn service_runs_mixed_policy_requests_under_semaphore_bound() {
+fn served_requests_bit_identical_to_standalone_under_load() {
     let pool = Arc::new(ThreadPool::default_pool());
-    let svc = CampaignService::new(Arc::clone(&pool), 2);
+    let svc = CampaignService::new(
+        Arc::clone(&pool),
+        ServiceConfig::new(2).queue_bound(8).shed(ShedPolicy::DeadlineFirst),
+    );
 
-    // 4 queued requests, 3 distinct policy kinds, max 2 in flight
+    // 4 queued requests, 3 distinct policy kinds, max 2 in flight; the
+    // last request carries a (generous) virtual deadline so admission
+    // metadata is active on the identity path
     let kinds = [
         PolicyKind::Mofa,
         PolicyKind::Priority(PriorityClasses::default()),
         PolicyKind::FairShare { weight: 1, weight_total: 2 },
         PolicyKind::Mofa,
     ];
-    let tickets: Vec<_> = kinds.iter().map(|&k| svc.submit(request(k))).collect();
-    assert_eq!(svc.submitted(), 4);
+    let tickets: Vec<_> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            let mut req = CampaignRequest::new(config())
+                .policy(kind)
+                .tenant(format!("tenant-{i}"))
+                .class(i as u8);
+            if i == 3 {
+                req = req.deadline(1e9);
+            }
+            svc.try_submit(req, engines()).expect("queue bound 8 admits all four")
+        })
+        .collect();
+    assert_eq!(svc.stats().submitted, 4);
 
-    let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
-    assert_eq!(reports.len(), 4);
-    assert_eq!(svc.completed(), 4);
-    assert_eq!(svc.in_flight(), 0);
+    let reports: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().report().expect("no request was shed or cancelled"))
+        .collect();
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.in_flight, 0);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(stats.turnaround_s.len(), 4);
+    assert!(stats.peak_queue_depth <= 8);
 
-    // the semaphore is the whole point: 4 queued requests, never more
-    // than 2 drivers at once
-    let peak = svc.peak_in_flight();
+    // the semaphore is still the core bound: 4 requests, never more than
+    // 2 campaigns in flight
+    let peak = stats.peak_in_flight;
     assert!(peak >= 1 && peak <= 2, "semaphore bound violated: peak {peak}");
 
-    // every policy kind produced a real campaign on the shared pool
+    // every policy kind produced a real campaign with request metadata
     for (kind, r) in kinds.iter().zip(&reports) {
-        assert!(
-            r.thinker.linkers_generated > 0,
-            "{}: no linkers generated",
-            kind.label()
-        );
+        assert!(r.thinker.linkers_generated > 0, "{}: no linkers generated", kind.label());
         assert!(
             r.tasks_done[&TaskKind::ValidateStructure] > 0,
             "{}: no validations ran",
             kind.label()
         );
         assert!(r.final_vtime >= 600.0, "{}: horizon not reached", kind.label());
+        let meta = r.request_meta.as_ref().expect("served reports carry request metadata");
+        assert_eq!(meta.policy, kind.label());
     }
+    assert_eq!(reports[3].request_meta.as_ref().unwrap().deadline, Some(1e9));
 
-    // determinism through the service: a Mofa request equals a standalone
-    // run of the same config, bit for bit on the task trace
-    let solo = run_campaign(config(), build_engines(ModelMode::Surrogate, true).unwrap());
+    // determinism through the front door: a served Mofa request equals a
+    // standalone run of the same config, bit for bit on the task trace
+    let solo = run_campaign(config(), engines());
     let served = &reports[0];
     assert_eq!(served.thinker.linkers_generated, solo.thinker.linkers_generated);
     assert_eq!(served.final_vtime, solo.final_vtime);
@@ -84,47 +127,237 @@ fn service_runs_mixed_policy_requests_under_semaphore_bound() {
         assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
         assert_eq!(a.completed_at.to_bits(), b.completed_at.to_bits());
     }
-    // and the two identical Mofa requests match each other exactly
+    // and the deadline-bearing Mofa request matches the plain one exactly
     assert_eq!(
         reports[0].thinker.db.to_json().to_string(),
         reports[3].thinker.db.to_json().to_string()
     );
 
-    // the half-share tenant can never out-validate the full-share one:
-    // its validate pool is clamped to half the slots
+    // the half-share tenant can never out-validate the full-share one
     let full = reports[0].tasks_done[&TaskKind::ValidateStructure];
     let half = reports[2].tasks_done[&TaskKind::ValidateStructure];
-    assert!(
-        half <= full,
-        "fair-share tenant (weight 1/2) validated {half} > full-share {full}"
-    );
-    // fair-share is a throttle, not a starvation: work still flows
+    assert!(half <= full, "fair-share tenant (weight 1/2) validated {half} > full {full}");
     assert!(half > 0, "fair-share tenant starved");
 }
 
+/// (a) — RejectNewest: FIFO queue, the newcomer bounces at the bound.
+#[test]
+fn reject_newest_bounces_newcomer_at_bound() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(
+        Arc::clone(&pool),
+        ServiceConfig::new(1).queue_bound(2).shed(ShedPolicy::RejectNewest),
+    );
+    // occupy the single driver slot so the queue fills deterministically
+    let blocker = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+    wait_status(&blocker, RequestStatus::Running);
+
+    let q1 = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+    let q2 = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+    assert_eq!(svc.queue_depth(), 2);
+    let err = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap_err();
+    assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+    let stats = svc.stats();
+    assert_eq!((stats.admitted, stats.rejected), (3, 1));
+    assert!(stats.peak_queue_depth <= 2, "queue bound exceeded: {}", stats.peak_queue_depth);
+
+    // drain quickly: unqueue the waiters, let the blocker finish
+    assert_eq!(q1.cancel(), RequestStatus::Cancelled);
+    assert_eq!(q2.cancel(), RequestStatus::Cancelled);
+    assert!(blocker.wait().report().is_some());
+}
+
+/// (a) — DropLowestPriority: the highest-class (lowest-priority) queued
+/// request is the victim; a no-better newcomer bounces instead.
+#[test]
+fn drop_lowest_priority_sheds_documented_victim() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(
+        Arc::clone(&pool),
+        ServiceConfig::new(1).queue_bound(2).shed(ShedPolicy::DropLowestPriority),
+    );
+    let blocker = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+    wait_status(&blocker, RequestStatus::Running);
+
+    let mid = svc.try_submit(CampaignRequest::new(config()).class(1), engines()).unwrap();
+    let low = svc.try_submit(CampaignRequest::new(config()).class(2), engines()).unwrap();
+    // a better-class newcomer evicts the class-2 request…
+    let high = svc.try_submit(CampaignRequest::new(config()).class(0), engines()).unwrap();
+    assert_eq!(low.poll(), RequestStatus::Shed, "class-2 request must be the victim");
+    assert_eq!(mid.poll(), RequestStatus::Queued);
+    assert!(matches!(low.wait(), RequestOutcome::Shed));
+    // …and a tied-or-worse newcomer is rejected (ties favor the queued)
+    let err = svc
+        .try_submit(CampaignRequest::new(config()).class(1), engines())
+        .unwrap_err();
+    assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+    assert_eq!(svc.stats().shed, 1);
+
+    assert_eq!(high.cancel(), RequestStatus::Cancelled);
+    assert_eq!(mid.cancel(), RequestStatus::Cancelled);
+    assert!(blocker.wait().report().is_some());
+}
+
+/// (a) — DeadlineFirst: the latest-deadline queued request is the
+/// overflow victim, and expired-deadline requests shed at pop time
+/// instead of running.
+#[test]
+fn deadline_first_sheds_latest_and_expires_at_pop() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(
+        Arc::clone(&pool),
+        ServiceConfig::new(1).queue_bound(2).shed(ShedPolicy::DeadlineFirst),
+    );
+    // the blocker dispatches at virtual service clock 0 and advances it
+    // to 600 (its campaign duration)
+    let blocker = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+    wait_status(&blocker, RequestStatus::Running);
+
+    // queued: a deadline already tighter than the dispatched work (50 <
+    // 600 — doomed), and a comfortable one
+    let doomed = svc
+        .try_submit(CampaignRequest::new(config()).deadline(50.0), engines())
+        .unwrap();
+    let comfy = svc
+        .try_submit(CampaignRequest::new(config()).deadline(10_000.0), engines())
+        .unwrap();
+    // a later-deadline newcomer is itself the victim → rejected
+    let err = svc
+        .try_submit(CampaignRequest::new(config()).deadline(20_000.0), engines())
+        .unwrap_err();
+    assert_eq!(err, RejectReason::QueueFull { bound: 2 });
+    // an earlier-deadline newcomer evicts the latest queued deadline
+    let urgent = svc
+        .try_submit(CampaignRequest::new(config()).deadline(700.0), engines())
+        .unwrap();
+    assert_eq!(comfy.poll(), RequestStatus::Shed, "latest deadline must be the victim");
+    assert!(matches!(comfy.wait(), RequestOutcome::Shed));
+
+    // drain: the blocker finishes (clock 600); "doomed" (deadline 50)
+    // pops first but is expired → shed without running; "urgent"
+    // (deadline 700 ≥ clock 600) runs to completion
+    assert!(blocker.wait().report().is_some());
+    assert!(matches!(doomed.wait(), RequestOutcome::Shed));
+    let report = match urgent.wait() {
+        RequestOutcome::Done(r) => r,
+        other => panic!("urgent request should run, got {}", other.label()),
+    };
+    assert!(report.thinker.linkers_generated > 0);
+    let stats = svc.stats();
+    assert_eq!(stats.shed, 2, "one eviction + one pop-time expiry");
+    assert_eq!(stats.completed, 2);
+}
+
+/// (b) — per-tenant in-queue quotas: the same submission sequence gets
+/// the same admit/reject pattern on every replay.
+#[test]
+fn tenant_quota_rejections_deterministic_across_replays() {
+    let run_sequence = || -> (Vec<Result<(), RejectReason>>, Vec<Ticket>) {
+        let pool = Arc::new(ThreadPool::default_pool());
+        let svc = CampaignService::new(
+            Arc::clone(&pool),
+            ServiceConfig::new(1).queue_bound(16).tenant_quota(2),
+        );
+        let blocker = svc.try_submit(CampaignRequest::new(config()), engines()).unwrap();
+        wait_status(&blocker, RequestStatus::Running);
+
+        let sequence = ["alice", "alice", "bob", "alice", "bob", "bob", "alice"];
+        let mut outcomes = Vec::new();
+        let mut tickets = vec![blocker];
+        for tenant in sequence {
+            match svc.try_submit(CampaignRequest::new(config()).tenant(tenant), engines()) {
+                Ok(t) => {
+                    outcomes.push(Ok(()));
+                    tickets.push(t);
+                }
+                Err(e) => outcomes.push(Err(e)),
+            }
+        }
+        // tear down fast: unqueue everything still waiting
+        for t in tickets.iter().skip(1) {
+            t.cancel();
+        }
+        drop(svc);
+        (outcomes, tickets)
+    };
+
+    let (first, _) = run_sequence();
+    let (second, _) = run_sequence();
+    assert_eq!(first, second, "admission must be a pure function of submission order");
+    // expected pattern: alice admitted twice then rejected at quota;
+    // bob admitted twice then rejected; the final alice still rejected
+    // (her two requests are still queued behind the blocker)
+    let quota = |tenant: &str| -> Result<(), RejectReason> {
+        Err(RejectReason::TenantOverQuota { tenant: tenant.into(), quota: 2 })
+    };
+    assert_eq!(
+        first,
+        vec![Ok(()), Ok(()), Ok(()), quota("alice"), Ok(()), quota("bob"), quota("alice")]
+    );
+}
+
+/// (c) — a cancelled queued request never runs; cancelling a running
+/// request lets it finish but discards the report.
+#[test]
+fn cancelled_queued_request_never_runs() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(Arc::clone(&pool), ServiceConfig::new(1).queue_bound(4));
+    let blocker = svc
+        .try_submit(CampaignRequest::new(config()).tenant("runner"), engines())
+        .unwrap();
+    wait_status(&blocker, RequestStatus::Running);
+
+    let queued = svc
+        .try_submit(CampaignRequest::new(config()).tenant("victim"), engines())
+        .unwrap();
+    assert_eq!(queued.poll(), RequestStatus::Queued);
+    assert_eq!(queued.cancel(), RequestStatus::Cancelled);
+    assert_eq!(queued.poll(), RequestStatus::Cancelled);
+    assert!(matches!(queued.wait(), RequestOutcome::Cancelled));
+
+    // cancelling the running campaign marks it Cancelled at completion
+    assert_eq!(blocker.cancel(), RequestStatus::Running);
+    assert!(matches!(blocker.wait(), RequestOutcome::Cancelled));
+
+    // ticket settlement happens under the same lock as the counters, so
+    // after both waits the stats are final: nothing completed, `victim`
+    // never ran (its tenant shows one cancellation and zero completions),
+    // and the runner's finished campaign was discarded too
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 0, "no request may complete in this test");
+    assert_eq!(stats.cancelled, 2, "both requests must settle as cancelled");
+    let victim = &stats.per_tenant["victim"];
+    assert_eq!((victim.admitted, victim.cancelled, victim.completed), (1, 1, 0));
+    drop(svc); // must not hang
+}
+
+/// Fair-share quota still holds through the new front door: the
+/// utilization series never shows the validate pool above its half
+/// quota.
 #[test]
 fn fair_share_respects_validate_quota_in_flight() {
-    // run one fair-share campaign and check the utilization series never
-    // shows the validate pool above its ~half quota
     let pool = Arc::new(ThreadPool::default_pool());
-    let svc = CampaignService::new(pool, 1);
+    let svc = CampaignService::new(pool, ServiceConfig::new(1));
     let report = svc
-        .submit(request(PolicyKind::FairShare { weight: 1, weight_total: 2 }))
-        .wait();
+        .try_submit(
+            CampaignRequest::new(config())
+                .policy(PolicyKind::FairShare { weight: 1, weight_total: 2 }),
+            engines(),
+        )
+        .unwrap()
+        .wait()
+        .report()
+        .expect("nothing sheds an uncontended request");
     let total = {
-        // nodes=8 layout: validate pool fraction at quota 1/2 is 0.5
         let l = mofa::workflow::resources::layout(8);
         l.validate_slots
     };
     let quota = (total / 2).max(1);
     for (t, row) in &report.util_series {
-        // WorkerKind::ALL order: Validate is index 1; allow the transient
-        // overshoot headroom documented on FairSharePolicy (chains), which
-        // cannot occur for validate (no follow-up enters the validate pool)
+        // WorkerKind::ALL order: Validate is index 1; the transient
+        // overshoot documented on FairSharePolicy (chains) cannot occur
+        // for validate (no follow-up enters the validate pool)
         let busy = (row[1] * total as f64).round() as usize;
-        assert!(
-            busy <= quota,
-            "t={t}: validate busy {busy} exceeds fair-share quota {quota}"
-        );
+        assert!(busy <= quota, "t={t}: validate busy {busy} exceeds fair-share quota {quota}");
     }
 }

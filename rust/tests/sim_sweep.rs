@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
 use mofa::sim::sweep::{run_sweep, SweepItem};
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
@@ -140,6 +141,33 @@ fn concurrent_sweep_bit_identical_with_retraining_on() {
         let seq = run_campaign(retrain_config(nodes), warmed_engines());
         assert_bit_identical(&concurrent[i], &seq, nodes);
     }
+}
+
+/// The service's request runner is a pure wrapper: a Mofa-policy request
+/// with front-door metadata (tenant, class, deadline) produces the
+/// bit-identical campaign of a plain `run_campaign` — the metadata only
+/// rides along in `request_meta`.
+#[test]
+fn front_door_runner_matches_run_campaign() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let req = CampaignRequest::new(config(8))
+        .policy(PolicyKind::Mofa)
+        .tenant("identity-check")
+        .class(3)
+        .deadline(1e9);
+    let front = run_campaign_request(
+        req,
+        build_engines(ModelMode::Surrogate, true).unwrap(),
+        &pool,
+    );
+    let solo = run_campaign(config(8), build_engines(ModelMode::Surrogate, true).unwrap());
+    assert_bit_identical(&front, &solo, 8);
+    let meta = front.request_meta.as_ref().expect("front-door reports carry metadata");
+    assert_eq!(meta.tenant, "identity-check");
+    assert_eq!(meta.class, 3);
+    assert_eq!(meta.deadline, Some(1e9));
+    assert_eq!(meta.policy, "mofa");
+    assert!(solo.request_meta.is_none(), "standalone runs carry no request metadata");
 }
 
 #[test]
