@@ -29,11 +29,32 @@
 //! cancelled, goodput, p50/p99 turnaround) is printed. Example:
 //!
 //!     cargo run --release --example full_campaign -- --service-load 12,4,deadline-first
+//!
+//! **Checkpoint/replay** (the CI determinism gate drives these):
+//!
+//!     # run to a virtual-time barrier (default: half the duration) and
+//!     # write the checkpoint
+//!     full_campaign -- 8 0.05 --surrogate --checkpoint ckpt.json [--barrier S]
+//!     # resume it in a fresh process and emit the canonical report
+//!     full_campaign -- 8 0.05 --surrogate --resume ckpt.json --canonical-out resumed.json
+//!     # clean end-to-end run for comparison — resumed.json and clean.json
+//!     # must be byte-identical
+//!     full_campaign -- 8 0.05 --surrogate --canonical-out clean.json
+//!
+//! `--surrogate` swaps the PJRT stack for the fast procedural engines (no
+//! artifacts needed — what CI uses); `--resume` combined with
+//! `--checkpoint` resumes to the next barrier and writes a *chained*
+//! checkpoint. The canonical report holds every deterministic field of
+//! the campaign (wallclock excluded), so a byte diff proves bit-identical
+//! replay.
 
 use std::sync::Arc;
 
 use mofa::hmof::HmofReference;
 use mofa::sim::admission::ShedPolicy;
+use mofa::sim::checkpoint::{
+    canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
+};
 use mofa::sim::policy::PriorityClasses;
 use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind, ServiceConfig};
 use mofa::sim::sweep::{run_sweep, SweepItem};
@@ -237,6 +258,116 @@ fn service_load_demo(spec: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Remove a boolean flag from the arg list; true when present.
+fn take_flag(args: &mut Vec<String>, name: &str) -> bool {
+    match args.iter().position(|a| a == name) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Remove `name VALUE` from the arg list; the value when present.
+fn take_value(args: &mut Vec<String>, name: &str) -> anyhow::Result<Option<String>> {
+    match args.iter().position(|a| a == name) {
+        Some(i) => {
+            args.remove(i);
+            if i < args.len() {
+                Ok(Some(args.remove(i)))
+            } else {
+                anyhow::bail!("{name} needs a value")
+            }
+        }
+        None => Ok(None),
+    }
+}
+
+/// Checkpoint/resume/canonical-report flow: one campaign, run through the
+/// deterministic request path (`sim::checkpoint`). This is the code path
+/// the CI `determinism` job byte-compares.
+struct CheckpointFlow {
+    surrogate: bool,
+    checkpoint_path: Option<String>,
+    resume_path: Option<String>,
+    barrier_s: Option<f64>,
+    canonical_out: Option<String>,
+}
+
+fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Result<()> {
+    let engines = if flow.surrogate {
+        build_quick_surrogate_engines()
+    } else {
+        build_engines(ModelMode::Hlo, true)?
+    };
+    let duration_s = hours * 3600.0;
+    let config = CampaignConfig {
+        nodes,
+        duration_s,
+        seed: 7,
+        policy: PolicyConfig { retrain_min: 32, adsorption_switch: 16, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 60.0,
+    };
+    let barrier = flow.barrier_s.unwrap_or(duration_s / 2.0);
+    let pool = Arc::new(ThreadPool::default_pool());
+    let outcome = match &flow.resume_path {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let json = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("unreadable checkpoint {path}: {e}"))?;
+            // with --checkpoint too, resume only up to the next barrier
+            // and write a chained checkpoint; otherwise run to completion
+            let next_barrier = if flow.checkpoint_path.is_some() {
+                // the default barrier (duration/2) is where the first
+                // checkpoint already paused — chaining would make zero
+                // progress, so demand an explicit later barrier
+                if flow.barrier_s.is_none() {
+                    anyhow::bail!(
+                        "--resume with --checkpoint needs an explicit --barrier later than \
+                         the checkpoint's pause point"
+                    );
+                }
+                barrier
+            } else {
+                f64::INFINITY
+            };
+            println!("resuming campaign from {path}...");
+            resume_request(&json, engines, &pool, next_barrier)
+                .map_err(|e| anyhow::anyhow!("cannot resume {path}: {e}"))?
+        }
+        None => {
+            let vt = if flow.checkpoint_path.is_some() { barrier } else { f64::INFINITY };
+            run_request_to_barrier(CampaignRequest::new(config), engines, &pool, vt)
+        }
+    };
+    match outcome {
+        CampaignRunOutcome::Checkpointed(ckpt) => {
+            let path = flow
+                .checkpoint_path
+                .ok_or_else(|| anyhow::anyhow!("paused without --checkpoint (internal error)"))?;
+            std::fs::write(&path, ckpt.to_string())?;
+            println!("checkpoint written to {path} (barrier {barrier:.0} s virtual)");
+        }
+        CampaignRunOutcome::Done(report) => {
+            if flow.checkpoint_path.is_some() && flow.resume_path.is_none() {
+                anyhow::bail!(
+                    "campaign drained before the {barrier:.0} s barrier — nothing to checkpoint \
+                     (pick --barrier below the campaign duration)"
+                );
+            }
+            let href = HmofReference::generate(0);
+            print_report(&report, hours, &href);
+            if let Some(path) = &flow.canonical_out {
+                std::fs::write(path, canonical_report_json(&report).to_string())?;
+                println!("canonical report written to {path}");
+            }
+        }
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     // --service-load OFFERED,BOUND,SHED: run the overload demo and exit
@@ -247,6 +378,18 @@ fn main() -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--service-load needs OFFERED,BOUND,SHED"))?;
         return service_load_demo(&spec);
     }
+    // checkpoint/replay flags (see the module docs); any of them routes
+    // the run through the deterministic single-campaign flow
+    let surrogate = take_flag(&mut args, "--surrogate");
+    let checkpoint_path = take_value(&mut args, "--checkpoint")?;
+    let resume_path = take_value(&mut args, "--resume")?;
+    let barrier_s = match take_value(&mut args, "--barrier")? {
+        Some(s) => Some(
+            s.parse::<f64>().map_err(|_| anyhow::anyhow!("--barrier: bad seconds value {s:?}"))?,
+        ),
+        None => None,
+    };
+    let canonical_out = take_value(&mut args, "--canonical-out")?;
     // --service [N]: serve campaigns through a CampaignService instead of
     // a one-shot sweep; N bounds concurrent in-flight campaigns
     let mut service_max: Option<usize> = None;
@@ -281,13 +424,33 @@ fn main() -> anyhow::Result<()> {
     };
     let hours: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
 
+    if checkpoint_path.is_some() || resume_path.is_some() || canonical_out.is_some() {
+        println!("== MOFA full campaign (checkpoint/replay flow) ==");
+        return checkpoint_flow(
+            node_counts[0],
+            hours,
+            CheckpointFlow { surrogate, checkpoint_path, resume_path, barrier_s, canonical_out },
+        );
+    }
+    if barrier_s.is_some() {
+        anyhow::bail!("--barrier only applies together with --checkpoint or --resume");
+    }
+
     println!("== MOFA full campaign (three-layer E2E) ==");
-    println!("loading AOT artifacts + PJRT runtime...");
+    if surrogate {
+        println!("using the procedural surrogate engine stack (--surrogate)");
+    } else {
+        println!("loading AOT artifacts + PJRT runtime...");
+    }
 
     let mut items = Vec::new();
     for &nodes in &node_counts {
         // one engine stack per campaign: retraining installs new weights
-        let engines = build_engines(ModelMode::Hlo, true)?;
+        let engines = if surrogate {
+            build_quick_surrogate_engines()
+        } else {
+            build_engines(ModelMode::Hlo, true)?
+        };
         items.push(SweepItem {
             config: CampaignConfig {
                 nodes,

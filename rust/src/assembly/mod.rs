@@ -30,6 +30,40 @@ pub struct AssembledMof {
     pub linker_strain: f64,
 }
 
+impl AssembledMof {
+    /// Serialize for campaign checkpoints.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("framework", self.framework.to_json()),
+            ("family", Json::Str(self.family.label().to_string())),
+            ("linker_key", Json::Str(self.linker_key.clone())),
+            ("node_label", Json::Str(self.node_label.to_string())),
+            ("model_version", Json::u64_str(self.model_version)),
+            ("linker_strain", Json::Num(self.linker_strain)),
+        ])
+    }
+
+    /// Parse the representation written by [`AssembledMof::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<AssembledMof, String> {
+        let fam = v.req("family")?.as_str().ok_or("mof: 'family' must be a string")?;
+        let node = v.req("node_label")?.as_str().ok_or("mof: 'node_label' must be a string")?;
+        Ok(AssembledMof {
+            framework: crate::chem::cell::Framework::from_json(v.req("framework")?)?,
+            family: Family::from_label(fam).ok_or_else(|| format!("mof: unknown family '{fam}'"))?,
+            linker_key: v
+                .req("linker_key")?
+                .as_str()
+                .ok_or("mof: 'linker_key' must be a string")?
+                .to_string(),
+            node_label: nodes::static_label(node)
+                .ok_or_else(|| format!("mof: unknown node label '{node}'"))?,
+            model_version: v.req("model_version")?.as_u64().ok_or("mof: bad model_version")?,
+            linker_strain: v.req("linker_strain")?.as_f64().ok_or("mof: bad linker_strain")?,
+        })
+    }
+}
+
 /// Reasons assembly can fail.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AssemblyError {

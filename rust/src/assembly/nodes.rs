@@ -34,6 +34,16 @@ pub struct NodeTemplate {
     pub label: &'static str,
 }
 
+/// Resolve a node label string back to its canonical `&'static str`
+/// (checkpoint restore: `AssembledMof::node_label` is a static str).
+pub fn static_label(s: &str) -> Option<&'static str> {
+    match s {
+        "Zn4O" => Some("Zn4O"),
+        "ZnN6" => Some("ZnN6"),
+        _ => None,
+    }
+}
+
 const AXES: [V3; 6] = [
     [1.0, 0.0, 0.0],
     [-1.0, 0.0, 0.0],

@@ -132,6 +132,41 @@ impl Framework {
         Framework { cell, basis }
     }
 
+    /// Serialize for campaign checkpoints: the cell matrix rows plus the
+    /// basis molecule. `hinv`/ortho caches are rebuilt on restore.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "cell",
+                Json::Arr(
+                    self.cell
+                        .h
+                        .iter()
+                        .map(|row| Json::Arr(row.iter().map(|&x| Json::Num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("basis", self.basis.to_json()),
+        ])
+    }
+
+    /// Parse the representation written by [`Framework::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Framework, String> {
+        let rows = v.req("cell")?.as_arr().ok_or("framework: 'cell' must be an array")?;
+        if rows.len() != 3 {
+            return Err(format!("framework: cell needs 3 rows, got {}", rows.len()));
+        }
+        let mut h = [[0.0; 3]; 3];
+        for (i, row) in rows.iter().enumerate() {
+            let row = row.as_arr().filter(|r| r.len() == 3).ok_or("framework: bad cell row")?;
+            for (j, x) in row.iter().enumerate() {
+                h[i][j] = x.as_f64().ok_or("framework: non-numeric cell entry")?;
+            }
+        }
+        Ok(Framework::new(Cell::new(h), Molecule::from_json(v.req("basis")?)?))
+    }
+
     /// Atom count in the basis.
     pub fn len(&self) -> usize {
         self.basis.len()

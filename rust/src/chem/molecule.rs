@@ -23,6 +23,27 @@ impl BondOrder {
             BondOrder::Aromatic => 1.5,
         }
     }
+
+    /// Short code used by the checkpoint codec.
+    pub fn code(self) -> &'static str {
+        match self {
+            BondOrder::Single => "1",
+            BondOrder::Double => "2",
+            BondOrder::Triple => "3",
+            BondOrder::Aromatic => "ar",
+        }
+    }
+
+    /// Inverse of [`BondOrder::code`].
+    pub fn from_code(s: &str) -> Option<BondOrder> {
+        match s {
+            "1" => Some(BondOrder::Single),
+            "2" => Some(BondOrder::Double),
+            "3" => Some(BondOrder::Triple),
+            "ar" => Some(BondOrder::Aromatic),
+            _ => None,
+        }
+    }
 }
 
 /// One atom: element + Cartesian position (Å) + partial charge (e).
@@ -116,6 +137,81 @@ impl Molecule {
             d[b.j] += 1;
         }
         d
+    }
+
+    /// Serialize for campaign checkpoints: atoms as `[symbol, x, y, z, q]`
+    /// rows, bonds as `[i, j, code]` rows. Coordinates round-trip
+    /// bit-exactly through [`crate::util::json`]'s shortest-form floats.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "atoms",
+                Json::Arr(
+                    self.atoms
+                        .iter()
+                        .map(|a| {
+                            Json::Arr(vec![
+                                Json::Str(a.element.symbol().to_string()),
+                                Json::Num(a.pos[0]),
+                                Json::Num(a.pos[1]),
+                                Json::Num(a.pos[2]),
+                                Json::Num(a.charge),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "bonds",
+                Json::Arr(
+                    self.bonds
+                        .iter()
+                        .map(|b| {
+                            Json::Arr(vec![
+                                Json::Num(b.i as f64),
+                                Json::Num(b.j as f64),
+                                Json::Str(b.order.code().to_string()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the representation written by [`Molecule::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Molecule, String> {
+        let mut mol = Molecule::new();
+        let atoms = v.req("atoms")?.as_arr().ok_or("molecule: 'atoms' must be an array")?;
+        for row in atoms {
+            let row = row.as_arr().filter(|r| r.len() == 5).ok_or("molecule: bad atom row")?;
+            let sym = row[0].as_str().ok_or("molecule: atom symbol must be a string")?;
+            let element = crate::chem::elements::Element::from_symbol(sym)
+                .ok_or_else(|| format!("molecule: unknown element '{sym}'"))?;
+            let mut pos = [0.0; 3];
+            for (c, slot) in pos.iter_mut().enumerate() {
+                *slot = row[c + 1].as_f64().ok_or("molecule: non-numeric coordinate")?;
+            }
+            let idx = mol.add_atom(element, pos);
+            mol.atoms[idx].charge = row[4].as_f64().ok_or("molecule: non-numeric charge")?;
+        }
+        let bonds = v.req("bonds")?.as_arr().ok_or("molecule: 'bonds' must be an array")?;
+        for row in bonds {
+            let row = row.as_arr().filter(|r| r.len() == 3).ok_or("molecule: bad bond row")?;
+            let i = row[0].as_usize().ok_or("molecule: bad bond index")?;
+            let j = row[1].as_usize().ok_or("molecule: bad bond index")?;
+            let code = row[2].as_str().ok_or("molecule: bond order must be a string")?;
+            let order = BondOrder::from_code(code)
+                .ok_or_else(|| format!("molecule: unknown bond order '{code}'"))?;
+            if i == j || i >= mol.atoms.len() || j >= mol.atoms.len() {
+                return Err(format!("molecule: bond ({i}, {j}) out of range"));
+            }
+            // push directly: add_bond normalizes i<j, but checkpointed
+            // bonds are already normalized and must restore verbatim
+            mol.bonds.push(Bond { i, j, order });
+        }
+        Ok(mol)
     }
 
     /// Connected components (atom index -> component id), count.

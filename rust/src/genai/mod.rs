@@ -32,6 +32,34 @@ impl Family {
             Family::Bzn => "BZN",
         }
     }
+
+    /// Inverse of [`Family::label`] (checkpoint codec).
+    pub fn from_label(s: &str) -> Option<Family> {
+        match s {
+            "BCA" => Some(Family::Bca),
+            "BZN" => Some(Family::Bzn),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize a flat `f32` tensor (checkpoint codec; `f32 → f64` widening
+/// is exact, so values round-trip bit-identically).
+fn f32s_to_json(xs: &[f32]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32s_from_json(v: &crate::util::json::Json, what: &str) -> Result<Vec<f32>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: expected an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| format!("{what}: non-numeric entry"))
+        })
+        .collect()
 }
 
 /// A raw generated linker (model output after decoding, before processing).
@@ -45,6 +73,45 @@ pub struct GenLinker {
     pub model_version: u64,
 }
 
+impl GenLinker {
+    /// Serialize for campaign checkpoints.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("molecule", self.molecule.to_json()),
+            ("family", Json::Str(self.family.label().to_string())),
+            (
+                "anchors",
+                Json::Arr(vec![
+                    Json::Num(self.anchors[0] as f64),
+                    Json::Num(self.anchors[1] as f64),
+                ]),
+            ),
+            ("model_version", Json::u64_str(self.model_version)),
+        ])
+    }
+
+    /// Parse the representation written by [`GenLinker::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<GenLinker, String> {
+        let fam = v.req("family")?.as_str().ok_or("linker: 'family' must be a string")?;
+        let anchors = v
+            .req("anchors")?
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or("linker: bad anchors")?;
+        Ok(GenLinker {
+            molecule: Molecule::from_json(v.req("molecule")?)?,
+            family: Family::from_label(fam)
+                .ok_or_else(|| format!("linker: unknown family '{fam}'"))?,
+            anchors: [
+                anchors[0].as_usize().ok_or("linker: bad anchor index")?,
+                anchors[1].as_usize().ok_or("linker: bad anchor index")?,
+            ],
+            model_version: v.req("model_version")?.as_u64().ok_or("linker: bad model_version")?,
+        })
+    }
+}
+
 /// Training example for retraining: padded tensors in model layout.
 #[derive(Clone, Debug)]
 pub struct TrainExample {
@@ -54,6 +121,26 @@ pub struct TrainExample {
     pub h: Vec<f32>,
     /// (N,1) mask
     pub mask: Vec<f32>,
+}
+
+impl TrainExample {
+    /// Serialize for campaign checkpoints.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("x", f32s_to_json(&self.x)),
+            ("h", f32s_to_json(&self.h)),
+            ("mask", f32s_to_json(&self.mask)),
+        ])
+    }
+
+    /// Parse the representation written by [`TrainExample::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<TrainExample, String> {
+        Ok(TrainExample {
+            x: f32s_from_json(v.req("x")?, "example x")?,
+            h: f32s_from_json(v.req("h")?, "example h")?,
+            mask: f32s_from_json(v.req("mask")?, "example mask")?,
+        })
+    }
 }
 
 /// An immutable snapshot of generator parameters + version.
@@ -74,6 +161,26 @@ pub struct ModelSnapshot {
     pub params: Arc<Vec<f32>>,
     /// model version the params correspond to (retrain generation count)
     pub version: u64,
+}
+
+impl ModelSnapshot {
+    /// Serialize for campaign checkpoints: the full flat weight vector
+    /// plus the version (the version string alone is not enough — resumed
+    /// generate tasks must execute from the exact submit-time weights).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("params", f32s_to_json(&self.params)),
+            ("version", crate::util::json::Json::u64_str(self.version)),
+        ])
+    }
+
+    /// Parse the representation written by [`ModelSnapshot::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<ModelSnapshot, String> {
+        Ok(ModelSnapshot {
+            params: Arc::new(f32s_from_json(v.req("params")?, "snapshot params")?),
+            version: v.req("version")?.as_u64().ok_or("snapshot: bad version")?,
+        })
+    }
 }
 
 /// Abstract generator: one batch of linkers per call.

@@ -38,6 +38,49 @@ pub struct ProcessedLinker {
     pub strain_energy: f64,
 }
 
+impl ProcessedLinker {
+    /// Serialize for campaign checkpoints.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("molecule", self.molecule.to_json()),
+            ("family", Json::Str(self.family.label().to_string())),
+            (
+                "dummy_sites",
+                Json::Arr(vec![
+                    Json::Num(self.dummy_sites[0] as f64),
+                    Json::Num(self.dummy_sites[1] as f64),
+                ]),
+            ),
+            ("key", Json::Str(self.key.clone())),
+            ("model_version", Json::u64_str(self.model_version)),
+            ("strain_energy", Json::Num(self.strain_energy)),
+        ])
+    }
+
+    /// Parse the representation written by [`ProcessedLinker::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<ProcessedLinker, String> {
+        let fam = v.req("family")?.as_str().ok_or("processed: 'family' must be a string")?;
+        let sites = v
+            .req("dummy_sites")?
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or("processed: bad dummy_sites")?;
+        Ok(ProcessedLinker {
+            molecule: Molecule::from_json(v.req("molecule")?)?,
+            family: Family::from_label(fam)
+                .ok_or_else(|| format!("processed: unknown family '{fam}'"))?,
+            dummy_sites: [
+                sites[0].as_usize().ok_or("processed: bad dummy index")?,
+                sites[1].as_usize().ok_or("processed: bad dummy index")?,
+            ],
+            key: v.req("key")?.as_str().ok_or("processed: 'key' must be a string")?.to_string(),
+            model_version: v.req("model_version")?.as_u64().ok_or("processed: bad version")?,
+            strain_energy: v.req("strain_energy")?.as_f64().ok_or("processed: bad strain")?,
+        })
+    }
+}
+
 /// Reason a linker was rejected (for workflow metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RejectReason {

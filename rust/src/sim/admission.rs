@@ -21,6 +21,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::json::Json;
 use crate::workflow::queues::BoundedScoredQueue;
 
 /// Lifecycle of one service request (docs/ARCHITECTURE.md §2 has the
@@ -323,6 +324,88 @@ impl<T> AdmissionQueue<T> {
     /// Requests a tenant currently has in the queue.
     pub fn queued_for(&self, tenant: &str) -> usize {
         self.tenant_queued.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Iterate `(handle, &payload)` over queued entries in arbitrary
+    /// order (checkpoint/resume bookkeeping).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &T)> {
+        self.q.iter().map(|(_, seq, queued)| (seq, &queued.item))
+    }
+
+    /// Serialize the admission state for service checkpoints: the
+    /// configuration, the **virtual deadline clock**, and the bounded
+    /// queue by entry (each with its admission handle, tenant, deadline
+    /// and declared cost). Per-tenant in-queue counts are derived state
+    /// and are recomputed on restore.
+    pub fn to_json_with(&self, mut ser: impl FnMut(&T) -> Json) -> Json {
+        Json::obj(vec![
+            ("bound", Json::Num(self.cfg.bound as f64)),
+            ("shed", Json::Str(self.cfg.shed.label().to_string())),
+            (
+                "tenant_quota",
+                self.cfg.tenant_quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+            ),
+            ("clock", Json::Num(self.clock)),
+            (
+                "queue",
+                self.q.to_json_with(|queued| {
+                    Json::obj(vec![
+                        ("tenant", Json::Str(queued.tenant.clone())),
+                        (
+                            "deadline",
+                            queued.deadline.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("cost", Json::Num(queued.cost)),
+                        ("item", ser(&queued.item)),
+                    ])
+                }),
+            ),
+        ])
+    }
+
+    /// Rebuild the queue written by [`AdmissionQueue::to_json_with`].
+    pub fn from_json_with(
+        v: &Json,
+        mut de: impl FnMut(&Json) -> Result<T, String>,
+    ) -> Result<AdmissionQueue<T>, String> {
+        let shed = v.req("shed")?.as_str().ok_or("admission: bad shed policy")?;
+        let cfg = AdmissionConfig {
+            bound: v.req("bound")?.as_usize().ok_or("admission: bad bound")?,
+            shed: ShedPolicy::from_label(shed)
+                .ok_or_else(|| format!("admission: unknown shed policy '{shed}'"))?,
+            tenant_quota: match v.req("tenant_quota")? {
+                Json::Null => None,
+                j => Some(j.as_usize().ok_or("admission: bad tenant_quota")?),
+            },
+        };
+        let q = BoundedScoredQueue::from_json_with(v.req("queue")?, |e| {
+            Ok(Queued {
+                tenant: e.req("tenant")?.as_str().ok_or("admission: bad tenant")?.to_string(),
+                deadline: match e.req("deadline")? {
+                    Json::Null => None,
+                    j => Some(j.as_f64().ok_or("admission: bad deadline")?),
+                },
+                cost: e.req("cost")?.as_f64().ok_or("admission: bad cost")?,
+                item: de(e.req("item")?)?,
+            })
+        })?;
+        if q.bound() != cfg.bound {
+            return Err(format!(
+                "admission: queue bound {} does not match config bound {}",
+                q.bound(),
+                cfg.bound
+            ));
+        }
+        let mut tenant_queued = BTreeMap::new();
+        for (_, _, queued) in q.iter() {
+            *tenant_queued.entry(queued.tenant.clone()).or_insert(0) += 1;
+        }
+        Ok(AdmissionQueue {
+            clock: v.req("clock")?.as_f64().ok_or("admission: bad clock")?,
+            cfg,
+            q,
+            tenant_queued,
+        })
     }
 }
 

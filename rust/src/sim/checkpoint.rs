@@ -1,0 +1,508 @@
+//! Campaign **checkpoint/replay**: serialize the full campaign state at a
+//! virtual-time barrier and resume it **bit-identically** in a fresh
+//! process.
+//!
+//! MOFA's production campaigns outlive job-queue time limits and node
+//! failures; the online-learning loop only pays off if a campaign can
+//! outlive one process. This module is the persistence layer for that:
+//!
+//! * [`run_request_to_barrier`] runs a [`CampaignRequest`] exactly like
+//!   [`crate::sim::service::run_campaign_request`] does, but pauses the
+//!   event loop at a virtual-time barrier (every event with `t ≤ barrier`
+//!   processed, nothing new dispatched past it; in-flight real compute
+//!   finishes before the checkpoint is written).
+//! * The checkpoint captures the scheduler (virtual clock, event heap,
+//!   in-flight payloads, pending queues, cluster busy-time integrals, RNG
+//!   streams), the full Thinker, per-policy decorator state, and the
+//!   generator's current [`ModelSnapshot`] — all through
+//!   [`crate::util::json`].
+//! * [`resume_request`] rebuilds everything and continues the **identical
+//!   event sequence**: task outcomes are pure functions of
+//!   `(payload, seed)`, so re-executing the checkpointed in-flight
+//!   payloads reproduces the exact completions the paused process
+//!   discarded. The final [`CampaignReport`] is byte-for-byte the one the
+//!   uninterrupted run produces (`tests/checkpoint_replay.rs`, and the CI
+//!   `determinism` job enforces it end-to-end on every PR).
+//!
+//! Checkpoint files carry a [`FORMAT_VERSION`]; restoring a mismatched
+//! version (or a service checkpoint where a campaign one is expected) is a
+//! typed [`CheckpointError`], never a panic or a silent default. Header
+//! fields are closed: an unknown key is rejected, so a truncated or
+//! hand-edited file fails loudly instead of resuming from garbage.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::genai::ModelSnapshot;
+use crate::sim::policy::{FairSharePolicy, PriorityPolicy};
+use crate::sim::scheduler::{BarrierOutcome, Policy, Scheduler, SimOutcome, SimParams};
+use crate::sim::service::{CampaignRequest, PolicyKind};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::mofa::{
+    assemble_report, CampaignConfig, CampaignReport, MofaPolicy, RequestMeta,
+};
+use crate::workflow::resources::Cluster;
+use crate::workflow::taskserver::Engines;
+use crate::workflow::thinker::Thinker;
+
+/// Version stamped into every checkpoint. Bump on any layout change; the
+/// loader refuses other versions with [`CheckpointError::FormatMismatch`].
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Why a checkpoint could not be restored.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckpointError {
+    /// written by a different checkpoint format version
+    FormatMismatch {
+        /// version found in the file
+        found: u32,
+        /// version this build reads
+        expected: u32,
+    },
+    /// a checkpoint of the wrong kind (e.g. service vs campaign)
+    WrongKind {
+        /// kind found in the file
+        found: String,
+        /// kind the caller needed
+        expected: &'static str,
+    },
+    /// structurally invalid checkpoint content
+    Malformed(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::FormatMismatch { found, expected } => write!(
+                f,
+                "checkpoint format {found} is not readable by this build (expected {expected})"
+            ),
+            CheckpointError::WrongKind { found, expected } => {
+                write!(f, "checkpoint kind '{found}' where a '{expected}' checkpoint was expected")
+            }
+            CheckpointError::Malformed(msg) => write!(f, "malformed checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<String> for CheckpointError {
+    fn from(msg: String) -> Self {
+        CheckpointError::Malformed(msg)
+    }
+}
+
+/// The versioned header every checkpoint file starts with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointHeader {
+    /// checkpoint format version ([`FORMAT_VERSION`] at write time)
+    pub format: u32,
+    /// what the file contains: `"campaign"` or `"service"`
+    pub kind: String,
+    /// virtual time of the barrier the checkpoint was taken at
+    pub created_vt: f64,
+}
+
+impl CheckpointHeader {
+    /// A header for a fresh checkpoint of the given kind.
+    pub fn new(kind: &str, created_vt: f64) -> CheckpointHeader {
+        CheckpointHeader { format: FORMAT_VERSION, kind: kind.to_string(), created_vt }
+    }
+
+    /// Serialize the header.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Num(self.format as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("created_vt", Json::Num(self.created_vt)),
+        ])
+    }
+
+    /// Parse and validate a header: the format version is checked first
+    /// (a future version may legitimately carry fields this build has
+    /// never heard of), then **unknown fields are rejected** — a header
+    /// that doesn't parse cleanly must never silently default.
+    pub fn parse(v: &Json) -> Result<CheckpointHeader, CheckpointError> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| CheckpointError::Malformed("header: expected an object".into()))?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_f64)
+            .filter(|f| f.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(f))
+            .ok_or_else(|| CheckpointError::Malformed("header: missing/bad 'format'".into()))?
+            as u32;
+        if format != FORMAT_VERSION {
+            return Err(CheckpointError::FormatMismatch { found: format, expected: FORMAT_VERSION });
+        }
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "format" | "kind" | "created_vt") {
+                return Err(CheckpointError::Malformed(format!("header: unknown field '{key}'")));
+            }
+        }
+        Ok(CheckpointHeader {
+            format,
+            kind: v
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| CheckpointError::Malformed("header: missing/bad 'kind'".into()))?
+                .to_string(),
+            created_vt: v.get("created_vt").and_then(Json::as_f64).ok_or_else(|| {
+                CheckpointError::Malformed("header: missing/bad 'created_vt'".into())
+            })?,
+        })
+    }
+
+    /// Require the header to describe a checkpoint of `expected` kind.
+    pub fn expect_kind(&self, expected: &'static str) -> Result<(), CheckpointError> {
+        if self.kind == expected {
+            Ok(())
+        } else {
+            Err(CheckpointError::WrongKind { found: self.kind.clone(), expected })
+        }
+    }
+}
+
+/// How a barrier-bounded campaign run ended.
+pub enum CampaignRunOutcome {
+    /// the campaign drained before the barrier: its report
+    Done(Box<CampaignReport>),
+    /// the barrier was reached: the serialized checkpoint (write it to
+    /// disk with `to_string()`, restore with [`resume_request`])
+    Checkpointed(Box<Json>),
+}
+
+impl CampaignRunOutcome {
+    /// The report, when the run finished.
+    pub fn report(self) -> Option<CampaignReport> {
+        match self {
+            CampaignRunOutcome::Done(r) => Some(*r),
+            CampaignRunOutcome::Checkpointed(_) => None,
+        }
+    }
+
+    /// The checkpoint, when the barrier was reached.
+    pub fn checkpoint(self) -> Option<Json> {
+        match self {
+            CampaignRunOutcome::Checkpointed(j) => Some(*j),
+            CampaignRunOutcome::Done(_) => None,
+        }
+    }
+}
+
+/// Request context threaded through a barrier-bounded run: everything a
+/// report or a checkpoint needs besides the live scheduler/policy state.
+struct RunCtx {
+    config: CampaignConfig,
+    policy: PolicyKind,
+    tenant: String,
+    class: u8,
+    deadline: Option<f64>,
+    engines: Arc<Engines>,
+    t_wall: Instant,
+}
+
+fn finish_report(ctx: RunCtx, thinker: Thinker, sim: SimOutcome) -> CampaignRunOutcome {
+    let wallclock = ctx.t_wall.elapsed().as_secs_f64();
+    let mut report = assemble_report(ctx.config, thinker, sim, wallclock);
+    report.request_meta = Some(RequestMeta {
+        tenant: ctx.tenant,
+        class: ctx.class,
+        deadline: ctx.deadline,
+        policy: ctx.policy.label(),
+        turnaround_s: wallclock,
+    });
+    CampaignRunOutcome::Done(Box::new(report))
+}
+
+fn assemble_checkpoint(
+    ctx: &RunCtx,
+    fair_share_outstanding: Option<[usize; 5]>,
+    model: &ModelSnapshot,
+    created_vt: f64,
+    scheduler: Json,
+    mofa: Json,
+) -> Json {
+    Json::obj(vec![
+        ("header", CheckpointHeader::new("campaign", created_vt).to_json()),
+        ("config", ctx.config.to_json()),
+        ("policy", ctx.policy.to_json()),
+        (
+            "request",
+            Json::obj(vec![
+                ("tenant", Json::Str(ctx.tenant.clone())),
+                ("class", Json::Num(ctx.class as f64)),
+                ("deadline", ctx.deadline.map(Json::Num).unwrap_or(Json::Null)),
+            ]),
+        ),
+        ("model", model.to_json()),
+        (
+            "fair_share_outstanding",
+            fair_share_outstanding
+                .map(|o| Json::Arr(o.iter().map(|&n| Json::Num(n as f64)).collect()))
+                .unwrap_or(Json::Null),
+        ),
+        ("scheduler", scheduler),
+        ("mofa", mofa),
+    ])
+}
+
+/// Slot totals per worker kind for a node count, in
+/// [`crate::workflow::resources::WorkerKind::ALL`] order (the fair-share
+/// decorator's quota basis).
+fn slot_totals(layout: crate::workflow::resources::Layout) -> [usize; 5] {
+    [
+        layout.generator_slots,
+        layout.validate_slots,
+        layout.cpu_slots,
+        layout.optimize_slots,
+        layout.trainer_slots,
+    ]
+}
+
+/// The one barrier-run driver every `PolicyKind` shares: run `p` to the
+/// barrier, then either assemble the report (`unwrap` recovers the base
+/// [`MofaPolicy`] from the decorator) or the checkpoint (`outstanding`
+/// extracts fair-share decorator state, `None` for the rest). Keeping
+/// this single keeps checkpoint contents identical across policies.
+fn drive<P: Policy>(
+    sched: Scheduler,
+    mut p: P,
+    barrier_vt: f64,
+    ctx: RunCtx,
+    unwrap: impl FnOnce(P) -> MofaPolicy,
+    outstanding: impl FnOnce(&P) -> Option<[usize; 5]>,
+) -> CampaignRunOutcome {
+    match sched.checkpoint_at(&mut p, barrier_vt) {
+        BarrierOutcome::Finished(sim) => {
+            let thinker = unwrap(p).into_thinker();
+            finish_report(ctx, thinker, sim)
+        }
+        BarrierOutcome::Paused(s) => {
+            let vt = s.vtime();
+            let fair = outstanding(&p);
+            let model = ctx.engines.generator.snapshot();
+            CampaignRunOutcome::Checkpointed(Box::new(assemble_checkpoint(
+                &ctx,
+                fair,
+                &model,
+                vt,
+                s.checkpoint_json(),
+                unwrap(p).to_json(),
+            )))
+        }
+    }
+}
+
+/// Run one campaign request up to a virtual-time barrier (pass
+/// `f64::INFINITY` to run to completion — then this is exactly
+/// [`crate::sim::service::run_campaign_request`]). When the barrier is
+/// reached the returned checkpoint captures campaign, scheduler, policy
+/// and model state; [`resume_request`] continues it bit-identically.
+pub fn run_request_to_barrier(
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+    barrier_vt: f64,
+) -> CampaignRunOutcome {
+    let t_wall = Instant::now();
+    let CampaignRequest { config, policy, tenant, class, deadline } = req;
+    let cluster = Cluster::new(config.nodes);
+    let layout = cluster.layout();
+    let base = MofaPolicy::new(
+        Thinker::new(config.policy, layout.validate_slots),
+        Arc::clone(&engines),
+        config.seed,
+    );
+    let sched = Scheduler::new(
+        cluster,
+        Arc::clone(&engines),
+        Arc::clone(pool),
+        SimParams {
+            seed: config.seed,
+            horizon_s: config.duration_s,
+            util_sample_dt: config.util_sample_dt,
+        },
+    );
+    let ctx = RunCtx { config, policy, tenant, class, deadline, engines, t_wall };
+    match policy {
+        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
+        PolicyKind::Priority(classes) => {
+            let p = PriorityPolicy::new(base, classes);
+            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
+        }
+        PolicyKind::FairShare { weight, weight_total } => {
+            let p = FairSharePolicy::new(base, slot_totals(layout), weight, weight_total);
+            drive(sched, p, barrier_vt, ctx, FairSharePolicy::into_inner, |p| {
+                Some(p.outstanding_state())
+            })
+        }
+    }
+}
+
+/// Resume a campaign checkpoint written by [`run_request_to_barrier`] and
+/// run it to the next barrier (`f64::INFINITY` = to completion). The
+/// supplied engines are re-pointed at the checkpointed model weights
+/// before any event replays; everything else — clocks, queues, in-flight
+/// payloads, RNG streams — restores from the file. The continuation is
+/// bit-identical to the run that was never interrupted.
+pub fn resume_request(
+    v: &Json,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+    barrier_vt: f64,
+) -> Result<CampaignRunOutcome, CheckpointError> {
+    let header = CheckpointHeader::parse(v.req("header")?)?;
+    header.expect_kind("campaign")?;
+    let t_wall = Instant::now();
+    let config = CampaignConfig::from_json(v.req("config")?)?;
+    let policy = PolicyKind::from_json(v.req("policy")?)?;
+    let reqv = v.req("request")?;
+    let tenant = reqv
+        .req("tenant")?
+        .as_str()
+        .ok_or_else(|| "request: bad tenant".to_string())?
+        .to_string();
+    let class = reqv
+        .req("class")?
+        .as_f64()
+        .filter(|n| n.fract() == 0.0 && (0.0..=u8::MAX as f64).contains(n))
+        .ok_or_else(|| "request: 'class' must be an integer in 0..=255".to_string())?
+        as u8;
+    let deadline = match reqv.req("deadline")? {
+        Json::Null => None,
+        j => Some(j.as_f64().ok_or_else(|| "request: bad deadline".to_string())?),
+    };
+    let model = ModelSnapshot::from_json(v.req("model")?)?;
+    // reinstall the checkpointed weights: post-barrier generate fills
+    // snapshot the *current* generator state, which must match what the
+    // uninterrupted run had installed by the barrier
+    engines.generator.set_params((*model.params).clone(), model.version);
+    let sched = Scheduler::restore(Arc::clone(&engines), Arc::clone(pool), v.req("scheduler")?)?;
+    let base = MofaPolicy::from_json(v.req("mofa")?, Arc::clone(&engines))?;
+    let nodes = config.nodes;
+    let ctx = RunCtx { config, policy, tenant, class, deadline, engines, t_wall };
+    Ok(match policy {
+        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
+        PolicyKind::Priority(classes) => {
+            let p = PriorityPolicy::new(base, classes);
+            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
+        }
+        PolicyKind::FairShare { weight, weight_total } => {
+            let totals = slot_totals(crate::workflow::resources::layout(nodes));
+            let mut p = FairSharePolicy::new(base, totals, weight, weight_total);
+            let oj = v.req("fair_share_outstanding")?;
+            let words = oj.as_arr().filter(|a| a.len() == 5).ok_or_else(|| {
+                "checkpoint: fair-share policy needs 'fair_share_outstanding'".to_string()
+            })?;
+            let mut outstanding = [0usize; 5];
+            for (slot, w) in outstanding.iter_mut().zip(words) {
+                *slot = w
+                    .as_usize()
+                    .ok_or_else(|| "checkpoint: bad outstanding count".to_string())?;
+            }
+            p.set_outstanding_state(outstanding);
+            drive(sched, p, barrier_vt, ctx, FairSharePolicy::into_inner, |p| {
+                Some(p.outstanding_state())
+            })
+        }
+    })
+}
+
+/// The **canonical report**: every deterministic field of a
+/// [`CampaignReport`], serialized compactly. Two runs of the same request
+/// produce byte-identical canonical reports; wallclock-dependent fields
+/// (`wallclock_s`, turnarounds) are deliberately excluded. This is what
+/// the CI `determinism` job byte-compares between a clean run and a
+/// checkpoint+resume run.
+pub fn canonical_report_json(report: &CampaignReport) -> Json {
+    let th = &report.thinker;
+    Json::obj(vec![
+        ("config", report.config.to_json()),
+        ("final_vtime", Json::Num(report.final_vtime)),
+        ("linkers_generated", Json::Num(th.linkers_generated as f64)),
+        ("linkers_processed_in", Json::Num(th.linkers_processed_in as f64)),
+        ("linkers_survived", Json::Num(th.linkers_survived as f64)),
+        ("assembled_ok", Json::Num(th.assembled_ok as f64)),
+        ("assembly_failures", Json::Num(th.assembly_failures as f64)),
+        ("model_version", Json::u64_str(th.model_version)),
+        (
+            "tasks_done",
+            Json::Obj(
+                report
+                    .tasks_done
+                    .iter()
+                    .map(|(k, n)| (k.label().to_string(), Json::Num(*n as f64)))
+                    .collect(),
+            ),
+        ),
+        (
+            "utilization_avg",
+            Json::Obj(
+                report
+                    .utilization_avg
+                    .iter()
+                    .map(|(k, u)| (k.label().to_string(), Json::Num(*u)))
+                    .collect(),
+            ),
+        ),
+        (
+            "util_series",
+            Json::Arr(
+                report
+                    .util_series
+                    .iter()
+                    .map(|(t, row)| {
+                        let mut cells = vec![Json::Num(*t)];
+                        cells.extend(row.iter().map(|&u| Json::Num(u)));
+                        Json::Arr(cells)
+                    })
+                    .collect(),
+            ),
+        ),
+        ("db", th.db.checkpoint_json()),
+        ("metrics", th.metrics.to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trips_and_rejects_unknown_fields() {
+        let h = CheckpointHeader::new("campaign", 1234.5);
+        let parsed = CheckpointHeader::parse(&Json::parse(&h.to_json().to_string()).unwrap());
+        assert_eq!(parsed.unwrap(), h);
+
+        // unknown fields fail loudly (never silently ignored)
+        let bad = r#"{"format":1,"kind":"campaign","created_vt":0,"extra":true}"#;
+        let err = CheckpointHeader::parse(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(matches!(err, CheckpointError::Malformed(ref m) if m.contains("extra")), "{err}");
+    }
+
+    #[test]
+    fn header_version_mismatch_is_a_typed_error() {
+        let bad = r#"{"format":99,"kind":"campaign","created_vt":0}"#;
+        let err = CheckpointHeader::parse(&Json::parse(bad).unwrap()).unwrap_err();
+        assert_eq!(err, CheckpointError::FormatMismatch { found: 99, expected: FORMAT_VERSION });
+        // a *future* format with unknown header fields still reports the
+        // version mismatch, not the unknown field
+        let future = r#"{"format":2,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
+        let err = CheckpointHeader::parse(&Json::parse(future).unwrap()).unwrap_err();
+        assert!(matches!(err, CheckpointError::FormatMismatch { found: 2, .. }), "{err}");
+    }
+
+    #[test]
+    fn wrong_kind_is_a_typed_error() {
+        let h = CheckpointHeader::new("service", 0.0);
+        let err = h.expect_kind("campaign").unwrap_err();
+        assert_eq!(
+            err,
+            CheckpointError::WrongKind { found: "service".into(), expected: "campaign" }
+        );
+        assert!(h.expect_kind("service").is_ok());
+    }
+}

@@ -31,6 +31,13 @@
 //!   admission queue, and run concurrently on one shared pool under a
 //!   driver-side semaphore, each with a per-request
 //!   [`service::PolicyKind`] and a cancellable [`service::Ticket`].
+//! * [`checkpoint`] — campaign **checkpoint/replay**: serialize the full
+//!   campaign state (scheduler clocks/heap/in-flight payloads, Thinker,
+//!   policy decorators, model snapshot) at a virtual-time barrier via
+//!   [`scheduler::Scheduler::checkpoint_at`], and resume it
+//!   bit-identically in a fresh process ([`checkpoint::resume_request`],
+//!   [`service::CampaignService::resume_from`]). Versioned format; a
+//!   mismatch is a typed [`checkpoint::CheckpointError`].
 //!
 //! The policy/mechanics split is the contract: policies never touch the
 //! heap or slot counters, and the scheduler never inspects payloads
@@ -45,6 +52,7 @@
 #![warn(missing_docs)]
 
 pub mod admission;
+pub mod checkpoint;
 pub mod policy;
 pub mod scheduler;
 pub mod service;
@@ -52,8 +60,12 @@ pub mod sweep;
 pub mod vtime;
 
 pub use admission::{RejectReason, RequestStatus, ShedPolicy};
+pub use checkpoint::{
+    canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
+    CheckpointError, CheckpointHeader, FORMAT_VERSION,
+};
 pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
-pub use scheduler::{Completion, Policy, Scheduler, SimOutcome, SimParams};
+pub use scheduler::{BarrierOutcome, Completion, Policy, Scheduler, SimOutcome, SimParams};
 pub use service::{
     run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
     ServiceConfig, ServiceStats, TenantStats, Ticket,

@@ -102,10 +102,15 @@ impl PriorityClasses {
         }
         let mut classes = [0u8; 8];
         for (slot, item) in classes.iter_mut().zip(arr) {
-            *slot = item
+            let n = item
                 .as_f64()
-                .ok_or_else(|| "priority classes: non-numeric entry".to_string())?
-                as u8;
+                .ok_or_else(|| "priority classes: non-numeric entry".to_string())?;
+            if n.fract() != 0.0 || !(0.0..=u8::MAX as f64).contains(&n) {
+                return Err(format!(
+                    "priority classes: entry must be an integer in 0..=255, got {n}"
+                ));
+            }
+            *slot = n as u8;
         }
         Ok(PriorityClasses { classes })
     }
@@ -196,6 +201,19 @@ impl<P: Policy> FairSharePolicy<P> {
     /// Currently dispatched-but-not-completed tasks on a worker kind.
     pub fn outstanding(&self, kind: WorkerKind) -> usize {
         self.outstanding[worker_idx(kind)]
+    }
+
+    /// The full outstanding tally in [`WorkerKind::ALL`] order
+    /// (checkpointed alongside the scheduler's in-flight table).
+    pub fn outstanding_state(&self) -> [usize; 5] {
+        self.outstanding
+    }
+
+    /// Restore the outstanding tally captured by
+    /// [`FairSharePolicy::outstanding_state`]: a resumed campaign's
+    /// quota clamping must count the re-submitted in-flight tasks.
+    pub fn set_outstanding_state(&mut self, outstanding: [usize; 5]) {
+        self.outstanding = outstanding;
     }
 }
 

@@ -19,6 +19,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use crate::sim::vtime::{EventHeap, VirtualTime};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use crate::workflow::queues::ScoredQueue;
@@ -27,6 +28,11 @@ use crate::workflow::taskserver::{
     submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
 };
 use crate::workflow::thinker::TaskRequest;
+
+/// Mixer for per-task seeds: `params.seed ^ task_id · TASK_SEED_MIX`.
+/// Task seeds are a pure function of `(campaign seed, task id)`, so a
+/// restored scheduler re-derives them instead of checkpointing them.
+const TASK_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// A completed task as delivered to [`Policy::handle`]: the substrate
 /// outcome plus the scheduling metadata the mechanics tracked for it.
@@ -90,6 +96,19 @@ pub struct SimParams {
 struct Flight {
     inf: InFlight,
     origin_t: f64,
+    /// the submitted payload, shared with the pool job: a checkpoint
+    /// serializes it so a resumed run can re-execute the task (outcomes
+    /// are pure functions of `(payload, seed)`)
+    payload: Arc<Payload>,
+}
+
+/// How a bounded event-loop run ended (see [`Scheduler::checkpoint_at`]).
+pub enum BarrierOutcome {
+    /// the campaign drained before the barrier: here is its outcome
+    Finished(SimOutcome),
+    /// the barrier was reached with work still in flight; serialize the
+    /// paused scheduler with [`Scheduler::checkpoint_json`]
+    Paused(Box<Scheduler>),
 }
 
 /// What the mechanics hand back once the event loop drains.
@@ -121,6 +140,9 @@ pub struct Scheduler {
     util_series: Vec<(f64, [f64; 5])>,
     next_sample: f64,
     now: f64,
+    /// true once the t=0 fill ran (a restored scheduler skips it: the
+    /// uninterrupted run would not fill again until the next event)
+    primed: bool,
 }
 
 impl Scheduler {
@@ -154,18 +176,43 @@ impl Scheduler {
             util_series: Vec::new(),
             next_sample: 0.0,
             now: 0.0,
+            primed: false,
         }
     }
 
     /// Run the event loop to quiescence: dispatch at t=0, then pop
     /// completion events in virtual-time order until nothing is in
     /// flight and nothing can be dispatched.
-    pub fn run<P: Policy>(mut self, policy: &mut P) -> SimOutcome {
-        self.dispatch(policy, 0.0);
-        while let Some((t, task_id)) = self.heap.pop() {
+    pub fn run<P: Policy>(self, policy: &mut P) -> SimOutcome {
+        match self.checkpoint_at(policy, f64::INFINITY) {
+            BarrierOutcome::Finished(out) => out,
+            BarrierOutcome::Paused(_) => unreachable!("no event lies beyond an infinite barrier"),
+        }
+    }
+
+    /// Run the event loop up to a **virtual-time barrier**: every event
+    /// with `t ≤ barrier_vt` is processed exactly as [`Scheduler::run`]
+    /// would, then the loop pauses *between* events. At the pause point
+    /// nothing new dispatches; the tasks still in flight keep their slots
+    /// and their payloads, and [`Scheduler::checkpoint_json`] serializes
+    /// them (joining their real compute first) so a restored scheduler
+    /// continues the identical event sequence. Returns
+    /// [`BarrierOutcome::Finished`] when the campaign drains before the
+    /// barrier.
+    pub fn checkpoint_at<P: Policy>(mut self, policy: &mut P, barrier_vt: f64) -> BarrierOutcome {
+        if !self.primed {
+            self.dispatch(policy, 0.0);
+            self.primed = true;
+        }
+        while let Some(next) = self.heap.peek() {
+            if next.seconds() > barrier_vt {
+                return BarrierOutcome::Paused(Box::new(self));
+            }
+            let (t, task_id) = self.heap.pop().expect("peeked event");
             let now = t.seconds();
             self.now = now;
-            let Flight { inf, origin_t } = self.flights.remove(&task_id).expect("in-flight task");
+            let Flight { inf, origin_t, .. } =
+                self.flights.remove(&task_id).expect("in-flight task");
             let outcome = inf.handle.join();
             self.cluster.release(inf.kind.worker(), now);
             let followups = policy.handle(Completion {
@@ -184,12 +231,12 @@ impl Scheduler {
             self.sample_utilization(now);
             self.dispatch(policy, now);
         }
-        SimOutcome {
+        BarrierOutcome::Finished(SimOutcome {
             cluster: self.cluster,
             util_series: self.util_series,
             final_vtime: self.now,
             tasks_submitted: self.next_task_id,
-        }
+        })
     }
 
     /// Dispatch at the current time: drain overflow queues first in
@@ -236,18 +283,18 @@ impl Scheduler {
     /// per-task stream, start the real computation on the pool, and
     /// schedule the completion event.
     fn submit_request<P: Policy>(&mut self, policy: &mut P, req: TaskRequest, now: f64) {
-        let kind = req.kind;
+        let TaskRequest { kind, payload, origin_t } = req;
         let worker = kind.worker();
         let acquired = self.cluster.acquire(worker, now);
         debug_assert!(acquired, "submit_request without a free {worker:?} slot");
         let task_id = self.next_task_id;
         self.next_task_id += 1;
-        let seed = self.params.seed ^ task_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let set_size = match &req.payload {
+        let seed = self.params.seed ^ task_id.wrapping_mul(TASK_SEED_MIX);
+        let set_size = match &payload {
             Payload::Retrain { examples, .. } => examples.len(),
             _ => 0,
         };
-        let n_items = match &req.payload {
+        let n_items = match &payload {
             Payload::Generate { .. } => 16,
             Payload::Process { linkers } => linkers.len(),
             _ => 1,
@@ -255,11 +302,21 @@ impl Scheduler {
         let mut drng = self.rng.derive(task_id);
         let completes_at = VirtualTime::new(now)
             .advance(virtual_duration(kind, n_items, set_size, &mut drng));
-        policy.on_dispatch(kind, req.origin_t, now);
+        policy.on_dispatch(kind, origin_t, now);
         let dur = completes_at.seconds() - now;
-        let inf = submit(&self.pool, &self.engines, req.payload, task_id, kind, now, dur, seed);
+        let payload = Arc::new(payload);
+        let inf = submit(
+            &self.pool,
+            &self.engines,
+            Arc::clone(&payload),
+            task_id,
+            kind,
+            now,
+            dur,
+            seed,
+        );
         self.heap.push(completes_at, task_id);
-        self.flights.insert(task_id, Flight { inf, origin_t: req.origin_t });
+        self.flights.insert(task_id, Flight { inf, origin_t, payload });
     }
 
     /// Emit `(t, busy fraction per kind)` rows for every sample point up
@@ -276,6 +333,194 @@ impl Scheduler {
             self.util_series.push((self.next_sample, row));
             self.next_sample += self.params.util_sample_dt;
         }
+    }
+
+    /// Current virtual time (the last processed event; checkpoint
+    /// headers stamp this as the barrier the pause landed on).
+    pub fn vtime(&self) -> f64 {
+        self.now
+    }
+
+    /// Serialize a paused scheduler (see [`Scheduler::checkpoint_at`]):
+    /// the virtual clock, the event heap, every in-flight task's payload
+    /// (their real compute is joined first — running tasks finish before
+    /// the checkpoint is written), the priority-ordered pending queues by
+    /// entry, the cluster slot pools with their busy-time integrals, the
+    /// utilization series, and the RNG state. Everything a fresh process
+    /// needs to continue the identical event sequence.
+    pub fn checkpoint_json(mut self) -> Json {
+        let mut events = Vec::new();
+        while let Some((t, id)) = self.heap.pop() {
+            events.push(Json::Arr(vec![Json::Num(t.seconds()), Json::u64_str(id)]));
+        }
+        let mut flights: Vec<(u64, Flight)> = self.flights.drain().collect();
+        flights.sort_by_key(|(id, _)| *id);
+        let flights_json: Vec<Json> = flights
+            .into_iter()
+            .map(|(id, f)| {
+                // let the in-flight real compute finish so the pool is
+                // quiet when the process exits; the outcome is discarded —
+                // resume re-executes the payload and gets the same result
+                let _ = f.inf.handle.join();
+                Json::obj(vec![
+                    ("task_id", Json::u64_str(id)),
+                    ("kind", Json::Str(f.inf.kind.label().to_string())),
+                    ("submitted_at", Json::Num(f.inf.submitted_at)),
+                    ("origin_t", Json::Num(f.origin_t)),
+                    ("payload", f.payload.to_json()),
+                ])
+            })
+            .collect();
+        let pending = Json::Obj(
+            self.pending
+                .iter()
+                .map(|(k, q)| (k.label().to_string(), q.to_json_with(TaskRequest::to_json)))
+                .collect(),
+        );
+        Json::obj(vec![
+            (
+                "params",
+                Json::obj(vec![
+                    ("seed", Json::u64_str(self.params.seed)),
+                    ("horizon_s", Json::Num(self.params.horizon_s)),
+                    ("util_sample_dt", Json::Num(self.params.util_sample_dt)),
+                ]),
+            ),
+            ("now", Json::Num(self.now)),
+            ("next_task_id", Json::u64_str(self.next_task_id)),
+            ("next_sample", Json::Num(self.next_sample)),
+            (
+                "rng",
+                Json::Arr(self.rng.state().iter().map(|&w| Json::u64_str(w)).collect()),
+            ),
+            ("cluster", self.cluster.to_json()),
+            ("events", Json::Arr(events)),
+            ("flights", Json::Arr(flights_json)),
+            ("pending", pending),
+            (
+                "util_series",
+                Json::Arr(
+                    self.util_series
+                        .iter()
+                        .map(|(t, row)| {
+                            let mut cells = vec![Json::Num(*t)];
+                            cells.extend(row.iter().map(|&u| Json::Num(u)));
+                            Json::Arr(cells)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a paused scheduler from [`Scheduler::checkpoint_json`]:
+    /// restores the clock, counters, queues and cluster accounting, then
+    /// **re-submits every in-flight payload** to the pool — task outcomes
+    /// are pure functions of `(payload, seed)`, so the completions the
+    /// resumed loop joins are bit-identical to the ones the checkpointed
+    /// process discarded. Continue with [`Scheduler::run`] (or another
+    /// [`Scheduler::checkpoint_at`]).
+    pub fn restore(
+        engines: Arc<Engines>,
+        pool: Arc<ThreadPool>,
+        v: &Json,
+    ) -> Result<Scheduler, String> {
+        let p = v.req("params")?;
+        let params = SimParams {
+            seed: p.req("seed")?.as_u64().ok_or("scheduler: bad seed")?,
+            horizon_s: p.req("horizon_s")?.as_f64().ok_or("scheduler: bad horizon_s")?,
+            util_sample_dt: p
+                .req("util_sample_dt")?
+                .as_f64()
+                .filter(|dt| *dt > 0.0)
+                .ok_or("scheduler: bad util_sample_dt")?,
+        };
+        let cluster = Cluster::from_json(v.req("cluster")?)?;
+        let mut sched = Scheduler::new(cluster, engines, pool, params);
+        sched.primed = true;
+        sched.now = v.req("now")?.as_f64().ok_or("scheduler: bad now")?;
+        sched.next_task_id = v.req("next_task_id")?.as_u64().ok_or("scheduler: bad task id")?;
+        sched.next_sample = v.req("next_sample")?.as_f64().ok_or("scheduler: bad next_sample")?;
+        let words = v.req("rng")?.as_arr().filter(|a| a.len() == 5).ok_or("scheduler: bad rng")?;
+        let mut state = [0u64; 5];
+        for (slot, w) in state.iter_mut().zip(words) {
+            *slot = w.as_u64().ok_or("scheduler: bad rng word")?;
+        }
+        sched.rng = Rng::from_state(state);
+        for row in v
+            .req("util_series")?
+            .as_arr()
+            .ok_or("scheduler: 'util_series' must be an array")?
+        {
+            let row = row.as_arr().filter(|r| r.len() == 6).ok_or("scheduler: bad util row")?;
+            let t = row[0].as_f64().ok_or("scheduler: bad util t")?;
+            let mut cells = [0.0; 5];
+            for (slot, cell) in cells.iter_mut().zip(&row[1..]) {
+                *slot = cell.as_f64().ok_or("scheduler: bad util cell")?;
+            }
+            sched.util_series.push((t, cells));
+        }
+        let pending = v.req("pending")?;
+        for k in WorkerKind::ALL {
+            let q = ScoredQueue::from_json_with(pending.req(k.label())?, TaskRequest::from_json)?;
+            sched.pending.insert(k, q);
+        }
+        // parse flights, then let the *event list* drive re-submission so
+        // the heap holds exactly the serialized (time, id) pairs
+        struct Parked {
+            kind: TaskKind,
+            submitted_at: f64,
+            origin_t: f64,
+            payload: Arc<Payload>,
+        }
+        let mut parked: HashMap<u64, Parked> = HashMap::new();
+        for f in v.req("flights")?.as_arr().ok_or("scheduler: 'flights' must be an array")? {
+            let id = f.req("task_id")?.as_u64().ok_or("scheduler: bad flight id")?;
+            let kind = f.req("kind")?.as_str().ok_or("scheduler: bad flight kind")?;
+            let prev = parked.insert(
+                id,
+                Parked {
+                    kind: TaskKind::from_label(kind)
+                        .ok_or_else(|| format!("scheduler: unknown task kind '{kind}'"))?,
+                    submitted_at: f
+                        .req("submitted_at")?
+                        .as_f64()
+                        .ok_or("scheduler: bad submitted_at")?,
+                    origin_t: f.req("origin_t")?.as_f64().ok_or("scheduler: bad origin_t")?,
+                    payload: Arc::new(Payload::from_json(f.req("payload")?)?),
+                },
+            );
+            if prev.is_some() {
+                return Err(format!("scheduler: duplicate flight {id}"));
+            }
+        }
+        for ev in v.req("events")?.as_arr().ok_or("scheduler: 'events' must be an array")? {
+            let ev = ev.as_arr().filter(|e| e.len() == 2).ok_or("scheduler: bad event")?;
+            let t = ev[0].as_f64().ok_or("scheduler: bad event time")?;
+            let id = ev[1].as_u64().ok_or("scheduler: bad event id")?;
+            let fl = parked
+                .remove(&id)
+                .ok_or_else(|| format!("scheduler: event {id} has no flight"))?;
+            let seed = params.seed ^ id.wrapping_mul(TASK_SEED_MIX);
+            let inf = submit(
+                &sched.pool,
+                &sched.engines,
+                Arc::clone(&fl.payload),
+                id,
+                fl.kind,
+                fl.submitted_at,
+                t - fl.submitted_at,
+                seed,
+            );
+            sched.heap.push(VirtualTime::new(t), id);
+            sched
+                .flights
+                .insert(id, Flight { inf, origin_t: fl.origin_t, payload: fl.payload });
+        }
+        if let Some(id) = parked.keys().next() {
+            return Err(format!("scheduler: flight {id} has no completion event"));
+        }
+        Ok(sched)
     }
 }
 

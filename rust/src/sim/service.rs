@@ -38,6 +38,7 @@ use std::time::Instant;
 use crate::sim::admission::{
     AdmissionConfig, AdmissionQueue, Popped, RejectReason, RequestStatus, ShedPolicy,
 };
+use crate::sim::checkpoint::{CheckpointError, CheckpointHeader};
 use crate::sim::policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 use crate::sim::scheduler::{Scheduler, SimParams};
 use crate::util::json::Json;
@@ -352,6 +353,12 @@ pub struct ServiceStats {
     /// [`TURNAROUND_WINDOW`] values so a long-lived server's memory
     /// stays bounded
     pub turnaround_s: Vec<f64>,
+    /// how many times this service was resumed from a checkpoint: 0 for a
+    /// fresh service, bumped by [`CampaignService::resume_from`]. All
+    /// counters above (and the turnaround window) carry across a resume;
+    /// the epoch marks where the wallclock baseline reset — turnarounds
+    /// recorded after a resume do not include pre-checkpoint queue wait
+    pub resume_epoch: u32,
 }
 
 /// Completed-request turnarounds retained for [`ServiceStats`] (a
@@ -530,6 +537,13 @@ impl Semaphore {
 struct SvcState {
     adm: AdmissionQueue<QueuedItem>,
     shutting_down: bool,
+    /// set while a checkpoint quiesces the service: the dispatcher stops
+    /// popping, so the queue freezes while running campaigns drain
+    paused: bool,
+    /// concurrency bound (serialized into service checkpoints)
+    max_in_flight: usize,
+    /// checkpoint generation (0 = fresh; see [`ServiceStats::resume_epoch`])
+    resume_epoch: u32,
     submitted: usize,
     admitted: usize,
     rejected: usize,
@@ -596,6 +610,7 @@ impl Drop for DriverGuard {
             st.cancelled += 1;
             st.tenant_mut(&self.tenant).cancelled += 1;
             self.state.set(RequestStatus::Cancelled, None);
+            self.inner.cv.notify_all();
         }
         self.sem.release();
     }
@@ -624,6 +639,9 @@ impl CampaignService {
                     tenant_quota: cfg.tenant_quota,
                 }),
                 shutting_down: false,
+                paused: false,
+                max_in_flight: cfg.max_in_flight,
+                resume_epoch: 0,
                 submitted: 0,
                 admitted: 0,
                 rejected: 0,
@@ -637,7 +655,13 @@ impl CampaignService {
             }),
             cv: Condvar::new(),
         });
-        let sem = Arc::new(Semaphore::new(cfg.max_in_flight));
+        Self::start(inner, pool, cfg.max_in_flight)
+    }
+
+    /// Spawn the dispatcher over an already-built state (shared by
+    /// [`CampaignService::new`] and [`CampaignService::resume_from`]).
+    fn start(inner: Arc<ServiceInner>, pool: Arc<ThreadPool>, max_in_flight: usize) -> Self {
+        let sem = Arc::new(Semaphore::new(max_in_flight));
         let inner2 = Arc::clone(&inner);
         let dispatcher = thread::spawn(move || {
             let mut drivers: Vec<thread::JoinHandle<()>> = Vec::new();
@@ -649,6 +673,22 @@ impl CampaignService {
                 let next = {
                     let mut st = inner2.state.lock().unwrap();
                     loop {
+                        if st.paused {
+                            if st.shutting_down {
+                                // a checkpointed service hands its queue to
+                                // the checkpoint; on drop the still-queued
+                                // requests shed so old-process tickets
+                                // settle (they live on in the checkpoint)
+                                while let Some(popped) = st.adm.pop() {
+                                    let (Popped::Run { item, .. } | Popped::Shed { item, .. }) =
+                                        popped;
+                                    st.note_shed(&item);
+                                }
+                                break None;
+                            }
+                            st = inner2.cv.wait(st).unwrap();
+                            continue;
+                        }
                         match st.adm.pop() {
                             Some(Popped::Shed { item, .. }) => {
                                 st.note_shed(&item);
@@ -721,6 +761,9 @@ impl CampaignService {
                     state.cv.notify_all();
                     drop(inner);
                     guard.settled = true;
+                    // wake anything waiting on service state — a
+                    // checkpoint quiescing on in_flight == 0 in particular
+                    guard.inner.cv.notify_all();
                     drop(st);
                     drop(guard); // releases the permit
                 }));
@@ -771,6 +814,173 @@ impl CampaignService {
         }
     }
 
+    /// Stop the dispatcher from popping new requests (running campaigns
+    /// keep running). Used to freeze the queue before a checkpoint; a
+    /// paused service still accepts `try_submit` into the bounded queue.
+    pub fn pause_dispatch(&self) {
+        self.inner.state.lock().unwrap().paused = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// Checkpoint the service at a **quiescent point**: dispatch pauses,
+    /// running campaigns finish (their reports resolve through their
+    /// tickets as usual), and the queued-but-never-started requests are
+    /// serialized together with the admission state — per-tenant quota
+    /// counts, the virtual service-time **deadline clock**, every
+    /// counter, and the turnaround window. [`CampaignService::resume_from`]
+    /// rebuilds an identical front door in a fresh process; admission
+    /// decisions after the resume replay exactly as they would have.
+    ///
+    /// The service stays paused afterwards: dropping it sheds the queued
+    /// requests (settling their old-process tickets as `Shed`) — they
+    /// live on in the checkpoint.
+    pub fn checkpoint_json(&self) -> Json {
+        let mut st = self.inner.state.lock().unwrap();
+        st.paused = true;
+        self.inner.cv.notify_all();
+        while st.in_flight > 0 {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        let tenants = Json::Obj(
+            st.per_tenant
+                .iter()
+                .map(|(tenant, t)| {
+                    (
+                        tenant.clone(),
+                        Json::obj(vec![
+                            ("admitted", Json::Num(t.admitted as f64)),
+                            ("rejected", Json::Num(t.rejected as f64)),
+                            ("shed", Json::Num(t.shed as f64)),
+                            ("cancelled", Json::Num(t.cancelled as f64)),
+                            ("completed", Json::Num(t.completed as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("header", CheckpointHeader::new("service", st.adm.clock()).to_json()),
+            ("max_in_flight", Json::Num(st.max_in_flight as f64)),
+            ("admission", st.adm.to_json_with(|item| item.req.to_json())),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("resume_epoch", Json::Num(st.resume_epoch as f64)),
+                    ("submitted", Json::Num(st.submitted as f64)),
+                    ("admitted", Json::Num(st.admitted as f64)),
+                    ("rejected", Json::Num(st.rejected as f64)),
+                    ("shed", Json::Num(st.shed as f64)),
+                    ("cancelled", Json::Num(st.cancelled as f64)),
+                    ("completed", Json::Num(st.completed as f64)),
+                    ("peak_in_flight", Json::Num(st.peak_in_flight as f64)),
+                    (
+                        "turnaround_s",
+                        Json::Arr(st.turnaround_s.iter().map(|&t| Json::Num(t)).collect()),
+                    ),
+                    ("per_tenant", tenants),
+                ]),
+            ),
+        ])
+    }
+
+    /// Rebuild a service from [`CampaignService::checkpoint_json`]:
+    /// the admission queue (entries in their original handle order, the
+    /// deadline clock, tenant quota counts), all counters and the
+    /// turnaround window restore exactly; `resume_epoch` is bumped to mark
+    /// the new wallclock baseline. Engines never enter a checkpoint, so
+    /// `engines_for` re-supplies a stack per restored request. Returns the
+    /// service plus fresh [`Ticket`]s for the restored queue, in admission
+    /// order.
+    pub fn resume_from<F>(
+        pool: Arc<ThreadPool>,
+        v: &Json,
+        mut engines_for: F,
+    ) -> Result<(CampaignService, Vec<Ticket>), CheckpointError>
+    where
+        F: FnMut(&CampaignRequest) -> Arc<Engines>,
+    {
+        let header = CheckpointHeader::parse(v.req("header")?)?;
+        header.expect_kind("service")?;
+        let max_in_flight = v
+            .req("max_in_flight")?
+            .as_usize()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| "service: bad max_in_flight".to_string())?;
+        let adm = AdmissionQueue::from_json_with(v.req("admission")?, |item| {
+            let req = CampaignRequest::from_json(item)?;
+            let engines = engines_for(&req);
+            Ok(QueuedItem {
+                engines,
+                state: Arc::new(RequestState::new()),
+                submitted: Instant::now(),
+                req,
+            })
+        })?;
+        let sj = v.req("stats")?;
+        let stat = |key: &str| -> Result<usize, String> {
+            sj.req(key)?.as_usize().ok_or_else(|| format!("service stats: bad {key}"))
+        };
+        let mut per_tenant = BTreeMap::new();
+        let tj = sj.req("per_tenant")?;
+        for (tenant, t) in tj.as_obj().ok_or_else(|| "service: bad per_tenant".to_string())? {
+            let field = |key: &str| -> Result<usize, String> {
+                t.req(key)?.as_usize().ok_or_else(|| format!("tenant stats: bad {key}"))
+            };
+            per_tenant.insert(
+                tenant.clone(),
+                TenantStats {
+                    admitted: field("admitted")?,
+                    rejected: field("rejected")?,
+                    shed: field("shed")?,
+                    cancelled: field("cancelled")?,
+                    completed: field("completed")?,
+                },
+            );
+        }
+        let mut turnaround_s = VecDeque::new();
+        for t in sj
+            .req("turnaround_s")?
+            .as_arr()
+            .ok_or_else(|| "service: bad turnaround_s".to_string())?
+        {
+            turnaround_s
+                .push_back(t.as_f64().ok_or_else(|| "service: bad turnaround".to_string())?);
+        }
+        // fresh tickets for the restored queue, in admission-handle order
+        let mut restored: Vec<(u64, Arc<RequestState>)> =
+            adm.iter().map(|(seq, item)| (seq, Arc::clone(&item.state))).collect();
+        restored.sort_by_key(|(seq, _)| *seq);
+        let resume_epoch = sj
+            .req("resume_epoch")?
+            .as_usize()
+            .ok_or_else(|| "service stats: bad resume_epoch".to_string())? as u32;
+        let inner = Arc::new(ServiceInner {
+            state: Mutex::new(SvcState {
+                adm,
+                shutting_down: false,
+                paused: false,
+                max_in_flight,
+                resume_epoch: resume_epoch + 1,
+                submitted: stat("submitted")?,
+                admitted: stat("admitted")?,
+                rejected: stat("rejected")?,
+                shed: stat("shed")?,
+                cancelled: stat("cancelled")?,
+                completed: stat("completed")?,
+                in_flight: 0,
+                peak_in_flight: stat("peak_in_flight")?,
+                per_tenant,
+                turnaround_s,
+            }),
+            cv: Condvar::new(),
+        });
+        let tickets = restored
+            .into_iter()
+            .map(|(seq, state)| Ticket { seq, state, svc: Arc::clone(&inner) })
+            .collect();
+        Ok((Self::start(inner, pool, max_in_flight), tickets))
+    }
+
     /// Snapshot every service counter (see [`ServiceStats`]).
     pub fn stats(&self) -> ServiceStats {
         let st = self.inner.state.lock().unwrap();
@@ -787,6 +997,7 @@ impl CampaignService {
             peak_in_flight: st.peak_in_flight,
             per_tenant: st.per_tenant.clone(),
             turnaround_s: st.turnaround_s.iter().copied().collect(),
+            resume_epoch: st.resume_epoch,
         }
     }
 

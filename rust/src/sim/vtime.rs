@@ -84,12 +84,6 @@ pub struct EventHeap {
     heap: BinaryHeap<std::cmp::Reverse<(VirtualTime, u64)>>,
 }
 
-impl Default for EventHeap {
-    fn default() -> Self {
-        EventHeap::new()
-    }
-}
-
 impl EventHeap {
     /// An empty heap.
     pub fn new() -> EventHeap {

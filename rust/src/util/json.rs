@@ -51,6 +51,37 @@ impl Json {
             _ => None,
         }
     }
+    /// Object view (for key iteration / unknown-field checks).
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+    /// Encode a `u64` losslessly. Values above 2^53 would lose bits as a
+    /// JSON number, so checkpoint/request files carry them as strings.
+    pub fn u64_str(v: u64) -> Json {
+        Json::Str(v.to_string())
+    }
+    /// Decode a `u64` written by [`Json::u64_str`]; a plain non-negative
+    /// integer number is also accepted (hand-written files).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => s.parse::<u64>().ok(),
+            // `u64::MAX as f64` rounds up to 2^64, which is NOT a valid
+            // u64 — the bound must be exclusive or 2^64 would silently
+            // saturate to u64::MAX
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+    /// Required field accessor with an error message naming the field
+    /// (checkpoint parsing: missing fields must fail loudly).
+    pub fn req(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing field '{key}'"))
+    }
     /// Object field as f64 (panics with a useful message if absent).
     pub fn req_f64(&self, key: &str) -> f64 {
         self.get(key)
@@ -78,9 +109,14 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.is_finite() {
-                    if *n == n.trunc() && n.abs() < 1e15 {
+                    // the integer fast path would print -0.0 as "0" and
+                    // lose the sign bit — checkpointed coordinates must
+                    // round-trip bit-exactly, so -0.0 keeps its point form
+                    if *n == n.trunc() && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
                         let _ = write!(out, "{}", *n as i64);
                     } else {
+                        // Rust's shortest-round-trip f64 formatting: the
+                        // printed decimal parses back to the same bits
                         let _ = write!(out, "{n}");
                     }
                 } else {
@@ -359,5 +395,72 @@ mod tests {
     fn unicode_string() {
         let v = Json::parse(r#""ÅÅ""#).unwrap();
         assert_eq!(v.as_str(), Some("ÅÅ"));
+    }
+
+    // --- checkpoint-codec edge cases (checkpoints lean on all of these) ---
+
+    #[test]
+    fn deeply_nested_arrays_round_trip() {
+        // a checkpoint nests obj→arr→obj→arr…; make sure the recursive
+        // parser survives real depth and reproduces it exactly
+        let depth = 256;
+        let mut txt = String::new();
+        for _ in 0..depth {
+            txt.push('[');
+        }
+        txt.push('7');
+        for _ in 0..depth {
+            txt.push(']');
+        }
+        let v = Json::parse(&txt).unwrap();
+        assert_eq!(v.to_string(), txt);
+        let mut cur = &v;
+        for _ in 0..depth {
+            cur = &cur.as_arr().unwrap()[0];
+        }
+        assert_eq!(cur.as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn u64_seeds_survive_as_strings_at_max() {
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX - 1, u64::MAX] {
+            let j = Json::u64_str(v);
+            let parsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(parsed.as_u64(), Some(v), "u64 {v} corrupted");
+        }
+        // plain numbers inside the exact range are accepted too
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(0.5).as_u64(), None);
+        // a u64::MAX written as a *number* would have lost bits — the
+        // string form is what keeps it exact
+        assert_eq!(Json::Str(u64::MAX.to_string()).as_u64(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn f64_round_trips_bit_exactly() {
+        // restored virtual times / coordinates must be the same bits,
+        // including the -0.0 sign the integer fast path would drop
+        for v in [
+            0.1 + 0.2,
+            1.0 / 3.0,
+            -0.0,
+            2.5e-300,
+            1.234567890123456e8,
+            f64::MIN_POSITIVE,
+            204.52,
+        ] {
+            let txt = Json::Num(v).to_string();
+            let back = Json::parse(&txt).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {txt} -> {back}");
+        }
+    }
+
+    #[test]
+    fn req_reports_the_missing_field() {
+        let v = Json::parse(r#"{"a":1}"#).unwrap();
+        assert!(v.req("a").is_ok());
+        let err = v.req("format").unwrap_err();
+        assert!(err.contains("format"), "unhelpful error: {err}");
     }
 }

@@ -15,6 +15,33 @@ pub enum Stage {
     Discarded,
 }
 
+impl Stage {
+    /// Short label (checkpoint codec + reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Assembled => "assembled",
+            Stage::Validated => "validated",
+            Stage::Optimized => "optimized",
+            Stage::Charged => "charged",
+            Stage::AdsorptionDone => "adsorption_done",
+            Stage::Discarded => "discarded",
+        }
+    }
+
+    /// Inverse of [`Stage::label`].
+    pub fn from_label(s: &str) -> Option<Stage> {
+        match s {
+            "assembled" => Some(Stage::Assembled),
+            "validated" => Some(Stage::Validated),
+            "optimized" => Some(Stage::Optimized),
+            "charged" => Some(Stage::Charged),
+            "adsorption_done" => Some(Stage::AdsorptionDone),
+            "discarded" => Some(Stage::Discarded),
+            _ => None,
+        }
+    }
+}
+
 /// One MOF's accumulated results.
 #[derive(Clone, Debug)]
 pub struct MofRecord {
@@ -123,6 +150,89 @@ impl MofDatabase {
             .iter()
             .filter(|r| r.is_stable(strain_threshold))
             .collect()
+    }
+
+    /// Serialize with **full fidelity** for campaign checkpoints: every
+    /// record field plus the id counter, so a restored database continues
+    /// issuing the exact ids the uninterrupted run would. (The plain
+    /// [`MofDatabase::to_json`] export is intentionally lossy — reports
+    /// only.)
+    pub fn checkpoint_json(&self) -> Json {
+        let opt = |x: Option<f64>| x.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("next_id", Json::u64_str(self.next_id)),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::u64_str(r.id)),
+                                ("linker_key", Json::Str(r.linker_key.clone())),
+                                ("family", Json::Str(r.family.label().to_string())),
+                                ("node", Json::Str(r.node_label.to_string())),
+                                ("model_version", Json::u64_str(r.model_version)),
+                                ("stage", Json::Str(r.stage.label().to_string())),
+                                ("assembled_at", Json::Num(r.assembled_at)),
+                                ("validated_at", opt(r.validated_at)),
+                                ("strain", opt(r.strain)),
+                                ("optimized_at", opt(r.optimized_at)),
+                                (
+                                    "charges_ok",
+                                    r.charges_ok.map(Json::Bool).unwrap_or(Json::Null),
+                                ),
+                                ("capacity", opt(r.capacity)),
+                                ("adsorption_at", opt(r.adsorption_at)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild the database written by [`MofDatabase::checkpoint_json`].
+    pub fn from_checkpoint_json(v: &Json) -> Result<MofDatabase, String> {
+        let opt = |x: Option<&Json>, what: &str| -> Result<Option<f64>, String> {
+            match x {
+                None | Some(Json::Null) => Ok(None),
+                Some(j) => Ok(Some(j.as_f64().ok_or_else(|| format!("db: bad {what}"))?)),
+            }
+        };
+        let mut db = MofDatabase::new();
+        db.next_id = v.req("next_id")?.as_u64().ok_or("db: bad next_id")?;
+        for r in v.req("records")?.as_arr().ok_or("db: 'records' must be an array")? {
+            let fam = r.req("family")?.as_str().ok_or("db: bad family")?;
+            let stage = r.req("stage")?.as_str().ok_or("db: bad stage")?;
+            let node = r.req("node")?.as_str().ok_or("db: bad node")?;
+            db.records.push(MofRecord {
+                id: r.req("id")?.as_u64().ok_or("db: bad id")?,
+                linker_key: r
+                    .req("linker_key")?
+                    .as_str()
+                    .ok_or("db: bad linker_key")?
+                    .to_string(),
+                family: Family::from_label(fam)
+                    .ok_or_else(|| format!("db: unknown family '{fam}'"))?,
+                node_label: crate::assembly::nodes::static_label(node)
+                    .ok_or_else(|| format!("db: unknown node label '{node}'"))?,
+                model_version: r.req("model_version")?.as_u64().ok_or("db: bad version")?,
+                stage: Stage::from_label(stage)
+                    .ok_or_else(|| format!("db: unknown stage '{stage}'"))?,
+                assembled_at: r.req("assembled_at")?.as_f64().ok_or("db: bad assembled_at")?,
+                validated_at: opt(r.get("validated_at"), "validated_at")?,
+                strain: opt(r.get("strain"), "strain")?,
+                optimized_at: opt(r.get("optimized_at"), "optimized_at")?,
+                charges_ok: match r.get("charges_ok") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(j.as_bool().ok_or("db: bad charges_ok")?),
+                },
+                capacity: opt(r.get("capacity"), "capacity")?,
+                adsorption_at: opt(r.get("adsorption_at"), "adsorption_at")?,
+            });
+        }
+        Ok(db)
     }
 
     /// Export to a JSON array (compact).

@@ -51,6 +51,11 @@ impl LatencyKind {
             LatencyKind::Adsorption => "adsorption_start",
         }
     }
+
+    /// Inverse of [`LatencyKind::label`] (checkpoint codec).
+    pub fn from_label(s: &str) -> Option<LatencyKind> {
+        LatencyKind::ALL.iter().copied().find(|k| k.label() == s)
+    }
 }
 
 /// Metric accumulator.
@@ -144,6 +149,111 @@ impl Metrics {
             .find(|&&(ts, _)| ts <= t)
             .map(|&(_, n)| n)
             .unwrap_or(0)
+    }
+
+    /// Serialize every recorded event for campaign checkpoints (and the
+    /// canonical determinism report): task records as
+    /// `[kind, submitted, completed, items]` rows, latency channels keyed
+    /// by label, the stable-MOF series, and the strain events.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let pair = |(a, b): (f64, f64)| Json::Arr(vec![Json::Num(a), Json::Num(b)]);
+        Json::obj(vec![
+            (
+                "tasks",
+                Json::Arr(
+                    self.tasks
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(vec![
+                                Json::Str(r.kind.label().to_string()),
+                                Json::Num(r.submitted_at),
+                                Json::Num(r.completed_at),
+                                Json::Num(r.items_out as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "latencies",
+                Json::Obj(
+                    self.latencies
+                        .iter()
+                        .map(|(k, vs)| {
+                            (
+                                k.label().to_string(),
+                                Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect()),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "stable_series",
+                Json::Arr(
+                    self.stable_series
+                        .iter()
+                        .map(|&(t, n)| Json::Arr(vec![Json::Num(t), Json::Num(n as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "strain_events",
+                Json::Arr(self.strain_events.iter().copied().map(pair).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild the accumulator written by [`Metrics::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Metrics, String> {
+        use crate::util::json::Json;
+        let mut m = Metrics::new();
+        for row in v.req("tasks")?.as_arr().ok_or("metrics: 'tasks' must be an array")? {
+            let row = row.as_arr().filter(|r| r.len() == 4).ok_or("metrics: bad task row")?;
+            let kind = row[0].as_str().ok_or("metrics: bad task kind")?;
+            m.tasks.push(TaskRecord {
+                kind: TaskKind::from_label(kind)
+                    .ok_or_else(|| format!("metrics: unknown task kind '{kind}'"))?,
+                submitted_at: row[1].as_f64().ok_or("metrics: bad submitted_at")?,
+                completed_at: row[2].as_f64().ok_or("metrics: bad completed_at")?,
+                items_out: row[3].as_usize().ok_or("metrics: bad items_out")?,
+            });
+        }
+        let lat = v.req("latencies")?.as_obj().ok_or("metrics: 'latencies' must be an object")?;
+        for (label, vs) in lat {
+            let kind = LatencyKind::from_label(label)
+                .ok_or_else(|| format!("metrics: unknown latency channel '{label}'"))?;
+            let vs = vs.as_arr().ok_or("metrics: latency values must be an array")?;
+            let parsed: Result<Vec<f64>, String> = vs
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| "metrics: bad latency value".to_string()))
+                .collect();
+            m.latencies.insert(kind, parsed?);
+        }
+        for row in v
+            .req("stable_series")?
+            .as_arr()
+            .ok_or("metrics: 'stable_series' must be an array")?
+        {
+            let row = row.as_arr().filter(|r| r.len() == 2).ok_or("metrics: bad stable row")?;
+            m.stable_series.push((
+                row[0].as_f64().ok_or("metrics: bad stable t")?,
+                row[1].as_usize().ok_or("metrics: bad stable count")?,
+            ));
+        }
+        for row in v
+            .req("strain_events")?
+            .as_arr()
+            .ok_or("metrics: 'strain_events' must be an array")?
+        {
+            let row = row.as_arr().filter(|r| r.len() == 2).ok_or("metrics: bad strain row")?;
+            m.strain_events.push((
+                row[0].as_f64().ok_or("metrics: bad strain t")?,
+                row[1].as_f64().ok_or("metrics: bad strain value")?,
+            ));
+        }
+        Ok(m)
     }
 
     /// Strains recorded within [t0, t1) — Fig. 10 per-hour CDF input.

@@ -165,6 +165,38 @@ impl MofaPolicy {
     pub fn into_thinker(self) -> Thinker {
         self.thinker
     }
+
+    /// Serialize the policy state for campaign checkpoints: the full
+    /// Thinker plus the position of the continuous-generation seed stream
+    /// (each generate request consumes one draw — a resumed campaign must
+    /// hand out the same seeds the uninterrupted one would).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("thinker", self.thinker.to_json()),
+            (
+                "gen_rng",
+                Json::Arr(self.gen_rng.state().iter().map(|&w| Json::u64_str(w)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild the policy written by [`MofaPolicy::to_json`]. Engines are
+    /// supplied by the caller (they never enter a checkpoint).
+    pub fn from_json(v: &Json, engines: Arc<Engines>) -> Result<MofaPolicy, String> {
+        let words = v.req("gen_rng")?.as_arr().ok_or("policy: 'gen_rng' must be an array")?;
+        if words.len() != 5 {
+            return Err(format!("policy: gen_rng needs 5 words, got {}", words.len()));
+        }
+        let mut state = [0u64; 5];
+        for (slot, w) in state.iter_mut().zip(words) {
+            *slot = w.as_u64().ok_or("policy: bad gen_rng word")?;
+        }
+        Ok(MofaPolicy {
+            thinker: Thinker::from_json(v.req("thinker")?)?,
+            engines,
+            gen_rng: Rng::from_state(state),
+        })
+    }
 }
 
 impl Policy for MofaPolicy {

@@ -76,6 +76,41 @@ impl ProxyStore {
     pub fn control_latency(&self) -> f64 {
         1e-3 // O(1) ms as in the paper
     }
+
+    /// Serialize the cost model + accounting for campaign checkpoints.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("base_latency", Json::Num(self.base_latency)),
+            ("bandwidth", Json::Num(self.bandwidth)),
+            ("next_id", Json::u64_str(self.next_id)),
+            ("puts", Json::u64_str(self.puts)),
+            ("resolves", Json::u64_str(self.resolves)),
+            ("bytes_stored", Json::u64_str(self.bytes_stored)),
+            ("bytes_resolved", Json::u64_str(self.bytes_resolved)),
+            ("transfer_time_total", Json::Num(self.transfer_time_total)),
+        ])
+    }
+
+    /// Rebuild the store written by [`ProxyStore::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<ProxyStore, String> {
+        Ok(ProxyStore {
+            base_latency: v.req("base_latency")?.as_f64().ok_or("store: bad base_latency")?,
+            bandwidth: v.req("bandwidth")?.as_f64().ok_or("store: bad bandwidth")?,
+            next_id: v.req("next_id")?.as_u64().ok_or("store: bad next_id")?,
+            puts: v.req("puts")?.as_u64().ok_or("store: bad puts")?,
+            resolves: v.req("resolves")?.as_u64().ok_or("store: bad resolves")?,
+            bytes_stored: v.req("bytes_stored")?.as_u64().ok_or("store: bad bytes_stored")?,
+            bytes_resolved: v
+                .req("bytes_resolved")?
+                .as_u64()
+                .ok_or("store: bad bytes_resolved")?,
+            transfer_time_total: v
+                .req("transfer_time_total")?
+                .as_f64()
+                .ok_or("store: bad transfer_time_total")?,
+        })
+    }
 }
 
 /// Payload-size model per task result, bytes (paper §V-B measurements:

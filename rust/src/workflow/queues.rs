@@ -10,6 +10,8 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::util::json::Json;
+
 /// LIFO stack with a capacity bound (old entries are dropped from the
 /// bottom — the paper's "most up-to-date data" policy makes stale MOFs
 /// worthless anyway). Backed by a `VecDeque` so the at-capacity eviction
@@ -51,6 +53,34 @@ impl<T> LifoQueue<T> {
     /// Entries evicted due to the capacity bound.
     pub fn dropped(&self) -> usize {
         self.dropped
+    }
+
+    /// Serialize by entry (oldest → newest) for campaign checkpoints;
+    /// the capacity bound and eviction counter are part of the state.
+    pub fn to_json_with(&self, ser: impl FnMut(&T) -> Json) -> Json {
+        Json::obj(vec![
+            ("cap", Json::Num(self.cap as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("items", Json::Arr(self.items.iter().map(ser).collect())),
+        ])
+    }
+
+    /// Rebuild the queue written by [`LifoQueue::to_json_with`].
+    pub fn from_json_with(
+        v: &Json,
+        mut de: impl FnMut(&Json) -> Result<T, String>,
+    ) -> Result<LifoQueue<T>, String> {
+        let cap = v.req("cap")?.as_usize().ok_or("lifo: bad cap")?;
+        let items = v.req("items")?.as_arr().ok_or("lifo: 'items' must be an array")?;
+        if items.len() > cap {
+            return Err(format!("lifo: {} items exceed cap {cap}", items.len()));
+        }
+        let mut q = LifoQueue::new(cap);
+        for item in items {
+            q.items.push_back(de(item)?);
+        }
+        q.dropped = v.req("dropped")?.as_usize().ok_or("lifo: bad dropped")?;
+        Ok(q)
     }
 }
 
@@ -118,6 +148,55 @@ impl<T> ScoredQueue<T> {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Serialize by entry for campaign checkpoints. Entries are written in
+    /// sequence order (deterministic bytes); each keeps its `(score, seq)`
+    /// pair so the restored queue pops in exactly the original order, and
+    /// the sequence counter itself is preserved so later pushes tie-break
+    /// the same way they would have in the uninterrupted run.
+    pub fn to_json_with(&self, mut ser: impl FnMut(&T) -> Json) -> Json {
+        let mut entries: Vec<&Entry<T>> = self.heap.iter().collect();
+        entries.sort_by_key(|e| e.seq);
+        Json::obj(vec![
+            ("seq", Json::u64_str(self.seq)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("score", Json::Num(e.score)),
+                                ("seq", Json::u64_str(e.seq)),
+                                ("item", ser(&e.item)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild the queue written by [`ScoredQueue::to_json_with`].
+    pub fn from_json_with(
+        v: &Json,
+        mut de: impl FnMut(&Json) -> Result<T, String>,
+    ) -> Result<ScoredQueue<T>, String> {
+        let mut q = ScoredQueue::new();
+        q.seq = v.req("seq")?.as_u64().ok_or("scored: bad seq counter")?;
+        for e in v.req("entries")?.as_arr().ok_or("scored: 'entries' must be an array")? {
+            let seq = e.req("seq")?.as_u64().ok_or("scored: bad entry seq")?;
+            if seq >= q.seq {
+                return Err(format!("scored: entry seq {seq} >= counter {}", q.seq));
+            }
+            q.heap.push(Entry {
+                score: e.req("score")?.as_f64().ok_or("scored: bad score")?,
+                seq,
+                item: de(e.req("item")?)?,
+            });
+        }
+        Ok(q)
     }
 }
 
@@ -243,6 +322,64 @@ impl<T> BoundedScoredQueue<T> {
     pub fn iter(&self) -> impl Iterator<Item = (f64, u64, &T)> {
         self.entries.iter().map(|e| (e.score, e.seq, &e.item))
     }
+
+    /// Serialize by entry (sequence order) for service checkpoints; the
+    /// bound, the sequence counter, and the depth high-water mark are part
+    /// of the state, so restored handles stay valid and future pushes
+    /// never collide with checkpointed ones.
+    pub fn to_json_with(&self, mut ser: impl FnMut(&T) -> Json) -> Json {
+        let mut entries: Vec<&Entry<T>> = self.entries.iter().collect();
+        entries.sort_by_key(|e| e.seq);
+        Json::obj(vec![
+            ("bound", Json::Num(self.bound as f64)),
+            ("seq", Json::u64_str(self.seq)),
+            ("peak", Json::Num(self.peak as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("score", Json::Num(e.score)),
+                                ("seq", Json::u64_str(e.seq)),
+                                ("item", ser(&e.item)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild the queue written by [`BoundedScoredQueue::to_json_with`].
+    pub fn from_json_with(
+        v: &Json,
+        mut de: impl FnMut(&Json) -> Result<T, String>,
+    ) -> Result<BoundedScoredQueue<T>, String> {
+        let bound = v.req("bound")?.as_usize().ok_or("bounded: bad bound")?;
+        if bound == 0 {
+            return Err("bounded: bound must be >= 1".into());
+        }
+        let mut q = BoundedScoredQueue::new(bound);
+        q.seq = v.req("seq")?.as_u64().ok_or("bounded: bad seq counter")?;
+        q.peak = v.req("peak")?.as_usize().ok_or("bounded: bad peak")?;
+        for e in v.req("entries")?.as_arr().ok_or("bounded: 'entries' must be an array")? {
+            if q.entries.len() == bound {
+                return Err(format!("bounded: more than {bound} entries"));
+            }
+            let seq = e.req("seq")?.as_u64().ok_or("bounded: bad entry seq")?;
+            if seq >= q.seq {
+                return Err(format!("bounded: entry seq {seq} >= counter {}", q.seq));
+            }
+            q.entries.push(Entry {
+                score: e.req("score")?.as_f64().ok_or("bounded: bad score")?,
+                seq,
+                item: de(e.req("item")?)?,
+            });
+        }
+        Ok(q)
+    }
 }
 
 #[cfg(test)]
@@ -333,6 +470,74 @@ mod tests {
                 crate::prop_assert!(got == want, "drain {got} != {want}");
             }
             crate::prop_assert!(q.pop().is_none() && q.is_empty(), "queue not empty after drain");
+            Ok(())
+        });
+    }
+
+    /// Property: (de)serializing any mid-life queue state by entry
+    /// preserves the exact pop / evict order, the counters, and the
+    /// handle space (future pushes after restore tie-break identically).
+    #[test]
+    fn property_queue_serialization_round_trips() {
+        crate::util::proptest::check("queue-serialization", |rng, _| {
+            // LIFO with evictions behind it
+            let mut lifo = LifoQueue::new(rng.below(6) + 1);
+            for i in 0..rng.below(20) {
+                lifo.push(i as u64);
+            }
+            let j = lifo.to_json_with(|x| Json::u64_str(*x));
+            let mut back = LifoQueue::from_json_with(&Json::parse(&j.to_string()).unwrap(), |v| {
+                v.as_u64().ok_or("bad item".into())
+            })?;
+            crate::prop_assert!(back.dropped() == lifo.dropped(), "dropped lost");
+            while let Some(want) = lifo.pop() {
+                crate::prop_assert!(back.pop() == Some(want), "lifo order changed");
+            }
+            crate::prop_assert!(back.pop().is_none(), "extra lifo items");
+
+            // scored queue with score ties and interleaved pops
+            let mut sq: ScoredQueue<u64> = ScoredQueue::new();
+            for i in 0..rng.below(30) {
+                sq.push((rng.below(4) as f64) * 0.5, i as u64);
+                if rng.chance(0.3) {
+                    sq.pop();
+                }
+            }
+            let j = sq.to_json_with(|x| Json::u64_str(*x));
+            let mut back = ScoredQueue::from_json_with(&Json::parse(&j.to_string()).unwrap(), |v| {
+                v.as_u64().ok_or("bad item".into())
+            })?;
+            // pushes after restore must tie-break exactly like the original
+            sq.push(0.0, 999);
+            back.push(0.0, 999);
+            while let Some(want) = sq.pop() {
+                crate::prop_assert!(back.pop() == Some(want), "scored order changed");
+            }
+            crate::prop_assert!(back.pop().is_none(), "extra scored items");
+
+            // bounded queue: handles must stay removable after restore
+            let mut bq: BoundedScoredQueue<u64> = BoundedScoredQueue::new(rng.below(6) + 2);
+            let mut handles = Vec::new();
+            for i in 0..rng.below(10) {
+                if let Ok(h) = bq.push(rng.f64(), i as u64) {
+                    handles.push((h, i as u64));
+                }
+                if rng.chance(0.2) {
+                    let _ = bq.pop();
+                }
+            }
+            let j = bq.to_json_with(|x| Json::u64_str(*x));
+            let mut back =
+                BoundedScoredQueue::from_json_with(&Json::parse(&j.to_string()).unwrap(), |v| {
+                    v.as_u64().ok_or("bad item".into())
+                })?;
+            crate::prop_assert!(back.peak() == bq.peak(), "peak lost");
+            for (h, _) in handles {
+                crate::prop_assert!(back.remove(h) == bq.remove(h), "handle {h} broke");
+            }
+            while let Some(want) = bq.pop() {
+                crate::prop_assert!(back.pop() == Some(want), "bounded order changed");
+            }
             Ok(())
         });
     }

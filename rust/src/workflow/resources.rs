@@ -169,6 +169,67 @@ impl Cluster {
         self.pools[&kind].tasks_done
     }
 
+    /// Serialize every pool's slot totals, live busy counts, and
+    /// busy-time integrals for campaign checkpoints. In-flight tasks keep
+    /// their slots across the checkpoint (the scheduler re-submits their
+    /// payloads on restore without re-acquiring).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            (
+                "pools",
+                Json::Obj(
+                    self.pools
+                        .iter()
+                        .map(|(k, p)| {
+                            (
+                                k.label().to_string(),
+                                Json::obj(vec![
+                                    ("total", Json::Num(p.total as f64)),
+                                    ("busy", Json::Num(p.busy as f64)),
+                                    ("busy_integral", Json::Num(p.busy_integral)),
+                                    ("last_t", Json::Num(p.last_t)),
+                                    ("tasks_done", Json::u64_str(p.tasks_done)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild the cluster written by [`Cluster::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Cluster, String> {
+        let nodes = v.req("nodes")?.as_usize().ok_or("cluster: bad nodes")?;
+        let mut cluster = Cluster::new(nodes);
+        let pools = v.req("pools")?;
+        for kind in WorkerKind::ALL {
+            let p = pools.req(kind.label())?;
+            let total = p.req("total")?.as_usize().ok_or("cluster: bad total")?;
+            let want = cluster.pools[&kind].total;
+            if total != want {
+                return Err(format!(
+                    "cluster: {} slot total {total} does not match the {nodes}-node \
+                     layout ({want})",
+                    kind.label()
+                ));
+            }
+            let busy = p.req("busy")?.as_usize().ok_or("cluster: bad busy")?;
+            if busy > total {
+                return Err(format!("cluster: {} busy {busy} > total {total}", kind.label()));
+            }
+            let pool = cluster.pools.get_mut(&kind).unwrap();
+            pool.busy = busy;
+            pool.busy_integral =
+                p.req("busy_integral")?.as_f64().ok_or("cluster: bad busy_integral")?;
+            pool.last_t = p.req("last_t")?.as_f64().ok_or("cluster: bad last_t")?;
+            pool.tasks_done = p.req("tasks_done")?.as_u64().ok_or("cluster: bad tasks_done")?;
+        }
+        Ok(cluster)
+    }
+
     /// Mean busy fraction of the pool over [0, t] (Fig. 3 active time).
     pub fn utilization(&mut self, kind: WorkerKind, t: f64) -> f64 {
         let p = self.pools.get_mut(&kind).unwrap();

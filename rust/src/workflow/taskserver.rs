@@ -57,6 +57,11 @@ impl TaskKind {
         }
     }
 
+    /// Inverse of [`TaskKind::label`] (checkpoint codec).
+    pub fn from_label(s: &str) -> Option<TaskKind> {
+        TaskKind::ALL.iter().copied().find(|k| k.label() == s)
+    }
+
     /// Worker pool the task runs on (paper §IV-B allocation).
     pub fn worker(self) -> WorkerKind {
         match self {
@@ -98,6 +103,130 @@ pub enum Payload {
     Charges { mof: Box<AssembledMof>, record_id: u64 },
     Adsorption { mof: Box<AssembledMof>, charges: Vec<f64>, record_id: u64 },
     Retrain { examples: Vec<TrainExample>, version: u64 },
+}
+
+impl Payload {
+    /// Serialize for campaign checkpoints (tagged by task label). A task
+    /// outcome is a pure function of `(payload, seed)`, so checkpoints
+    /// store in-flight *payloads* and re-execute them on resume instead of
+    /// persisting results.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mof_fields = |mof: &AssembledMof, record_id: u64| {
+            vec![("mof", mof.to_json()), ("record_id", Json::u64_str(record_id))]
+        };
+        let (tag, mut fields) = match self {
+            Payload::Generate { seed, model } => (
+                TaskKind::GenerateLinkers,
+                vec![("seed", Json::u64_str(*seed)), ("model", model.to_json())],
+            ),
+            Payload::Process { linkers } => (
+                TaskKind::ProcessLinkers,
+                vec![("linkers", Json::Arr(linkers.iter().map(GenLinker::to_json).collect()))],
+            ),
+            Payload::Assemble { linkers } => (
+                TaskKind::AssembleMofs,
+                vec![(
+                    "linkers",
+                    Json::Arr(linkers.iter().map(ProcessedLinker::to_json).collect()),
+                )],
+            ),
+            Payload::Validate { mof, record_id } => {
+                (TaskKind::ValidateStructure, mof_fields(mof, *record_id))
+            }
+            Payload::Optimize { mof, record_id } => {
+                (TaskKind::OptimizeCells, mof_fields(mof, *record_id))
+            }
+            Payload::Charges { mof, record_id } => {
+                (TaskKind::ComputeCharges, mof_fields(mof, *record_id))
+            }
+            Payload::Adsorption { mof, charges, record_id } => {
+                let mut f = mof_fields(mof, *record_id);
+                f.push(("charges", Json::Arr(charges.iter().map(|&q| Json::Num(q)).collect())));
+                (TaskKind::EstimateAdsorption, f)
+            }
+            Payload::Retrain { examples, version } => (
+                TaskKind::Retrain,
+                vec![
+                    (
+                        "examples",
+                        Json::Arr(examples.iter().map(TrainExample::to_json).collect()),
+                    ),
+                    ("version", Json::u64_str(*version)),
+                ],
+            ),
+        };
+        fields.insert(0, ("task", Json::Str(tag.label().to_string())));
+        Json::obj(fields)
+    }
+
+    /// Parse the representation written by [`Payload::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Payload, String> {
+        use crate::util::json::Json;
+        let tag = v.req("task")?.as_str().ok_or("payload: 'task' must be a string")?;
+        let kind = TaskKind::from_label(tag)
+            .ok_or_else(|| format!("payload: unknown task kind '{tag}'"))?;
+        let mof = |v: &Json| -> Result<Box<AssembledMof>, String> {
+            Ok(Box::new(AssembledMof::from_json(v.req("mof")?)?))
+        };
+        let record_id = |v: &Json| -> Result<u64, String> {
+            v.req("record_id")?.as_u64().ok_or_else(|| "payload: bad record_id".to_string())
+        };
+        match kind {
+            TaskKind::GenerateLinkers => Ok(Payload::Generate {
+                seed: v.req("seed")?.as_u64().ok_or("payload: bad seed")?,
+                model: ModelSnapshot::from_json(v.req("model")?)?,
+            }),
+            TaskKind::ProcessLinkers => Ok(Payload::Process {
+                linkers: v
+                    .req("linkers")?
+                    .as_arr()
+                    .ok_or("payload: 'linkers' must be an array")?
+                    .iter()
+                    .map(GenLinker::from_json)
+                    .collect::<Result<_, _>>()?,
+            }),
+            TaskKind::AssembleMofs => Ok(Payload::Assemble {
+                linkers: v
+                    .req("linkers")?
+                    .as_arr()
+                    .ok_or("payload: 'linkers' must be an array")?
+                    .iter()
+                    .map(ProcessedLinker::from_json)
+                    .collect::<Result<_, _>>()?,
+            }),
+            TaskKind::ValidateStructure => {
+                Ok(Payload::Validate { mof: mof(v)?, record_id: record_id(v)? })
+            }
+            TaskKind::OptimizeCells => {
+                Ok(Payload::Optimize { mof: mof(v)?, record_id: record_id(v)? })
+            }
+            TaskKind::ComputeCharges => {
+                Ok(Payload::Charges { mof: mof(v)?, record_id: record_id(v)? })
+            }
+            TaskKind::EstimateAdsorption => Ok(Payload::Adsorption {
+                mof: mof(v)?,
+                record_id: record_id(v)?,
+                charges: v
+                    .req("charges")?
+                    .as_arr()
+                    .ok_or("payload: 'charges' must be an array")?
+                    .iter()
+                    .map(|q| q.as_f64().ok_or_else(|| "payload: bad charge".to_string()))
+                    .collect::<Result<_, _>>()?,
+            }),
+            TaskKind::Retrain => Ok(Payload::Retrain {
+                examples: v
+                    .req("examples")?
+                    .as_arr()
+                    .ok_or("payload: 'examples' must be an array")?
+                    .iter()
+                    .map(TrainExample::from_json)
+                    .collect::<Result<_, _>>()?,
+                version: v.req("version")?.as_u64().ok_or("payload: bad version")?,
+            }),
+        }
+    }
 }
 
 /// Results delivered back to the Thinker.
@@ -158,13 +287,20 @@ impl Engines {
 }
 
 /// Execute a task's real computation (called on a pool worker thread).
-pub fn execute(payload: Payload, engines: &Engines, seed: u64) -> Outcome {
+///
+/// Borrows the payload: the scheduler retains ownership (via `Arc`) so an
+/// in-flight task can be checkpointed by serializing its payload — the
+/// outcome is a pure function of `(payload, seed)`, so a resumed run
+/// re-executes and gets bit-identical results. Pass-through structures
+/// (`mof` in the validate/optimize/charges chain) are cloned into the
+/// outcome, exactly the copies the old by-value signature moved.
+pub fn execute(payload: &Payload, engines: &Engines, seed: u64) -> Outcome {
     match payload {
-        Payload::Generate { seed, model } => {
+        Payload::Generate { seed: gen_seed, model } => {
             // executes from the submit-time snapshot, never from the
             // generator's current (mutable) weights — a concurrent retrain
             // install cannot change what this task produces
-            match engines.generator.generate_with(&model, seed) {
+            match engines.generator.generate_with(model, *gen_seed) {
                 Ok(linkers) => Outcome::Generated { linkers, model_version: model.version },
                 Err(e) => {
                     Outcome::Failed { kind: TaskKind::GenerateLinkers, reason: e.to_string() }
@@ -173,13 +309,13 @@ pub fn execute(payload: Payload, engines: &Engines, seed: u64) -> Outcome {
         }
         Payload::Process { linkers } => {
             let input_count = linkers.len();
-            let (ok, rejects) = process_batch(&linkers);
+            let (ok, rejects) = process_batch(linkers);
             Outcome::Processed { linkers: ok, rejects, input_count }
         }
         Payload::Assemble { linkers } => {
             let mut mofs = Vec::new();
             let mut failures = 0;
-            for l in &linkers {
+            for l in linkers {
                 match assemble_default(l) {
                     Ok(m) => mofs.push(m),
                     Err(_) => failures += 1,
@@ -189,26 +325,28 @@ pub fn execute(payload: Payload, engines: &Engines, seed: u64) -> Outcome {
         }
         Payload::Validate { mof, record_id } => {
             let result = run_npt(&mof.framework, &engines.md, seed);
-            Outcome::Validated { result: Box::new(result), mof, record_id }
+            Outcome::Validated { result: Box::new(result), mof: mof.clone(), record_id: *record_id }
         }
         Payload::Optimize { mof, record_id } => {
             let result = optimize_cell(&mof.framework, &engines.opt);
-            let mut mof = mof;
+            let mut mof = mof.clone();
             mof.framework = result.optimized.clone();
-            Outcome::Optimized { result: Box::new(result), mof, record_id }
+            Outcome::Optimized { result: Box::new(result), mof, record_id: *record_id }
         }
         Payload::Charges { mof, record_id } => {
             let charges = assign_charges(&mof.framework, &engines.qeq).ok();
-            Outcome::Charged { charges, mof, record_id }
+            Outcome::Charged { charges, mof: mof.clone(), record_id: *record_id }
         }
         Payload::Adsorption { mof, charges, record_id } => {
-            let result = run_gcmc(&mof.framework, &charges, &engines.gcmc, seed);
-            Outcome::Adsorbed { result: Box::new(result), record_id }
+            let result = run_gcmc(&mof.framework, charges, &engines.gcmc, seed);
+            Outcome::Adsorbed { result: Box::new(result), record_id: *record_id }
         }
         Payload::Retrain { examples, version } => {
             let set_size = examples.len();
-            match engines.trainer.retrain(&examples, engines.retrain_steps, seed) {
-                Ok((params, loss)) => Outcome::Retrained { params, loss, version, set_size },
+            match engines.trainer.retrain(examples, engines.retrain_steps, seed) {
+                Ok((params, loss)) => {
+                    Outcome::Retrained { params, loss, version: *version, set_size }
+                }
                 Err(e) => Outcome::Failed { kind: TaskKind::Retrain, reason: e.to_string() },
             }
         }
@@ -238,12 +376,14 @@ pub struct InFlight {
     pub handle: JobHandle<Outcome>,
 }
 
-/// Submit a task's real compute to the pool.
+/// Submit a task's real compute to the pool. The payload arrives behind an
+/// `Arc`: the pool job shares it with the scheduler's in-flight table, so a
+/// checkpoint can serialize exactly what was submitted.
 #[allow(clippy::too_many_arguments)]
 pub fn submit(
     pool: &ThreadPool,
     engines: &Arc<Engines>,
-    payload: Payload,
+    payload: Arc<Payload>,
     task_id: u64,
     kind: TaskKind,
     now: f64,
@@ -255,7 +395,7 @@ pub fn submit(
         // substrate panics become Failed outcomes instead of poisoning the
         // pool / hanging the campaign's join
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            execute(payload, &eng, seed)
+            execute(&payload, &eng, seed)
         })) {
             Ok(outcome) => outcome,
             Err(p) => {
@@ -331,7 +471,7 @@ mod tests {
     fn generate_then_process_pipeline() {
         let eng = engines();
         let out = execute(
-            Payload::Generate { seed: 3, model: eng.generator.snapshot() },
+            &Payload::Generate { seed: 3, model: eng.generator.snapshot() },
             &eng,
             3,
         );
@@ -340,7 +480,7 @@ mod tests {
             _ => panic!("wrong outcome"),
         };
         assert!(!linkers.is_empty());
-        let out2 = execute(Payload::Process { linkers }, &eng, 4);
+        let out2 = execute(&Payload::Process { linkers }, &eng, 4);
         match out2 {
             Outcome::Processed { linkers, input_count, .. } => {
                 assert!(input_count >= linkers.len());
@@ -356,7 +496,7 @@ mod tests {
         // a retrain install lands between submit and pool execution; the
         // task must still see the weights it was submitted with
         eng.generator.set_params(vec![], 4);
-        match execute(payload, &eng, 5) {
+        match execute(&payload, &eng, 5) {
             Outcome::Generated { linkers, model_version } => {
                 assert_eq!(model_version, 0, "execution read post-install version");
                 assert!(linkers.iter().all(|l| l.model_version == 0));
@@ -368,13 +508,54 @@ mod tests {
     }
 
     #[test]
+    fn payload_round_trips_and_re_executes_identically() {
+        let eng = engines();
+        // build a real validate payload via the pipeline
+        let linkers = match execute(
+            &Payload::Generate { seed: 11, model: eng.generator.snapshot() },
+            &eng,
+            11,
+        ) {
+            Outcome::Generated { linkers, .. } => linkers,
+            _ => panic!("wrong outcome"),
+        };
+        let processed = match execute(&Payload::Process { linkers }, &eng, 12) {
+            Outcome::Processed { linkers, .. } => linkers,
+            _ => panic!("wrong outcome"),
+        };
+        let mofs = match execute(&Payload::Assemble { linkers: processed }, &eng, 13) {
+            Outcome::Assembled { mofs, .. } => mofs,
+            _ => panic!("wrong outcome"),
+        };
+        let mof = Box::new(mofs.into_iter().next().expect("at least one MOF assembles"));
+        let payload = Payload::Validate { mof, record_id: 42 };
+        let text = payload.to_json().to_string();
+        let parsed =
+            Payload::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        // re-execution from the parsed payload is bit-identical: this is
+        // the property that lets checkpoints store payloads, not results
+        let a = execute(&payload, &eng, 99);
+        let b = execute(&parsed, &eng, 99);
+        match (a, b) {
+            (
+                Outcome::Validated { result: ra, record_id: ia, .. },
+                Outcome::Validated { result: rb, record_id: ib, .. },
+            ) => {
+                assert_eq!(ia, ib);
+                assert_eq!(ra.strain.to_bits(), rb.strain.to_bits(), "strain diverged");
+            }
+            _ => panic!("wrong outcomes"),
+        }
+    }
+
+    #[test]
     fn submit_runs_on_pool() {
         let pool = ThreadPool::new(2);
         let eng = engines();
         let inf = submit(
             &pool,
             &eng,
-            Payload::Generate { seed: 9, model: eng.generator.snapshot() },
+            Arc::new(Payload::Generate { seed: 9, model: eng.generator.snapshot() }),
             1,
             TaskKind::GenerateLinkers,
             0.0,

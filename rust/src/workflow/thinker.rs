@@ -139,6 +139,29 @@ pub struct TaskRequest {
     pub origin_t: f64,
 }
 
+impl TaskRequest {
+    /// Serialize for campaign checkpoints (pending-queue entries).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.label().to_string())),
+            ("payload", self.payload.to_json()),
+            ("origin_t", Json::Num(self.origin_t)),
+        ])
+    }
+
+    /// Parse the representation written by [`TaskRequest::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<TaskRequest, String> {
+        let kind = v.req("kind")?.as_str().ok_or("request: 'kind' must be a string")?;
+        Ok(TaskRequest {
+            kind: TaskKind::from_label(kind)
+                .ok_or_else(|| format!("request: unknown task kind '{kind}'"))?,
+            payload: Payload::from_json(v.req("payload")?)?,
+            origin_t: v.req("origin_t")?.as_f64().ok_or("request: bad origin_t")?,
+        })
+    }
+}
+
 /// Thinker state: queues, counters, retraining policy, database.
 pub struct Thinker {
     pub cfg: PolicyConfig,
@@ -461,6 +484,151 @@ impl Thinker {
         if let Some(ex) = train_example_from_processed(linker, self.n_slots, self.n_feats) {
             self.examples.insert(record_id, ex);
         }
+    }
+
+    /// Serialize the **entire** Thinker state for campaign checkpoints:
+    /// database, metrics, proxy-store accounting, per-family linker
+    /// buffers, the MOF LIFO and optimize queue (by entry, with their
+    /// eviction/sequence counters), training examples, and every policy
+    /// flag/counter. A Thinker restored from this JSON makes the same
+    /// decision the uninterrupted one would at every subsequent event.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mof_entry = |(mof, id): &(Box<AssembledMof>, u64)| {
+            Json::obj(vec![("mof", mof.to_json()), ("id", Json::u64_str(*id))])
+        };
+        let mut examples: Vec<(&u64, &TrainExample)> = self.examples.iter().collect();
+        examples.sort_by_key(|(id, _)| **id);
+        let mut by_key: Vec<(&String, &TrainExample)> = self.example_by_key.iter().collect();
+        by_key.sort_by(|a, b| a.0.cmp(b.0));
+        Json::obj(vec![
+            ("cfg", self.cfg.to_json()),
+            ("db", self.db.checkpoint_json()),
+            ("metrics", self.metrics.to_json()),
+            ("store", self.store.to_json()),
+            (
+                "linker_buf",
+                Json::Arr(
+                    self.linker_buf
+                        .iter()
+                        .map(|buf| {
+                            Json::Arr(buf.iter().map(ProcessedLinker::to_json).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+            ("mof_lifo", self.mof_lifo.to_json_with(mof_entry)),
+            ("optimize_queue", self.optimize_queue.to_json_with(mof_entry)),
+            (
+                "examples",
+                Json::Arr(
+                    examples
+                        .iter()
+                        .map(|(id, ex)| {
+                            Json::obj(vec![("id", Json::u64_str(**id)), ("ex", ex.to_json())])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "example_by_key",
+                Json::Arr(
+                    by_key
+                        .iter()
+                        .map(|(k, ex)| {
+                            Json::obj(vec![
+                                ("key", Json::Str((*k).clone())),
+                                ("ex", ex.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("assembly_in_flight", Json::Num(self.assembly_in_flight as f64)),
+            ("validate_slots_total", Json::Num(self.validate_slots_total as f64)),
+            ("retraining", Json::Bool(self.retraining)),
+            ("model_version", Json::u64_str(self.model_version)),
+            (
+                "awaiting_version",
+                match self.awaiting_version {
+                    Some((v, t)) => {
+                        Json::obj(vec![("version", Json::u64_str(v)), ("t", Json::Num(t))])
+                    }
+                    None => Json::Null,
+                },
+            ),
+            ("last_train_set", Json::Num(self.last_train_set as f64)),
+            ("linkers_generated", Json::Num(self.linkers_generated as f64)),
+            ("linkers_processed_in", Json::Num(self.linkers_processed_in as f64)),
+            ("linkers_survived", Json::Num(self.linkers_survived as f64)),
+            ("assembled_ok", Json::Num(self.assembled_ok as f64)),
+            ("assembly_failures", Json::Num(self.assembly_failures as f64)),
+            ("n_slots", Json::Num(self.n_slots as f64)),
+            ("n_feats", Json::Num(self.n_feats as f64)),
+        ])
+    }
+
+    /// Rebuild the Thinker written by [`Thinker::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Thinker, String> {
+        use crate::util::json::Json;
+        let mof_entry = |e: &Json| -> Result<(Box<AssembledMof>, u64), String> {
+            Ok((
+                Box::new(AssembledMof::from_json(e.req("mof")?)?),
+                e.req("id")?.as_u64().ok_or("thinker: bad mof id")?,
+            ))
+        };
+        let usize_field = |key: &str| -> Result<usize, String> {
+            v.req(key)?.as_usize().ok_or_else(|| format!("thinker: bad {key}"))
+        };
+        let cfg = PolicyConfig::from_json(v.req("cfg")?)?;
+        let mut th = Thinker::new(cfg, usize_field("validate_slots_total")?);
+        th.db = MofDatabase::from_checkpoint_json(v.req("db")?)?;
+        th.metrics = Metrics::from_json(v.req("metrics")?)?;
+        th.store = ProxyStore::from_json(v.req("store")?)?;
+        let bufs = v
+            .req("linker_buf")?
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or("thinker: 'linker_buf' must have 2 families")?;
+        for (slot, buf) in th.linker_buf.iter_mut().zip(bufs) {
+            for l in buf.as_arr().ok_or("thinker: bad linker buffer")? {
+                slot.push(ProcessedLinker::from_json(l)?);
+            }
+        }
+        th.mof_lifo = LifoQueue::from_json_with(v.req("mof_lifo")?, mof_entry)?;
+        th.optimize_queue = ScoredQueue::from_json_with(v.req("optimize_queue")?, mof_entry)?;
+        for e in v.req("examples")?.as_arr().ok_or("thinker: 'examples' must be an array")? {
+            th.examples.insert(
+                e.req("id")?.as_u64().ok_or("thinker: bad example id")?,
+                TrainExample::from_json(e.req("ex")?)?,
+            );
+        }
+        let by_key = v.req("example_by_key")?;
+        for e in by_key.as_arr().ok_or("thinker: 'example_by_key' must be an array")? {
+            th.example_by_key.insert(
+                e.req("key")?.as_str().ok_or("thinker: bad example key")?.to_string(),
+                TrainExample::from_json(e.req("ex")?)?,
+            );
+        }
+        th.assembly_in_flight = usize_field("assembly_in_flight")?;
+        th.retraining = v.req("retraining")?.as_bool().ok_or("thinker: bad retraining")?;
+        th.model_version = v.req("model_version")?.as_u64().ok_or("thinker: bad version")?;
+        th.awaiting_version = match v.req("awaiting_version")? {
+            Json::Null => None,
+            j => Some((
+                j.req("version")?.as_u64().ok_or("thinker: bad awaiting version")?,
+                j.req("t")?.as_f64().ok_or("thinker: bad awaiting t")?,
+            )),
+        };
+        th.last_train_set = usize_field("last_train_set")?;
+        th.linkers_generated = usize_field("linkers_generated")?;
+        th.linkers_processed_in = usize_field("linkers_processed_in")?;
+        th.linkers_survived = usize_field("linkers_survived")?;
+        th.assembled_ok = usize_field("assembled_ok")?;
+        th.assembly_failures = usize_field("assembly_failures")?;
+        th.n_slots = usize_field("n_slots")?;
+        th.n_feats = usize_field("n_feats")?;
+        Ok(th)
     }
 
     /// Buffered linker count (diagnostics).

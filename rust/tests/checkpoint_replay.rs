@@ -1,0 +1,241 @@
+//! Checkpoint/replay acceptance tests (ISSUE 4): a campaign checkpointed
+//! at a virtual-time barrier and resumed in a fresh engine/scheduler
+//! stack produces a **bit-identical** `CampaignReport` — same utilization
+//! series, same database, same metrics — for multiple barrier points and
+//! multiple `PolicyKind`s, including with online retraining ON. Also
+//! covers chained checkpoints, the versioned-format error paths, and the
+//! service-level queue/clock/stats resume.
+
+use std::sync::Arc;
+
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::trainer::SurrogateTrainer;
+use mofa::sim::checkpoint::{
+    canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
+    CheckpointError, FORMAT_VERSION,
+};
+use mofa::sim::policy::PriorityClasses;
+use mofa::sim::service::{
+    run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
+    ServiceConfig,
+};
+use mofa::util::json::Json;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::mofa::{CampaignConfig, CampaignReport};
+use mofa::workflow::taskserver::Engines;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn quick_engines() -> Arc<Engines> {
+    let mut e = Engines::scaled(
+        Arc::new(SurrogateGenerator::builtin(16)),
+        Arc::new(SurrogateTrainer),
+    );
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    Arc::new(e)
+}
+
+fn quick_config(seed: u64, duration_s: f64) -> CampaignConfig {
+    CampaignConfig {
+        nodes: 8,
+        duration_s,
+        seed,
+        // retraining ON with low thresholds: the checkpoint must carry the
+        // installed model weights and the retrain bookkeeping
+        policy: PolicyConfig { retrain_min: 8, adsorption_switch: 8, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 60.0,
+    }
+}
+
+fn canonical(report: &CampaignReport) -> String {
+    canonical_report_json(report).to_string()
+}
+
+/// Checkpoint `req` at `barrier`, push the checkpoint through its **text**
+/// form (what a file round-trip does), resume, and return the final
+/// report. Panics if the campaign drained before the barrier.
+fn checkpoint_and_resume(
+    req: CampaignRequest,
+    barrier: f64,
+    pool: &Arc<ThreadPool>,
+) -> CampaignReport {
+    let ckpt = run_request_to_barrier(req, quick_engines(), pool, barrier)
+        .checkpoint()
+        .expect("campaign drained before the barrier");
+    let text = ckpt.to_string();
+    let parsed = Json::parse(&text).expect("checkpoint text must parse");
+    resume_request(&parsed, quick_engines(), pool, f64::INFINITY)
+        .expect("resume failed")
+        .report()
+        .expect("resume must run to completion")
+}
+
+#[test]
+fn campaign_resumes_bit_identically_across_barriers_and_policies() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let policies = [
+        PolicyKind::Mofa,
+        PolicyKind::Priority(PriorityClasses::default()),
+        PolicyKind::FairShare { weight: 1, weight_total: 2 },
+    ];
+    for (i, policy) in policies.into_iter().enumerate() {
+        let req = CampaignRequest::new(quick_config(40 + i as u64, 900.0)).policy(policy);
+        let clean = run_request_to_barrier(req.clone(), quick_engines(), &pool, f64::INFINITY)
+            .report()
+            .expect("clean run finishes");
+        let want = canonical(&clean);
+        for barrier in [240.0, 600.0] {
+            let resumed = checkpoint_and_resume(req.clone(), barrier, &pool);
+            assert_eq!(
+                canonical(&resumed),
+                want,
+                "{} @ barrier {barrier}: resumed run diverged from the uninterrupted one",
+                policy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn chained_checkpoints_resume_bit_identically() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let req = CampaignRequest::new(quick_config(77, 900.0));
+    let clean = run_request_to_barrier(req.clone(), quick_engines(), &pool, f64::INFINITY)
+        .report()
+        .expect("clean run finishes");
+
+    // checkpoint at 200 s, resume to a second barrier at 500 s (writing a
+    // chained checkpoint), then resume that to completion
+    let first = run_request_to_barrier(req, quick_engines(), &pool, 200.0)
+        .checkpoint()
+        .expect("paused at the first barrier");
+    let first = Json::parse(&first.to_string()).unwrap();
+    let second = resume_request(&first, quick_engines(), &pool, 500.0)
+        .expect("resume to second barrier")
+        .checkpoint()
+        .expect("paused at the second barrier");
+    let second = Json::parse(&second.to_string()).unwrap();
+    let resumed = resume_request(&second, quick_engines(), &pool, f64::INFINITY)
+        .expect("final resume")
+        .report()
+        .expect("runs to completion");
+    assert_eq!(canonical(&resumed), canonical(&clean), "chained resume diverged");
+}
+
+#[test]
+fn barrier_past_the_horizon_finishes_like_a_plain_run() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let req = CampaignRequest::new(quick_config(55, 600.0));
+    let clean = run_campaign_request(req.clone(), quick_engines(), &pool);
+    match run_request_to_barrier(req, quick_engines(), &pool, 1e12) {
+        CampaignRunOutcome::Done(report) => {
+            assert_eq!(canonical(&report), canonical(&clean));
+        }
+        CampaignRunOutcome::Checkpointed(_) => panic!("nothing should pause past the drain"),
+    }
+}
+
+#[test]
+fn format_version_mismatch_is_a_typed_error_not_a_panic() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let ckpt = run_request_to_barrier(
+        CampaignRequest::new(quick_config(60, 600.0)),
+        quick_engines(),
+        &pool,
+        200.0,
+    )
+    .checkpoint()
+    .expect("paused");
+    // tamper the header version
+    let text = ckpt.to_string().replacen(
+        &format!("\"format\":{FORMAT_VERSION}"),
+        "\"format\":999",
+        1,
+    );
+    let parsed = Json::parse(&text).unwrap();
+    let err = resume_request(&parsed, quick_engines(), &pool, f64::INFINITY).unwrap_err();
+    assert_eq!(
+        err,
+        CheckpointError::FormatMismatch { found: 999, expected: FORMAT_VERSION }
+    );
+
+    // a campaign checkpoint is not a service checkpoint
+    let parsed = Json::parse(&ckpt.to_string()).unwrap();
+    let err = CampaignService::resume_from(Arc::new(ThreadPool::new(2)), &parsed, |_| {
+        quick_engines()
+    })
+    .map(|_| ())
+    .unwrap_err();
+    assert_eq!(
+        err,
+        CheckpointError::WrongKind { found: "campaign".into(), expected: "service" }
+    );
+}
+
+#[test]
+fn service_checkpoint_restores_queue_deadline_clock_and_stats() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let svc = CampaignService::new(Arc::clone(&pool), ServiceConfig::new(1).queue_bound(8));
+
+    // run one campaign through so the virtual deadline clock advances to
+    // its cost (120 s): restored deadline decisions must see that history
+    let first = CampaignRequest::new(quick_config(90, 120.0)).tenant("alice");
+    let t0 = svc.try_submit(first, quick_engines()).unwrap();
+    assert!(t0.wait().report().is_some());
+
+    // freeze dispatch, then queue three requests: the middle one's
+    // deadline (50 s) already expired against the 120 s clock
+    svc.pause_dispatch();
+    let req_a = CampaignRequest::new(quick_config(91, 120.0)).tenant("alice");
+    let req_b = CampaignRequest::new(quick_config(92, 120.0)).tenant("bob").deadline(50.0);
+    let req_c = CampaignRequest::new(quick_config(93, 120.0)).tenant("carol");
+    let ta = svc.try_submit(req_a.clone(), quick_engines()).unwrap();
+    let tb = svc.try_submit(req_b, quick_engines()).unwrap();
+    let tc = svc.try_submit(req_c.clone(), quick_engines()).unwrap();
+
+    let ckpt_text = svc.checkpoint_json().to_string();
+    drop(svc); // old-process tickets settle as Shed; the queue lives on
+    assert!(ta.wait().report().is_none());
+    assert!(tb.wait().report().is_none());
+    assert!(tc.wait().report().is_none());
+
+    let parsed = Json::parse(&ckpt_text).unwrap();
+    let (svc2, tickets) =
+        CampaignService::resume_from(Arc::clone(&pool), &parsed, |_| quick_engines()).unwrap();
+    assert_eq!(tickets.len(), 3, "all queued requests must restore");
+    let outcomes: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+
+    // FIFO order: a runs; b sheds (its deadline expired against the
+    // restored clock); c runs
+    let a_report = match &outcomes[0] {
+        RequestOutcome::Done(r) => canonical(r),
+        o => panic!("request a should complete, got {}", o.label()),
+    };
+    assert_eq!(outcomes[1].label(), "shed", "the expired deadline must shed after resume");
+    let c_report = match &outcomes[2] {
+        RequestOutcome::Done(r) => canonical(r),
+        o => panic!("request c should complete, got {}", o.label()),
+    };
+
+    // the served campaigns stay bit-identical to standalone runs
+    let solo_a = run_campaign_request(req_a, quick_engines(), &pool);
+    let solo_c = run_campaign_request(req_c, quick_engines(), &pool);
+    assert_eq!(a_report, canonical(&solo_a));
+    assert_eq!(c_report, canonical(&solo_c));
+
+    // counters carried across the resume + the epoch marks it
+    let stats = svc2.stats();
+    assert_eq!(stats.resume_epoch, 1);
+    assert_eq!(stats.submitted, 4);
+    assert_eq!(stats.admitted, 4);
+    assert_eq!(stats.completed, 3, "1 pre-checkpoint + 2 post-resume");
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.per_tenant["alice"].admitted, 2);
+    assert_eq!(stats.per_tenant["alice"].completed, 2);
+    assert_eq!(stats.per_tenant["bob"].shed, 1);
+    assert_eq!(stats.per_tenant["carol"].completed, 1);
+    assert_eq!(stats.turnaround_s.len(), 3, "pre-checkpoint turnaround window carried");
+}
