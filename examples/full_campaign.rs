@@ -47,6 +47,13 @@
 //! checkpoint. The canonical report holds every deterministic field of
 //! the campaign (wallclock excluded), so a byte diff proves bit-identical
 //! replay.
+//!
+//! `--preempt` enables class-based task preemption: the campaign runs
+//! under the priority policy with preemption ON, so a pending high-class
+//! task evicts a running lower-class one (the victim re-queues and
+//! re-executes; canonical reports include the eviction counters). It
+//! applies to the checkpoint/replay flow (the CI determinism gate runs
+//! it) and to `--service` requests; plain sweeps reject it.
 
 use std::sync::Arc;
 
@@ -156,6 +163,14 @@ fn print_report(report: &CampaignReport, hours: f64, href: &HmofReference) {
         th.store.bytes_resolved as f64 / 1e6,
         th.store.transfer_time_total
     );
+    if report.preemption.evictions > 0 {
+        println!(
+            "preemption: {} evictions, {} redispatches, {:.1} s virtual work discarded",
+            report.preemption.evictions,
+            report.preemption.redispatches,
+            report.preemption.wasted_busy_s
+        );
+    }
     println!("wallclock: {:.1} s", report.wallclock_s);
 }
 
@@ -235,9 +250,9 @@ fn service_load_demo(spec: &str) -> anyhow::Result<()> {
     println!("\n-- ServiceStats --");
     println!(
         "queue depth {} (peak {}), submitted {}, admitted {}, rejected {}, shed {}, \
-         cancelled {}, completed {}",
+         cancelled {}, completed {}, task evictions {}",
         s.queue_depth, s.peak_queue_depth, s.submitted, s.admitted, s.rejected, s.shed,
-        s.cancelled, s.completed
+        s.cancelled, s.completed, s.task_evictions
     );
     println!(
         "goodput {:.1}%  turnaround p50 {:.2} s  p99 {:.2} s",
@@ -289,6 +304,7 @@ fn take_value(args: &mut Vec<String>, name: &str) -> anyhow::Result<Option<Strin
 /// the CI `determinism` job byte-compares.
 struct CheckpointFlow {
     surrogate: bool,
+    preempt: bool,
     checkpoint_path: Option<String>,
     resume_path: Option<String>,
     barrier_s: Option<f64>,
@@ -339,7 +355,14 @@ fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Re
         }
         None => {
             let vt = if flow.checkpoint_path.is_some() { barrier } else { f64::INFINITY };
-            run_request_to_barrier(CampaignRequest::new(config), engines, &pool, vt)
+            let mut req = CampaignRequest::new(config);
+            if flow.preempt {
+                println!("class-based preemption ON (priority policy)");
+                req = req
+                    .policy(PolicyKind::Priority(PriorityClasses::default()))
+                    .preemption(true);
+            }
+            run_request_to_barrier(req, engines, &pool, vt)
         }
     };
     match outcome {
@@ -381,6 +404,7 @@ fn main() -> anyhow::Result<()> {
     // checkpoint/replay flags (see the module docs); any of them routes
     // the run through the deterministic single-campaign flow
     let surrogate = take_flag(&mut args, "--surrogate");
+    let preempt = take_flag(&mut args, "--preempt");
     let checkpoint_path = take_value(&mut args, "--checkpoint")?;
     let resume_path = take_value(&mut args, "--resume")?;
     let barrier_s = match take_value(&mut args, "--barrier")? {
@@ -429,11 +453,24 @@ fn main() -> anyhow::Result<()> {
         return checkpoint_flow(
             node_counts[0],
             hours,
-            CheckpointFlow { surrogate, checkpoint_path, resume_path, barrier_s, canonical_out },
+            CheckpointFlow {
+                surrogate,
+                preempt,
+                checkpoint_path,
+                resume_path,
+                barrier_s,
+                canonical_out,
+            },
         );
     }
     if barrier_s.is_some() {
         anyhow::bail!("--barrier only applies together with --checkpoint or --resume");
+    }
+    if preempt && service_max.is_none() {
+        anyhow::bail!(
+            "--preempt applies to the checkpoint/replay flow or --service requests; \
+             plain sweeps run the Thinker policy without task classes"
+        );
     }
 
     println!("== MOFA full campaign (three-layer E2E) ==");
@@ -492,13 +529,15 @@ fn main() -> anyhow::Result<()> {
                 .map(|(i, item)| {
                     let policy = kinds[i % kinds.len()];
                     println!(
-                        "  request {i}: {} nodes, policy {}",
+                        "  request {i}: {} nodes, policy {}{}",
                         item.config.nodes,
-                        policy.label()
+                        policy.label(),
+                        if preempt { " (preemption on)" } else { "" }
                     );
                     svc.try_submit(
                         CampaignRequest::new(item.config)
                             .policy(policy)
+                            .preemption(preempt)
                             .tenant(format!("sweep-{i}")),
                         item.engines,
                     )

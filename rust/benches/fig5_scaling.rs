@@ -19,17 +19,22 @@
 
 use std::sync::Arc;
 
+use mofa::assembly::AssembledMof;
+use mofa::genai::GenLinker;
 use mofa::sim::admission::ShedPolicy;
-use mofa::sim::policy::PriorityClasses;
+use mofa::sim::policy::{PriorityClasses, PriorityPolicy};
+use mofa::sim::scheduler::{Completion, Policy, Scheduler, SimParams};
 use mofa::sim::service::{
     run_campaign_request, CampaignRequest, CampaignService, PolicyKind, ServiceConfig,
 };
 use mofa::sim::sweep::sweep_nodes;
+use mofa::util::stats::quantile;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, build_quick_surrogate_engines, ModelMode};
 use mofa::workflow::mofa::CampaignConfig;
-use mofa::workflow::taskserver::TaskKind;
-use mofa::workflow::thinker::PolicyConfig;
+use mofa::workflow::resources::{Cluster, WorkerKind};
+use mofa::workflow::taskserver::{execute, Outcome, Payload, TaskKind};
+use mofa::workflow::thinker::{PolicyConfig, TaskRequest};
 
 fn main() -> anyhow::Result<()> {
     let minutes: f64 = std::env::args()
@@ -163,7 +168,177 @@ fn main() -> anyhow::Result<()> {
     println!("(fair-share row: weight 1 of 2 — the tenant sees half of every slot pool)");
 
     overload_section(&pool);
+    preemption_section(&pool);
     Ok(())
+}
+
+/// Class-mixed flood for the preemption section: `lows` long low-class
+/// process batches saturate a tiny Cpu pool from t=0, while high-class
+/// assembles arrive on ~224 s validate ticks. High-class turnaround is
+/// arrival → completion; low goodput counts process batches finished
+/// inside the observation window.
+struct MixFlood {
+    linkers: Vec<GenLinker>,
+    mof: Box<AssembledMof>,
+    lows: usize,
+    highs_left: usize,
+    primed: bool,
+    record_id: u64,
+    window: f64,
+    high_turnaround_s: Vec<f64>,
+    lows_done_in_window: usize,
+}
+
+impl Policy for MixFlood {
+    fn fill(&mut self, _free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        if self.primed {
+            return Vec::new();
+        }
+        self.primed = true;
+        let mut out: Vec<TaskRequest> = (0..self.lows)
+            .map(|_| TaskRequest {
+                kind: TaskKind::ProcessLinkers,
+                payload: Payload::Process { linkers: self.linkers.clone() },
+                origin_t: now,
+            })
+            .collect();
+        out.push(TaskRequest {
+            kind: TaskKind::ValidateStructure,
+            payload: Payload::Validate { mof: self.mof.clone(), record_id: 0 },
+            origin_t: now,
+        });
+        out
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        let mut followups = Vec::new();
+        match done.kind {
+            TaskKind::ProcessLinkers => {
+                if done.completed_at <= self.window {
+                    self.lows_done_in_window += 1;
+                }
+            }
+            TaskKind::AssembleMofs => {
+                self.high_turnaround_s.push(done.completed_at - done.origin_t);
+            }
+            TaskKind::ValidateStructure if self.highs_left > 0 => {
+                self.highs_left -= 1;
+                followups.push(TaskRequest {
+                    kind: TaskKind::AssembleMofs,
+                    payload: Payload::Assemble { linkers: Vec::new() },
+                    origin_t: done.completed_at,
+                });
+                if self.highs_left > 0 {
+                    self.record_id += 1;
+                    followups.push(TaskRequest {
+                        kind: TaskKind::ValidateStructure,
+                        payload: Payload::Validate {
+                            mof: self.mof.clone(),
+                            record_id: self.record_id,
+                        },
+                        origin_t: done.completed_at,
+                    });
+                }
+            }
+            _ => {}
+        }
+        followups
+    }
+}
+
+/// Preemption on/off × the class mix above: with preemption ON a pending
+/// high-class assemble evicts a running low-class process batch instead
+/// of waiting behind it, so high-class p50/p99 turnaround collapses to
+/// the service time while low-class goodput pays for the re-executed
+/// work. (ISSUE 5 fig5 section.)
+fn preemption_section(pool: &Arc<ThreadPool>) {
+    const WINDOW_S: f64 = 1200.0;
+    const LOWS: usize = 24;
+    const HIGHS: usize = 6;
+    let engines = build_quick_surrogate_engines();
+    let model = engines.generator.snapshot();
+    let batch = engines.generator.generate_with(&model, 77).expect("surrogate generates");
+    let mut linkers = Vec::with_capacity(1024);
+    while linkers.len() < 1024 {
+        linkers.extend(batch.iter().cloned());
+    }
+    linkers.truncate(1024);
+    let processed = match execute(
+        &Payload::Process { linkers: linkers[..16].to_vec() },
+        &engines,
+        1,
+    ) {
+        Outcome::Processed { linkers, .. } => linkers,
+        _ => panic!("process failed"),
+    };
+    let mof = match execute(&Payload::Assemble { linkers: processed }, &engines, 2) {
+        Outcome::Assembled { mofs, .. } => {
+            Box::new(mofs.into_iter().next().expect("one MOF assembles"))
+        }
+        _ => panic!("assembly failed"),
+    };
+
+    println!("\n== preemption: high-class turnaround under Cpu overload ==");
+    println!(
+        "(2-slot Cpu pool; {LOWS} low-class process batches (~123 s each, class 5) flood at \
+         t=0; {HIGHS} high-class assembles (class 4, ~3 s) arrive on ~224 s ticks; default \
+         chain-tail-first classes; window {WINDOW_S:.0} s virtual)\n"
+    );
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>16}",
+        "preempt", "evictions", "wasted(s)", "high p50(s)", "high p99(s)", "lows done in win"
+    );
+    let mut p99s = Vec::new();
+    for preempt in [false, true] {
+        let mut cluster = Cluster::new(4);
+        while cluster.free_slots(WorkerKind::Cpu) > 2 {
+            assert!(cluster.acquire(WorkerKind::Cpu, 0.0));
+        }
+        let sched = Scheduler::new(
+            cluster,
+            Arc::clone(&engines),
+            Arc::clone(pool),
+            SimParams { seed: 19, horizon_s: 1.0, util_sample_dt: 500.0 },
+        );
+        let inner = MixFlood {
+            linkers: linkers.clone(),
+            mof: mof.clone(),
+            lows: LOWS,
+            highs_left: HIGHS,
+            primed: false,
+            record_id: 0,
+            window: WINDOW_S,
+            high_turnaround_s: Vec::new(),
+            lows_done_in_window: 0,
+        };
+        let mut policy =
+            PriorityPolicy::new(inner, PriorityClasses::default()).preemptive(preempt);
+        let out = sched.run(&mut policy);
+        let flood = policy.into_inner();
+        let p50 = quantile(&flood.high_turnaround_s, 0.50);
+        let p99 = quantile(&flood.high_turnaround_s, 0.99);
+        p99s.push(p99);
+        println!(
+            "{:>8} {:>10} {:>10.1} {:>12.2} {:>12.2} {:>13}/{}",
+            if preempt { "on" } else { "off" },
+            out.preemption.evictions,
+            out.preemption.wasted_busy_s,
+            p50,
+            p99,
+            flood.lows_done_in_window,
+            LOWS
+        );
+    }
+    assert!(
+        p99s[1] < p99s[0],
+        "high-class p99 must strictly improve with preemption ON ({} vs {})",
+        p99s[1],
+        p99s[0]
+    );
+    println!(
+        "\n(high-class p99 strictly improves with preemption ON; the price is low-class \
+         goodput — evicted batches re-execute from scratch on redispatch)"
+    );
 }
 
 /// Overload behavior of the service front door: sweep offered load ×

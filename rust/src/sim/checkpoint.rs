@@ -12,10 +12,11 @@
 //!   processed, nothing new dispatched past it; in-flight real compute
 //!   finishes before the checkpoint is written).
 //! * The checkpoint captures the scheduler (virtual clock, event heap,
-//!   in-flight payloads, pending queues, cluster busy-time integrals, RNG
-//!   streams), the full Thinker, per-policy decorator state, and the
-//!   generator's current [`ModelSnapshot`] — all through
-//!   [`crate::util::json`].
+//!   in-flight payloads with their priority classes and eviction counts,
+//!   pending queues — including preemption victims awaiting redispatch —
+//!   preemption counters, cluster busy-time integrals, RNG streams), the
+//!   full Thinker, per-policy decorator state, and the generator's
+//!   current [`ModelSnapshot`] — all through [`crate::util::json`].
 //! * [`resume_request`] rebuilds everything and continues the **identical
 //!   event sequence**: task outcomes are pure functions of
 //!   `(payload, seed)`, so re-executing the checkpointed in-flight
@@ -48,7 +49,14 @@ use crate::workflow::thinker::Thinker;
 
 /// Version stamped into every checkpoint. Bump on any layout change; the
 /// loader refuses other versions with [`CheckpointError::FormatMismatch`].
-pub const FORMAT_VERSION: u32 = 1;
+///
+/// v2: preemption — flights and pending entries carry priority classes
+/// and eviction counts, the scheduler serializes its
+/// [`crate::sim::scheduler::PreemptionStats`], and the request section
+/// carries `preemption` / `reweights`. v1 files (no preemption fields)
+/// fail loudly with [`CheckpointError::FormatMismatch`], never a silent
+/// default.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Why a checkpoint could not be restored.
 #[derive(Clone, Debug, PartialEq)]
@@ -200,6 +208,8 @@ struct RunCtx {
     tenant: String,
     class: u8,
     deadline: Option<f64>,
+    preemption: bool,
+    reweights: Vec<(f64, u32)>,
     engines: Arc<Engines>,
     t_wall: Instant,
 }
@@ -235,6 +245,21 @@ fn assemble_checkpoint(
                 ("tenant", Json::Str(ctx.tenant.clone())),
                 ("class", Json::Num(ctx.class as f64)),
                 ("deadline", ctx.deadline.map(Json::Num).unwrap_or(Json::Null)),
+                ("preemption", Json::Bool(ctx.preemption)),
+                (
+                    "reweights",
+                    Json::Arr(
+                        ctx.reweights
+                            .iter()
+                            .map(|&(vt, w)| {
+                                Json::obj(vec![
+                                    ("vt", Json::Num(vt)),
+                                    ("weight", Json::Num(w as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         ("model", model.to_json()),
@@ -308,7 +333,7 @@ pub fn run_request_to_barrier(
     barrier_vt: f64,
 ) -> CampaignRunOutcome {
     let t_wall = Instant::now();
-    let CampaignRequest { config, policy, tenant, class, deadline } = req;
+    let CampaignRequest { config, policy, tenant, class, deadline, preemption, reweights } = req;
     let cluster = Cluster::new(config.nodes);
     let layout = cluster.layout();
     let base = MofaPolicy::new(
@@ -326,15 +351,17 @@ pub fn run_request_to_barrier(
             util_sample_dt: config.util_sample_dt,
         },
     );
-    let ctx = RunCtx { config, policy, tenant, class, deadline, engines, t_wall };
+    let ctx =
+        RunCtx { config, policy, tenant, class, deadline, preemption, reweights, engines, t_wall };
     match policy {
         PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
         PolicyKind::Priority(classes) => {
-            let p = PriorityPolicy::new(base, classes);
+            let p = PriorityPolicy::new(base, classes).preemptive(ctx.preemption);
             drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
         }
         PolicyKind::FairShare { weight, weight_total } => {
-            let p = FairSharePolicy::new(base, slot_totals(layout), weight, weight_total);
+            let p = FairSharePolicy::new(base, slot_totals(layout), weight, weight_total)
+                .with_reweights(ctx.reweights.clone());
             drive(sched, p, barrier_vt, ctx, FairSharePolicy::into_inner, |p| {
                 Some(p.outstanding_state())
             })
@@ -375,6 +402,33 @@ pub fn resume_request(
         Json::Null => None,
         j => Some(j.as_f64().ok_or_else(|| "request: bad deadline".to_string())?),
     };
+    let preemption = reqv
+        .req("preemption")?
+        .as_bool()
+        .ok_or_else(|| "request: 'preemption' must be a bool".to_string())?;
+    let mut reweights = Vec::new();
+    for e in reqv
+        .req("reweights")?
+        .as_arr()
+        .ok_or_else(|| "request: 'reweights' must be an array".to_string())?
+    {
+        let vt = e.req("vt")?.as_f64().ok_or_else(|| "reweight: bad vt".to_string())?;
+        let w = e
+            .req("weight")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && (1.0..=u32::MAX as f64).contains(n))
+            .ok_or_else(|| "reweight: bad weight".to_string())? as u32;
+        reweights.push((vt, w));
+    }
+    // validate against the policy so a corrupt file is a typed error at
+    // parse time, not a decorator panic at replay time
+    if let PolicyKind::FairShare { weight_total, .. } = policy {
+        if let Some(&(vt, w)) = reweights.iter().find(|&&(_, w)| w > weight_total) {
+            return Err(CheckpointError::Malformed(format!(
+                "reweight {w} at vt {vt} exceeds weight_total {weight_total}"
+            )));
+        }
+    }
     let model = ModelSnapshot::from_json(v.req("model")?)?;
     // reinstall the checkpointed weights: post-barrier generate fills
     // snapshot the *current* generator state, which must match what the
@@ -383,16 +437,18 @@ pub fn resume_request(
     let sched = Scheduler::restore(Arc::clone(&engines), Arc::clone(pool), v.req("scheduler")?)?;
     let base = MofaPolicy::from_json(v.req("mofa")?, Arc::clone(&engines))?;
     let nodes = config.nodes;
-    let ctx = RunCtx { config, policy, tenant, class, deadline, engines, t_wall };
+    let ctx =
+        RunCtx { config, policy, tenant, class, deadline, preemption, reweights, engines, t_wall };
     Ok(match policy {
         PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
         PolicyKind::Priority(classes) => {
-            let p = PriorityPolicy::new(base, classes);
+            let p = PriorityPolicy::new(base, classes).preemptive(ctx.preemption);
             drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
         }
         PolicyKind::FairShare { weight, weight_total } => {
             let totals = slot_totals(crate::workflow::resources::layout(nodes));
-            let mut p = FairSharePolicy::new(base, totals, weight, weight_total);
+            let mut p = FairSharePolicy::new(base, totals, weight, weight_total)
+                .with_reweights(ctx.reweights.clone());
             let oj = v.req("fair_share_outstanding")?;
             let words = oj.as_arr().filter(|a| a.len() == 5).ok_or_else(|| {
                 "checkpoint: fair-share policy needs 'fair_share_outstanding'".to_string()
@@ -422,6 +478,7 @@ pub fn canonical_report_json(report: &CampaignReport) -> Json {
     Json::obj(vec![
         ("config", report.config.to_json()),
         ("final_vtime", Json::Num(report.final_vtime)),
+        ("preemption", report.preemption.to_json()),
         ("linkers_generated", Json::Num(th.linkers_generated as f64)),
         ("linkers_processed_in", Json::Num(th.linkers_processed_in as f64)),
         ("linkers_survived", Json::Num(th.linkers_survived as f64)),
@@ -490,9 +547,14 @@ mod tests {
         assert_eq!(err, CheckpointError::FormatMismatch { found: 99, expected: FORMAT_VERSION });
         // a *future* format with unknown header fields still reports the
         // version mismatch, not the unknown field
-        let future = r#"{"format":2,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
+        let future = r#"{"format":3,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
         let err = CheckpointHeader::parse(&Json::parse(future).unwrap()).unwrap_err();
-        assert!(matches!(err, CheckpointError::FormatMismatch { found: 2, .. }), "{err}");
+        assert!(matches!(err, CheckpointError::FormatMismatch { found: 3, .. }), "{err}");
+        // a v1 file (pre-preemption layout) is equally a version error —
+        // its missing preemption fields must never default silently
+        let v1 = r#"{"format":1,"kind":"campaign","created_vt":0}"#;
+        let err = CheckpointHeader::parse(&Json::parse(v1).unwrap()).unwrap_err();
+        assert_eq!(err, CheckpointError::FormatMismatch { found: 1, expected: FORMAT_VERSION });
     }
 
     #[test]

@@ -17,8 +17,11 @@
 //!   the Colmena-style Thinker is its first implementor via
 //!   [`crate::workflow::mofa::MofaPolicy`].
 //! * [`policy`] — scheduling decorators over any `Policy`:
-//!   [`policy::PriorityPolicy`] (class-ordered pending queues) and
-//!   [`policy::FairSharePolicy`] (weighted multi-tenant slot shares).
+//!   [`policy::PriorityPolicy`] (class-ordered pending queues, and —
+//!   when preemptive — class-strict eviction of running flights via
+//!   [`scheduler::Policy::preempt`]) and [`policy::FairSharePolicy`]
+//!   (weighted multi-tenant slot shares with dynamic re-weighting at
+//!   virtual-time barriers).
 //! * [`sweep`] — one-shot batch driver: run many independent campaigns
 //!   concurrently on one shared thread pool.
 //! * [`admission`] — pure admission-control state for the service front
@@ -65,7 +68,10 @@ pub use checkpoint::{
     CheckpointError, CheckpointHeader, FORMAT_VERSION,
 };
 pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
-pub use scheduler::{BarrierOutcome, Completion, Policy, Scheduler, SimOutcome, SimParams};
+pub use scheduler::{
+    BarrierOutcome, Completion, Policy, PreemptCandidate, PreemptionStats, Scheduler, SimOutcome,
+    SimParams, MAX_PREEMPTIONS,
+};
 pub use service::{
     run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
     ServiceConfig, ServiceStats, TenantStats, Ticket,

@@ -7,18 +7,25 @@
 //!   scheduler's pending queues then dispatch class-first instead of
 //!   FIFO (see [`Policy::priority`]). The default classes favor the
 //!   screening-chain tail — finish structures already in the cascade
-//!   before admitting fresh generation.
+//!   before admitting fresh generation. With
+//!   [`PriorityPolicy::preemptive`] enabled it also answers
+//!   [`Policy::preempt`]: a pending request **evicts** a running flight
+//!   of a strictly worse class instead of waiting behind it.
 //! * [`FairSharePolicy`] models a multi-tenant cluster: a campaign
 //!   declares a weighted share of the slot pools and the decorator clamps
 //!   the free capacity its inner policy is offered, so several campaigns
 //!   running concurrently through [`crate::sim::service`] split one
-//!   notional cluster in proportion to their weights.
+//!   notional cluster in proportion to their weights. A re-weighting
+//!   schedule ([`FairSharePolicy::with_reweights`]) changes the weight at
+//!   fixed **virtual-time barriers** — the same between-event points the
+//!   checkpoint layer pauses at — so shares can shift mid-campaign
+//!   without giving up determinism.
 //!
-//! Both decorators are deterministic: they read only request metadata and
-//! their own counters, never wallclock or cross-campaign state, so a
-//! decorated campaign replays bit-identically.
+//! Both decorators are deterministic: they read only request metadata,
+//! virtual time, and their own counters, never wallclock or
+//! cross-campaign state, so a decorated campaign replays bit-identically.
 
-use crate::sim::scheduler::{Completion, Policy};
+use crate::sim::scheduler::{Completion, Policy, PreemptCandidate};
 use crate::workflow::resources::WorkerKind;
 use crate::workflow::taskserver::TaskKind;
 use crate::workflow::thinker::TaskRequest;
@@ -117,16 +124,29 @@ impl PriorityClasses {
 }
 
 /// Decorator: delegates all campaign decisions to the inner policy but
-/// reorders the scheduler's pending queues by task-kind priority class.
+/// reorders the scheduler's pending queues by task-kind priority class —
+/// and, when [`PriorityPolicy::preemptive`] is enabled, evicts running
+/// flights of a strictly worse class for pending higher-class work.
 pub struct PriorityPolicy<P> {
     inner: P,
     classes: PriorityClasses,
+    preempt: bool,
 }
 
 impl<P: Policy> PriorityPolicy<P> {
-    /// Wrap `inner` with the given class table.
+    /// Wrap `inner` with the given class table (preemption off).
     pub fn new(inner: P, classes: PriorityClasses) -> Self {
-        PriorityPolicy { inner, classes }
+        PriorityPolicy { inner, classes, preempt: false }
+    }
+
+    /// Enable/disable class-strict preemption: a pending request evicts
+    /// the running flight with the **worst** class on its pool, but only
+    /// when that class is strictly greater (less important) than the
+    /// pending one — equal classes never evict each other, so a
+    /// uniform-class workload degenerates to plain priority queueing.
+    pub fn preemptive(mut self, enabled: bool) -> Self {
+        self.preempt = enabled;
+        self
     }
 
     /// Unwrap the inner policy (to recover e.g. the Thinker for reports).
@@ -151,6 +171,36 @@ impl<P: Policy> Policy for PriorityPolicy<P> {
     fn priority(&self, req: &TaskRequest) -> u8 {
         self.classes.class(req.kind)
     }
+
+    fn preempt(
+        &mut self,
+        _kind: WorkerKind,
+        pending_class: u8,
+        running: &[PreemptCandidate],
+    ) -> Option<u64> {
+        if !self.preempt {
+            return None;
+        }
+        // strictly-by-class: evict the worst-class flight, and only if it
+        // is strictly less important than the pending request; ties break
+        // to the youngest flight (largest task id — least sunk work in
+        // expectation, and deterministic either way)
+        running
+            .iter()
+            .filter(|c| c.class > pending_class)
+            .max_by_key(|c| (c.class, c.task_id))
+            .map(|c| c.task_id)
+    }
+
+    fn on_preempt(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.inner.on_preempt(kind, origin_t, now);
+    }
+
+    fn wants_preemption(&self) -> bool {
+        // like `priority`, this decorator REPLACES the inner policy's
+        // preemption behavior rather than composing with it
+        self.preempt
+    }
 }
 
 /// Decorator: weighted multi-tenant slot shares. The campaign is offered
@@ -163,12 +213,35 @@ impl<P: Policy> Policy for PriorityPolicy<P> {
 /// flight (optimize → charges → adsorption) still complete, which can
 /// overshoot the quota transiently — admission then pauses until the
 /// campaign is back under its share.
+///
+/// **Dynamic re-weighting**: [`FairSharePolicy::with_reweights`] installs
+/// a `(virtual time, weight)` schedule. The effective weight at any fill
+/// is the entry with the largest barrier time ≤ `now` (the base weight
+/// before the first barrier), so a tenant's share can grow or shrink
+/// mid-campaign. Because the effective weight is a pure function of
+/// virtual time, re-weighted campaigns replay — and checkpoint/resume —
+/// bit-identically.
 pub struct FairSharePolicy<P> {
     inner: P,
-    /// per-worker-kind slot cap, indexed in [`WorkerKind::ALL`] order
-    quota: [usize; 5],
+    /// cluster slot totals, indexed in [`WorkerKind::ALL`] order
+    totals: [usize; 5],
+    /// base weight (effective before the first re-weight barrier)
+    weight: u32,
+    weight_total: u32,
+    /// `(barrier virtual time, weight)` schedule; the largest barrier
+    /// `≤ now` wins (later entries win exact ties)
+    reweights: Vec<(f64, u32)>,
     /// dispatched-but-not-completed tasks per worker kind
     outstanding: [usize; 5],
+}
+
+/// Per-kind quota `max(1, totals[k] · weight / weight_total)`.
+fn quota_for(totals: &[usize; 5], weight: u32, weight_total: u32) -> [usize; 5] {
+    let mut quota = [0usize; 5];
+    for (q, &t) in quota.iter_mut().zip(totals.iter()) {
+        *q = ((t * weight as usize) / weight_total as usize).max(1);
+    }
+    quota
 }
 
 impl<P: Policy> FairSharePolicy<P> {
@@ -181,11 +254,29 @@ impl<P: Policy> FairSharePolicy<P> {
             weight <= weight_total,
             "fair-share weight {weight} exceeds weight_total {weight_total}"
         );
-        let mut quota = [0usize; 5];
-        for (q, &t) in quota.iter_mut().zip(totals.iter()) {
-            *q = ((t * weight as usize) / weight_total as usize).max(1);
+        FairSharePolicy {
+            inner,
+            totals,
+            weight,
+            weight_total,
+            reweights: Vec::new(),
+            outstanding: [0; 5],
         }
-        FairSharePolicy { inner, quota, outstanding: [0; 5] }
+    }
+
+    /// Install a re-weighting schedule: at each `(vt, weight)` barrier
+    /// the tenant's weight becomes `weight` (until a later barrier).
+    /// Every weight must satisfy `1 ≤ weight ≤ weight_total`.
+    pub fn with_reweights(mut self, reweights: Vec<(f64, u32)>) -> Self {
+        for &(vt, w) in &reweights {
+            assert!(
+                (1..=self.weight_total).contains(&w),
+                "re-weight {w} at vt {vt} outside 1..=weight_total ({})",
+                self.weight_total
+            );
+        }
+        self.reweights = reweights;
+        self
     }
 
     /// Unwrap the inner policy (to recover e.g. the Thinker for reports).
@@ -193,9 +284,30 @@ impl<P: Policy> FairSharePolicy<P> {
         self.inner
     }
 
-    /// This tenant's slot cap for a worker kind.
+    /// The weight in effect at virtual time `now` (a pure function of
+    /// the schedule and `now`).
+    pub fn effective_weight(&self, now: f64) -> u32 {
+        let mut best_vt = f64::NEG_INFINITY;
+        let mut w = self.weight;
+        for &(vt, rw) in &self.reweights {
+            if vt <= now && vt >= best_vt {
+                best_vt = vt;
+                w = rw;
+            }
+        }
+        w
+    }
+
+    /// This tenant's **base** slot cap for a worker kind (before any
+    /// re-weight barrier; see [`FairSharePolicy::quota_at`]).
     pub fn quota(&self, kind: WorkerKind) -> usize {
-        self.quota[worker_idx(kind)]
+        quota_for(&self.totals, self.weight, self.weight_total)[worker_idx(kind)]
+    }
+
+    /// The slot cap in effect at virtual time `now`.
+    pub fn quota_at(&self, kind: WorkerKind, now: f64) -> usize {
+        quota_for(&self.totals, self.effective_weight(now), self.weight_total)
+            [worker_idx(kind)]
     }
 
     /// Currently dispatched-but-not-completed tasks on a worker kind.
@@ -219,7 +331,7 @@ impl<P: Policy> FairSharePolicy<P> {
 
 impl<P: Policy> Policy for FairSharePolicy<P> {
     fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
-        let quota = self.quota;
+        let quota = quota_for(&self.totals, self.effective_weight(now), self.weight_total);
         let out = self.outstanding;
         let clamped = move |k: WorkerKind| {
             let i = worker_idx(k);
@@ -241,6 +353,27 @@ impl<P: Policy> Policy for FairSharePolicy<P> {
 
     fn priority(&self, req: &TaskRequest) -> u8 {
         self.inner.priority(req)
+    }
+
+    fn preempt(
+        &mut self,
+        kind: WorkerKind,
+        pending_class: u8,
+        running: &[PreemptCandidate],
+    ) -> Option<u64> {
+        self.inner.preempt(kind, pending_class, running)
+    }
+
+    fn on_preempt(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        // the evicted task no longer holds a slot: return it to the
+        // quota headroom (on_dispatch re-counts it at redispatch)
+        let i = worker_idx(kind.worker());
+        self.outstanding[i] = self.outstanding[i].saturating_sub(1);
+        self.inner.on_preempt(kind, origin_t, now);
+    }
+
+    fn wants_preemption(&self) -> bool {
+        self.inner.wants_preemption()
     }
 }
 
@@ -343,6 +476,74 @@ mod tests {
         assert_eq!(p.outstanding(WorkerKind::Cpu), 2);
         p.fill(&|_| 10, 3.0);
         assert_eq!(p.inner.seen[3][worker_idx(WorkerKind::Cpu)], 3);
+    }
+
+    fn candidate(task_id: u64, class: u8, preemptions: u32) -> PreemptCandidate {
+        PreemptCandidate { task_id, kind: TaskKind::ProcessLinkers, class, preemptions }
+    }
+
+    #[test]
+    fn priority_policy_preempts_strictly_by_class() {
+        let mut p = PriorityPolicy::new(Probe { seen: Vec::new() }, PriorityClasses::default())
+            .preemptive(true);
+        let running = [candidate(3, 5, 0), candidate(7, 5, 1), candidate(9, 2, 0)];
+        // worst class wins; ties go to the youngest (largest task id)
+        assert_eq!(p.preempt(WorkerKind::Cpu, 0, &running), Some(7));
+        // strictness: an equal-class pending request never evicts
+        assert_eq!(p.preempt(WorkerKind::Cpu, 5, &running), None);
+        assert_eq!(p.preempt(WorkerKind::Cpu, 5, &[candidate(1, 5, 0)]), None);
+        // a worse pending request than everything running: no victim
+        assert_eq!(p.preempt(WorkerKind::Cpu, 6, &running), None);
+
+        // disabled (the default): never preempts, whatever is running,
+        // and tells the scheduler to skip the pass entirely
+        assert!(p.wants_preemption());
+        let mut off = PriorityPolicy::new(Probe { seen: Vec::new() }, PriorityClasses::default());
+        assert!(!off.wants_preemption());
+        assert_eq!(off.preempt(WorkerKind::Cpu, 0, &running), None);
+    }
+
+    #[test]
+    fn fair_share_reweights_at_virtual_time_barriers() {
+        // half share of a 10-slot cluster, growing to a full share at
+        // vt 100 and shrinking to 1/5 at vt 200
+        let mut p = FairSharePolicy::new(Probe { seen: Vec::new() }, [10; 5], 1, 5)
+            .with_reweights(vec![(100.0, 5), (200.0, 1)]);
+        assert_eq!(p.effective_weight(0.0), 1);
+        assert_eq!(p.effective_weight(100.0), 5, "the barrier itself is inclusive");
+        assert_eq!(p.effective_weight(150.0), 5);
+        assert_eq!(p.effective_weight(250.0), 1);
+        assert_eq!(p.quota(WorkerKind::Cpu), 2, "base quota unaffected by the schedule");
+        assert_eq!(p.quota_at(WorkerKind::Cpu, 150.0), 10);
+        assert_eq!(p.quota_at(WorkerKind::Cpu, 250.0), 2);
+
+        // fill sees the *effective* quota for its virtual time
+        p.fill(&|_| 10, 50.0);
+        p.fill(&|_| 10, 150.0);
+        p.fill(&|_| 10, 250.0);
+        assert_eq!(p.inner.seen[0], [2; 5]);
+        assert_eq!(p.inner.seen[1], [10; 5]);
+        assert_eq!(p.inner.seen[2], [2; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=weight_total")]
+    fn fair_share_rejects_overweight_reweights() {
+        let _ = FairSharePolicy::new(Probe { seen: Vec::new() }, [10; 5], 1, 2)
+            .with_reweights(vec![(10.0, 3)]);
+    }
+
+    #[test]
+    fn fair_share_on_preempt_returns_quota_headroom() {
+        let mut p = FairSharePolicy::new(Probe { seen: Vec::new() }, [10; 5], 1, 2);
+        p.on_dispatch(TaskKind::AssembleMofs, 0.0, 0.0);
+        p.on_dispatch(TaskKind::AssembleMofs, 0.0, 0.0);
+        assert_eq!(p.outstanding(WorkerKind::Cpu), 2);
+        // an eviction returns the slot; the redispatch re-counts it
+        p.on_preempt(TaskKind::AssembleMofs, 0.0, 1.0);
+        assert_eq!(p.outstanding(WorkerKind::Cpu), 1);
+        p.on_dispatch(TaskKind::AssembleMofs, 0.0, 2.0);
+        assert_eq!(p.outstanding(WorkerKind::Cpu), 2);
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //! A request is built with the [`CampaignRequest`] builder: campaign
 //! config plus service metadata — `tenant` (quota accounting), `class`
 //! (shed priority), `deadline` (virtual service-time budget; see
-//! [`crate::sim::admission`]) and a per-request scheduling
-//! [`PolicyKind`]. Requests are plain data and round-trip through
-//! [`crate::util::json`], the first step toward an external front door.
+//! [`crate::sim::admission`]), a per-request scheduling [`PolicyKind`],
+//! a `preemption` switch (high-class tasks evict running low-class ones
+//! inside the campaign), and a fair-share re-weighting schedule.
+//! Requests are plain data and round-trip through [`crate::util::json`],
+//! the first step toward an external front door.
 //!
 //! Determinism: campaigns remain bit-identical to standalone runs —
 //! virtual-time event order plus submit-time weight snapshots make each
@@ -168,6 +170,18 @@ pub struct CampaignRequest {
     /// virtual service-time deadline: shed at pop time once that much
     /// dispatched campaign work is ahead of this request (`None` = never)
     pub deadline: Option<f64>,
+    /// enable **task preemption** inside the campaign: with a
+    /// [`PolicyKind::Priority`] policy, a pending high-class task evicts
+    /// a running lower-class one instead of waiting behind it (the
+    /// victim's payload re-queues and re-executes; see
+    /// [`crate::sim::scheduler::Policy::preempt`]). No effect on the
+    /// classless policies.
+    pub preemption: bool,
+    /// fair-share re-weighting schedule: `(virtual time, weight)`
+    /// barriers at which a [`PolicyKind::FairShare`] tenant's weight
+    /// changes (empty = static share). Rejected for other policies at
+    /// parse time.
+    pub reweights: Vec<(f64, u32)>,
 }
 
 impl CampaignRequest {
@@ -180,6 +194,8 @@ impl CampaignRequest {
             tenant: DEFAULT_TENANT.to_string(),
             class: 0,
             deadline: None,
+            preemption: false,
+            reweights: Vec::new(),
         }
     }
 
@@ -207,6 +223,20 @@ impl CampaignRequest {
         self
     }
 
+    /// Enable task preemption inside the campaign (meaningful together
+    /// with [`PolicyKind::Priority`]; see the field docs).
+    pub fn preemption(mut self, enabled: bool) -> Self {
+        self.preemption = enabled;
+        self
+    }
+
+    /// Append a fair-share re-weighting barrier: from virtual time `vt`
+    /// on, the tenant's weight is `weight` (until a later barrier).
+    pub fn reweight_at(mut self, vt: f64, weight: u32) -> Self {
+        self.reweights.push((vt, weight));
+        self
+    }
+
     /// Serialize the full request (config + metadata, no engines).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -217,6 +247,21 @@ impl CampaignRequest {
             (
                 "deadline",
                 self.deadline.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("preemption", Json::Bool(self.preemption)),
+            (
+                "reweights",
+                Json::Arr(
+                    self.reweights
+                        .iter()
+                        .map(|&(vt, w)| {
+                            Json::obj(vec![
+                                ("vt", Json::Num(vt)),
+                                ("weight", Json::Num(w as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -259,7 +304,44 @@ impl CampaignRequest {
                     .ok_or_else(|| "request: field 'deadline' must be a number".to_string())?,
             ),
         };
-        Ok(CampaignRequest { config, policy, tenant, class, deadline })
+        let preemption = match v.get("preemption") {
+            None => false,
+            Some(p) => p
+                .as_bool()
+                .ok_or_else(|| "request: field 'preemption' must be a bool".to_string())?,
+        };
+        let mut reweights = Vec::new();
+        if let Some(rw) = v.get("reweights") {
+            for e in rw
+                .as_arr()
+                .ok_or_else(|| "request: field 'reweights' must be an array".to_string())?
+            {
+                let vt = e
+                    .req("vt")?
+                    .as_f64()
+                    .ok_or_else(|| "reweight: 'vt' must be a number".to_string())?;
+                let w = e
+                    .req("weight")?
+                    .as_f64()
+                    .filter(|n| n.fract() == 0.0 && (1.0..=u32::MAX as f64).contains(n))
+                    .ok_or_else(|| "reweight: 'weight' must be a positive integer".to_string())?
+                    as u32;
+                reweights.push((vt, w));
+            }
+        }
+        if !reweights.is_empty() {
+            match policy {
+                PolicyKind::FairShare { weight_total, .. } => {
+                    if let Some(&(vt, w)) = reweights.iter().find(|&&(_, w)| w > weight_total) {
+                        return Err(format!(
+                            "reweight {w} at vt {vt} exceeds weight_total {weight_total}"
+                        ));
+                    }
+                }
+                _ => return Err("request: 'reweights' requires the fair-share policy".into()),
+            }
+        }
+        Ok(CampaignRequest { config, policy, tenant, class, deadline, preemption, reweights })
     }
 }
 
@@ -342,6 +424,12 @@ pub struct ServiceStats {
     pub cancelled: usize,
     /// campaigns completed with the report delivered
     pub completed: usize,
+    /// **task evictions** summed over finished campaigns: how many times
+    /// preemption-enabled requests evicted a running task for a
+    /// higher-class one (campaign-internal preemption, not request
+    /// shedding). Cancelled-but-finished campaigns count too — their
+    /// evictions happened even though the report was discarded
+    pub task_evictions: usize,
     /// campaigns currently running
     pub in_flight: usize,
     /// high-water mark of concurrent campaigns (≤ `max_in_flight`)
@@ -550,6 +638,7 @@ struct SvcState {
     shed: usize,
     cancelled: usize,
     completed: usize,
+    task_evictions: usize,
     in_flight: usize,
     peak_in_flight: usize,
     per_tenant: BTreeMap<String, TenantStats>,
@@ -648,6 +737,7 @@ impl CampaignService {
                 shed: 0,
                 cancelled: 0,
                 completed: 0,
+                task_evictions: 0,
                 in_flight: 0,
                 peak_in_flight: 0,
                 per_tenant: BTreeMap::new(),
@@ -745,6 +835,9 @@ impl CampaignService {
                     // — it can never report Running and then see Done
                     let mut st = guard.inner.state.lock().unwrap();
                     st.in_flight -= 1;
+                    // campaign-internal evictions are counted whether or
+                    // not the report survives a racing cancel
+                    st.task_evictions += report.preemption.evictions as usize;
                     let mut inner = state.inner.lock().unwrap();
                     if inner.cancel_requested {
                         st.cancelled += 1;
@@ -779,11 +872,31 @@ impl CampaignService {
     /// queue (possibly shedding a queued victim per the [`ShedPolicy`])
     /// and return a [`Ticket`], or reject it with a [`RejectReason`].
     /// Never blocks on campaign execution.
+    ///
+    /// Panics on a structurally invalid request (a re-weighting schedule
+    /// without the fair-share policy, or a re-weight outside
+    /// `1..=weight_total`) — the builder cannot check cross-field rules,
+    /// and failing here on the caller's thread beats a detached driver
+    /// panic that would settle the ticket as a misleading `Cancelled`.
+    /// Requests parsed from JSON are validated at parse time instead.
     pub fn try_submit(
         &self,
         req: CampaignRequest,
         engines: Arc<Engines>,
     ) -> Result<Ticket, RejectReason> {
+        if !req.reweights.is_empty() {
+            match req.policy {
+                PolicyKind::FairShare { weight_total, .. } => {
+                    for &(vt, w) in &req.reweights {
+                        assert!(
+                            (1..=weight_total).contains(&w),
+                            "reweight {w} at vt {vt} outside 1..=weight_total ({weight_total})"
+                        );
+                    }
+                }
+                _ => panic!("reweights require the fair-share policy"),
+            }
+        }
         let state = Arc::new(RequestState::new());
         let mut st = self.inner.state.lock().unwrap();
         st.submitted += 1;
@@ -872,6 +985,7 @@ impl CampaignService {
                     ("shed", Json::Num(st.shed as f64)),
                     ("cancelled", Json::Num(st.cancelled as f64)),
                     ("completed", Json::Num(st.completed as f64)),
+                    ("task_evictions", Json::Num(st.task_evictions as f64)),
                     ("peak_in_flight", Json::Num(st.peak_in_flight as f64)),
                     (
                         "turnaround_s",
@@ -967,6 +1081,7 @@ impl CampaignService {
                 shed: stat("shed")?,
                 cancelled: stat("cancelled")?,
                 completed: stat("completed")?,
+                task_evictions: stat("task_evictions")?,
                 in_flight: 0,
                 peak_in_flight: stat("peak_in_flight")?,
                 per_tenant,
@@ -993,6 +1108,7 @@ impl CampaignService {
             shed: st.shed,
             cancelled: st.cancelled,
             completed: st.completed,
+            task_evictions: st.task_evictions,
             in_flight: st.in_flight,
             peak_in_flight: st.peak_in_flight,
             per_tenant: st.per_tenant.clone(),
@@ -1047,7 +1163,7 @@ pub fn run_campaign_request(
     pool: &Arc<ThreadPool>,
 ) -> CampaignReport {
     let t_wall = Instant::now();
-    let CampaignRequest { config, policy, tenant, class, deadline } = req;
+    let CampaignRequest { config, policy, tenant, class, deadline, preemption, reweights } = req;
     let cluster = Cluster::new(config.nodes);
     let layout = cluster.layout();
     let base = MofaPolicy::new(
@@ -1072,7 +1188,7 @@ pub fn run_campaign_request(
             (p.into_thinker(), sim)
         }
         PolicyKind::Priority(classes) => {
-            let mut p = PriorityPolicy::new(base, classes);
+            let mut p = PriorityPolicy::new(base, classes).preemptive(preemption);
             let sim = sched.run(&mut p);
             (p.into_inner().into_thinker(), sim)
         }
@@ -1084,7 +1200,8 @@ pub fn run_campaign_request(
                 layout.optimize_slots,
                 layout.trainer_slots,
             ];
-            let mut p = FairSharePolicy::new(base, totals, weight, weight_total);
+            let mut p =
+                FairSharePolicy::new(base, totals, weight, weight_total).with_reweights(reweights);
             let sim = sched.run(&mut p);
             (p.into_inner().into_thinker(), sim)
         }
@@ -1218,5 +1335,67 @@ mod tests {
         let text = req.to_json().to_string();
         let parsed = CampaignRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(parsed, req);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=weight_total")]
+    fn try_submit_rejects_overweight_reweights_on_the_caller_thread() {
+        let svc = CampaignService::new(Arc::new(ThreadPool::new(1)), ServiceConfig::new(1));
+        let req = CampaignRequest::new(CampaignConfig::default())
+            .policy(PolicyKind::FairShare { weight: 1, weight_total: 4 })
+            .reweight_at(0.0, 10);
+        let engines = crate::workflow::launch::build_quick_surrogate_engines();
+        let _ = svc.try_submit(req, engines); // must panic HERE, not in a driver
+    }
+
+    #[test]
+    fn preemption_and_reweights_round_trip_and_validate() {
+        // a preemptive priority request survives the JSON round trip
+        let req = CampaignRequest::new(CampaignConfig::default())
+            .policy(PolicyKind::Priority(PriorityClasses::default()))
+            .preemption(true);
+        let parsed =
+            CampaignRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, req);
+        assert!(parsed.preemption);
+
+        // a fair-share re-weighting schedule survives too
+        let req = CampaignRequest::new(CampaignConfig::default())
+            .policy(PolicyKind::FairShare { weight: 1, weight_total: 4 })
+            .reweight_at(600.0, 3)
+            .reweight_at(1200.0, 1);
+        let parsed =
+            CampaignRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, req);
+        assert_eq!(parsed.reweights, vec![(600.0, 3), (1200.0, 1)]);
+
+        // files written before this PR (no preemption fields) still parse
+        // with the builder defaults
+        let legacy = CampaignRequest::new(CampaignConfig::default());
+        let mut obj = match legacy.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.remove("preemption");
+        obj.remove("reweights");
+        let parsed = CampaignRequest::from_json(&Json::Obj(obj)).unwrap();
+        assert_eq!(parsed, legacy);
+
+        // invalid inputs fail at parse time, not at dispatch time
+        for bad in [
+            // reweights without fair-share
+            r#"{"kind":"mofa"}"#,
+            // weight above weight_total
+            r#"{"kind":"fair-share","weight":1,"weight_total":2}"#,
+        ] {
+            let mut req = CampaignRequest::new(CampaignConfig::default());
+            req.policy = PolicyKind::from_json(&Json::parse(bad).unwrap()).unwrap();
+            req.reweights = vec![(10.0, 3)];
+            let text = req.to_json().to_string();
+            assert!(
+                CampaignRequest::from_json(&Json::parse(&text).unwrap()).is_err(),
+                "must reject reweights for {bad}"
+            );
+        }
     }
 }

@@ -105,6 +105,25 @@ impl EventHeap {
         self.heap.peek().map(|std::cmp::Reverse((t, _))| *t)
     }
 
+    /// Cancel the event with the given id and return its scheduled time
+    /// (`None` if no such event is scheduled). Preemption uses this to
+    /// drop an evicted flight's completion event; the heap is rebuilt in
+    /// O(n), which is fine at in-flight-task counts.
+    pub fn remove(&mut self, id: u64) -> Option<VirtualTime> {
+        let mut removed = None;
+        let mut kept = std::mem::take(&mut self.heap).into_vec();
+        kept.retain(|std::cmp::Reverse((t, eid))| {
+            if *eid == id && removed.is_none() {
+                removed = Some(*t);
+                false
+            } else {
+                true
+            }
+        });
+        self.heap = BinaryHeap::from(kept);
+        removed
+    }
+
     /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.heap.len()
@@ -146,6 +165,21 @@ mod tests {
         assert_eq!(h.peek(), Some(VirtualTime::new(1.0)));
         let order: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id)| id).collect();
         assert_eq!(order, vec![2, 3, 0, 1]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn remove_cancels_one_event_and_preserves_order() {
+        let mut h = EventHeap::new();
+        h.push(VirtualTime::new(5.0), 1);
+        h.push(VirtualTime::new(1.0), 2);
+        h.push(VirtualTime::new(3.0), 3);
+        assert_eq!(h.remove(3), Some(VirtualTime::new(3.0)));
+        assert_eq!(h.remove(3), None, "already removed");
+        assert_eq!(h.remove(99), None, "never scheduled");
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.pop(), Some((VirtualTime::new(1.0), 2)));
+        assert_eq!(h.pop(), Some((VirtualTime::new(5.0), 1)));
         assert!(h.is_empty());
     }
 

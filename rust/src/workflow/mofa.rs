@@ -134,6 +134,9 @@ pub struct CampaignReport {
     pub wallclock_s: f64,
     /// final virtual time (≥ duration once drained)
     pub final_vtime: f64,
+    /// preemption counters (all zero unless the request enabled
+    /// preemption and the scheduler actually evicted)
+    pub preemption: crate::sim::scheduler::PreemptionStats,
     /// service-request metadata when run through the campaign service
     /// (`None` for standalone runs)
     pub request_meta: Option<RequestMeta>,
@@ -340,6 +343,7 @@ pub fn assemble_report(
         tasks_done,
         wallclock_s,
         final_vtime: sim.final_vtime,
+        preemption: sim.preemption,
         request_meta: None,
     }
 }

@@ -142,6 +142,13 @@ impl<T> ScoredQueue<T> {
         self.heap.pop().map(|e| (e.score, e.item))
     }
 
+    /// The entry [`ScoredQueue::pop`] would return, without removing it
+    /// (the scheduler's preemption pass peeks the best pending request
+    /// before deciding whether an eviction is worth it).
+    pub fn peek(&self) -> Option<(f64, &T)> {
+        self.heap.peek().map(|e| (e.score, &e.item))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -548,9 +555,12 @@ mod tests {
         q.push(0.20, "b");
         q.push(0.05, "a");
         q.push(0.50, "c");
+        assert_eq!(q.peek(), Some((0.05, &"a")), "peek must agree with pop");
         assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.peek(), Some((0.20, &"b")));
         assert_eq!(q.pop().unwrap().1, "b");
         assert_eq!(q.pop().unwrap().1, "c");
+        assert_eq!(q.peek(), None);
     }
 
     #[test]

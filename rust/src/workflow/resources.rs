@@ -156,6 +156,18 @@ impl Cluster {
         p.tasks_done += 1;
     }
 
+    /// Release a slot whose task was **evicted** before completing
+    /// (preemption): the busy time up to `t` stays in the integral — the
+    /// slot really was occupied, even if the work is discarded — but the
+    /// task does not count toward `tasks_done` (it completes later, from
+    /// its re-queued payload, with a normal [`Cluster::release`]).
+    pub fn release_preempted(&mut self, kind: WorkerKind, t: f64) {
+        let p = self.pools.get_mut(&kind).unwrap();
+        p.advance(t);
+        debug_assert!(p.busy > 0, "preempt-release on an idle {kind:?} pool");
+        p.busy -= 1;
+    }
+
     pub fn free_slots(&self, kind: WorkerKind) -> usize {
         let p = &self.pools[&kind];
         p.total - p.busy
@@ -285,6 +297,23 @@ mod tests {
         let u = c.utilization(WorkerKind::Trainer, 20.0);
         assert!((u - 0.75).abs() < 1e-9, "utilization {u}");
         assert_eq!(c.tasks_done(WorkerKind::Trainer), 2);
+    }
+
+    #[test]
+    fn preempt_release_keeps_busy_integral_but_not_tasks_done() {
+        let mut c = Cluster::new(8);
+        assert!(c.acquire(WorkerKind::Trainer, 0.0));
+        // evicted at t=10: the 10 busy-seconds stay, the completion doesn't
+        c.release_preempted(WorkerKind::Trainer, 10.0);
+        assert_eq!(c.tasks_done(WorkerKind::Trainer), 0);
+        assert_eq!(c.free_slots(WorkerKind::Trainer), 1);
+        // the re-queued payload redispatches and completes normally
+        assert!(c.acquire(WorkerKind::Trainer, 10.0));
+        c.release(WorkerKind::Trainer, 15.0);
+        assert_eq!(c.tasks_done(WorkerKind::Trainer), 1);
+        // busy 0-10 (evicted) and 10-15 (completed) -> 15 of 20 seconds
+        let u = c.utilization(WorkerKind::Trainer, 20.0);
+        assert!((u - 0.75).abs() < 1e-9, "utilization {u}");
     }
 
     #[test]

@@ -140,7 +140,9 @@ pub struct TaskRequest {
 }
 
 impl TaskRequest {
-    /// Serialize for campaign checkpoints (pending-queue entries).
+    /// Serialize a bare request. Scheduler checkpoints embed these fields
+    /// in their pending-queue entries (which additionally carry a
+    /// preemption count); this codec remains for request-file tooling.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj(vec![

@@ -17,6 +17,7 @@ use mofa::sim::policy::PriorityClasses;
 use mofa::sim::service::{
     CampaignRequest, CampaignService, PolicyKind, RequestOutcome, ServiceConfig, Ticket,
 };
+use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::launch::{build_engines, ModelMode};
 use mofa::workflow::mofa::{run_campaign, CampaignConfig};
@@ -329,6 +330,91 @@ fn cancelled_queued_request_never_runs() {
     let victim = &stats.per_tenant["victim"];
     assert_eq!((victim.admitted, victim.cancelled, victim.completed), (1, 1, 0));
     drop(svc); // must not hang
+}
+
+/// ISSUE 5 — cancelling a ticket whose campaign runs with preemption
+/// enabled (so its scheduler may hold preempted victims in its internal
+/// pending queues) settles the ticket cleanly and leaks no admission
+/// queue entry: campaign-internal eviction state is invisible to the
+/// front door.
+#[test]
+fn cancelling_preemptive_running_campaign_settles_and_leaks_nothing() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(Arc::clone(&pool), ServiceConfig::new(1).queue_bound(4));
+    let running = svc
+        .try_submit(
+            CampaignRequest::new(config())
+                .policy(PolicyKind::Priority(PriorityClasses::default()))
+                .preemption(true)
+                .tenant("preemptor"),
+            engines(),
+        )
+        .unwrap();
+    wait_status(&running, RequestStatus::Running);
+    // a queued preemptive request behind it cancels out of the queue
+    let queued = svc
+        .try_submit(
+            CampaignRequest::new(config())
+                .policy(PolicyKind::Priority(PriorityClasses::default()))
+                .preemption(true)
+                .tenant("preemptor"),
+            engines(),
+        )
+        .unwrap();
+    assert_eq!(queued.cancel(), RequestStatus::Cancelled);
+
+    // the running campaign finishes internally but settles Cancelled
+    assert_eq!(running.cancel(), RequestStatus::Running);
+    assert!(matches!(running.wait(), RequestOutcome::Cancelled));
+
+    let stats = svc.stats();
+    assert_eq!(stats.queue_depth, 0, "no admission entry may leak");
+    assert_eq!(stats.in_flight, 0);
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.cancelled, 2);
+    let t = &stats.per_tenant["preemptor"];
+    assert_eq!((t.admitted, t.cancelled, t.completed), (2, 2, 0));
+    drop(svc); // must not hang with preemption state in play
+}
+
+/// ISSUE 5 — `ServiceStats` eviction counters round-trip through
+/// `checkpoint_json`/`resume_from`. Real 8-node campaigns rarely contend
+/// hard enough to evict (the scheduler-level battery in
+/// `tests/preemption.rs` covers live evictions), so the counter is
+/// pinned to a nonzero value in the serialized form to prove the codec
+/// carries it rather than recomputing or defaulting it.
+#[test]
+fn task_eviction_counter_round_trips_service_checkpoints() {
+    let pool = Arc::new(ThreadPool::default_pool());
+    let svc = CampaignService::new(Arc::clone(&pool), ServiceConfig::new(1).queue_bound(4));
+    let done = svc
+        .try_submit(
+            CampaignRequest::new(config())
+                .policy(PolicyKind::Priority(PriorityClasses::default()))
+                .preemption(true),
+            engines(),
+        )
+        .unwrap();
+    assert!(done.wait().report().is_some());
+    let text = svc.checkpoint_json().to_string();
+    drop(svc);
+    assert!(
+        text.contains("\"task_evictions\":"),
+        "service checkpoints must serialize the eviction counter"
+    );
+    let pinned = text.replacen("\"task_evictions\":0", "\"task_evictions\":7", 1);
+    assert_ne!(pinned, text, "expected a zero eviction counter to pin");
+
+    let parsed = Json::parse(&pinned).unwrap();
+    let (svc2, tickets) =
+        CampaignService::resume_from(Arc::clone(&pool), &parsed, |_| engines()).unwrap();
+    assert!(tickets.is_empty(), "nothing was queued at the checkpoint");
+    assert_eq!(svc2.stats().task_evictions, 7, "restored counter must carry verbatim");
+    assert_eq!(svc2.stats().completed, 1);
+
+    // and it survives the next checkpoint generation too
+    let second = svc2.checkpoint_json().to_string();
+    assert!(second.contains("\"task_evictions\":7"));
 }
 
 /// Fair-share quota still holds through the new front door: the

@@ -8,13 +8,16 @@
 
 use std::sync::Arc;
 
+use mofa::assembly::AssembledMof;
 use mofa::genai::generator::SurrogateGenerator;
 use mofa::genai::trainer::SurrogateTrainer;
+use mofa::genai::GenLinker;
 use mofa::sim::checkpoint::{
     canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
     CheckpointError, FORMAT_VERSION,
 };
-use mofa::sim::policy::PriorityClasses;
+use mofa::sim::policy::{PriorityClasses, PriorityPolicy};
+use mofa::sim::scheduler::{BarrierOutcome, Completion, Policy, Scheduler, SimParams};
 use mofa::sim::service::{
     run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
     ServiceConfig,
@@ -22,8 +25,9 @@ use mofa::sim::service::{
 use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::mofa::{CampaignConfig, CampaignReport};
-use mofa::workflow::taskserver::Engines;
-use mofa::workflow::thinker::PolicyConfig;
+use mofa::workflow::resources::{Cluster, WorkerKind};
+use mofa::workflow::taskserver::{execute, Engines, Outcome, Payload, TaskKind};
+use mofa::workflow::thinker::{PolicyConfig, TaskRequest};
 
 fn quick_engines() -> Arc<Engines> {
     let mut e = Engines::scaled(
@@ -76,13 +80,25 @@ fn checkpoint_and_resume(
 #[test]
 fn campaign_resumes_bit_identically_across_barriers_and_policies() {
     let pool = Arc::new(ThreadPool::new(4));
-    let policies = [
-        PolicyKind::Mofa,
-        PolicyKind::Priority(PriorityClasses::default()),
-        PolicyKind::FairShare { weight: 1, weight_total: 2 },
+    // the three policy kinds, plus the v2 request features: a preemptive
+    // priority request (preemption flag must survive the checkpoint) and
+    // a fair-share request whose re-weight barrier (vt 300) falls between
+    // the two checkpoint barriers — the resumed run must re-weight at the
+    // same virtual instant the uninterrupted one does
+    let requests = [
+        CampaignRequest::new(quick_config(40, 900.0)),
+        CampaignRequest::new(quick_config(41, 900.0))
+            .policy(PolicyKind::Priority(PriorityClasses::default())),
+        CampaignRequest::new(quick_config(42, 900.0))
+            .policy(PolicyKind::FairShare { weight: 1, weight_total: 2 }),
+        CampaignRequest::new(quick_config(43, 900.0))
+            .policy(PolicyKind::Priority(PriorityClasses::default()))
+            .preemption(true),
+        CampaignRequest::new(quick_config(44, 900.0))
+            .policy(PolicyKind::FairShare { weight: 1, weight_total: 2 })
+            .reweight_at(300.0, 2),
     ];
-    for (i, policy) in policies.into_iter().enumerate() {
-        let req = CampaignRequest::new(quick_config(40 + i as u64, 900.0)).policy(policy);
+    for req in requests {
         let clean = run_request_to_barrier(req.clone(), quick_engines(), &pool, f64::INFINITY)
             .report()
             .expect("clean run finishes");
@@ -92,8 +108,9 @@ fn campaign_resumes_bit_identically_across_barriers_and_policies() {
             assert_eq!(
                 canonical(&resumed),
                 want,
-                "{} @ barrier {barrier}: resumed run diverged from the uninterrupted one",
-                policy.label()
+                "{}{} @ barrier {barrier}: resumed run diverged from the uninterrupted one",
+                req.policy.label(),
+                if req.preemption { "+preempt" } else { "" }
             );
         }
     }
@@ -162,6 +179,18 @@ fn format_version_mismatch_is_a_typed_error_not_a_panic() {
         CheckpointError::FormatMismatch { found: 999, expected: FORMAT_VERSION }
     );
 
+    // a v1 checkpoint (the pre-preemption layout: no eviction counters,
+    // no preemption request fields) is refused with the same typed error
+    // — its absent fields must never silently default to "no preemption"
+    let v1_text = ckpt.to_string().replacen(
+        &format!("\"format\":{FORMAT_VERSION}"),
+        "\"format\":1",
+        1,
+    );
+    let v1 = Json::parse(&v1_text).unwrap();
+    let err = resume_request(&v1, quick_engines(), &pool, f64::INFINITY).unwrap_err();
+    assert_eq!(err, CheckpointError::FormatMismatch { found: 1, expected: FORMAT_VERSION });
+
     // a campaign checkpoint is not a service checkpoint
     let parsed = Json::parse(&ckpt.to_string()).unwrap();
     let err = CampaignService::resume_from(Arc::new(ThreadPool::new(2)), &parsed, |_| {
@@ -173,6 +202,205 @@ fn format_version_mismatch_is_a_typed_error_not_a_panic() {
         err,
         CheckpointError::WrongKind { found: "campaign".into(), expected: "service" }
     );
+}
+
+/// Eviction-heavy workload for the mid-preemption checkpoint test: one
+/// huge low-class process batch on a single Cpu slot, a validate ticker
+/// whose completions inject high-class assembles that evict it (same
+/// shape as `tests/preemption.rs`, sized for two evictions). Both passes
+/// use identical fresh instances; the checkpointed pass serializes ONLY
+/// scheduler state, so the comparison isolates the scheduler codec.
+struct EvictFlow {
+    linkers: Vec<GenLinker>,
+    mof: Box<AssembledMof>,
+    primed: bool,
+    highs: u32,
+    record_id: u64,
+    /// (task kind, completed_at bits) per completion, in event order
+    trace: Vec<(TaskKind, u64)>,
+    /// eviction instants observed through the hook
+    preempts: Vec<f64>,
+}
+
+impl Policy for EvictFlow {
+    fn fill(&mut self, _free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        if self.primed {
+            return Vec::new();
+        }
+        self.primed = true;
+        vec![
+            TaskRequest {
+                kind: TaskKind::ProcessLinkers,
+                payload: Payload::Process { linkers: self.linkers.clone() },
+                origin_t: now,
+            },
+            TaskRequest {
+                kind: TaskKind::ValidateStructure,
+                payload: Payload::Validate { mof: self.mof.clone(), record_id: 0 },
+                origin_t: now,
+            },
+        ]
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        self.trace.push((done.kind, done.completed_at.to_bits()));
+        let mut followups = Vec::new();
+        if done.kind == TaskKind::ValidateStructure && self.highs < 2 {
+            self.highs += 1;
+            followups.push(TaskRequest {
+                kind: TaskKind::AssembleMofs,
+                payload: Payload::Assemble { linkers: Vec::new() },
+                origin_t: done.completed_at,
+            });
+            if self.highs < 2 {
+                self.record_id += 1;
+                followups.push(TaskRequest {
+                    kind: TaskKind::ValidateStructure,
+                    payload: Payload::Validate {
+                        mof: self.mof.clone(),
+                        record_id: self.record_id,
+                    },
+                    origin_t: done.completed_at,
+                });
+            }
+        }
+        followups
+    }
+
+    fn on_preempt(&mut self, _kind: TaskKind, _origin_t: f64, now: f64) {
+        self.preempts.push(now);
+    }
+}
+
+fn evict_flow(engines: &Engines) -> EvictFlow {
+    let model = engines.generator.snapshot();
+    let batch = engines.generator.generate_with(&model, 42).expect("surrogate generates");
+    let mut linkers = Vec::with_capacity(8192);
+    while linkers.len() < 8192 {
+        linkers.extend(batch.iter().cloned());
+    }
+    linkers.truncate(8192);
+    let processed = match execute(
+        &Payload::Process { linkers: linkers[..16].to_vec() },
+        engines,
+        1,
+    ) {
+        Outcome::Processed { linkers, .. } => linkers,
+        _ => panic!("process failed"),
+    };
+    let mof = match execute(&Payload::Assemble { linkers: processed }, engines, 2) {
+        Outcome::Assembled { mofs, .. } => {
+            Box::new(mofs.into_iter().next().expect("one MOF assembles"))
+        }
+        _ => panic!("assembly failed"),
+    };
+    EvictFlow {
+        linkers,
+        mof,
+        primed: false,
+        highs: 0,
+        record_id: 0,
+        trace: Vec::new(),
+        preempts: Vec::new(),
+    }
+}
+
+fn one_slot_scheduler(engines: &Arc<Engines>, pool: &Arc<ThreadPool>) -> Scheduler {
+    let mut cluster = Cluster::new(4);
+    while cluster.free_slots(WorkerKind::Cpu) > 1 {
+        assert!(cluster.acquire(WorkerKind::Cpu, 0.0));
+    }
+    Scheduler::new(
+        cluster,
+        Arc::clone(engines),
+        Arc::clone(pool),
+        SimParams { seed: 31, horizon_s: 1.0, util_sample_dt: 500.0 },
+    )
+}
+
+/// The ISSUE-5 mid-preemption barrier: checkpoint **between an eviction
+/// and the victim's redispatch**, while the evicted payload sits in the
+/// pending queue with a nonzero eviction count — the restored scheduler
+/// must replay the identical event sequence. A probe pass finds the
+/// (deterministic) eviction instant; the checkpointed pass pauses just
+/// after it, round-trips the scheduler through its JSON text form, and
+/// continues; the resulting trace and outcome must equal the clean run's
+/// bit for bit.
+#[test]
+fn checkpoint_between_eviction_and_redispatch_replays_bit_identically() {
+    let engines = quick_engines();
+    let pool = Arc::new(ThreadPool::new(4));
+
+    // pass A: uninterrupted run — reference trace + the eviction instant
+    let mut clean = PriorityPolicy::new(evict_flow(&engines), PriorityClasses::default())
+        .preemptive(true);
+    let out_clean = one_slot_scheduler(&engines, &pool).run(&mut clean);
+    let clean = clean.into_inner();
+    assert!(
+        out_clean.preemption.evictions >= 2,
+        "workload must evict at least twice, got {}",
+        out_clean.preemption.evictions
+    );
+    let first_evict = clean.preempts[0];
+
+    // pass B: pause just after the first eviction — the victim is queued
+    // (preemptions = 1) and its redispatch has not happened yet (the
+    // evicting assemble runs ~3 s, so the next event is beyond the pause)
+    let mut resumed = PriorityPolicy::new(evict_flow(&engines), PriorityClasses::default())
+        .preemptive(true);
+    let barrier = first_evict + 1e-6;
+    let paused = match one_slot_scheduler(&engines, &pool).checkpoint_at(&mut resumed, barrier) {
+        BarrierOutcome::Paused(s) => s,
+        BarrierOutcome::Finished(_) => panic!("must pause mid-preemption"),
+    };
+    assert_eq!(paused.vtime(), first_evict, "the pause lands on the eviction event");
+    let text = paused.checkpoint_json().to_string();
+
+    // the serialized state really is mid-preemption: the pending Cpu
+    // queue holds the victim with its eviction count, and the preemption
+    // counters are nonzero with the redispatch still owed
+    let ckpt = Json::parse(&text).unwrap();
+    let entries = ckpt
+        .get("pending")
+        .and_then(|p| p.get("cpu"))
+        .and_then(|q| q.get("entries"))
+        .and_then(Json::as_arr)
+        .expect("pending cpu entries");
+    assert!(
+        entries.iter().any(|e| {
+            e.get("item")
+                .and_then(|i| i.get("preemptions"))
+                .and_then(Json::as_f64)
+                .is_some_and(|n| n >= 1.0)
+        }),
+        "the evicted victim must sit in the pending queue with its count"
+    );
+    let stats = ckpt.get("preempt").expect("preemption counters serialize");
+    assert_eq!(stats.get("evictions").and_then(Json::as_u64), Some(1));
+    assert_eq!(stats.get("redispatches").and_then(Json::as_u64), Some(0));
+
+    // restore from the text form and continue with the same policy
+    let restored =
+        Scheduler::restore(Arc::clone(&engines), Arc::clone(&pool), &Json::parse(&text).unwrap())
+            .expect("restore");
+    let out_resumed = restored.run(&mut resumed);
+    let resumed = resumed.into_inner();
+
+    assert_eq!(resumed.trace, clean.trace, "completion trace diverged after the resume");
+    assert_eq!(resumed.preempts, clean.preempts, "eviction instants diverged");
+    assert_eq!(out_resumed.final_vtime.to_bits(), out_clean.final_vtime.to_bits());
+    assert_eq!(out_resumed.tasks_submitted, out_clean.tasks_submitted);
+    assert_eq!(out_resumed.preemption, out_clean.preemption);
+    assert_eq!(out_resumed.util_series, out_clean.util_series);
+    let (mut ca, mut cb) = (out_clean.cluster, out_resumed.cluster);
+    let t_end = out_clean.final_vtime + 1.0;
+    for k in WorkerKind::ALL {
+        assert_eq!(
+            ca.utilization(k, t_end).to_bits(),
+            cb.utilization(k, t_end).to_bits(),
+            "{k:?} busy integral diverged"
+        );
+    }
 }
 
 #[test]

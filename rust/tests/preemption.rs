@@ -1,0 +1,465 @@
+//! Preemption test battery (ISSUE 5): class-based eviction of running
+//! flights with deterministic re-queue.
+//!
+//! * a property test drives randomized preempt/complete/event-cancel
+//!   interleavings through the scheduler and checks slot accounting and
+//!   payload retention against a reference model (no lost payloads, no
+//!   double-occupied slots, busy-time integrals match the hook-observed
+//!   intervals);
+//! * a determinism test proves preemption-ON campaigns are bit-identical
+//!   across concurrent vs. sequential execution on a shared pool, with
+//!   online retraining enabled;
+//! * a thrash-cap test proves a flight evicted `MAX_PREEMPTIONS` times
+//!   becomes non-evictable and the would-be preemptor waits instead.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::thread;
+
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::trainer::SurrogateTrainer;
+use mofa::genai::GenLinker;
+use mofa::sim::checkpoint::canonical_report_json;
+use mofa::sim::policy::{PriorityClasses, PriorityPolicy};
+use mofa::sim::scheduler::{Completion, Policy, Scheduler, SimParams, MAX_PREEMPTIONS};
+use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
+use mofa::util::rng::Rng;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::mofa::CampaignConfig;
+use mofa::workflow::resources::{Cluster, WorkerKind};
+use mofa::workflow::taskserver::{execute, Engines, Outcome, Payload, TaskKind};
+use mofa::workflow::thinker::{PolicyConfig, TaskRequest};
+
+fn quick_engines() -> Arc<Engines> {
+    let mut e = Engines::scaled(
+        Arc::new(SurrogateGenerator::builtin(16)),
+        Arc::new(SurrogateTrainer),
+    );
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    Arc::new(e)
+}
+
+/// A real linker batch to size `Process` payloads with (durations scale
+/// as `0.12 s · n_linkers`, so payload length is the duration knob).
+fn linker_pool(engines: &Engines, want: usize) -> Vec<GenLinker> {
+    let model = engines.generator.snapshot();
+    let batch = engines.generator.generate_with(&model, 42).expect("surrogate generates");
+    let mut out = Vec::with_capacity(want);
+    while out.len() < want {
+        out.extend(batch.iter().cloned());
+    }
+    out.truncate(want);
+    out
+}
+
+/// Index of a task kind in `TaskKind::ALL` (tracking tables).
+fn kidx(kind: TaskKind) -> usize {
+    TaskKind::ALL.iter().position(|k| *k == kind).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// property test: randomized interleavings vs a reference model
+// ---------------------------------------------------------------------------
+
+/// Hook-driven reference model: per-kind submitted/completed counts plus
+/// a busy-time integral for the Cpu pool rebuilt from dispatch / preempt /
+/// completion observations.
+#[derive(Default)]
+struct Track {
+    submitted: [usize; 8],
+    completed: [usize; 8],
+    live_cpu: usize,
+    max_live_cpu: usize,
+    last_t: f64,
+    integral_cpu: f64,
+}
+
+impl Track {
+    fn advance(&mut self, now: f64) {
+        self.integral_cpu += self.live_cpu as f64 * (now - self.last_t).max(0.0);
+        self.last_t = now;
+    }
+}
+
+/// One work-item spec: `Some(n)` = Process with `n` linkers, `None` =
+/// Assemble (~3 s). Emitted as an initial burst plus random injections at
+/// completion events.
+struct RandomFlood {
+    specs: Vec<Option<usize>>,
+    next: usize,
+    burst: usize,
+    primed: bool,
+    inject: Rng,
+    pool: Vec<GenLinker>,
+    track: Track,
+}
+
+impl RandomFlood {
+    fn emit(&mut self, now: f64) -> Option<TaskRequest> {
+        let spec = *self.specs.get(self.next)?;
+        self.next += 1;
+        let (kind, payload) = match spec {
+            Some(n) => (
+                TaskKind::ProcessLinkers,
+                Payload::Process { linkers: self.pool[..n].to_vec() },
+            ),
+            None => (TaskKind::AssembleMofs, Payload::Assemble { linkers: Vec::new() }),
+        };
+        self.track.submitted[kidx(kind)] += 1;
+        Some(TaskRequest { kind, payload, origin_t: now })
+    }
+}
+
+impl Policy for RandomFlood {
+    fn fill(&mut self, _free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        let mut out = Vec::new();
+        if !self.primed {
+            self.primed = true;
+            for _ in 0..self.burst {
+                out.extend(self.emit(now));
+            }
+        } else {
+            for _ in 0..self.inject.below(3) {
+                out.extend(self.emit(now));
+            }
+        }
+        out
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        self.track.advance(done.completed_at);
+        if done.kind.worker() == WorkerKind::Cpu {
+            self.track.live_cpu -= 1;
+        }
+        self.track.completed[kidx(done.kind)] += 1;
+        Vec::new()
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, _origin_t: f64, now: f64) {
+        self.track.advance(now);
+        if kind.worker() == WorkerKind::Cpu {
+            self.track.live_cpu += 1;
+            self.track.max_live_cpu = self.track.max_live_cpu.max(self.track.live_cpu);
+        }
+    }
+
+    fn on_preempt(&mut self, kind: TaskKind, _origin_t: f64, now: f64) {
+        self.track.advance(now);
+        if kind.worker() == WorkerKind::Cpu {
+            self.track.live_cpu -= 1;
+        }
+    }
+}
+
+#[test]
+fn property_preemption_preserves_slots_payloads_and_busy_integrals() {
+    let engines = quick_engines();
+    let pool_linkers = linker_pool(&engines, 48);
+    let compute = Arc::new(ThreadPool::new(4));
+    mofa::util::proptest::check_cases("preempt-interleavings", 20, |rng, _| {
+        // a tiny Cpu pool (1..=3 usable slots) under a class-mixed flood
+        let mut cluster = Cluster::new(4);
+        let cpu_total = cluster.total_slots(WorkerKind::Cpu);
+        let usable = rng.below(3) + 1;
+        for _ in 0..cpu_total - usable {
+            assert!(cluster.acquire(WorkerKind::Cpu, 0.0));
+        }
+        let held = cpu_total - usable;
+
+        let n_specs = rng.below(16) + 8;
+        let specs: Vec<Option<usize>> = (0..n_specs)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    Some(rng.below(pool_linkers.len() - 1) + 1)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let burst = rng.below(n_specs) + 1;
+        // random class table; ties are legal (they simply never evict)
+        let classes = PriorityClasses::default()
+            .with_class(TaskKind::ProcessLinkers, rng.below(3) as u8)
+            .with_class(TaskKind::AssembleMofs, rng.below(3) as u8);
+
+        let inner = RandomFlood {
+            specs,
+            next: 0,
+            burst,
+            primed: false,
+            inject: Rng::new(rng.next_u64()),
+            pool: pool_linkers.clone(),
+            track: Track::default(),
+        };
+        let sched = Scheduler::new(
+            cluster,
+            Arc::clone(&engines),
+            Arc::clone(&compute),
+            SimParams { seed: rng.next_u64(), horizon_s: 500.0, util_sample_dt: 100.0 },
+        );
+        let mut policy = PriorityPolicy::new(inner, classes).preemptive(true);
+        let out = sched.run(&mut policy);
+        let track = policy.into_inner().track;
+
+        // no lost payloads: everything submitted completed exactly once
+        for kind in TaskKind::ALL {
+            mofa::prop_assert!(
+                track.submitted[kidx(kind)] == track.completed[kidx(kind)],
+                "{kind:?}: {} submitted but {} completed",
+                track.submitted[kidx(kind)],
+                track.completed[kidx(kind)]
+            );
+        }
+        // every eviction redispatched by the drain
+        mofa::prop_assert!(
+            out.preemption.evictions == out.preemption.redispatches,
+            "evictions {} != redispatches {}",
+            out.preemption.evictions,
+            out.preemption.redispatches
+        );
+        // no double-occupied slots
+        mofa::prop_assert!(
+            track.max_live_cpu <= usable,
+            "live cpu tasks peaked at {} with only {usable} usable slots",
+            track.max_live_cpu
+        );
+        // all usable slots free again after the drain
+        let mut cluster = out.cluster;
+        mofa::prop_assert!(
+            cluster.free_slots(WorkerKind::Cpu) == usable,
+            "{} free cpu slots after drain, want {usable}",
+            cluster.free_slots(WorkerKind::Cpu)
+        );
+        // busy-time integral matches the hook-observed intervals (the
+        // pre-held shaping slots are busy for the whole window)
+        let t_end = out.final_vtime + 1.0;
+        let mut want = track.integral_cpu + track.live_cpu as f64 * (t_end - track.last_t);
+        want += held as f64 * t_end;
+        let got = cluster.utilization(WorkerKind::Cpu, t_end) * cpu_total as f64 * t_end;
+        mofa::prop_assert!(
+            (got - want).abs() < 1e-6 * want.max(1.0),
+            "cpu busy integral {got} != reference {want}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// determinism: preemption ON, concurrent vs sequential, retraining ON
+// ---------------------------------------------------------------------------
+
+fn preempt_request(nodes: usize) -> CampaignRequest {
+    CampaignRequest::new(CampaignConfig {
+        nodes,
+        duration_s: 1200.0,
+        seed: 7272,
+        policy: PolicyConfig {
+            retrain_enabled: true,
+            retrain_min: 8,
+            adsorption_switch: 16,
+            ..Default::default()
+        },
+        threads: 0,
+        util_sample_dt: 300.0,
+    })
+    .policy(PolicyKind::Priority(PriorityClasses::default()))
+    .preemption(true)
+}
+
+fn warmed_engines() -> Arc<Engines> {
+    let engines = quick_engines();
+    // high model quality -> high survival -> retrains fire in-window
+    engines.generator.set_params(vec![], 6);
+    engines
+}
+
+/// With preemption enabled (and retraining installing new weights
+/// mid-campaign), a concurrent run on one shared pool must equal
+/// sequential runs byte-for-byte on the canonical report: preemption
+/// decisions read only virtual-time scheduler state, never wallclock.
+#[test]
+fn preemption_on_bit_identical_concurrent_vs_sequential_with_retraining() {
+    let node_counts = [8usize, 16];
+    let shared = Arc::new(ThreadPool::default_pool());
+    let handles: Vec<_> = node_counts
+        .iter()
+        .map(|&n| {
+            let pool = Arc::clone(&shared);
+            thread::spawn(move || run_campaign_request(preempt_request(n), warmed_engines(), &pool))
+        })
+        .collect();
+    let concurrent: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        concurrent.iter().any(|r| r.thinker.model_version >= 1),
+        "no retrain fired — the retraining path was not exercised"
+    );
+
+    for (report, &nodes) in concurrent.iter().zip(&node_counts) {
+        let solo_pool = Arc::new(ThreadPool::new(2));
+        let solo = run_campaign_request(preempt_request(nodes), warmed_engines(), &solo_pool);
+        assert_eq!(
+            canonical_report_json(report).to_string(),
+            canonical_report_json(&solo).to_string(),
+            "{nodes} nodes: preemption-ON concurrent run diverged from sequential"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thrash cap: an over-evicted flight becomes non-evictable
+// ---------------------------------------------------------------------------
+
+/// Campaign shape: one huge low-class process batch on a single usable
+/// Cpu slot, a validate "ticker" (~224 s per tick) whose completions each
+/// inject one high-class assemble. The first `MAX_PREEMPTIONS` assembles
+/// evict the process; the next one finds it non-evictable and waits.
+struct Thrasher {
+    linkers: Vec<GenLinker>,
+    mof: Box<mofa::assembly::AssembledMof>,
+    primed: bool,
+    highs: u32,
+    record_id: u64,
+    /// (kind, origin_t, dispatched_at)
+    dispatches: Rc<RefCell<Vec<(TaskKind, f64, f64)>>>,
+    completions: Rc<RefCell<Vec<TaskKind>>>,
+}
+
+impl Policy for Thrasher {
+    fn fill(&mut self, _free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        if self.primed {
+            return Vec::new();
+        }
+        self.primed = true;
+        vec![
+            TaskRequest {
+                kind: TaskKind::ProcessLinkers,
+                payload: Payload::Process { linkers: self.linkers.clone() },
+                origin_t: now,
+            },
+            TaskRequest {
+                kind: TaskKind::ValidateStructure,
+                payload: Payload::Validate { mof: self.mof.clone(), record_id: 0 },
+                origin_t: now,
+            },
+        ]
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        self.completions.borrow_mut().push(done.kind);
+        let mut followups = Vec::new();
+        if done.kind == TaskKind::ValidateStructure && self.highs < MAX_PREEMPTIONS + 1 {
+            self.highs += 1;
+            followups.push(TaskRequest {
+                kind: TaskKind::AssembleMofs,
+                payload: Payload::Assemble { linkers: Vec::new() },
+                origin_t: done.completed_at,
+            });
+            if self.highs < MAX_PREEMPTIONS + 1 {
+                self.record_id += 1;
+                followups.push(TaskRequest {
+                    kind: TaskKind::ValidateStructure,
+                    payload: Payload::Validate {
+                        mof: self.mof.clone(),
+                        record_id: self.record_id,
+                    },
+                    origin_t: done.completed_at,
+                });
+            }
+        }
+        followups
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.dispatches.borrow_mut().push((kind, origin_t, now));
+    }
+}
+
+#[test]
+fn flight_at_the_thrash_cap_becomes_non_evictable() {
+    let engines = quick_engines();
+    // one real MOF for the validate ticker payloads; the 8192-linker
+    // process batch runs ~983 virtual seconds per dispatch, far past
+    // every ~224 s validate tick, so it is always the running victim
+    let linkers = linker_pool(&engines, 8192);
+    let processed = match execute(
+        &Payload::Process { linkers: linkers[..16].to_vec() },
+        &engines,
+        1,
+    ) {
+        Outcome::Processed { linkers, .. } => linkers,
+        _ => panic!("process failed"),
+    };
+    let mof = match execute(&Payload::Assemble { linkers: processed }, &engines, 2) {
+        Outcome::Assembled { mofs, .. } => {
+            Box::new(mofs.into_iter().next().expect("one MOF assembles"))
+        }
+        _ => panic!("assembly failed"),
+    };
+
+    // exactly ONE usable Cpu slot
+    let mut cluster = Cluster::new(4);
+    while cluster.free_slots(WorkerKind::Cpu) > 1 {
+        assert!(cluster.acquire(WorkerKind::Cpu, 0.0));
+    }
+    let dispatches = Rc::new(RefCell::new(Vec::new()));
+    let completions = Rc::new(RefCell::new(Vec::new()));
+    let inner = Thrasher {
+        linkers,
+        mof,
+        primed: false,
+        highs: 0,
+        record_id: 0,
+        dispatches: Rc::clone(&dispatches),
+        completions: Rc::clone(&completions),
+    };
+    let sched = Scheduler::new(
+        cluster,
+        Arc::clone(&engines),
+        Arc::new(ThreadPool::new(4)),
+        SimParams { seed: 23, horizon_s: 1.0, util_sample_dt: 500.0 },
+    );
+    // default classes: assemble (4) strictly beats process (5)
+    let mut policy = PriorityPolicy::new(inner, PriorityClasses::default()).preemptive(true);
+    let out = sched.run(&mut policy);
+    assert_eq!(policy.into_inner().highs, MAX_PREEMPTIONS + 1, "not all bursts were injected");
+
+    // exactly MAX_PREEMPTIONS evictions: the last assemble found the
+    // process non-evictable
+    assert_eq!(out.preemption.evictions, MAX_PREEMPTIONS as u64);
+    assert_eq!(out.preemption.redispatches, MAX_PREEMPTIONS as u64);
+    assert!(out.preemption.wasted_busy_s > 0.0);
+
+    // the process still completed exactly once, as did every assemble
+    let done = completions.borrow();
+    assert_eq!(done.iter().filter(|k| **k == TaskKind::ProcessLinkers).count(), 1);
+    assert_eq!(
+        done.iter().filter(|k| **k == TaskKind::AssembleMofs).count(),
+        (MAX_PREEMPTIONS + 1) as usize
+    );
+
+    // the first MAX_PREEMPTIONS assembles dispatched the instant they
+    // arrived (eviction); the capped one waited for the process to finish
+    let log = dispatches.borrow();
+    let waits: Vec<f64> = log
+        .iter()
+        .filter(|(k, _, _)| *k == TaskKind::AssembleMofs)
+        .map(|(_, origin, now)| now - origin)
+        .collect();
+    assert_eq!(waits.len(), (MAX_PREEMPTIONS + 1) as usize);
+    for (i, w) in waits.iter().take(MAX_PREEMPTIONS as usize).enumerate() {
+        assert!(*w < 1e-9, "assemble {i} should dispatch via eviction, waited {w} s");
+    }
+    let capped = waits[MAX_PREEMPTIONS as usize];
+    assert!(
+        capped > 100.0,
+        "the capped assemble must wait out the process (waited {capped} s)"
+    );
+
+    // the process dispatched 1 + MAX_PREEMPTIONS times in total
+    let process_dispatches = log.iter().filter(|(k, _, _)| *k == TaskKind::ProcessLinkers).count();
+    assert_eq!(process_dispatches, (MAX_PREEMPTIONS + 1) as usize);
+}
