@@ -1,0 +1,295 @@
+//! §Perf: synthetic event-throughput benchmark for the discrete-event
+//! scheduler hot paths — no substrate compute, pure duration-model tasks
+//! — emitting a machine-readable `BENCH_sim.json` so the perf trajectory
+//! is tracked in-repo (see README §Benchmark trajectory).
+//!
+//!     cargo bench --bench bench_events -- [--quick] [--out PATH] \
+//!         [--check BASELINE.json]
+//!
+//! Sections:
+//! * **throughput** — a million-task (100k in `--quick`) campaign of
+//!   empty `Process` payloads flooding the Cpu pool of a 32-node
+//!   cluster, run in [`ExecMode::Inline`] (the post-overhaul hot path):
+//!   `events_per_sec` / `tasks_per_sec`.
+//! * **pre** — the same flood at N/10 tasks in [`ExecMode::Pool`], the
+//!   pre-overhaul configuration (per-task pool spawn + channel join on
+//!   the event path): the `pre` object in the JSON, and the denominator
+//!   of `speedup_vs_pre`.
+//! * **preemption** — long low-class `Assemble` flights on a small Cpu
+//!   pool evicted by bursts of short high-class `Process` injections:
+//!   `preempt_cancels_per_sec` (exercises O(1) heap cancellation +
+//!   re-queue by payload id).
+//! * **checkpoint** — a paused mid-campaign scheduler serialized to the
+//!   checkpoint JSON string: `checkpoint_bytes_per_sec`.
+//!
+//! `--check BASELINE.json` exits non-zero when `events_per_sec` regresses
+//! more than 20% below the baseline — unless the baseline is marked
+//! `"provisional": true` (hand-estimated, not machine-measured) or its
+//! `mode` differs from this run's, in which case the comparison is
+//! skipped and reported.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::trainer::SurrogateTrainer;
+use mofa::sim::{Completion, Policy, PreemptCandidate, Scheduler, SimOutcome, SimParams};
+use mofa::util::json::Json;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::resources::{Cluster, WorkerKind};
+use mofa::workflow::taskserver::{Engines, ExecMode, Payload, TaskKind};
+use mofa::workflow::thinker::TaskRequest;
+
+fn engines() -> Arc<Engines> {
+    Arc::new(Engines::scaled(Arc::new(SurrogateGenerator::builtin(16)), Arc::new(SurrogateTrainer)))
+}
+
+fn process_request(now: f64) -> TaskRequest {
+    TaskRequest {
+        kind: TaskKind::ProcessLinkers,
+        payload: Payload::Process { linkers: Vec::new() },
+        origin_t: now,
+    }
+}
+
+/// Feed the Cpu pool `overfill`× its free capacity with empty `Process`
+/// tasks until `remaining` runs out; ignore results. `overfill > 1`
+/// keeps the pending queues fat (the checkpoint section wants a big
+/// serialized state; the throughput sections use 1).
+struct Flood {
+    remaining: u64,
+    overfill: usize,
+}
+
+impl Policy for Flood {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        let want = (free(WorkerKind::Cpu) * self.overfill).min(self.remaining as usize);
+        self.remaining -= want as u64;
+        (0..want).map(|_| process_request(now)).collect()
+    }
+
+    fn handle(&mut self, _done: Completion) -> Vec<TaskRequest> {
+        Vec::new()
+    }
+}
+
+/// Run a `Flood` of `n_tasks` to quiescence; returns (wall seconds, outcome).
+fn run_flood(n_tasks: u64, exec: ExecMode, pool: &Arc<ThreadPool>) -> (f64, SimOutcome) {
+    let sched = Scheduler::new(
+        Cluster::new(32),
+        engines(),
+        Arc::clone(pool),
+        SimParams { seed: 42, horizon_s: f64::INFINITY, util_sample_dt: 1e9 },
+    )
+    .with_exec(exec);
+    let mut policy = Flood { remaining: n_tasks, overfill: 1 };
+    let t = Instant::now();
+    let out = sched.run(&mut policy);
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// Preemption storm: keep the Cpu pool full of long low-class assembles
+/// and inject a burst of short high-class processes every event batch;
+/// every injection evicts a running assemble (until its thrash cap).
+struct Storm {
+    assembles: u64,
+    processes: u64,
+    burst: usize,
+}
+
+impl Policy for Storm {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        let mut out = Vec::new();
+        let top_up = free(WorkerKind::Cpu).min(self.assembles as usize);
+        self.assembles -= top_up as u64;
+        for _ in 0..top_up {
+            out.push(TaskRequest {
+                kind: TaskKind::AssembleMofs,
+                payload: Payload::Assemble { linkers: Vec::new() },
+                origin_t: now,
+            });
+        }
+        let burst = self.burst.min(self.processes as usize);
+        self.processes -= burst as u64;
+        for _ in 0..burst {
+            out.push(process_request(now));
+        }
+        out
+    }
+
+    fn handle(&mut self, _done: Completion) -> Vec<TaskRequest> {
+        Vec::new()
+    }
+
+    fn priority(&self, req: &TaskRequest) -> u8 {
+        match req.kind {
+            TaskKind::ProcessLinkers => 0,
+            _ => 1,
+        }
+    }
+
+    fn preempt(
+        &mut self,
+        _kind: WorkerKind,
+        pending_class: u8,
+        running: &[PreemptCandidate],
+    ) -> Option<u64> {
+        running
+            .iter()
+            .filter(|c| c.class > pending_class)
+            .max_by_key(|c| (c.class, c.task_id))
+            .map(|c| c.task_id)
+    }
+
+    fn wants_preemption(&self) -> bool {
+        true
+    }
+}
+
+fn run_storm(n: u64, pool: &Arc<ThreadPool>) -> (f64, SimOutcome) {
+    let sched = Scheduler::new(
+        Cluster::new(4),
+        engines(),
+        Arc::clone(pool),
+        SimParams { seed: 7, horizon_s: f64::INFINITY, util_sample_dt: 1e9 },
+    )
+    .with_exec(ExecMode::Inline);
+    let mut policy = Storm { assembles: n, processes: n, burst: 32 };
+    let t = Instant::now();
+    let out = sched.run(&mut policy);
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// Pause a fat flood mid-campaign and time serializing its checkpoint;
+/// returns (bytes, serialize seconds).
+fn run_checkpoint(n_tasks: u64, pool: &Arc<ThreadPool>) -> (usize, f64) {
+    let sched = Scheduler::new(
+        Cluster::new(32),
+        engines(),
+        Arc::clone(pool),
+        SimParams { seed: 11, horizon_s: f64::INFINITY, util_sample_dt: 1e9 },
+    )
+    .with_exec(ExecMode::Inline);
+    let mut policy = Flood { remaining: n_tasks, overfill: 4 };
+    match sched.checkpoint_at(&mut policy, 0.5) {
+        mofa::sim::BarrierOutcome::Paused(paused) => {
+            let t = Instant::now();
+            let text = paused.checkpoint_json().to_string();
+            (text.len(), t.elapsed().as_secs_f64())
+        }
+        mofa::sim::BarrierOutcome::Finished(_) => {
+            panic!("checkpoint section drained before the barrier — raise n_tasks")
+        }
+    }
+}
+
+/// Peak resident set (VmHWM) in MiB, or 0.0 where /proc is unavailable.
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let flag_value = |flag: &str| -> Option<String> {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    };
+    let out_path = flag_value("--out").unwrap_or_else(|| "BENCH_sim.json".to_string());
+    let baseline_path = flag_value("--check");
+    let mode = if quick { "quick" } else { "full" };
+
+    let n_tasks: u64 = if quick { 100_000 } else { 1_000_000 };
+    let n_storm: u64 = if quick { 2_000 } else { 20_000 };
+    let n_ckpt: u64 = if quick { 20_000 } else { 100_000 };
+    let pool = Arc::new(ThreadPool::default_pool());
+
+    eprintln!("== bench_events ({mode}): {n_tasks} duration-model tasks ==");
+
+    eprintln!("-- throughput (inline, post-overhaul hot path)");
+    let (post_wall, post) = run_flood(n_tasks, ExecMode::Inline, &pool);
+    assert_eq!(post.tasks_submitted, n_tasks, "flood must drain completely");
+    let events_per_sec = post.tasks_submitted as f64 / post_wall;
+
+    eprintln!("-- pre (pool dispatch, {} tasks)", n_tasks / 10);
+    let (pre_wall, pre) = run_flood(n_tasks / 10, ExecMode::Pool, &pool);
+    let pre_events_per_sec = pre.tasks_submitted as f64 / pre_wall;
+
+    eprintln!("-- preemption storm ({n_storm} assembles / {n_storm} processes)");
+    let (storm_wall, storm) = run_storm(n_storm, &pool);
+    assert!(storm.preemption.evictions > 0, "the storm must evict");
+    let preempt_cancels_per_sec = storm.preemption.evictions as f64 / storm_wall;
+
+    eprintln!("-- checkpoint serialization ({n_ckpt} tasks, barrier 0.5s)");
+    let (ckpt_bytes, ckpt_wall) = run_checkpoint(n_ckpt, &pool);
+    let checkpoint_bytes_per_sec = ckpt_bytes as f64 / ckpt_wall.max(1e-9);
+
+    let rss = peak_rss_mb();
+    let speedup = events_per_sec / pre_events_per_sec.max(1e-9);
+
+    let report = Json::obj(vec![
+        ("schema", Json::Str("bench_sim/v1".into())),
+        ("mode", Json::Str(mode.into())),
+        // real machine measurement, never an estimate
+        ("provisional", Json::Bool(false)),
+        ("tasks", Json::Num(n_tasks as f64)),
+        ("events_per_sec", Json::Num(events_per_sec)),
+        ("tasks_per_sec", Json::Num(post.tasks_submitted as f64 / post_wall)),
+        ("preempt_cancels_per_sec", Json::Num(preempt_cancels_per_sec)),
+        ("preempt_evictions", Json::Num(storm.preemption.evictions as f64)),
+        ("checkpoint_bytes", Json::Num(ckpt_bytes as f64)),
+        ("checkpoint_bytes_per_sec", Json::Num(checkpoint_bytes_per_sec)),
+        ("peak_rss_mb", Json::Num(rss)),
+        ("speedup_vs_pre", Json::Num(speedup)),
+        (
+            "pre",
+            Json::obj(vec![
+                ("mode", Json::Str("pool_dispatch".into())),
+                ("tasks", Json::Num((n_tasks / 10) as f64)),
+                ("events_per_sec", Json::Num(pre_events_per_sec)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, report.to_string() + "\n").expect("write bench report");
+    eprintln!(
+        "events/s {events_per_sec:.0} (pre {pre_events_per_sec:.0}, speedup {speedup:.1}x), \
+         cancels/s {preempt_cancels_per_sec:.0}, ckpt {checkpoint_bytes_per_sec:.0} B/s, \
+         rss {rss:.0} MiB -> {out_path}"
+    );
+
+    if let Some(path) = baseline_path {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("--check {path}: {e}"));
+        let base = Json::parse(&text).unwrap_or_else(|e| panic!("--check {path}: {e}"));
+        let provisional = base.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+        let base_mode = base.get("mode").and_then(Json::as_str).unwrap_or("");
+        if provisional {
+            eprintln!("--check: baseline is provisional (hand-estimated); comparison skipped");
+        } else if base_mode != mode {
+            eprintln!("--check: baseline mode '{base_mode}' != '{mode}'; comparison skipped");
+        } else {
+            let base_eps = base.req_f64("events_per_sec");
+            let floor = 0.8 * base_eps;
+            if events_per_sec < floor {
+                eprintln!(
+                    "REGRESSION: events_per_sec {events_per_sec:.0} < 80% of baseline {base_eps:.0}"
+                );
+                std::process::exit(1);
+            }
+            eprintln!("--check: ok ({events_per_sec:.0} vs baseline {base_eps:.0})");
+        }
+    }
+}

@@ -25,7 +25,9 @@ fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a zero-duration op on a coarse
+    // clock fed into a later ratio) must not panic the whole bench run
+    samples.sort_by(f64::total_cmp);
     samples[samples.len() / 2]
 }
 

@@ -7,8 +7,10 @@
 //!
 //! * [`vtime`] — [`vtime::VirtualTime`], a validated, totally-ordered
 //!   time axis (NaN/negative durations assert instead of corrupting heap
-//!   order), and [`vtime::EventHeap`], the deterministic min-heap of
-//!   completion events keyed `(time, task id)`.
+//!   order), and [`vtime::EventHeap`], the deterministic indexed
+//!   lazy-deletion min-heap of completion events keyed
+//!   `(time, task id)`: O(log n) push/pop, O(1) cancellation
+//!   (preemption), amortized tombstone compaction.
 //! * [`scheduler`] — [`scheduler::Scheduler`] owns event ordering,
 //!   per-worker slot pools, priority-aware pending queues, in-flight
 //!   tasks and utilization sampling. What to run next is delegated to
@@ -23,7 +25,9 @@
 //!   (weighted multi-tenant slot shares with dynamic re-weighting at
 //!   virtual-time barriers).
 //! * [`sweep`] — one-shot batch driver: run many independent campaigns
-//!   concurrently on one shared thread pool.
+//!   concurrently on one shared thread pool, driven by a fixed-size
+//!   work-stealing executor ([`sweep::run_sweep_with`]) that preserves
+//!   input-order results.
 //! * [`admission`] — pure admission-control state for the service front
 //!   door: the bounded request queue, shed policies
 //!   ([`admission::ShedPolicy`]), per-tenant in-queue quotas, and the
@@ -76,5 +80,5 @@ pub use service::{
     run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
     ServiceConfig, ServiceStats, TenantStats, Ticket,
 };
-pub use sweep::{run_sweep, sweep_nodes, SweepItem};
+pub use sweep::{default_drivers, run_sweep, run_sweep_with, sweep_nodes, SweepItem};
 pub use vtime::{EventHeap, VirtualTime};

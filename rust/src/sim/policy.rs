@@ -46,13 +46,7 @@ fn kind_idx(kind: TaskKind) -> usize {
 
 /// Position of a worker kind in [`WorkerKind::ALL`] (quota-table index).
 fn worker_idx(kind: WorkerKind) -> usize {
-    match kind {
-        WorkerKind::Generator => 0,
-        WorkerKind::Validate => 1,
-        WorkerKind::Cpu => 2,
-        WorkerKind::Optimize => 3,
-        WorkerKind::Trainer => 4,
-    }
+    kind.index()
 }
 
 /// Per-task-kind priority classes (lower class dispatches first; ties

@@ -9,11 +9,21 @@
 //! Thinker is its first implementor
 //! ([`crate::workflow::mofa::MofaPolicy`]).
 //!
-//! Real substrate computation runs on a shared [`ThreadPool`]; the
-//! scheduler joins each job when its *virtual* completion event fires,
-//! so results are consumed in virtual-time order regardless of wallclock
-//! scheduling. That property makes campaigns deterministic and lets
-//! [`crate::sim::sweep`] run many of them concurrently on one pool.
+//! Real substrate computation runs on a shared [`ThreadPool`] (or, in
+//! [`ExecMode::Inline`], on the scheduler thread at the completion
+//! event); the scheduler consumes each result when its *virtual*
+//! completion event fires, so results arrive in virtual-time order
+//! regardless of wallclock scheduling. That property makes campaigns
+//! deterministic and lets [`crate::sim::sweep`] run many of them
+//! concurrently on one pool.
+//!
+//! **Hot-path layout** (see docs/ARCHITECTURE.md §Performance
+//! architecture): in-flight tasks live in a dense slab indexed by `u32`
+//! slots that ride through the event heap, payloads are interned in an
+//! arena so preemption re-queues a `u32` id instead of cloning
+//! `Arc<Payload>` chains, and the event loop settles **all** completions
+//! at one virtual instant before running a single dispatch+preemption
+//! pass for that instant.
 //!
 //! **Preemption**: when a pool is full and work is still pending, the
 //! scheduler offers [`Policy::preempt`] the running flights as eviction
@@ -23,7 +33,7 @@
 //! bit-deterministic); a per-payload [`MAX_PREEMPTIONS`] cap bounds
 //! thrash. See docs/ARCHITECTURE.md §3.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::sim::vtime::{EventHeap, VirtualTime};
@@ -33,7 +43,7 @@ use crate::util::threadpool::ThreadPool;
 use crate::workflow::queues::ScoredQueue;
 use crate::workflow::resources::{Cluster, WorkerKind};
 use crate::workflow::taskserver::{
-    submit, virtual_duration, Engines, InFlight, Outcome, Payload, TaskKind,
+    submit, virtual_duration, Engines, ExecMode, InFlight, Outcome, Payload, TaskKind,
 };
 use crate::workflow::thinker::TaskRequest;
 
@@ -176,9 +186,9 @@ pub trait Policy {
 
     /// Capability probe: `true` when [`Policy::preempt`] may ever return
     /// a victim. The scheduler skips the whole preemption pass — and the
-    /// per-event candidate-list build it would need — when this is
-    /// `false`, so non-preemptive policies pay nothing on the hot
-    /// dispatch path. Override it together with [`Policy::preempt`].
+    /// per-pool running index it would need — when this is `false`, so
+    /// non-preemptive policies pay nothing on the hot dispatch path.
+    /// Override it together with [`Policy::preempt`].
     fn wants_preemption(&self) -> bool {
         false
     }
@@ -196,14 +206,60 @@ pub struct SimParams {
     pub util_sample_dt: f64,
 }
 
+/// Handle into the scheduler's payload arena: re-queueing a preemption
+/// victim or draining a pending entry moves this `u32`, never an
+/// `Arc<Payload>` clone chain. Runtime-only — checkpoints serialize the
+/// payload itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct PayloadId(u32);
+
+/// Interned payload storage: a dense free-list slab of the `Arc`s backing
+/// every in-flight and pending payload. Single-threaded and LIFO on the
+/// free list, so slot assignment is a pure function of the event
+/// sequence (deterministic), and ids are never serialized.
+#[derive(Default)]
+struct PayloadArena {
+    slots: Vec<Option<Arc<Payload>>>,
+    free: Vec<u32>,
+}
+
+impl PayloadArena {
+    fn intern(&mut self, payload: Arc<Payload>) -> PayloadId {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.slots[slot as usize].is_none());
+                self.slots[slot as usize] = Some(payload);
+                PayloadId(slot)
+            }
+            None => {
+                self.slots.push(Some(payload));
+                PayloadId((self.slots.len() - 1) as u32)
+            }
+        }
+    }
+
+    fn get(&self, id: PayloadId) -> &Arc<Payload> {
+        self.slots[id.0 as usize].as_ref().expect("live payload id")
+    }
+
+    /// Free the slot; the returned `Arc` drops here unless the caller
+    /// keeps it (a pool job may still hold its own clone).
+    fn release(&mut self, id: PayloadId) -> Arc<Payload> {
+        let p = self.slots[id.0 as usize].take().expect("live payload id");
+        self.free.push(id.0);
+        p
+    }
+}
+
 struct Flight {
     inf: InFlight,
     origin_t: f64,
-    /// the submitted payload, shared with the pool job: a checkpoint
-    /// serializes it so a resumed run can re-execute the task (outcomes
-    /// are pure functions of `(payload, seed)`), and preemption re-queues
-    /// it after the discarded compute is joined
-    payload: Arc<Payload>,
+    /// arena handle for the submitted payload (shared — as an `Arc` —
+    /// with the pool job): a checkpoint serializes it so a resumed run
+    /// can re-execute the task (outcomes are pure functions of
+    /// `(payload, seed)`), and preemption re-queues the id after the
+    /// discarded compute is dropped
+    payload: PayloadId,
     /// priority class recorded at dispatch ([`Policy::priority`]); the
     /// eviction candidate list and the victim's re-queue score read it
     class: u8,
@@ -212,42 +268,81 @@ struct Flight {
     preemptions: u32,
 }
 
-/// One pending-queue entry: a request's fields with its payload behind
-/// the same `Arc` the in-flight table uses, plus the eviction count that
-/// follows a preempted payload back into the queue.
+/// Dense slab of in-flight tasks. Slot indices are runtime-only handles
+/// carried through the event heap, so a completion event lands directly
+/// on its flight — no id → flight map on the hot path. Checkpoints
+/// serialize task ids, never slots: a restored run may seat flights in
+/// different slots with no observable effect (slots appear in no
+/// ordering and no serialization).
+#[derive(Default)]
+struct FlightSlab {
+    slots: Vec<Option<Flight>>,
+    /// LIFO free list: deterministic slot reuse keeps the vec dense
+    free: Vec<u32>,
+}
+
+impl FlightSlab {
+    fn insert(&mut self, flight: Flight) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.slots[slot as usize].is_none());
+                self.slots[slot as usize] = Some(flight);
+                slot
+            }
+            None => {
+                self.slots.push(Some(flight));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn remove(&mut self, slot: u32) -> Flight {
+        let f = self.slots[slot as usize].take().expect("live flight slot");
+        self.free.push(slot);
+        f
+    }
+
+    fn get(&self, slot: u32) -> &Flight {
+        self.slots[slot as usize].as_ref().expect("live flight slot")
+    }
+
+    /// Live flights in slot order (used once, to build the preemption
+    /// index, which then sorts by task id).
+    fn iter(&self) -> impl Iterator<Item = (u32, &Flight)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|f| (i as u32, f)))
+    }
+}
+
+/// One pending-queue entry: a request's scheduling fields plus the arena
+/// id of its payload and the eviction count that follows a preempted
+/// payload back into the queue. `Copy` — re-queueing moves 24 bytes.
+#[derive(Clone, Copy)]
 struct PendingEntry {
     kind: TaskKind,
-    payload: Arc<Payload>,
+    payload: PayloadId,
     origin_t: f64,
     preemptions: u32,
 }
 
 impl PendingEntry {
-    /// A fresh (never-evicted) entry from a policy request.
-    fn from_request(req: TaskRequest) -> PendingEntry {
-        PendingEntry {
-            kind: req.kind,
-            payload: Arc::new(req.payload),
-            origin_t: req.origin_t,
-            preemptions: 0,
-        }
-    }
-
-    fn to_json(&self) -> Json {
+    fn to_json(&self, payloads: &PayloadArena) -> Json {
         Json::obj(vec![
             ("kind", Json::Str(self.kind.label().to_string())),
-            ("payload", self.payload.to_json()),
+            ("payload", payloads.get(self.payload).to_json()),
             ("origin_t", Json::Num(self.origin_t)),
             ("preemptions", Json::Num(self.preemptions as f64)),
         ])
     }
 
-    fn from_json(v: &Json) -> Result<PendingEntry, String> {
+    fn parse(v: &Json, payloads: &mut PayloadArena) -> Result<PendingEntry, String> {
         let kind = v.req("kind")?.as_str().ok_or("pending: 'kind' must be a string")?;
         Ok(PendingEntry {
             kind: TaskKind::from_label(kind)
                 .ok_or_else(|| format!("pending: unknown task kind '{kind}'"))?,
-            payload: Arc::new(Payload::from_json(v.req("payload")?)?),
+            payload: payloads.intern(Arc::new(Payload::from_json(v.req("payload")?)?)),
             origin_t: v.req("origin_t")?.as_f64().ok_or("pending: bad origin_t")?,
             preemptions: parse_preemptions(v.req("preemptions")?)?,
         })
@@ -299,11 +394,21 @@ pub struct Scheduler {
     engines: Arc<Engines>,
     pool: Arc<ThreadPool>,
     params: SimParams,
-    /// overflow queues per worker kind, ordered by `Policy::priority`
-    /// class then FIFO (a uniform class degenerates to plain FIFO);
-    /// preemption victims re-enter here with their eviction count
-    pending: BTreeMap<WorkerKind, ScoredQueue<PendingEntry>>,
-    flights: HashMap<u64, Flight>,
+    /// how real compute runs (never serialized — a wallclock concern)
+    exec: ExecMode,
+    /// overflow queues per worker kind ([`WorkerKind::index`] order),
+    /// ordered by `Policy::priority` class then FIFO (a uniform class
+    /// degenerates to plain FIFO); preemption victims re-enter here with
+    /// their eviction count
+    pending: [ScoredQueue<PendingEntry>; 5],
+    flights: FlightSlab,
+    payloads: PayloadArena,
+    /// per-pool `(task_id, slot)` lists for the preemption candidate
+    /// pass, **sorted by construction**: built lazily on the first
+    /// [`Policy::preempt`]-capable pass (non-preemptive policies never
+    /// pay for it), then maintained incrementally — task ids are
+    /// monotone, so appends keep ascending order
+    preempt_index: Option<[Vec<(u64, u32)>; 5]>,
     preempt_stats: PreemptionStats,
     heap: EventHeap,
     /// base stream; per-task duration streams derive from it by task id
@@ -331,17 +436,16 @@ impl Scheduler {
             "util_sample_dt must be positive (got {})",
             params.util_sample_dt
         );
-        let mut pending = BTreeMap::new();
-        for k in WorkerKind::ALL {
-            pending.insert(k, ScoredQueue::new());
-        }
         Scheduler {
             cluster,
             engines,
             pool,
             params,
-            pending,
-            flights: HashMap::new(),
+            exec: ExecMode::Pool,
+            pending: std::array::from_fn(|_| ScoredQueue::new()),
+            flights: FlightSlab::default(),
+            payloads: PayloadArena::default(),
+            preempt_index: None,
             preempt_stats: PreemptionStats::default(),
             heap: EventHeap::new(),
             rng: Rng::new(params.seed),
@@ -351,6 +455,15 @@ impl Scheduler {
             now: 0.0,
             primed: false,
         }
+    }
+
+    /// Choose how real compute executes (default [`ExecMode::Pool`]).
+    /// Virtual trajectories are identical in both modes; see
+    /// [`ExecMode`] for the trade-off. Call before the first event is
+    /// processed (tasks already submitted keep their mode).
+    pub fn with_exec(mut self, exec: ExecMode) -> Scheduler {
+        self.exec = exec;
+        self
     }
 
     /// Run the event loop to quiescence: dispatch at t=0, then pop
@@ -365,13 +478,22 @@ impl Scheduler {
 
     /// Run the event loop up to a **virtual-time barrier**: every event
     /// with `t ≤ barrier_vt` is processed exactly as [`Scheduler::run`]
-    /// would, then the loop pauses *between* events. At the pause point
+    /// would, then the loop pauses *between* instants. At the pause point
     /// nothing new dispatches; the tasks still in flight keep their slots
     /// and their payloads, and [`Scheduler::checkpoint_json`] serializes
     /// them (joining their real compute first) so a restored scheduler
     /// continues the identical event sequence. Returns
     /// [`BarrierOutcome::Finished`] when the campaign drains before the
     /// barrier.
+    ///
+    /// The loop is **batched by instant**: all completions at one
+    /// virtual time settle first (ties pop in task-id order), then one
+    /// dispatch+preemption pass runs for that instant. With distinct
+    /// event times — the generic case under log-normal durations — a
+    /// batch is a single event and the trajectory is identical to
+    /// event-at-a-time processing; with ties, follow-ups queued by
+    /// earlier completions in the batch dispatch in the same pass they
+    /// always did (dispatch ran after `handle` either way).
     pub fn checkpoint_at<P: Policy>(mut self, policy: &mut P, barrier_vt: f64) -> BarrierOutcome {
         if !self.primed {
             self.dispatch(policy, 0.0);
@@ -381,25 +503,12 @@ impl Scheduler {
             if next.seconds() > barrier_vt {
                 return BarrierOutcome::Paused(Box::new(self));
             }
-            let (t, task_id) = self.heap.pop().expect("peeked event");
-            let now = t.seconds();
+            let now = next.seconds();
             self.now = now;
-            let Flight { inf, origin_t, .. } =
-                self.flights.remove(&task_id).expect("in-flight task");
-            let outcome = inf.handle.join();
-            self.cluster.release(inf.kind.worker(), now);
-            let followups = policy.handle(Completion {
-                task_id,
-                kind: inf.kind,
-                submitted_at: inf.submitted_at,
-                completed_at: now,
-                origin_t,
-                outcome,
-            });
-            for req in followups {
-                let w = req.kind.worker();
-                let class = policy.priority(&req) as f64;
-                self.pending.get_mut(&w).unwrap().push(class, PendingEntry::from_request(req));
+            // settle every completion at exactly this instant
+            while self.heap.peek() == Some(next) {
+                let (_, task_id, slot) = self.heap.pop().expect("peeked event");
+                self.complete_one(policy, task_id, slot, now);
             }
             self.sample_utilization(now);
             self.dispatch(policy, now);
@@ -413,6 +522,44 @@ impl Scheduler {
         })
     }
 
+    /// Consume one completion event: free the flight's slab slot and
+    /// payload, join (or inline-execute) its real compute, release its
+    /// cluster slot, and queue the policy's follow-ups.
+    fn complete_one<P: Policy>(&mut self, policy: &mut P, task_id: u64, slot: u32, now: f64) {
+        let Flight { inf, origin_t, payload, .. } = self.flights.remove(slot);
+        debug_assert_eq!(inf.task_id, task_id, "heap slot / flight mismatch");
+        self.payloads.release(payload);
+        let kind = inf.kind;
+        let submitted_at = inf.submitted_at;
+        let outcome = inf.handle.join(&self.engines);
+        self.cluster.release(kind.worker(), now);
+        self.preempt_index_remove(kind.worker(), task_id);
+        let followups = policy.handle(Completion {
+            task_id,
+            kind,
+            submitted_at,
+            completed_at: now,
+            origin_t,
+            outcome,
+        });
+        for req in followups {
+            let w = req.kind.worker().index();
+            let class = policy.priority(&req) as f64;
+            let entry = self.intern_request(req);
+            self.pending[w].push(class, entry);
+        }
+    }
+
+    /// Intern a policy request's payload and shape it into a queue entry.
+    fn intern_request(&mut self, req: TaskRequest) -> PendingEntry {
+        PendingEntry {
+            kind: req.kind,
+            payload: self.payloads.intern(Arc::new(req.payload)),
+            origin_t: req.origin_t,
+            preemptions: 0,
+        }
+    }
+
     /// Dispatch at the current time: drain overflow queues first in
     /// priority-class order (queued follow-ups — e.g. charges →
     /// adsorption chains — beat new policy fills), then offer remaining
@@ -420,8 +567,12 @@ impl Scheduler {
     /// finally run the preemption pass for whatever is still queued.
     fn dispatch<P: Policy>(&mut self, policy: &mut P, now: f64) {
         for k in WorkerKind::ALL {
+            let ki = k.index();
+            if self.pending[ki].is_empty() {
+                continue;
+            }
             while self.cluster.free_slots(k) > 0 {
-                let Some((class, entry)) = self.pending.get_mut(&k).unwrap().pop() else {
+                let Some((class, entry)) = self.pending[ki].pop() else {
                     break;
                 };
                 self.submit_entry(policy, entry, class as u8, now);
@@ -435,23 +586,15 @@ impl Scheduler {
                 self.cluster.free_slots(WorkerKind::Optimize),
                 self.cluster.free_slots(WorkerKind::Trainer),
             ];
-            let free_fn = move |k: WorkerKind| match k {
-                WorkerKind::Generator => free[0],
-                WorkerKind::Validate => free[1],
-                WorkerKind::Cpu => free[2],
-                WorkerKind::Optimize => free[3],
-                WorkerKind::Trainer => free[4],
-            };
+            let free_fn = move |k: WorkerKind| free[k.index()];
             for req in policy.fill(&free_fn, now) {
                 let w = req.kind.worker();
                 let class = policy.priority(&req);
+                let entry = self.intern_request(req);
                 if self.cluster.free_slots(w) > 0 {
-                    self.submit_entry(policy, PendingEntry::from_request(req), class, now);
+                    self.submit_entry(policy, entry, class, now);
                 } else {
-                    self.pending
-                        .get_mut(&w)
-                        .unwrap()
-                        .push(class as f64, PendingEntry::from_request(req));
+                    self.pending[w.index()].push(class as f64, entry);
                 }
             }
         }
@@ -460,44 +603,56 @@ impl Scheduler {
 
     /// Preemption pass: for every pool that is full while work is still
     /// pending, offer [`Policy::preempt`] the best pending entry's class
-    /// and the evictable running flights. An accepted eviction joins the
-    /// victim's (discarded) compute, cancels its completion event, frees
-    /// its slot without counting a task done, re-queues its payload at
-    /// its own class with the eviction count bumped, and dispatches the
-    /// pending entry into the freed slot. The loop is bounded: each
-    /// payload is evictable at most [`MAX_PREEMPTIONS`] times.
+    /// and the evictable running flights. An accepted eviction drops the
+    /// victim's (discarded) compute, cancels its completion event in
+    /// O(1), frees its slot without counting a task done, re-queues its
+    /// payload id at its own class with the eviction count bumped, and
+    /// dispatches the pending entry into the freed slot. The loop is
+    /// bounded: each payload is evictable at most [`MAX_PREEMPTIONS`]
+    /// times. Candidates come from the per-pool running index — sorted
+    /// by construction, so no per-pass sort is needed and idle pools
+    /// cost one `peek`.
     fn try_preempt<P: Policy>(&mut self, policy: &mut P, now: f64) {
         if !policy.wants_preemption() {
             return;
         }
+        if self.preempt_index.is_none() {
+            self.build_preempt_index();
+        }
         for k in WorkerKind::ALL {
+            let ki = k.index();
             loop {
-                if self.cluster.free_slots(k) > 0 {
-                    // pools with headroom were drained above; nothing to
-                    // evict for
-                    break;
-                }
-                let Some((score, _)) = self.pending.get(&k).unwrap().peek() else {
+                // cheapest probes first: nothing pending, or the pool
+                // still has headroom (it was drained above) — skip
+                let Some((score, _)) = self.pending[ki].peek() else {
                     break;
                 };
+                if self.cluster.free_slots(k) > 0 {
+                    break;
+                }
                 let pending_class = score as u8;
-                let mut candidates: Vec<PreemptCandidate> = self
-                    .flights
-                    .iter()
-                    .filter(|(_, f)| f.inf.kind.worker() == k && f.preemptions < MAX_PREEMPTIONS)
-                    .map(|(&id, f)| PreemptCandidate {
-                        task_id: id,
-                        kind: f.inf.kind,
-                        class: f.class,
-                        preemptions: f.preemptions,
-                    })
-                    .collect();
+                let candidates: Vec<PreemptCandidate> = {
+                    let idx = self.preempt_index.as_ref().expect("index built above");
+                    let flights = &self.flights;
+                    idx[ki]
+                        .iter()
+                        .filter_map(|&(task_id, slot)| {
+                            let f = flights.get(slot);
+                            if f.preemptions >= MAX_PREEMPTIONS {
+                                return None;
+                            }
+                            Some(PreemptCandidate {
+                                task_id,
+                                kind: f.inf.kind,
+                                class: f.class,
+                                preemptions: f.preemptions,
+                            })
+                        })
+                        .collect()
+                };
                 if candidates.is_empty() {
                     break;
                 }
-                // HashMap iteration order is not deterministic; the
-                // candidate list the policy sees must be
-                candidates.sort_by_key(|c| c.task_id);
                 let Some(victim) = policy.preempt(k, pending_class, &candidates) else {
                     break;
                 };
@@ -509,23 +664,55 @@ impl Scheduler {
                 // the victim into the same queue, so the entry dispatched
                 // into the freed slot is unconditionally the one the
                 // policy was asked about
-                let (class, entry) = self.pending.get_mut(&k).unwrap().pop().expect("peeked entry");
+                let (class, entry) = self.pending[ki].pop().expect("peeked entry");
                 self.evict(policy, victim, now);
                 self.submit_entry(policy, entry, class as u8, now);
             }
         }
     }
 
-    /// Evict one running flight: its completion event is cancelled, its
-    /// real compute joined and **discarded** (the payload re-executes on
-    /// redispatch — outcomes are pure functions of `(payload, seed)`, so
-    /// the run stays deterministic), its slot freed with the busy-time
-    /// integral kept, and its payload re-queued at its dispatch class.
+    /// One-time build of the per-pool running index (first preemption
+    /// pass, or after a restore): collect live flights from the slab and
+    /// sort by task id. Incremental maintenance keeps it sorted from
+    /// here on, so the candidate order a policy observes is identical
+    /// across checkpoint/resume regardless of slab seating.
+    fn build_preempt_index(&mut self) {
+        let mut idx: [Vec<(u64, u32)>; 5] = Default::default();
+        for (slot, f) in self.flights.iter() {
+            idx[f.inf.kind.worker().index()].push((f.inf.task_id, slot));
+        }
+        for v in idx.iter_mut() {
+            v.sort_unstable_by_key(|&(id, _)| id);
+        }
+        self.preempt_index = Some(idx);
+    }
+
+    /// Drop a completed or evicted flight from the running index (no-op
+    /// for non-preemptive policies, which never build the index).
+    fn preempt_index_remove(&mut self, worker: WorkerKind, task_id: u64) {
+        if let Some(idx) = self.preempt_index.as_mut() {
+            let v = &mut idx[worker.index()];
+            let pos = v
+                .binary_search_by_key(&task_id, |&(id, _)| id)
+                .expect("running flight present in the preemption index");
+            v.remove(pos);
+        }
+    }
+
+    /// Evict one running flight: its completion event is cancelled (an
+    /// O(1) tombstone), its real compute **discarded** (the payload
+    /// re-executes on redispatch — outcomes are pure functions of
+    /// `(payload, seed)`, so the run stays deterministic), its slot
+    /// freed with the busy-time integral kept, and its payload id
+    /// re-queued at its dispatch class.
     fn evict<P: Policy>(&mut self, policy: &mut P, victim: u64, now: f64) {
-        let flight = self.flights.remove(&victim).expect("candidate flight in the table");
-        self.heap.remove(victim).expect("in-flight task has a completion event");
-        let _ = flight.inf.handle.join();
+        let (_at, slot) =
+            self.heap.remove(victim).expect("in-flight task has a completion event");
+        let flight = self.flights.remove(slot);
+        debug_assert_eq!(flight.inf.task_id, victim, "heap id / flight mismatch");
+        flight.inf.handle.discard();
         let worker = flight.inf.kind.worker();
+        self.preempt_index_remove(worker, victim);
         self.cluster.release_preempted(worker, now);
         self.preempt_stats.evictions += 1;
         self.preempt_stats.wasted_busy_s += now - flight.inf.submitted_at;
@@ -536,11 +723,11 @@ impl Scheduler {
             origin_t: flight.origin_t,
             preemptions: flight.preemptions + 1,
         };
-        self.pending.get_mut(&worker).unwrap().push(flight.class as f64, entry);
+        self.pending[worker.index()].push(flight.class as f64, entry);
     }
 
     /// Acquire a slot, sample the task's virtual duration from its
-    /// per-task stream, start the real computation on the pool, and
+    /// per-task stream, start (or defer) the real computation, and
     /// schedule the completion event. A redispatched preemption victim
     /// goes through this same path with a fresh task id (and therefore a
     /// fresh derived seed and duration sample).
@@ -551,13 +738,14 @@ impl Scheduler {
         class: u8,
         now: f64,
     ) {
-        let PendingEntry { kind, payload, origin_t, preemptions } = entry;
+        let PendingEntry { kind, payload: pid, origin_t, preemptions } = entry;
         let worker = kind.worker();
         let acquired = self.cluster.acquire(worker, now);
         debug_assert!(acquired, "submit_entry without a free {worker:?} slot");
         let task_id = self.next_task_id;
         self.next_task_id += 1;
         let seed = self.params.seed ^ task_id.wrapping_mul(TASK_SEED_MIX);
+        let payload = Arc::clone(self.payloads.get(pid));
         // ONE destructure for the duration-model shape, so a preemption
         // redispatch can never drift from the first dispatch
         let (set_size, n_items) = match &*payload {
@@ -577,15 +765,23 @@ impl Scheduler {
         let inf = submit(
             &self.pool,
             &self.engines,
-            Arc::clone(&payload),
+            payload,
             task_id,
             kind,
             now,
             dur,
             seed,
+            self.exec,
         );
-        self.heap.push(completes_at, task_id);
-        self.flights.insert(task_id, Flight { inf, origin_t, payload, class, preemptions });
+        let slot = self.flights.insert(Flight { inf, origin_t, payload: pid, class, preemptions });
+        self.heap.push(completes_at, task_id, slot);
+        if let Some(idx) = self.preempt_index.as_mut() {
+            let v = &mut idx[worker.index()];
+            if let Some(&(last_id, _)) = v.last() {
+                debug_assert!(last_id < task_id, "task ids must append in order");
+            }
+            v.push((task_id, slot));
+        }
     }
 
     /// Emit `(t, busy fraction per kind)` rows for every sample point up
@@ -612,25 +808,30 @@ impl Scheduler {
 
     /// Serialize a paused scheduler (see [`Scheduler::checkpoint_at`]):
     /// the virtual clock, the event heap, every in-flight task's payload
-    /// (their real compute is joined first — running tasks finish before
-    /// the checkpoint is written), the priority-ordered pending queues by
-    /// entry, the cluster slot pools with their busy-time integrals, the
-    /// utilization series, and the RNG state. Everything a fresh process
-    /// needs to continue the identical event sequence.
+    /// (their real compute is quiesced first — pool-mode tasks finish
+    /// before the checkpoint is written; inline-mode tasks never started),
+    /// the priority-ordered pending queues by entry, the cluster slot
+    /// pools with their busy-time integrals, the utilization series, and
+    /// the RNG state. Everything a fresh process needs to continue the
+    /// identical event sequence. Slab slots and payload-arena ids are
+    /// **not** serialized — they are runtime handles a restored run
+    /// reassigns freely.
     pub fn checkpoint_json(mut self) -> Json {
         let mut events = Vec::new();
-        while let Some((t, id)) = self.heap.pop() {
+        let mut flights: Vec<(u64, Flight)> = Vec::new();
+        while let Some((t, id, slot)) = self.heap.pop() {
             events.push(Json::Arr(vec![Json::Num(t.seconds()), Json::u64_str(id)]));
+            flights.push((id, self.flights.remove(slot)));
         }
-        let mut flights: Vec<(u64, Flight)> = self.flights.drain().collect();
         flights.sort_by_key(|(id, _)| *id);
+        let payloads = &self.payloads;
         let flights_json: Vec<Json> = flights
             .into_iter()
             .map(|(id, f)| {
-                // let the in-flight real compute finish so the pool is
-                // quiet when the process exits; the outcome is discarded —
-                // resume re-executes the payload and gets the same result
-                let _ = f.inf.handle.join();
+                // quiet the pool before the process exits; the outcome is
+                // discarded — resume re-executes the payload and gets the
+                // same result
+                f.inf.handle.discard();
                 Json::obj(vec![
                     ("task_id", Json::u64_str(id)),
                     ("kind", Json::Str(f.inf.kind.label().to_string())),
@@ -638,14 +839,19 @@ impl Scheduler {
                     ("origin_t", Json::Num(f.origin_t)),
                     ("class", Json::Num(f.class as f64)),
                     ("preemptions", Json::Num(f.preemptions as f64)),
-                    ("payload", f.payload.to_json()),
+                    ("payload", payloads.get(f.payload).to_json()),
                 ])
             })
             .collect();
         let pending = Json::Obj(
-            self.pending
+            WorkerKind::ALL
                 .iter()
-                .map(|(k, q)| (k.label().to_string(), q.to_json_with(PendingEntry::to_json)))
+                .map(|k| {
+                    (
+                        k.label().to_string(),
+                        self.pending[k.index()].to_json_with(|e| e.to_json(payloads)),
+                    )
+                })
                 .collect(),
         );
         Json::obj(vec![
@@ -687,9 +893,9 @@ impl Scheduler {
 
     /// Rebuild a paused scheduler from [`Scheduler::checkpoint_json`]:
     /// restores the clock, counters, queues and cluster accounting, then
-    /// **re-submits every in-flight payload** to the pool — task outcomes
-    /// are pure functions of `(payload, seed)`, so the completions the
-    /// resumed loop joins are bit-identical to the ones the checkpointed
+    /// **re-submits every in-flight payload** — task outcomes are pure
+    /// functions of `(payload, seed)`, so the completions the resumed
+    /// loop consumes are bit-identical to the ones the checkpointed
     /// process discarded. Continue with [`Scheduler::run`] (or another
     /// [`Scheduler::checkpoint_at`]).
     pub fn restore(
@@ -735,8 +941,11 @@ impl Scheduler {
         sched.preempt_stats = PreemptionStats::from_json(v.req("preempt")?)?;
         let pending = v.req("pending")?;
         for k in WorkerKind::ALL {
-            let q = ScoredQueue::from_json_with(pending.req(k.label())?, PendingEntry::from_json)?;
-            sched.pending.insert(k, q);
+            let payloads = &mut sched.payloads;
+            let q = ScoredQueue::from_json_with(pending.req(k.label())?, |e| {
+                PendingEntry::parse(e, payloads)
+            })?;
+            sched.pending[k.index()] = q;
         }
         // parse flights, then let the *event list* drive re-submission so
         // the heap holds exactly the serialized (time, id) pairs
@@ -788,18 +997,17 @@ impl Scheduler {
                 fl.submitted_at,
                 t - fl.submitted_at,
                 seed,
+                sched.exec,
             );
-            sched.heap.push(VirtualTime::new(t), id);
-            sched.flights.insert(
-                id,
-                Flight {
-                    inf,
-                    origin_t: fl.origin_t,
-                    payload: fl.payload,
-                    class: fl.class,
-                    preemptions: fl.preemptions,
-                },
-            );
+            let pid = sched.payloads.intern(fl.payload);
+            let slot = sched.flights.insert(Flight {
+                inf,
+                origin_t: fl.origin_t,
+                payload: pid,
+                class: fl.class,
+                preemptions: fl.preemptions,
+            });
+            sched.heap.push(VirtualTime::new(t), id, slot);
         }
         if let Some(id) = parked.keys().next() {
             return Err(format!("scheduler: flight {id} has no completion event"));
@@ -876,6 +1084,40 @@ mod tests {
         assert!(!out.util_series.is_empty());
         // drained: all slots free again
         assert_eq!(out.cluster.free_slots(WorkerKind::Generator), slots);
+    }
+
+    /// Inline execution must reproduce the pool-mode trajectory exactly:
+    /// virtual time, task counts, and utilization are functions of the
+    /// event sequence, never of where real compute ran.
+    #[test]
+    fn inline_exec_matches_pool_trajectory() {
+        let eng = engines();
+        let model = eng.generator.snapshot();
+        let run = |exec: ExecMode| {
+            let sched = Scheduler::new(
+                Cluster::new(8),
+                Arc::clone(&eng),
+                Arc::new(ThreadPool::new(2)),
+                SimParams { seed: 3, horizon_s: 30.0, util_sample_dt: 10.0 },
+            )
+            .with_exec(exec);
+            let mut policy = GenerateOnly {
+                submitted: 0,
+                handled: 0,
+                seed: Rng::new(3),
+                model: model.clone(),
+            };
+            sched.run(&mut policy)
+        };
+        let pooled = run(ExecMode::Pool);
+        let inline = run(ExecMode::Inline);
+        assert_eq!(pooled.tasks_submitted, inline.tasks_submitted);
+        assert_eq!(pooled.final_vtime.to_bits(), inline.final_vtime.to_bits());
+        assert_eq!(pooled.util_series.len(), inline.util_series.len());
+        for (a, b) in pooled.util_series.iter().zip(&inline.util_series) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1, b.1);
+        }
     }
 
     #[test]

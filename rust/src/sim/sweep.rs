@@ -3,25 +3,30 @@
 //!
 //! Campaigns are embarrassingly parallel — each owns its scheduler,
 //! cluster, thinker, and engine stack — and their real substrate work
-//! already runs on pool threads, so a sweep spawns one cheap driver
-//! thread per campaign (it mostly blocks joining pool jobs) and shares a
-//! single [`ThreadPool`] across all of them. This is what lets the
-//! scaling/utilization benches replay a whole node-count sweep at once
-//! instead of serializing it.
+//! already runs on pool threads. The sweep drives them with a **fixed
+//! pool of work-stealing driver threads** ([`run_sweep_with`]): items
+//! are dealt round-robin into per-driver deques, each driver pops its
+//! own deque from the front and steals from a neighbour's back when it
+//! runs dry. A 100-campaign sweep therefore costs ~`default_drivers()`
+//! OS threads instead of 100 (the old design spawned one thread per
+//! campaign), and long campaigns cannot strand idle drivers. Reports
+//! still come back in **input order** — each driver writes its report
+//! into the slot of the item's original index.
 //!
 //! Determinism: virtual-time event order is independent of wallclock
 //! thread scheduling, and every task's real computation is a pure
 //! function of its payload + derived seed — so a concurrent sweep is
-//! bit-identical to running the same campaigns sequentially. This holds
-//! **with online retraining on**: generate payloads carry a
-//! [`crate::genai::ModelSnapshot`] captured at submit (virtual) time, so
-//! which model version a task uses is fixed by virtual-time order, never
-//! by pool contention. (The seed design read mutable generator weights
-//! at execution time — a wallclock race `tests/sim_sweep.rs` now proves
-//! closed in both the retraining-off Fig. 5 configuration and the
-//! retraining-on one.)
+//! bit-identical to running the same campaigns sequentially, whichever
+//! driver ran each item. This holds **with online retraining on**:
+//! generate payloads carry a [`crate::genai::ModelSnapshot`] captured at
+//! submit (virtual) time, so which model version a task uses is fixed by
+//! virtual-time order, never by pool contention. (The seed design read
+//! mutable generator weights at execution time — a wallclock race
+//! `tests/sim_sweep.rs` now proves closed in both the retraining-off
+//! Fig. 5 configuration and the retraining-on one.)
 
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
 use crate::util::threadpool::ThreadPool;
 use crate::workflow::mofa::{run_campaign_on, CampaignConfig, CampaignReport};
@@ -39,20 +44,65 @@ pub struct SweepItem {
     pub engines: Arc<Engines>,
 }
 
-/// Run all items concurrently on the shared pool; reports come back in
-/// input order. `config.threads` is ignored here — the pool is the
+/// Driver-thread count [`run_sweep`] uses: the machine's available
+/// parallelism, clamped to `2..=32`. Driver threads mostly block joining
+/// pool jobs, so there is no benefit past a small multiple of the pool
+/// width — and a sweep of hundreds of campaigns must not spawn hundreds
+/// of threads.
+pub fn default_drivers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 32)
+}
+
+/// Run all items concurrently on the shared pool with
+/// [`default_drivers()`] work-stealing driver threads; reports come back
+/// in input order. `config.threads` is ignored here — the pool is the
 /// caller's to size.
 pub fn run_sweep(items: Vec<SweepItem>, pool: &Arc<ThreadPool>) -> Vec<CampaignReport> {
-    let drivers: Vec<std::thread::JoinHandle<CampaignReport>> = items
-        .into_iter()
-        .map(|item| {
+    run_sweep_with(items, pool, default_drivers())
+}
+
+/// [`run_sweep`] with an explicit driver-thread count (≥ 1; also capped
+/// at the item count). Exposed for benches and tests that need a fixed
+/// driver pool regardless of host parallelism.
+pub fn run_sweep_with(
+    items: Vec<SweepItem>,
+    pool: &Arc<ThreadPool>,
+    drivers: usize,
+) -> Vec<CampaignReport> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let drivers = drivers.max(1).min(n);
+    // deal items round-robin; each deque entry remembers its input index
+    let queues: Vec<Mutex<VecDeque<(usize, SweepItem)>>> =
+        (0..drivers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        queues[i % drivers].lock().unwrap().push_back((i, item));
+    }
+    let results: Vec<Mutex<Option<CampaignReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for w in 0..drivers {
+            let queues = &queues;
+            let results = &results;
             let pool = Arc::clone(pool);
-            std::thread::spawn(move || run_campaign_on(item.config, item.engines, &pool))
-        })
-        .collect();
-    drivers
+            s.spawn(move || loop {
+                // own deque first (front = FIFO), then steal from a
+                // neighbour's back; no new items ever arrive, so an
+                // all-empty pass means this driver is done
+                let job = queues[w].lock().unwrap().pop_front().or_else(|| {
+                    (1..drivers)
+                        .find_map(|off| queues[(w + off) % drivers].lock().unwrap().pop_back())
+                });
+                let Some((idx, item)) = job else { break };
+                let report = run_campaign_on(item.config, item.engines, &pool);
+                *results[idx].lock().unwrap() = Some(report);
+            });
+        }
+    });
+    results
         .into_iter()
-        .map(|h| h.join().expect("campaign driver panicked"))
+        .map(|slot| slot.into_inner().unwrap().expect("every sweep item produces a report"))
         .collect()
 }
 
@@ -136,5 +186,26 @@ mod tests {
         assert_eq!(reports.len(), 2);
         assert_eq!(reports[0].config.nodes, 8);
         assert_eq!(reports[1].config.nodes, 16);
+    }
+
+    /// More items than drivers: the two-driver executor must steal its
+    /// way through all five campaigns, keep reports in input order, and
+    /// produce bit-identical results to solo runs of the same configs.
+    #[test]
+    fn work_stealing_handles_more_items_than_drivers() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let nodes = [4usize, 8, 12, 16, 20];
+        let items: Vec<SweepItem> = nodes
+            .iter()
+            .map(|&n| SweepItem { config: quick_config(n), engines: quick_engines() })
+            .collect();
+        let reports = run_sweep_with(items, &pool, 2);
+        assert_eq!(reports.len(), nodes.len());
+        for (report, &n) in reports.iter().zip(&nodes) {
+            assert_eq!(report.config.nodes, n, "input order must be preserved");
+            let solo = run_campaign(quick_config(n), quick_engines());
+            assert_eq!(report.final_vtime, solo.final_vtime);
+            assert_eq!(report.thinker.db.len(), solo.thinker.db.len());
+        }
     }
 }

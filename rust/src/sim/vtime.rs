@@ -6,9 +6,17 @@
 //! slips out of the duration model; here construction is validated
 //! (debug builds assert, release builds clamp) and comparison uses
 //! `total_cmp`, so [`EventHeap`] ordering is total by construction.
+//!
+//! [`EventHeap`] is an **indexed lazy-deletion** (tombstone) min-heap:
+//! push and pop are O(log n), cancellation is O(1) — the entry is
+//! dropped from the live index and its heap node becomes a tombstone
+//! that pop/peek skip. The earlier implementation rebuilt the whole
+//! `BinaryHeap` on every [`EventHeap::remove`] (O(n) per preemption);
+//! `tests/event_heap.rs` property-tests this one against that
+//! implementation as a reference model.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 /// A point in virtual time, in seconds since campaign start.
 ///
@@ -77,61 +85,116 @@ impl PartialOrd for VirtualTime {
     }
 }
 
-/// Min-heap of `(completion time, event id)` pairs. Ties on time pop in
-/// event-id order, so the pop sequence is fully deterministic.
+/// A live entry in the id index: the generation stamped into the heap
+/// node (stale nodes carry an older generation), the scheduled time, and
+/// the caller's slot payload.
+#[derive(Clone, Copy, Debug)]
+struct LiveEvent {
+    gen: u64,
+    at: VirtualTime,
+    slot: u32,
+}
+
+/// Indexed min-heap of `(completion time, event id)` pairs with **O(1)
+/// cancellation**. Ties on time pop in event-id order, so the pop
+/// sequence of live events is fully deterministic — identical to the
+/// old rebuild-on-remove heap.
+///
+/// Each entry carries an opaque `u32` slot, the caller's handle into its
+/// own dense storage (the scheduler's flight slab), returned on pop and
+/// remove so completion handling needs no id → state map lookup.
+///
+/// Invariants:
+/// * an id is scheduled **at most once** at a time (the scheduler gives
+///   every dispatch a fresh task id; an id may be re-pushed only after
+///   it popped or was removed) — debug builds assert this;
+/// * `remove` only deletes the live-index entry; the heap node stays as
+///   a tombstone and is skipped (generation mismatch) when it surfaces;
+/// * when tombstones outnumber live entries 3:1 the heap is compacted
+///   in one O(n) pass, keeping memory bounded under eviction storms.
 #[derive(Debug, Default)]
 pub struct EventHeap {
-    heap: BinaryHeap<std::cmp::Reverse<(VirtualTime, u64)>>,
+    /// min-heap on `(time, id)`; the generation is never an observable
+    /// tie-break (one id has at most one live generation)
+    heap: BinaryHeap<std::cmp::Reverse<(VirtualTime, u64, u64)>>,
+    live: HashMap<u64, LiveEvent>,
+    next_gen: u64,
 }
 
 impl EventHeap {
     /// An empty heap.
     pub fn new() -> EventHeap {
-        EventHeap { heap: BinaryHeap::new() }
+        EventHeap::default()
     }
 
-    /// Schedule event `id` at time `at`.
-    pub fn push(&mut self, at: VirtualTime, id: u64) {
-        self.heap.push(std::cmp::Reverse((at, id)));
+    /// Schedule event `id` at time `at`, carrying `slot` back to the
+    /// caller on pop/remove. `id` must not be currently scheduled.
+    pub fn push(&mut self, at: VirtualTime, id: u64, slot: u32) {
+        debug_assert!(
+            !self.live.contains_key(&id),
+            "event id {id} is already scheduled"
+        );
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        self.live.insert(id, LiveEvent { gen, at, slot });
+        self.heap.push(std::cmp::Reverse((at, id, gen)));
     }
 
-    /// Pop the earliest event (lowest time, then lowest id).
-    pub fn pop(&mut self) -> Option<(VirtualTime, u64)> {
-        self.heap.pop().map(|std::cmp::Reverse(p)| p)
-    }
-
-    /// Time of the next event without popping it.
-    pub fn peek(&self) -> Option<VirtualTime> {
-        self.heap.peek().map(|std::cmp::Reverse((t, _))| *t)
-    }
-
-    /// Cancel the event with the given id and return its scheduled time
-    /// (`None` if no such event is scheduled). Preemption uses this to
-    /// drop an evicted flight's completion event; the heap is rebuilt in
-    /// O(n), which is fine at in-flight-task counts.
-    pub fn remove(&mut self, id: u64) -> Option<VirtualTime> {
-        let mut removed = None;
-        let mut kept = std::mem::take(&mut self.heap).into_vec();
-        kept.retain(|std::cmp::Reverse((t, eid))| {
-            if *eid == id && removed.is_none() {
-                removed = Some(*t);
-                false
-            } else {
-                true
+    /// Pop the earliest live event (lowest time, then lowest id).
+    pub fn pop(&mut self) -> Option<(VirtualTime, u64, u32)> {
+        while let Some(std::cmp::Reverse((t, id, gen))) = self.heap.pop() {
+            if matches!(self.live.get(&id), Some(ev) if ev.gen == gen) {
+                let ev = self.live.remove(&id).expect("checked live entry");
+                return Some((t, id, ev.slot));
             }
+            // tombstone: cancelled or superseded — skip
+        }
+        None
+    }
+
+    /// Time of the next live event without popping it. Takes `&mut self`
+    /// to prune tombstones off the top as a side effect.
+    pub fn peek(&mut self) -> Option<VirtualTime> {
+        while let Some(std::cmp::Reverse((t, id, gen))) = self.heap.peek().copied() {
+            if matches!(self.live.get(&id), Some(ev) if ev.gen == gen) {
+                return Some(t);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Cancel the event with the given id in O(1) and return its
+    /// scheduled time and slot (`None` if no such event is live).
+    /// Preemption uses this to drop an evicted flight's completion
+    /// event; the heap node is left behind as a tombstone.
+    pub fn remove(&mut self, id: u64) -> Option<(VirtualTime, u32)> {
+        let ev = self.live.remove(&id)?;
+        // amortized cleanup: rebuild once tombstones dominate, so a long
+        // eviction-heavy run cannot grow the heap without bound
+        if self.heap.len() > 64 && self.heap.len() > 4 * self.live.len() {
+            self.compact();
+        }
+        Some((ev.at, ev.slot))
+    }
+
+    /// Drop every tombstone in one O(n) rebuild.
+    fn compact(&mut self) {
+        let mut kept = std::mem::take(&mut self.heap).into_vec();
+        kept.retain(|std::cmp::Reverse((_, id, gen))| {
+            matches!(self.live.get(id), Some(ev) if ev.gen == *gen)
         });
         self.heap = BinaryHeap::from(kept);
-        removed
     }
 
-    /// Number of scheduled events.
+    /// Number of live scheduled events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live.len()
     }
 
-    /// True when no events are scheduled.
+    /// True when no live events are scheduled.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.live.is_empty()
     }
 }
 
@@ -157,30 +220,82 @@ mod tests {
     #[test]
     fn heap_pops_in_time_then_id_order() {
         let mut h = EventHeap::new();
-        h.push(VirtualTime::new(5.0), 1);
-        h.push(VirtualTime::new(1.0), 2);
-        h.push(VirtualTime::new(5.0), 0);
-        h.push(VirtualTime::new(3.0), 3);
+        h.push(VirtualTime::new(5.0), 1, 10);
+        h.push(VirtualTime::new(1.0), 2, 20);
+        h.push(VirtualTime::new(5.0), 0, 30);
+        h.push(VirtualTime::new(3.0), 3, 40);
         assert_eq!(h.len(), 4);
         assert_eq!(h.peek(), Some(VirtualTime::new(1.0)));
-        let order: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id)| id).collect();
-        assert_eq!(order, vec![2, 3, 0, 1]);
+        let order: Vec<(u64, u32)> =
+            std::iter::from_fn(|| h.pop()).map(|(_, id, slot)| (id, slot)).collect();
+        assert_eq!(order, vec![(2, 20), (3, 40), (0, 30), (1, 10)]);
         assert!(h.is_empty());
     }
 
     #[test]
     fn remove_cancels_one_event_and_preserves_order() {
         let mut h = EventHeap::new();
-        h.push(VirtualTime::new(5.0), 1);
-        h.push(VirtualTime::new(1.0), 2);
-        h.push(VirtualTime::new(3.0), 3);
-        assert_eq!(h.remove(3), Some(VirtualTime::new(3.0)));
+        h.push(VirtualTime::new(5.0), 1, 11);
+        h.push(VirtualTime::new(1.0), 2, 22);
+        h.push(VirtualTime::new(3.0), 3, 33);
+        assert_eq!(h.remove(3), Some((VirtualTime::new(3.0), 33)));
         assert_eq!(h.remove(3), None, "already removed");
         assert_eq!(h.remove(99), None, "never scheduled");
         assert_eq!(h.len(), 2);
-        assert_eq!(h.pop(), Some((VirtualTime::new(1.0), 2)));
-        assert_eq!(h.pop(), Some((VirtualTime::new(5.0), 1)));
+        assert_eq!(h.pop(), Some((VirtualTime::new(1.0), 2, 22)));
+        assert_eq!(h.pop(), Some((VirtualTime::new(5.0), 1, 11)));
         assert!(h.is_empty());
+    }
+
+    #[test]
+    fn repushed_id_after_remove_is_live_and_old_node_is_a_tombstone() {
+        let mut h = EventHeap::new();
+        h.push(VirtualTime::new(2.0), 7, 1);
+        assert_eq!(h.remove(7), Some((VirtualTime::new(2.0), 1)));
+        // re-push the same id at an *earlier* time with a new slot: the
+        // stale heap node for gen 0 must never shadow the live one
+        h.push(VirtualTime::new(1.0), 7, 2);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.peek(), Some(VirtualTime::new(1.0)));
+        assert_eq!(h.pop(), Some((VirtualTime::new(1.0), 7, 2)));
+        assert_eq!(h.pop(), None, "the tombstone must not resurface");
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn peek_prunes_tombstones_without_losing_live_events() {
+        let mut h = EventHeap::new();
+        for id in 0..10u64 {
+            h.push(VirtualTime::new(id as f64), id, id as u32);
+        }
+        for id in 0..9u64 {
+            assert!(h.remove(id).is_some());
+        }
+        // nine tombstones sit above the single live event
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.peek(), Some(VirtualTime::new(9.0)));
+        assert_eq!(h.pop(), Some((VirtualTime::new(9.0), 9, 9)));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn compaction_keeps_exactly_the_live_set() {
+        let mut h = EventHeap::new();
+        // push enough that removals cross the compaction threshold
+        for id in 0..512u64 {
+            h.push(VirtualTime::new((id % 17) as f64), id, id as u32);
+        }
+        for id in (0..512u64).filter(|id| id % 4 != 0) {
+            assert!(h.remove(id).is_some());
+        }
+        let expect: Vec<u64> = {
+            let mut ids: Vec<u64> = (0..512).filter(|id| id % 4 == 0).collect();
+            ids.sort_by_key(|&id| ((id % 17), id));
+            ids
+        };
+        assert_eq!(h.len(), expect.len());
+        let got: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id, _)| id).collect();
+        assert_eq!(got, expect);
     }
 
     #[test]
@@ -188,10 +303,10 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(77);
         let mut h = EventHeap::new();
         for id in 0..500 {
-            h.push(VirtualTime::new(rng.f64() * 1e6), id);
+            h.push(VirtualTime::new(rng.f64() * 1e6), id, 0);
         }
         let mut last = -1.0f64;
-        while let Some((t, _)) = h.pop() {
+        while let Some((t, _, _)) = h.pop() {
             assert!(t.seconds() >= last);
             last = t.seconds();
         }
@@ -209,5 +324,14 @@ mod tests {
     #[should_panic(expected = "invalid virtual duration")]
     fn negative_duration_asserts_in_debug() {
         let _ = VirtualTime::ZERO.advance(-1.0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "already scheduled")]
+    fn duplicate_live_id_asserts_in_debug() {
+        let mut h = EventHeap::new();
+        h.push(VirtualTime::new(1.0), 4, 0);
+        h.push(VirtualTime::new(2.0), 4, 1);
     }
 }

@@ -42,6 +42,19 @@ impl WorkerKind {
             WorkerKind::Trainer => "trainer",
         }
     }
+
+    /// Position in [`WorkerKind::ALL`]: the canonical dense index for
+    /// per-kind arrays (cluster pools, scheduler pending queues, policy
+    /// quota tables).
+    pub const fn index(self) -> usize {
+        match self {
+            WorkerKind::Generator => 0,
+            WorkerKind::Validate => 1,
+            WorkerKind::Cpu => 2,
+            WorkerKind::Optimize => 3,
+            WorkerKind::Trainer => 4,
+        }
+    }
 }
 
 /// Per-kind slot pool with busy-time accounting.
@@ -71,7 +84,10 @@ impl Pool {
 #[derive(Clone, Debug)]
 pub struct Cluster {
     pub nodes: usize,
-    pools: std::collections::BTreeMap<WorkerKind, Pool>,
+    /// slot pools indexed by [`WorkerKind::index`] — a dense array, not
+    /// a map: `free_slots`/`acquire` sit on the scheduler's hot dispatch
+    /// path
+    pools: [Pool; 5],
     /// GPU-seconds & CPU-seconds capacity per node (for Fig. 4)
     pub cpus_per_node: usize,
     pub gpus_per_node: usize,
@@ -122,12 +138,14 @@ pub fn layout(nodes: usize) -> Layout {
 impl Cluster {
     pub fn new(nodes: usize) -> Self {
         let l = layout(nodes);
-        let mut pools = std::collections::BTreeMap::new();
-        pools.insert(WorkerKind::Generator, Pool::new(l.generator_slots));
-        pools.insert(WorkerKind::Validate, Pool::new(l.validate_slots));
-        pools.insert(WorkerKind::Cpu, Pool::new(l.cpu_slots));
-        pools.insert(WorkerKind::Optimize, Pool::new(l.optimize_slots));
-        pools.insert(WorkerKind::Trainer, Pool::new(l.trainer_slots));
+        // [`WorkerKind::index`] order
+        let pools = [
+            Pool::new(l.generator_slots),
+            Pool::new(l.validate_slots),
+            Pool::new(l.cpu_slots),
+            Pool::new(l.optimize_slots),
+            Pool::new(l.trainer_slots),
+        ];
         Cluster { nodes, pools, cpus_per_node: 32, gpus_per_node: 4 }
     }
 
@@ -137,7 +155,7 @@ impl Cluster {
 
     /// Try to acquire one slot of the kind at virtual time `t`.
     pub fn acquire(&mut self, kind: WorkerKind, t: f64) -> bool {
-        let p = self.pools.get_mut(&kind).unwrap();
+        let p = &mut self.pools[kind.index()];
         p.advance(t);
         if p.busy < p.total {
             p.busy += 1;
@@ -149,7 +167,7 @@ impl Cluster {
 
     /// Release a slot at time `t`.
     pub fn release(&mut self, kind: WorkerKind, t: f64) {
-        let p = self.pools.get_mut(&kind).unwrap();
+        let p = &mut self.pools[kind.index()];
         p.advance(t);
         debug_assert!(p.busy > 0);
         p.busy -= 1;
@@ -162,23 +180,23 @@ impl Cluster {
     /// task does not count toward `tasks_done` (it completes later, from
     /// its re-queued payload, with a normal [`Cluster::release`]).
     pub fn release_preempted(&mut self, kind: WorkerKind, t: f64) {
-        let p = self.pools.get_mut(&kind).unwrap();
+        let p = &mut self.pools[kind.index()];
         p.advance(t);
         debug_assert!(p.busy > 0, "preempt-release on an idle {kind:?} pool");
         p.busy -= 1;
     }
 
     pub fn free_slots(&self, kind: WorkerKind) -> usize {
-        let p = &self.pools[&kind];
+        let p = &self.pools[kind.index()];
         p.total - p.busy
     }
 
     pub fn total_slots(&self, kind: WorkerKind) -> usize {
-        self.pools[&kind].total
+        self.pools[kind.index()].total
     }
 
     pub fn tasks_done(&self, kind: WorkerKind) -> u64 {
-        self.pools[&kind].tasks_done
+        self.pools[kind.index()].tasks_done
     }
 
     /// Serialize every pool's slot totals, live busy counts, and
@@ -192,9 +210,10 @@ impl Cluster {
             (
                 "pools",
                 Json::Obj(
-                    self.pools
+                    WorkerKind::ALL
                         .iter()
-                        .map(|(k, p)| {
+                        .map(|k| {
+                            let p = &self.pools[k.index()];
                             (
                                 k.label().to_string(),
                                 Json::obj(vec![
@@ -220,7 +239,7 @@ impl Cluster {
         for kind in WorkerKind::ALL {
             let p = pools.req(kind.label())?;
             let total = p.req("total")?.as_usize().ok_or("cluster: bad total")?;
-            let want = cluster.pools[&kind].total;
+            let want = cluster.pools[kind.index()].total;
             if total != want {
                 return Err(format!(
                     "cluster: {} slot total {total} does not match the {nodes}-node \
@@ -232,7 +251,7 @@ impl Cluster {
             if busy > total {
                 return Err(format!("cluster: {} busy {busy} > total {total}", kind.label()));
             }
-            let pool = cluster.pools.get_mut(&kind).unwrap();
+            let pool = &mut cluster.pools[kind.index()];
             pool.busy = busy;
             pool.busy_integral =
                 p.req("busy_integral")?.as_f64().ok_or("cluster: bad busy_integral")?;
@@ -244,7 +263,7 @@ impl Cluster {
 
     /// Mean busy fraction of the pool over [0, t] (Fig. 3 active time).
     pub fn utilization(&mut self, kind: WorkerKind, t: f64) -> f64 {
-        let p = self.pools.get_mut(&kind).unwrap();
+        let p = &mut self.pools[kind.index()];
         p.advance(t);
         if p.total == 0 || t <= 0.0 {
             0.0
@@ -257,6 +276,13 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_matches_all_order() {
+        for (i, k) in WorkerKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{k:?} out of place");
+        }
+    }
 
     #[test]
     fn layout_small_and_large() {

@@ -367,18 +367,94 @@ pub fn virtual_duration(kind: TaskKind, n_items: usize, set_size: usize, rng: &m
     rng.lognormal_mean(mean, 0.20)
 }
 
+/// Run [`execute`] with substrate panics converted to [`Outcome::Failed`]
+/// instead of poisoning the pool / unwinding into the scheduler loop.
+pub fn execute_caught(payload: &Payload, engines: &Engines, seed: u64, kind: TaskKind) -> Outcome {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute(payload, engines, seed)
+    })) {
+        Ok(outcome) => outcome,
+        Err(p) => {
+            let reason = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "task panicked".into());
+            Outcome::Failed { kind, reason }
+        }
+    }
+}
+
+/// How the scheduler runs a task's **real** computation. Virtual timing
+/// is identical in both modes — outcomes are pure functions of
+/// `(payload, seed)`, so the mode is a wallclock concern only and is
+/// never serialized into checkpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Spawn on the shared thread pool at dispatch time and join when
+    /// the completion event fires: real compute overlaps the event loop.
+    /// The right mode when tasks do substantial substrate work.
+    #[default]
+    Pool,
+    /// Defer: execute on the scheduler thread when the completion event
+    /// fires. No per-task channel/queue/wakeup overhead, and an evicted
+    /// flight costs **zero** real compute (its deferred execution simply
+    /// never runs). The mode the event-throughput bench and pure
+    /// duration-model campaigns use.
+    Inline,
+}
+
+/// Handle to a task's real computation, resolved at the completion event.
+pub enum TaskHandle {
+    /// result being computed (or already computed) on the shared pool
+    Pool(JobHandle<Outcome>),
+    /// deferred execution: runs on [`TaskHandle::join`]
+    Inline {
+        /// the submitted payload (shared with the scheduler's table)
+        payload: Arc<Payload>,
+        /// task kind, for panic-to-`Failed` attribution
+        kind: TaskKind,
+        /// derived per-task seed
+        seed: u64,
+    },
+}
+
+impl TaskHandle {
+    /// Produce the task's outcome: receive it from the pool job, or (in
+    /// inline mode) execute the payload here and now.
+    pub fn join(self, engines: &Engines) -> Outcome {
+        match self {
+            TaskHandle::Pool(h) => h.join(),
+            TaskHandle::Inline { payload, kind, seed } => {
+                execute_caught(&payload, engines, seed, kind)
+            }
+        }
+    }
+
+    /// Discard the task without consuming its result (preemption, or a
+    /// checkpoint quiescing the pool). A pool job is joined so its worker
+    /// is quiet before the process moves on; a deferred inline task is
+    /// simply dropped — nothing was ever computed.
+    pub fn discard(self) {
+        if let TaskHandle::Pool(h) = self {
+            let _ = h.join();
+        }
+    }
+}
+
 /// An in-flight task: real compute handle + scheduling metadata.
 pub struct InFlight {
     pub task_id: u64,
     pub kind: TaskKind,
     pub submitted_at: f64,
     pub completes_at: f64,
-    pub handle: JobHandle<Outcome>,
+    pub handle: TaskHandle,
 }
 
-/// Submit a task's real compute to the pool. The payload arrives behind an
-/// `Arc`: the pool job shares it with the scheduler's in-flight table, so a
-/// checkpoint can serialize exactly what was submitted.
+/// Submit a task's real compute. The payload arrives behind an `Arc`:
+/// the job (pool mode) or the handle (inline mode) shares it with the
+/// scheduler's in-flight table, so a checkpoint can serialize exactly
+/// what was submitted.
 #[allow(clippy::too_many_arguments)]
 pub fn submit(
     pool: &ThreadPool,
@@ -389,25 +465,15 @@ pub fn submit(
     now: f64,
     duration: f64,
     seed: u64,
+    mode: ExecMode,
 ) -> InFlight {
-    let eng = Arc::clone(engines);
-    let handle = pool.spawn(move || {
-        // substrate panics become Failed outcomes instead of poisoning the
-        // pool / hanging the campaign's join
-        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            execute(&payload, &eng, seed)
-        })) {
-            Ok(outcome) => outcome,
-            Err(p) => {
-                let reason = p
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| p.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "task panicked".into());
-                Outcome::Failed { kind, reason }
-            }
+    let handle = match mode {
+        ExecMode::Pool => {
+            let eng = Arc::clone(engines);
+            TaskHandle::Pool(pool.spawn(move || execute_caught(&payload, &eng, seed, kind)))
         }
-    });
+        ExecMode::Inline => TaskHandle::Inline { payload, kind, seed },
+    };
     InFlight {
         task_id,
         kind,
@@ -561,11 +627,67 @@ mod tests {
             0.0,
             5.0,
             9,
+            ExecMode::Pool,
         );
         assert_eq!(inf.completes_at, 5.0);
-        match inf.handle.join() {
+        match inf.handle.join(&eng) {
             Outcome::Generated { linkers, .. } => assert!(!linkers.is_empty()),
             _ => panic!("bad outcome"),
         }
+    }
+
+    /// Inline submission defers execution to `join` and produces the
+    /// same outcome as the pool path (outcomes are pure functions of
+    /// `(payload, seed)` — the exec mode cannot be observable).
+    #[test]
+    fn inline_submit_matches_pool_outcome() {
+        let pool = ThreadPool::new(2);
+        let eng = engines();
+        let payload = Arc::new(Payload::Generate { seed: 9, model: eng.generator.snapshot() });
+        let pooled = submit(
+            &pool,
+            &eng,
+            Arc::clone(&payload),
+            1,
+            TaskKind::GenerateLinkers,
+            0.0,
+            5.0,
+            9,
+            ExecMode::Pool,
+        );
+        let inline = submit(
+            &pool,
+            &eng,
+            payload,
+            1,
+            TaskKind::GenerateLinkers,
+            0.0,
+            5.0,
+            9,
+            ExecMode::Inline,
+        );
+        match (pooled.handle.join(&eng), inline.handle.join(&eng)) {
+            (
+                Outcome::Generated { linkers: a, .. },
+                Outcome::Generated { linkers: b, .. },
+            ) => {
+                assert_eq!(a.len(), b.len());
+                assert!(!a.is_empty());
+            }
+            _ => panic!("bad outcomes"),
+        }
+        // discarding an inline handle computes nothing and must not hang
+        let dropped = submit(
+            &pool,
+            &eng,
+            Arc::new(Payload::Process { linkers: Vec::new() }),
+            2,
+            TaskKind::ProcessLinkers,
+            0.0,
+            1.0,
+            2,
+            ExecMode::Inline,
+        );
+        dropped.handle.discard();
     }
 }

@@ -1,0 +1,174 @@
+//! Property test for the indexed lazy-deletion [`EventHeap`]: random
+//! interleavings of push/pop/remove/peek — with duplicate times and
+//! re-pushed ids — must behave exactly like the pre-overhaul
+//! rebuild-on-remove heap, which is reproduced below as the reference
+//! model. (util::proptest harness — the offline stand-in for `proptest`,
+//! DESIGN.md §3.)
+
+use std::collections::{BinaryHeap, HashMap};
+
+use mofa::prop_assert;
+use mofa::sim::{EventHeap, VirtualTime};
+use mofa::util::proptest::check;
+use mofa::util::rng::Rng;
+
+/// The pre-overhaul `EventHeap`, verbatim: a plain `BinaryHeap` of
+/// `(time, id)` that rebuilds itself in O(n) on every `remove`. It
+/// carried no slot payloads, so the driver tracks expected slots in a
+/// side map and checks them against what the real heap returns.
+struct RefHeap {
+    heap: BinaryHeap<std::cmp::Reverse<(VirtualTime, u64)>>,
+}
+
+impl RefHeap {
+    fn new() -> RefHeap {
+        RefHeap { heap: BinaryHeap::new() }
+    }
+
+    fn push(&mut self, at: VirtualTime, id: u64) {
+        self.heap.push(std::cmp::Reverse((at, id)));
+    }
+
+    fn pop(&mut self) -> Option<(VirtualTime, u64)> {
+        self.heap.pop().map(|std::cmp::Reverse(p)| p)
+    }
+
+    fn peek(&self) -> Option<VirtualTime> {
+        self.heap.peek().map(|std::cmp::Reverse((t, _))| *t)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<VirtualTime> {
+        let mut removed = None;
+        let mut kept = std::mem::take(&mut self.heap).into_vec();
+        kept.retain(|std::cmp::Reverse((t, eid))| {
+            if *eid == id && removed.is_none() {
+                removed = Some(*t);
+                false
+            } else {
+                true
+            }
+        });
+        self.heap = BinaryHeap::from(kept);
+        removed
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[test]
+fn prop_lazy_deletion_heap_matches_rebuild_on_remove_reference() {
+    check("event heap vs reference model", |rng, case| {
+        let mut dut = EventHeap::new();
+        let mut reference = RefHeap::new();
+        // driver state: ids currently scheduled (so pushes never violate
+        // the at-most-once invariant), ids retired by pop/remove (eligible
+        // for re-push, which the old heap allowed and the new one must
+        // serve through a tombstone), and each live id's slot payload
+        let mut live: Vec<u64> = Vec::new();
+        let mut retired: Vec<u64> = Vec::new();
+        let mut slots: HashMap<u64, u32> = HashMap::new();
+        let mut next_id: u64 = 0;
+        let mut pushes: u32 = 0;
+        let ops = 100 + 20 * (case % 7);
+        for step in 0..ops {
+            match rng.below(10) {
+                // push (weighted heaviest so the heap grows)
+                0..=4 => {
+                    // a small discrete time set forces plenty of
+                    // duplicate times, exercising the id tie-break
+                    let at = VirtualTime::new(rng.below(8) as f64 * 0.5);
+                    let id = if !retired.is_empty() && rng.chance(0.3) {
+                        retired.swap_remove(rng.below(retired.len()))
+                    } else {
+                        next_id += 1;
+                        next_id - 1
+                    };
+                    let slot = pushes;
+                    pushes += 1;
+                    dut.push(at, id, slot);
+                    reference.push(at, id);
+                    live.push(id);
+                    slots.insert(id, slot);
+                }
+                5 | 6 => {
+                    let got = dut.pop();
+                    let want = reference.pop();
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((t, id, slot)), Some((rt, rid))) => {
+                            prop_assert!(
+                                t == rt && id == rid,
+                                "step {step}: pop ({t:?}, {id}) vs reference ({rt:?}, {rid})"
+                            );
+                            prop_assert!(
+                                slots.get(&id) == Some(&slot),
+                                "step {step}: pop returned slot {slot} for id {id}"
+                            );
+                            live.retain(|&l| l != id);
+                            retired.push(id);
+                        }
+                        (g, w) => {
+                            return Err(format!("step {step}: pop {g:?} vs reference {w:?}"));
+                        }
+                    }
+                }
+                7 | 8 => {
+                    // mostly a live id; sometimes one that is absent
+                    // (retired or never scheduled) — both heaps must
+                    // report the miss identically
+                    let id = if !live.is_empty() && rng.chance(0.8) {
+                        live[rng.below(live.len())]
+                    } else {
+                        rng.below((next_id + 3) as usize) as u64
+                    };
+                    let got = dut.remove(id);
+                    let want = reference.remove(id);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((t, slot)), Some(rt)) => {
+                            prop_assert!(t == rt, "step {step}: remove({id}) time {t:?} vs {rt:?}");
+                            prop_assert!(
+                                slots.get(&id) == Some(&slot),
+                                "step {step}: remove({id}) returned slot {slot}"
+                            );
+                            live.retain(|&l| l != id);
+                            retired.push(id);
+                        }
+                        (g, w) => {
+                            return Err(format!("step {step}: remove({id}) {g:?} vs {w:?}"));
+                        }
+                    }
+                }
+                _ => {
+                    prop_assert!(
+                        dut.peek() == reference.peek(),
+                        "step {step}: peek {:?} vs reference {:?}",
+                        dut.peek(),
+                        reference.peek()
+                    );
+                }
+            }
+            prop_assert!(
+                dut.len() == reference.len(),
+                "step {step}: len {} vs reference {}",
+                dut.len(),
+                reference.len()
+            );
+            prop_assert!(dut.is_empty() == (reference.len() == 0), "step {step}: is_empty");
+        }
+        // drain both to the end: the full tail order must agree
+        loop {
+            match (dut.pop(), reference.pop()) {
+                (None, None) => break,
+                (Some((t, id, slot)), Some((rt, rid))) => {
+                    prop_assert!(t == rt && id == rid, "drain: ({t:?}, {id}) vs ({rt:?}, {rid})");
+                    prop_assert!(slots.get(&id) == Some(&slot), "drain: slot {slot} for id {id}");
+                }
+                (g, w) => return Err(format!("drain: {g:?} vs {w:?}")),
+            }
+        }
+        Ok(())
+    });
+}
