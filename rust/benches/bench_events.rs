@@ -22,11 +22,13 @@
 //! * **checkpoint** — a paused mid-campaign scheduler serialized to the
 //!   checkpoint JSON string: `checkpoint_bytes_per_sec`.
 //!
-//! `--check BASELINE.json` exits non-zero when `events_per_sec` regresses
-//! more than 20% below the baseline — unless the baseline is marked
-//! `"provisional": true` (hand-estimated, not machine-measured) or its
-//! `mode` differs from this run's, in which case the comparison is
-//! skipped and reported.
+//! `--check BASELINE.json` exits non-zero when any gated metric falls
+//! below its floor (see [`mofa::util::benchcheck::GATED_METRICS`]),
+//! naming each offender and its percent change — unless the baseline is
+//! marked `"provisional": true` (hand-estimated, not machine-measured)
+//! or its `mode` differs from this run's, in which case the comparison
+//! is skipped and reported. The skip/floor logic is unit-tested in
+//! `util::benchcheck`.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -34,6 +36,7 @@ use std::time::Instant;
 use mofa::genai::generator::SurrogateGenerator;
 use mofa::genai::trainer::SurrogateTrainer;
 use mofa::sim::{Completion, Policy, PreemptCandidate, Scheduler, SimOutcome, SimParams};
+use mofa::util::benchcheck::{check_regression, CheckOutcome, GATED_METRICS};
 use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
 use mofa::workflow::resources::{Cluster, WorkerKind};
@@ -274,22 +277,24 @@ fn main() {
         let text = std::fs::read_to_string(&path)
             .unwrap_or_else(|e| panic!("--check {path}: {e}"));
         let base = Json::parse(&text).unwrap_or_else(|e| panic!("--check {path}: {e}"));
-        let provisional = base.get("provisional").and_then(Json::as_bool).unwrap_or(false);
-        let base_mode = base.get("mode").and_then(Json::as_str).unwrap_or("");
-        if provisional {
-            eprintln!("--check: baseline is provisional (hand-estimated); comparison skipped");
-        } else if base_mode != mode {
-            eprintln!("--check: baseline mode '{base_mode}' != '{mode}'; comparison skipped");
-        } else {
-            let base_eps = base.req_f64("events_per_sec");
-            let floor = 0.8 * base_eps;
-            if events_per_sec < floor {
-                eprintln!(
-                    "REGRESSION: events_per_sec {events_per_sec:.0} < 80% of baseline {base_eps:.0}"
-                );
+        match check_regression(&report, &base, mode, GATED_METRICS) {
+            CheckOutcome::SkippedProvisional => {
+                eprintln!("--check: baseline is provisional (hand-estimated); comparison skipped");
+            }
+            CheckOutcome::SkippedModeMismatch { baseline, current } => {
+                eprintln!("--check: baseline mode '{baseline}' != '{current}'; comparison skipped");
+            }
+            CheckOutcome::Pass(deltas) => {
+                for d in &deltas {
+                    eprintln!("--check: ok {}", d.describe());
+                }
+            }
+            CheckOutcome::Regressed(deltas) => {
+                for d in deltas.iter().filter(|d| d.regressed) {
+                    eprintln!("REGRESSION: {}", d.describe());
+                }
                 std::process::exit(1);
             }
-            eprintln!("--check: ok ({events_per_sec:.0} vs baseline {base_eps:.0})");
         }
     }
 }

@@ -16,6 +16,7 @@
 //! index mapping every paper table/figure to a bench target.
 
 pub mod util {
+    pub mod benchcheck;
     pub mod json;
     pub mod linalg;
     pub mod proptest;

@@ -469,6 +469,48 @@ mod tests {
     }
 
     #[test]
+    fn deadline_first_equal_deadline_ties_favor_queue_holders() {
+        let mut q = AdmissionQueue::new(cfg(3, ShedPolicy::DeadlineFirst, None));
+        q.try_push("a", 0, Some(100.0), 1.0, "d100-first").unwrap();
+        q.try_push("a", 0, Some(100.0), 1.0, "d100-second").unwrap();
+        q.try_push("a", 0, Some(100.0), 1.0, "d100-third").unwrap();
+        // equal deadline scores exactly equal the worst queued score, and
+        // ties favor the holders: the newcomer gets the pinned rejection
+        let err = q.try_push("a", 0, Some(100.0), 1.0, "d100-newcomer").unwrap_err();
+        assert_eq!(err, RejectReason::QueueFull { bound: 3 });
+        // a strictly earlier deadline displaces the newest of the tied worst
+        let adm = q.try_push("a", 0, Some(99.0), 1.0, "d99").unwrap();
+        assert_eq!(adm.shed.map(|(_, it)| it), Some("d100-third"));
+        // pops: earliest deadline first, then FIFO within the tie
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "d99", .. })));
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "d100-first", .. })));
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "d100-second", .. })));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn quota_boundary_is_exact_and_checked_before_the_bound() {
+        // quota 0: the very first push is already over quota
+        let mut q = AdmissionQueue::new(cfg(4, ShedPolicy::RejectNewest, Some(0)));
+        let err = q.try_push("a", 0, None, 1.0, "r").unwrap_err();
+        assert_eq!(err, RejectReason::TenantOverQuota { tenant: "a".into(), quota: 0 });
+
+        // with exactly `quota` entries queued the next push trips the
+        // quota, not the bound, even when the queue is simultaneously
+        // full — quota is checked first
+        let mut q = AdmissionQueue::new(cfg(1, ShedPolicy::RejectNewest, Some(1)));
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        let err = q.try_push("a", 0, None, 1.0, "r1").unwrap_err();
+        assert_eq!(err, RejectReason::TenantOverQuota { tenant: "a".into(), quota: 1 });
+        // a different tenant under quota hits the bound instead
+        let err = q.try_push("b", 0, None, 1.0, "r2").unwrap_err();
+        assert_eq!(err, RejectReason::QueueFull { bound: 1 });
+        // popping frees exactly one quota slot at the boundary
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        q.try_push("a", 0, None, 1.0, "r3").unwrap();
+    }
+
+    #[test]
     fn tenant_quota_counts_queue_only_and_frees_on_exit() {
         let mut q = AdmissionQueue::new(cfg(8, ShedPolicy::RejectNewest, Some(2)));
         q.try_push("alice", 0, None, 1.0, 0u32).unwrap();

@@ -53,10 +53,13 @@ use crate::workflow::thinker::Thinker;
 /// v2: preemption — flights and pending entries carry priority classes
 /// and eviction counts, the scheduler serializes its
 /// [`crate::sim::scheduler::PreemptionStats`], and the request section
-/// carries `preemption` / `reweights`. v1 files (no preemption fields)
-/// fail loudly with [`CheckpointError::FormatMismatch`], never a silent
-/// default.
-pub const FORMAT_VERSION: u32 = 2;
+/// carries `preemption` / `reweights`. v3: fault injection — every
+/// cluster pool carries a `down` (decommissioned) slot count and the
+/// scheduler serializes its [`crate::sim::faults::FaultPlan`] with the
+/// next-fault cursor, so a checkpoint taken mid-fault-plan resumes the
+/// remaining kills/restores. Older files (v1/v2) fail loudly with
+/// [`CheckpointError::FormatMismatch`], never a silent default.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Why a checkpoint could not be restored.
 #[derive(Clone, Debug, PartialEq)]
@@ -332,6 +335,21 @@ pub fn run_request_to_barrier(
     pool: &Arc<ThreadPool>,
     barrier_vt: f64,
 ) -> CampaignRunOutcome {
+    run_request_configured(req, engines, pool, barrier_vt, |s| s)
+}
+
+/// [`run_request_to_barrier`] with a hook to configure the freshly built
+/// [`Scheduler`] before the event loop starts — the seam
+/// [`crate::sim::faults`] uses to attach a
+/// [`crate::sim::faults::FaultPlan`] (`Scheduler::with_faults`) without
+/// duplicating the per-policy drive logic.
+pub(crate) fn run_request_configured(
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+    barrier_vt: f64,
+    configure: impl FnOnce(Scheduler) -> Scheduler,
+) -> CampaignRunOutcome {
     let t_wall = Instant::now();
     let CampaignRequest { config, policy, tenant, class, deadline, preemption, reweights } = req;
     let cluster = Cluster::new(config.nodes);
@@ -341,7 +359,7 @@ pub fn run_request_to_barrier(
         Arc::clone(&engines),
         config.seed,
     );
-    let sched = Scheduler::new(
+    let sched = configure(Scheduler::new(
         cluster,
         Arc::clone(&engines),
         Arc::clone(pool),
@@ -350,7 +368,7 @@ pub fn run_request_to_barrier(
             horizon_s: config.duration_s,
             util_sample_dt: config.util_sample_dt,
         },
-    );
+    ));
     let ctx =
         RunCtx { config, policy, tenant, class, deadline, preemption, reweights, engines, t_wall };
     match policy {
@@ -534,9 +552,13 @@ mod tests {
         let parsed = CheckpointHeader::parse(&Json::parse(&h.to_json().to_string()).unwrap());
         assert_eq!(parsed.unwrap(), h);
 
-        // unknown fields fail loudly (never silently ignored)
-        let bad = r#"{"format":1,"kind":"campaign","created_vt":0,"extra":true}"#;
-        let err = CheckpointHeader::parse(&Json::parse(bad).unwrap()).unwrap_err();
+        // unknown fields in a *current-version* header fail loudly
+        // (never silently ignored) — the version check runs first, so
+        // this literal must carry FORMAT_VERSION to reach the field check
+        let bad = format!(
+            r#"{{"format":{FORMAT_VERSION},"kind":"campaign","created_vt":0,"extra":true}}"#
+        );
+        let err = CheckpointHeader::parse(&Json::parse(&bad).unwrap()).unwrap_err();
         assert!(matches!(err, CheckpointError::Malformed(ref m) if m.contains("extra")), "{err}");
     }
 
@@ -547,14 +569,19 @@ mod tests {
         assert_eq!(err, CheckpointError::FormatMismatch { found: 99, expected: FORMAT_VERSION });
         // a *future* format with unknown header fields still reports the
         // version mismatch, not the unknown field
-        let future = r#"{"format":3,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
+        let future = r#"{"format":4,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
         let err = CheckpointHeader::parse(&Json::parse(future).unwrap()).unwrap_err();
-        assert!(matches!(err, CheckpointError::FormatMismatch { found: 3, .. }), "{err}");
+        assert!(matches!(err, CheckpointError::FormatMismatch { found: 4, .. }), "{err}");
         // a v1 file (pre-preemption layout) is equally a version error —
         // its missing preemption fields must never default silently
         let v1 = r#"{"format":1,"kind":"campaign","created_vt":0}"#;
         let err = CheckpointHeader::parse(&Json::parse(v1).unwrap()).unwrap_err();
         assert_eq!(err, CheckpointError::FormatMismatch { found: 1, expected: FORMAT_VERSION });
+        // a v2 file (pre-fault-injection layout) likewise: its cluster
+        // pools carry no 'down' counts and its scheduler no fault plan
+        let v2 = r#"{"format":2,"kind":"campaign","created_vt":0}"#;
+        let err = CheckpointHeader::parse(&Json::parse(v2).unwrap()).unwrap_err();
+        assert_eq!(err, CheckpointError::FormatMismatch { found: 2, expected: FORMAT_VERSION });
     }
 
     #[test]

@@ -1,0 +1,375 @@
+//! Virtual-time **fault injection**: kill and restore cluster slots at
+//! scheduled points of a campaign's virtual timeline.
+//!
+//! The paper's 450-node campaigns run for hours on shared hardware —
+//! node loss and partial-allocation churn are the normal case, not the
+//! exception. A [`FaultPlan`] scripts that churn deterministically: each
+//! [`FaultEvent`] decommissions (kills) or recommissions (restores) a
+//! number of slots on one [`WorkerKind`] pool at a fixed virtual time.
+//! The plan rides *through the event loop*
+//! ([`crate::sim::scheduler::Scheduler::with_faults`]): a kill evicts
+//! oversubscribed in-flight tasks through the preemption path (compute
+//! discarded, payloads re-queued, busy integrals kept exact) and a
+//! restore triggers an immediate dispatch pass, so a faulted run is as
+//! bit-reproducible as a clean one — the plan is simply part of the
+//! campaign's deterministic input, and it is serialized into checkpoints
+//! (format v3) so a resumed run replays the remaining faults.
+//!
+//! Two runners wrap [`crate::sim::checkpoint`]:
+//!
+//! * [`run_request_with_faults`] — a [`CampaignRequest`] under a plan,
+//!   optionally pausing at a barrier like
+//!   [`crate::sim::checkpoint::run_request_to_barrier`];
+//! * [`run_request_with_faults_checkpointed`] — the **checkpoint-kill-
+//!   restore** mode: run to a barrier, serialize the checkpoint through
+//!   its string form (the process-death simulation), resume, and run to
+//!   completion. The report is byte-identical to the uninterrupted
+//!   faulted run (asserted in this module's tests and in the
+//!   conformance battery).
+
+use std::sync::Arc;
+
+use crate::sim::checkpoint::{
+    resume_request, run_request_configured, CampaignRunOutcome, CheckpointError,
+};
+use crate::sim::service::CampaignRequest;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::mofa::CampaignReport;
+use crate::workflow::resources::WorkerKind;
+use crate::workflow::taskserver::Engines;
+
+/// What a fault event does to its pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// decommission up to `slots` slots of `kind` (capped at the slots
+    /// still up); in-flight tasks on the lost slots are evicted
+    Kill {
+        /// which worker pool loses capacity
+        kind: WorkerKind,
+        /// how many slots to take down (`usize::MAX` = the whole pool)
+        slots: usize,
+    },
+    /// recommission up to `slots` previously killed slots of `kind`
+    /// (capped at the slots currently down)
+    Restore {
+        /// which worker pool regains capacity
+        kind: WorkerKind,
+        /// how many slots to bring back (`usize::MAX` = all of them)
+        slots: usize,
+    },
+}
+
+/// One scheduled fault: an action applied at a virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// virtual time the fault fires (completions at the same instant
+    /// settle first)
+    pub at_vt: f64,
+    /// what happens
+    pub action: FaultAction,
+}
+
+fn worker_kind_from_label(s: &str) -> Option<WorkerKind> {
+    WorkerKind::ALL.into_iter().find(|k| k.label() == s)
+}
+
+impl FaultEvent {
+    /// Serialize for checkpoints and scenario tables.
+    pub fn to_json(&self) -> Json {
+        let (tag, kind, slots) = match self.action {
+            FaultAction::Kill { kind, slots } => ("kill", kind, slots),
+            FaultAction::Restore { kind, slots } => ("restore", kind, slots),
+        };
+        Json::obj(vec![
+            ("at_vt", Json::Num(self.at_vt)),
+            ("action", Json::Str(tag.to_string())),
+            ("kind", Json::Str(kind.label().to_string())),
+            // u64 string path: `usize::MAX` must survive the f64 codec
+            ("slots", Json::u64_str(slots as u64)),
+        ])
+    }
+
+    /// Parse the representation written by [`FaultEvent::to_json`].
+    pub fn from_json(v: &Json) -> Result<FaultEvent, String> {
+        let at_vt = v
+            .req("at_vt")?
+            .as_f64()
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .ok_or("fault: 'at_vt' must be a finite non-negative number")?;
+        let kind_label = v.req("kind")?.as_str().ok_or("fault: 'kind' must be a string")?;
+        let kind = worker_kind_from_label(kind_label)
+            .ok_or_else(|| format!("fault: unknown worker kind '{kind_label}'"))?;
+        let slots =
+            v.req("slots")?.as_u64().ok_or("fault: bad 'slots'")? as usize;
+        let action = match v.req("action")?.as_str() {
+            Some("kill") => FaultAction::Kill { kind, slots },
+            Some("restore") => FaultAction::Restore { kind, slots },
+            Some(other) => return Err(format!("fault: unknown action '{other}'")),
+            None => return Err("fault: 'action' must be a string".to_string()),
+        };
+        Ok(FaultEvent { at_vt, action })
+    }
+}
+
+/// A deterministic fault schedule: events sorted by virtual time (stable
+/// — events at the same instant apply in insertion order). Build it with
+/// the fluent [`FaultPlan::kill_at`] / [`FaultPlan::restore_at`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — identical to not attaching one).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn schedule(mut self, ev: FaultEvent) -> FaultPlan {
+        assert!(
+            ev.at_vt.is_finite() && ev.at_vt >= 0.0,
+            "fault time must be finite and non-negative (got {})",
+            ev.at_vt
+        );
+        self.events.push(ev);
+        // stable: same-instant events keep their insertion order
+        self.events.sort_by(|a, b| a.at_vt.total_cmp(&b.at_vt));
+        self
+    }
+
+    /// Schedule a kill of up to `slots` slots of `kind` at `at_vt`
+    /// (`usize::MAX` = the whole pool).
+    pub fn kill_at(self, at_vt: f64, kind: WorkerKind, slots: usize) -> FaultPlan {
+        self.schedule(FaultEvent { at_vt, action: FaultAction::Kill { kind, slots } })
+    }
+
+    /// Schedule a restore of up to `slots` previously killed slots of
+    /// `kind` at `at_vt` (`usize::MAX` = all of them).
+    pub fn restore_at(self, at_vt: f64, kind: WorkerKind, slots: usize) -> FaultPlan {
+        self.schedule(FaultEvent { at_vt, action: FaultAction::Restore { kind, slots } })
+    }
+
+    /// The scheduled events, sorted by virtual time.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize the plan (a JSON array of events).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(FaultEvent::to_json).collect())
+    }
+
+    /// Parse the representation written by [`FaultPlan::to_json`].
+    pub fn from_json(v: &Json) -> Result<FaultPlan, String> {
+        let events = v
+            .as_arr()
+            .ok_or("fault plan: expected an array")?
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        if let Some(w) = events.windows(2).find(|w| w[0].at_vt > w[1].at_vt) {
+            return Err(format!(
+                "fault plan: events out of order ({} after {})",
+                w[1].at_vt, w[0].at_vt
+            ));
+        }
+        Ok(FaultPlan { events })
+    }
+}
+
+/// Run one campaign request under a fault plan, up to a virtual-time
+/// barrier (`f64::INFINITY` = to completion). Exactly
+/// [`crate::sim::checkpoint::run_request_to_barrier`] with the plan
+/// attached to the scheduler; a checkpoint taken mid-plan carries the
+/// remaining faults and resumes them bit-identically.
+pub fn run_request_with_faults(
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+    plan: FaultPlan,
+    barrier_vt: f64,
+) -> CampaignRunOutcome {
+    run_request_configured(req, engines, pool, barrier_vt, move |s| s.with_faults(plan))
+}
+
+/// The **checkpoint-kill-restore** mode: run the faulted campaign to
+/// `barrier_vt`, serialize the checkpoint through its string form (as a
+/// killed process would leave on disk), parse it back, and resume to
+/// completion. When the campaign drains before the barrier the report
+/// comes straight back. Either way the result is byte-identical (via
+/// [`crate::sim::checkpoint::canonical_report_json`]) to the
+/// uninterrupted faulted run — the conformance battery gates on this.
+///
+/// Note the engines are shared across the two legs: [`resume_request`]
+/// re-installs the checkpointed model weights before any event replays,
+/// exactly as a fresh process would.
+pub fn run_request_with_faults_checkpointed(
+    req: CampaignRequest,
+    engines: Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+    plan: FaultPlan,
+    barrier_vt: f64,
+) -> Result<CampaignReport, CheckpointError> {
+    match run_request_with_faults(req, Arc::clone(&engines), pool, plan, barrier_vt) {
+        CampaignRunOutcome::Done(report) => Ok(*report),
+        CampaignRunOutcome::Checkpointed(ckpt) => {
+            let text = ckpt.to_string();
+            let parsed = Json::parse(&text).map_err(CheckpointError::Malformed)?;
+            match resume_request(&parsed, engines, pool, f64::INFINITY)? {
+                CampaignRunOutcome::Done(report) => Ok(*report),
+                CampaignRunOutcome::Checkpointed(_) => {
+                    unreachable!("no event lies beyond an infinite barrier")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genai::generator::SurrogateGenerator;
+    use crate::genai::trainer::SurrogateTrainer;
+    use crate::sim::checkpoint::canonical_report_json;
+    use crate::workflow::mofa::CampaignConfig;
+    use crate::workflow::thinker::PolicyConfig;
+
+    fn engines() -> Arc<Engines> {
+        let mut e = Engines::scaled(
+            Arc::new(SurrogateGenerator::builtin(16)),
+            Arc::new(SurrogateTrainer),
+        );
+        e.md.steps = 60;
+        e.gcmc.equil_moves = 200;
+        e.gcmc.prod_moves = 400;
+        e.opt.max_steps = 10;
+        Arc::new(e)
+    }
+
+    fn quick_config() -> CampaignConfig {
+        CampaignConfig {
+            nodes: 8,
+            duration_s: 120.0,
+            seed: 11,
+            policy: PolicyConfig::default(),
+            threads: 0,
+            util_sample_dt: 30.0,
+        }
+    }
+
+    #[test]
+    fn plan_builders_sort_and_round_trip() {
+        // inserted out of order: the builder keeps the plan sorted
+        let plan = FaultPlan::new()
+            .restore_at(90.0, WorkerKind::Validate, usize::MAX)
+            .kill_at(30.0, WorkerKind::Validate, 4)
+            .kill_at(30.0, WorkerKind::Cpu, 16);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.events()[0].at_vt, 30.0);
+        // stable at ties: the validate kill was inserted first
+        assert_eq!(
+            plan.events()[0].action,
+            FaultAction::Kill { kind: WorkerKind::Validate, slots: 4 }
+        );
+        assert_eq!(
+            plan.events()[1].action,
+            FaultAction::Kill { kind: WorkerKind::Cpu, slots: 16 }
+        );
+        let text = plan.to_json().to_string();
+        let parsed = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, plan, "round-trip changed {text}");
+        // byte-stable serialization (usize::MAX survives the string path)
+        assert_eq!(parsed.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn plan_rejects_garbage() {
+        for bad in [
+            r#"[{"at_vt":-1,"action":"kill","kind":"cpu","slots":"1"}]"#,
+            r#"[{"at_vt":1,"action":"explode","kind":"cpu","slots":"1"}]"#,
+            r#"[{"at_vt":1,"action":"kill","kind":"quantum","slots":"1"}]"#,
+            r#"[{"at_vt":9,"action":"kill","kind":"cpu","slots":"1"},
+                {"at_vt":1,"action":"kill","kind":"cpu","slots":"1"}]"#,
+        ] {
+            assert!(
+                FaultPlan::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+
+    /// A mid-campaign generator blackout forces evictions through the
+    /// preemption path, the victims redispatch after the restore, and
+    /// the run is deterministic (two runs, byte-identical canonical
+    /// reports).
+    #[test]
+    fn kill_restore_forces_evictions_and_stays_deterministic() {
+        let plan = FaultPlan::new()
+            .kill_at(5.0, WorkerKind::Generator, usize::MAX)
+            .restore_at(60.0, WorkerKind::Generator, usize::MAX);
+        let pool = Arc::new(ThreadPool::new(2));
+        let run = || {
+            let req = CampaignRequest::new(quick_config());
+            run_request_with_faults(req, engines(), &pool, plan.clone(), f64::INFINITY)
+                .report()
+                .expect("no barrier: the run must finish")
+        };
+        let a = run();
+        assert!(
+            a.preemption.evictions >= 1,
+            "killing the generator pool mid-flight must evict"
+        );
+        assert_eq!(a.preemption.evictions, a.preemption.redispatches);
+        let b = run();
+        assert_eq!(
+            canonical_report_json(&a).to_string(),
+            canonical_report_json(&b).to_string(),
+            "faulted runs must replay byte-identically"
+        );
+    }
+
+    /// Checkpoint-kill-restore across a barrier *inside* the fault
+    /// window: the resumed run must replay the remaining fault plan and
+    /// land byte-identical to the uninterrupted faulted run.
+    #[test]
+    fn checkpoint_kill_restore_matches_uninterrupted() {
+        let plan = FaultPlan::new()
+            .kill_at(5.0, WorkerKind::Generator, usize::MAX)
+            .restore_at(60.0, WorkerKind::Generator, usize::MAX);
+        let pool = Arc::new(ThreadPool::new(2));
+        let straight = run_request_with_faults(
+            CampaignRequest::new(quick_config()),
+            engines(),
+            &pool,
+            plan.clone(),
+            f64::INFINITY,
+        )
+        .report()
+        .expect("no barrier: the run must finish");
+        // barrier at vt=20: after the kill, before the restore
+        let resumed = run_request_with_faults_checkpointed(
+            CampaignRequest::new(quick_config()),
+            engines(),
+            &pool,
+            plan,
+            20.0,
+        )
+        .expect("checkpoint round trip");
+        assert_eq!(
+            canonical_report_json(&straight).to_string(),
+            canonical_report_json(&resumed).to_string(),
+            "checkpoint-kill-restore must be invisible in the canonical report"
+        );
+    }
+}

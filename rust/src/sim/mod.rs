@@ -45,6 +45,19 @@
 //!   bit-identically in a fresh process ([`checkpoint::resume_request`],
 //!   [`service::CampaignService::resume_from`]). Versioned format; a
 //!   mismatch is a typed [`checkpoint::CheckpointError`].
+//! * [`workload`] — deterministic trace generation: seeded arrival
+//!   processes ([`workload::ArrivalProcess`]: Poisson, diurnal, bursty
+//!   on/off, heavy-tailed), Pareto size models, and multi-tenant mixes
+//!   emitting timed [`service::CampaignRequest`] traces that are pure
+//!   functions of a `u64` seed ([`workload::generate_trace`]), replayed
+//!   through the admission front door by [`service::replay_trace`].
+//! * [`faults`] — virtual-time **fault injection**: a sorted
+//!   [`faults::FaultPlan`] of kill/restore events that the scheduler
+//!   interleaves with its event loop, decommissioning pool slots (and
+//!   force-evicting the flights on them through the preemption path)
+//!   then recommissioning them later — plus a checkpoint-kill-restore
+//!   runner that proves a fault-injected campaign resumes
+//!   bit-identically ([`faults::run_request_with_faults_checkpointed`]).
 //!
 //! The policy/mechanics split is the contract: policies never touch the
 //! heap or slot counters, and the scheduler never inspects payloads
@@ -60,16 +73,22 @@
 
 pub mod admission;
 pub mod checkpoint;
+pub mod faults;
 pub mod policy;
 pub mod scheduler;
 pub mod service;
 pub mod sweep;
 pub mod vtime;
+pub mod workload;
 
 pub use admission::{RejectReason, RequestStatus, ShedPolicy};
 pub use checkpoint::{
     canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
     CheckpointError, CheckpointHeader, FORMAT_VERSION,
+};
+pub use faults::{
+    run_request_with_faults, run_request_with_faults_checkpointed, FaultAction, FaultEvent,
+    FaultPlan,
 };
 pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 pub use scheduler::{
@@ -77,8 +96,12 @@ pub use scheduler::{
     SimParams, MAX_PREEMPTIONS,
 };
 pub use service::{
-    run_campaign_request, CampaignRequest, CampaignService, PolicyKind, RequestOutcome,
-    ServiceConfig, ServiceStats, TenantStats, Ticket,
+    replay_trace, run_campaign_request, CampaignRequest, CampaignService, PolicyKind,
+    RequestOutcome, ServiceConfig, ServiceStats, TenantStats, Ticket, TraceStats,
 };
 pub use sweep::{default_drivers, run_sweep, run_sweep_with, sweep_nodes, SweepItem};
 pub use vtime::{EventHeap, VirtualTime};
+pub use workload::{
+    generate_trace, trace_json, ArrivalProcess, SizeModel, TenantProfile, TimedRequest,
+    WorkloadSpec,
+};

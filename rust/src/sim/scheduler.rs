@@ -36,6 +36,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::sim::faults::{FaultAction, FaultPlan};
 use crate::sim::vtime::{EventHeap, VirtualTime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -420,6 +421,13 @@ pub struct Scheduler {
     /// true once the t=0 fill ran (a restored scheduler skips it: the
     /// uninterrupted run would not fill again until the next event)
     primed: bool,
+    /// scheduled slot kill/restore events, sorted by virtual time; the
+    /// event loop interleaves them with completion events (see
+    /// [`Scheduler::with_faults`])
+    faults: FaultPlan,
+    /// cursor into `faults` — the next fault event not yet applied
+    /// (serialized in checkpoints so a resumed run replays the rest)
+    next_fault: usize,
 }
 
 impl Scheduler {
@@ -454,7 +462,23 @@ impl Scheduler {
             next_sample: 0.0,
             now: 0.0,
             primed: false,
+            faults: FaultPlan::default(),
+            next_fault: 0,
         }
+    }
+
+    /// Attach a [`FaultPlan`]: its kill/restore events fire **through the
+    /// event loop** at their scheduled virtual times, interleaved with
+    /// completion events (completions at the same instant settle first).
+    /// A kill decommissions slots and evicts the newest in-flight tasks
+    /// through the preemption path until the pool fits its remaining
+    /// capacity; a restore recommissions slots and immediately runs a
+    /// dispatch pass. The plan is part of the campaign's deterministic
+    /// input and is serialized in checkpoints. Call before the first
+    /// event is processed.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Scheduler {
+        self.faults = plan;
+        self
     }
 
     /// Choose how real compute executes (default [`ExecMode::Pool`]).
@@ -499,11 +523,35 @@ impl Scheduler {
             self.dispatch(policy, 0.0);
             self.primed = true;
         }
-        while let Some(next) = self.heap.peek() {
-            if next.seconds() > barrier_vt {
+        loop {
+            // the next thing that happens is the earlier of the next
+            // completion event and the next scheduled fault; completions
+            // settle first at an exact tie, so a kill at t never races
+            // the batch of completions at t
+            let next_event = self.heap.peek();
+            let next_fault_at =
+                self.faults.events().get(self.next_fault).map(|f| f.at_vt);
+            let (t, fault_due) = match (next_event, next_fault_at) {
+                (None, None) => break,
+                (Some(ev), None) => (ev.seconds(), false),
+                (None, Some(f)) => (f, true),
+                (Some(ev), Some(f)) => {
+                    if f < ev.seconds() {
+                        (f, true)
+                    } else {
+                        (ev.seconds(), false)
+                    }
+                }
+            };
+            if t > barrier_vt {
                 return BarrierOutcome::Paused(Box::new(self));
             }
-            let now = next.seconds();
+            if fault_due {
+                self.apply_fault(policy, t);
+                continue;
+            }
+            let next = next_event.expect("non-fault step has an event");
+            let now = t;
             self.now = now;
             // settle every completion at exactly this instant
             while self.heap.peek() == Some(next) {
@@ -726,6 +774,57 @@ impl Scheduler {
         self.pending[worker.index()].push(flight.class as f64, entry);
     }
 
+    /// Apply the next scheduled fault event at virtual time `t`. A
+    /// **kill** decommissions slots from the pool and — while the pool is
+    /// oversubscribed (`busy > active`) — evicts the newest in-flight
+    /// task through the standard preemption path ([`Scheduler::evict`]):
+    /// compute discarded, busy-integral kept, payload re-queued at its
+    /// class for redispatch once capacity returns. The
+    /// [`MAX_PREEMPTIONS`] thrash cap deliberately does not shield a
+    /// flight from a fault — its slot is gone either way. A **restore**
+    /// recommissions slots. Both end with a dispatch pass so pending
+    /// work (fault victims included) seizes whatever capacity remains.
+    fn apply_fault<P: Policy>(&mut self, policy: &mut P, t: f64) {
+        let ev = self.faults.events()[self.next_fault];
+        self.next_fault += 1;
+        let at = t.max(self.now);
+        self.now = at;
+        // sample pending points with the pre-fault busy fractions
+        self.sample_utilization(at);
+        match ev.action {
+            FaultAction::Kill { kind, slots } => {
+                self.cluster.decommission(kind, slots, at);
+                while self.cluster.busy_slots(kind) > self.cluster.active_slots(kind) {
+                    let victim = self
+                        .newest_flight(kind)
+                        .expect("oversubscribed pool has an in-flight task");
+                    self.evict(policy, victim, at);
+                }
+            }
+            FaultAction::Restore { kind, slots } => {
+                self.cluster.recommission(kind, slots, at);
+            }
+        }
+        self.dispatch(policy, at);
+    }
+
+    /// The most recently dispatched in-flight task on a pool — the fault
+    /// eviction victim (newest-first mirrors the LIFO bias of the MOF
+    /// queue and loses the least accumulated work). Pure function of the
+    /// event sequence: task ids are monotone.
+    fn newest_flight(&self, kind: WorkerKind) -> Option<u64> {
+        if let Some(idx) = self.preempt_index.as_ref() {
+            // sorted ascending by task id
+            idx[kind.index()].last().map(|&(id, _)| id)
+        } else {
+            self.flights
+                .iter()
+                .filter(|(_, f)| f.inf.kind.worker() == kind)
+                .map(|(_, f)| f.inf.task_id)
+                .max()
+        }
+    }
+
     /// Acquire a slot, sample the task's virtual duration from its
     /// per-task stream, start (or defer) the real computation, and
     /// schedule the completion event. A redispatched preemption victim
@@ -791,9 +890,10 @@ impl Scheduler {
             let mut row = [0.0f64; 5];
             for (i, k) in WorkerKind::ALL.iter().enumerate() {
                 let total = self.cluster.total_slots(*k).max(1);
-                row[i] =
-                    (self.cluster.total_slots(*k) - self.cluster.free_slots(*k)) as f64
-                        / total as f64;
+                // busy slots, not total − free: a decommissioned slot is
+                // neither free nor doing work, so it must not inflate
+                // the busy fraction (identical in fault-free runs)
+                row[i] = self.cluster.busy_slots(*k) as f64 / total as f64;
             }
             self.util_series.push((self.next_sample, row));
             self.next_sample += self.params.util_sample_dt;
@@ -871,6 +971,13 @@ impl Scheduler {
                 Json::Arr(self.rng.state().iter().map(|&w| Json::u64_str(w)).collect()),
             ),
             ("preempt", self.preempt_stats.to_json()),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("next", Json::Num(self.next_fault as f64)),
+                    ("plan", self.faults.to_json()),
+                ]),
+            ),
             ("cluster", self.cluster.to_json()),
             ("events", Json::Arr(events)),
             ("flights", Json::Arr(flights_json)),
@@ -939,6 +1046,17 @@ impl Scheduler {
             sched.util_series.push((t, cells));
         }
         sched.preempt_stats = PreemptionStats::from_json(v.req("preempt")?)?;
+        let faults = v.req("faults")?;
+        sched.faults = FaultPlan::from_json(faults.req("plan")?)?;
+        sched.next_fault =
+            faults.req("next")?.as_usize().ok_or("scheduler: bad fault cursor")?;
+        if sched.next_fault > sched.faults.len() {
+            return Err(format!(
+                "scheduler: fault cursor {} past plan of {} events",
+                sched.next_fault,
+                sched.faults.len()
+            ));
+        }
         let pending = v.req("pending")?;
         for k in WorkerKind::ALL {
             let payloads = &mut sched.payloads;
@@ -1377,5 +1495,174 @@ mod tests {
         // pre-acquired to shape the pool), nothing double-occupied
         assert_eq!(out.cluster.free_slots(WorkerKind::Cpu), 1);
         assert_eq!(out.tasks_submitted, 4);
+    }
+
+    /// Property (reference-model style, like `tests/event_heap.rs`):
+    /// under randomized interleavings of submit (intern + insert) and
+    /// complete/preempt (remove + release), the `FlightSlab` and the
+    /// `PayloadArena` (a) hand out exactly the slot the LIFO free-list
+    /// model predicts, (b) return the flight/payload stored in that slot
+    /// — never a stale read from an earlier occupant — and (c) keep
+    /// free lists that mirror the model exactly, so a slot can never be
+    /// double-freed.
+    #[test]
+    fn property_slab_and_arena_slot_reuse() {
+        crate::util::proptest::check("flight-slab-slot-reuse", |rng, _| {
+            let pool = Arc::new(ThreadPool::new(1));
+            let eng = engines();
+            let mut slab = FlightSlab::default();
+            let mut arena = PayloadArena::default();
+            // reference model: live (slot, payload slot, task id, marker)
+            // rows plus the LIFO free lists both slabs must mirror
+            let mut live: Vec<(u32, u32, u64, u64)> = Vec::new();
+            let mut free_slab: Vec<u32> = Vec::new();
+            let mut free_arena: Vec<u32> = Vec::new();
+            let (mut slab_len, mut arena_len) = (0u32, 0u32);
+            let mut next_task: u64 = 0;
+            let mut marker: u64 = 1000;
+            for _ in 0..rng.below(120) + 1 {
+                if live.is_empty() || rng.chance(0.55) {
+                    // submit: intern a marker payload, insert its flight
+                    let v = marker;
+                    marker += 1;
+                    let tid = next_task;
+                    next_task += 1;
+                    let payload =
+                        Arc::new(Payload::Retrain { examples: Vec::new(), version: v });
+                    let pid = arena.intern(Arc::clone(&payload));
+                    let want_pid = free_arena.pop().unwrap_or_else(|| {
+                        arena_len += 1;
+                        arena_len - 1
+                    });
+                    crate::prop_assert!(
+                        pid.0 == want_pid,
+                        "arena slot {} != model-predicted {want_pid}",
+                        pid.0
+                    );
+                    let inf = submit(
+                        &pool,
+                        &eng,
+                        payload,
+                        tid,
+                        TaskKind::Retrain,
+                        0.0,
+                        1.0,
+                        tid,
+                        ExecMode::Inline,
+                    );
+                    let slot = slab.insert(Flight {
+                        inf,
+                        origin_t: 0.0,
+                        payload: pid,
+                        class: 0,
+                        preemptions: 0,
+                    });
+                    let want_slot = free_slab.pop().unwrap_or_else(|| {
+                        slab_len += 1;
+                        slab_len - 1
+                    });
+                    crate::prop_assert!(
+                        slot == want_slot,
+                        "slab slot {slot} != model-predicted {want_slot}"
+                    );
+                    live.push((slot, pid.0, tid, v));
+                } else {
+                    // complete or preempt: both paths remove the flight
+                    // and release the payload — pick any live row
+                    let i = rng.below(live.len());
+                    let (slot, pslot, tid, v) = live.swap_remove(i);
+                    let f = slab.remove(slot);
+                    crate::prop_assert!(
+                        f.inf.task_id == tid,
+                        "stale flight in slot {slot}: task {} != {tid}",
+                        f.inf.task_id
+                    );
+                    crate::prop_assert!(
+                        f.payload.0 == pslot,
+                        "flight in slot {slot} points at payload {} != {pslot}",
+                        f.payload.0
+                    );
+                    let p = arena.release(f.payload);
+                    match &*p {
+                        Payload::Retrain { version, .. } => crate::prop_assert!(
+                            *version == v,
+                            "stale payload in arena slot {pslot}: marker {version} != {v}"
+                        ),
+                        _ => crate::prop_assert!(false, "wrong payload variant"),
+                    }
+                    f.inf.handle.discard();
+                    free_slab.push(slot);
+                    free_arena.push(pslot);
+                }
+                // the real free lists must equal the model's — no entry
+                // missing, duplicated (double-free), or out of LIFO order
+                crate::prop_assert!(
+                    slab.free == free_slab,
+                    "slab free list {:?} != model {:?}",
+                    slab.free,
+                    free_slab
+                );
+                crate::prop_assert!(
+                    arena.free == free_arena,
+                    "arena free list {:?} != model {:?}",
+                    arena.free,
+                    free_arena
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Fault injection end-to-end on the scheduler: killing the whole
+    /// generator pool mid-flight evicts the running task through the
+    /// preemption path (compute discarded, payload re-queued), the event
+    /// loop keeps running across an *empty* heap to reach the restore
+    /// fault, and the victim redispatches and completes once capacity
+    /// returns. Two runs are bit-identical.
+    #[test]
+    fn fault_kill_restore_evicts_and_redispatches() {
+        let run = || {
+            let eng = engines();
+            let model = eng.generator.snapshot();
+            let plan = FaultPlan::default()
+                .kill_at(5.0, WorkerKind::Generator, usize::MAX)
+                .restore_at(15.0, WorkerKind::Generator, usize::MAX);
+            let sched = Scheduler::new(
+                Cluster::new(8),
+                eng,
+                Arc::new(ThreadPool::new(2)),
+                SimParams { seed: 3, horizon_s: 30.0, util_sample_dt: 10.0 },
+            )
+            .with_faults(plan);
+            let mut policy =
+                GenerateOnly { submitted: 0, handled: 0, seed: Rng::new(3), model };
+            let out = sched.run(&mut policy);
+            (out, policy.submitted, policy.handled)
+        };
+        let (out, submitted, handled) = run();
+        assert!(out.preemption.evictions >= 1, "the kill must evict the in-flight task");
+        assert_eq!(
+            out.preemption.evictions, out.preemption.redispatches,
+            "every fault victim redispatches once capacity returns"
+        );
+        assert!(out.preemption.wasted_busy_s > 0.0);
+        // no payload is lost: every fill request completes exactly once
+        assert_eq!(submitted, handled);
+        // the pool is whole again after the restore
+        assert_eq!(out.cluster.down_slots(WorkerKind::Generator), 0);
+        assert_eq!(
+            out.cluster.free_slots(WorkerKind::Generator),
+            out.cluster.total_slots(WorkerKind::Generator)
+        );
+        // determinism: the faulted run replays bit-identically
+        let (out2, submitted2, handled2) = run();
+        assert_eq!((submitted, handled), (submitted2, handled2));
+        assert_eq!(out.final_vtime.to_bits(), out2.final_vtime.to_bits());
+        assert_eq!(out.preemption, out2.preemption);
+        assert_eq!(out.util_series.len(), out2.util_series.len());
+        for (a, b) in out.util_series.iter().zip(&out2.util_series) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1, b.1);
+        }
     }
 }

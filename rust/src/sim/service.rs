@@ -1218,6 +1218,160 @@ pub fn run_campaign_request(
     report
 }
 
+/// Aggregate outcome of a virtual-time trace replay
+/// ([`replay_trace`]): admission counts, per-request virtual
+/// turnarounds, and campaign-level counters summed across every
+/// completed campaign. All times are virtual seconds — wallclock never
+/// enters, so the whole struct is a pure function of the trace, the
+/// [`ServiceConfig`], and the `run` closure.
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    /// requests offered to admission (every trace entry)
+    pub submitted: usize,
+    /// requests rejected at the front door (see [`TraceStats::rejected_by`])
+    pub rejected: usize,
+    /// requests admitted but later shed — displaced by a higher-score
+    /// arrival under the [`ShedPolicy`], or popped past their deadline
+    pub shed: usize,
+    /// campaigns that ran to completion
+    pub completed: usize,
+    /// per-completion virtual turnaround (finish − arrival), in
+    /// completion order
+    pub turnarounds: Vec<f64>,
+    /// flights evicted by preemption or faults, summed over campaigns
+    pub evictions: u64,
+    /// evicted flights that re-dispatched, summed over campaigns
+    pub redispatches: u64,
+    /// busy-seconds thrown away by evictions, summed over campaigns
+    pub wasted_busy_s: f64,
+    /// total busy slot-seconds across all campaigns (utilization ×
+    /// slots × campaign span, summed per worker kind)
+    pub busy_integral_s: f64,
+    /// tasks completed across all campaigns
+    pub tasks_done: u64,
+    /// virtual time of the last event (final completion, or last
+    /// arrival if nothing ever ran)
+    pub final_vt: f64,
+    /// rejection counts keyed by reason label (`"queue-full"`,
+    /// `"tenant-over-quota"`)
+    pub rejected_by: BTreeMap<&'static str, usize>,
+}
+
+/// Replay a generated trace through the admission front door in pure
+/// virtual time, running each admitted campaign via `run`.
+///
+/// This is the conformance battery's workhorse: it reproduces the
+/// *service* semantics ([`AdmissionQueue`] with the config's bound,
+/// shed policy, and tenant quota; at most `max_in_flight` campaigns
+/// concurrently) without threads or wallclock. Arrivals fire at their
+/// trace offsets; a campaign admitted at virtual time `t` occupies a
+/// server until `t + final_vtime`; completions at the same instant as
+/// an arrival settle first (matching the scheduler's
+/// completions-before-dispatch rule). Deadlines are interpreted as
+/// slack: a request carrying `deadline = Some(s)` is pushed with
+/// absolute deadline `clock + s` against the admission queue's virtual
+/// service clock, mirroring what a live front door would compute at
+/// submit time.
+///
+/// Determinism: with a deterministic `run` closure (e.g.
+/// [`crate::sim::faults::run_request_with_faults`] over surrogate
+/// engines), the returned [`TraceStats`] is bit-identical across
+/// replays of the same trace.
+pub fn replay_trace(
+    trace: &[crate::sim::workload::TimedRequest],
+    cfg: &ServiceConfig,
+    mut run: impl FnMut(&CampaignRequest) -> CampaignReport,
+) -> TraceStats {
+    assert!(cfg.max_in_flight >= 1, "replay needs at least one server");
+    let mut adm: AdmissionQueue<usize> = AdmissionQueue::new(AdmissionConfig {
+        bound: cfg.queue_bound,
+        shed: cfg.shed,
+        tenant_quota: cfg.tenant_quota,
+    });
+    let mut stats = TraceStats::default();
+    // (finish_vt, arrival_vt) per running campaign; arrival kept for
+    // the turnaround record at completion time
+    let mut servers: Vec<(f64, f64)> = Vec::with_capacity(cfg.max_in_flight);
+    let mut now = 0.0f64;
+    let mut next_arrival = 0usize;
+    loop {
+        // earliest completion, ties broken by server index so the
+        // replay order is a pure function of the inputs
+        let finish = servers
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then(a.0.cmp(&b.0)))
+            .map(|(i, &(f, _))| (i, f));
+        let arrival = trace.get(next_arrival).map(|tr| tr.at_vt);
+        let complete = match (finish, arrival) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            // completions settle before arrivals at exact ties
+            (Some((_, f)), Some(at)) => f <= at,
+        };
+        if complete {
+            let (i, f) = finish.expect("completion branch has a server");
+            let (_, arrived) = servers.remove(i);
+            now = f;
+            stats.completed += 1;
+            stats.turnarounds.push(f - arrived);
+        } else {
+            let tr = &trace[next_arrival];
+            next_arrival += 1;
+            now = tr.at_vt;
+            stats.submitted += 1;
+            let req = &tr.request;
+            let deadline = req.deadline.map(|slack| adm.clock() + slack);
+            match adm.try_push(&req.tenant, req.class, deadline, req.config.duration_s, next_arrival - 1)
+            {
+                Ok(admitted) => {
+                    if admitted.shed.is_some() {
+                        stats.shed += 1;
+                    }
+                }
+                Err(reason) => {
+                    stats.rejected += 1;
+                    let label = match reason {
+                        RejectReason::QueueFull { .. } => "queue-full",
+                        RejectReason::TenantOverQuota { .. } => "tenant-over-quota",
+                    };
+                    *stats.rejected_by.entry(label).or_insert(0) += 1;
+                }
+            }
+        }
+        // fill free servers from the admission queue in policy order
+        while servers.len() < cfg.max_in_flight {
+            match adm.pop() {
+                None => break,
+                Some(Popped::Shed { .. }) => stats.shed += 1,
+                Some(Popped::Run { item, .. }) => {
+                    let tr = &trace[item];
+                    let report = run(&tr.request);
+                    stats.evictions += report.preemption.evictions;
+                    stats.redispatches += report.preemption.redispatches;
+                    stats.wasted_busy_s += report.preemption.wasted_busy_s;
+                    let lay = crate::workflow::resources::layout(tr.request.config.nodes);
+                    for (k, u) in &report.utilization_avg {
+                        let slots = match k {
+                            crate::workflow::resources::WorkerKind::Generator => lay.generator_slots,
+                            crate::workflow::resources::WorkerKind::Validate => lay.validate_slots,
+                            crate::workflow::resources::WorkerKind::Cpu => lay.cpu_slots,
+                            crate::workflow::resources::WorkerKind::Optimize => lay.optimize_slots,
+                            crate::workflow::resources::WorkerKind::Trainer => lay.trainer_slots,
+                        };
+                        stats.busy_integral_s += u * slots as f64 * report.final_vtime;
+                    }
+                    stats.tasks_done += report.tasks_done.values().map(|&n| n as u64).sum::<u64>();
+                    servers.push((now + report.final_vtime, tr.at_vt));
+                }
+            }
+        }
+    }
+    stats.final_vt = now;
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1397,5 +1551,85 @@ mod tests {
                 "must reject reweights for {bad}"
             );
         }
+    }
+
+    #[test]
+    fn paused_dispatcher_still_admits_into_the_bounded_queue() {
+        // pause_dispatch freezes the driver side only: try_submit keeps
+        // admitting into the bounded queue until the bound trips, and
+        // the overflow rejection pins the exact RejectReason.
+        let svc = CampaignService::new(
+            Arc::new(ThreadPool::new(1)),
+            ServiceConfig::new(1).queue_bound(2),
+        );
+        svc.pause_dispatch();
+        let engines = crate::workflow::launch::build_quick_surrogate_engines();
+        let quick = CampaignConfig { nodes: 8, duration_s: 60.0, ..CampaignConfig::default() };
+        let t1 = svc
+            .try_submit(CampaignRequest::new(quick.clone()), Arc::clone(&engines))
+            .expect("paused service must still admit");
+        let t2 = svc
+            .try_submit(CampaignRequest::new(quick.clone()), Arc::clone(&engines))
+            .expect("second request fits the bound");
+        assert_eq!(t1.poll(), RequestStatus::Queued, "paused: nothing may dispatch");
+        assert_eq!(t2.poll(), RequestStatus::Queued);
+        match svc.try_submit(CampaignRequest::new(quick), engines) {
+            Err(RejectReason::QueueFull { bound }) => assert_eq!(bound, 2),
+            Err(other) => panic!("expected QueueFull {{ bound: 2 }}, got {other:?}"),
+            Ok(_) => panic!("expected QueueFull {{ bound: 2 }}, got an admission"),
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.queue_depth, 2);
+        assert_eq!(stats.rejected, 1);
+        // Drop on a paused, shutting-down service sheds the queue so
+        // the queued tickets settle — must not hang
+    }
+
+    #[test]
+    fn replay_trace_counts_and_stays_deterministic() {
+        // four arrivals into a 1-server, bound-2 front door: the first
+        // dispatches immediately, two queue, the fourth overflows. The
+        // whole replay is virtual-time-pure, so a second pass over the
+        // same trace must reproduce every float bit-for-bit.
+        let quick = CampaignConfig {
+            nodes: 8,
+            duration_s: 120.0,
+            seed: 17,
+            util_sample_dt: 30.0,
+            ..CampaignConfig::default()
+        };
+        let trace: Vec<crate::sim::workload::TimedRequest> = [0.0, 1.0, 2.0, 3.0]
+            .iter()
+            .map(|&at| crate::sim::workload::TimedRequest {
+                at_vt: at,
+                request: CampaignRequest::new(quick.clone()),
+            })
+            .collect();
+        let cfg = ServiceConfig::new(1).queue_bound(2);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut replay = || {
+            let engines = crate::workflow::launch::build_quick_surrogate_engines();
+            replay_trace(&trace, &cfg, |req| {
+                run_campaign_request(req.clone(), Arc::clone(&engines), &pool)
+            })
+        };
+        let a = replay();
+        assert_eq!(a.submitted, 4);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.rejected_by.get("queue-full"), Some(&1));
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.shed, 0);
+        assert_eq!(a.turnarounds.len(), 3);
+        assert!(a.turnarounds.iter().all(|&t| t >= quick.duration_s - 3.0), "{:?}", a.turnarounds);
+        // queued requests wait for the server, so turnarounds grow
+        assert!(a.turnarounds[2] > a.turnarounds[0]);
+        assert!(a.busy_integral_s > 0.0);
+        assert!(a.tasks_done > 0);
+        assert!(a.final_vt >= a.turnarounds[2]);
+        let b = replay();
+        assert_eq!(a.turnarounds, b.turnarounds, "replay must be bit-identical");
+        assert_eq!(a.busy_integral_s.to_bits(), b.busy_integral_s.to_bits());
+        assert_eq!(a.final_vt.to_bits(), b.final_vt.to_bits());
+        assert_eq!(a.tasks_done, b.tasks_done);
     }
 }

@@ -298,6 +298,47 @@ mod tests {
         assert_eq!(got, expect);
     }
 
+    /// Drive the compaction threshold (`heap > 64 && heap > 4 * live`)
+    /// to the exact removal that trips it, with an id re-pushed inside
+    /// the tombstone window, and check the surviving pop order and the
+    /// internal heap/live sizes on both sides of the rebuild.
+    #[test]
+    fn compaction_trips_at_the_exact_threshold_and_keeps_repushed_ids() {
+        let mut h = EventHeap::new();
+        for id in 0..65u64 {
+            h.push(VirtualTime::new((id % 7) as f64 + 1.0), id, id as u32 + 100);
+        }
+        assert_eq!(h.heap.len(), 65);
+        assert_eq!(h.live.len(), 65);
+        // one tombstone (65 > 64 but not > 4·64), then re-push the same
+        // id earlier with a new slot while its stale node is still queued
+        assert_eq!(h.remove(3), Some((VirtualTime::new(4.0), 103)));
+        h.push(VirtualTime::new(0.25), 3, 999);
+        assert_eq!(h.heap.len(), 66);
+        assert_eq!(h.live.len(), 65);
+        // removals 4..=52 walk live down from 65; the threshold
+        // 66 > 4·live first holds at live == 16, i.e. at remove(52)
+        for id in 4..=51u64 {
+            assert!(h.remove(id).is_some());
+        }
+        assert_eq!(h.live.len(), 17);
+        assert_eq!(h.heap.len(), 66, "one removal short of the threshold: no compaction yet");
+        assert!(h.remove(52).is_some());
+        assert_eq!(h.live.len(), 16);
+        assert_eq!(h.heap.len(), 16, "compaction must drop every tombstone");
+        // the live index survives the rebuild intact: a post-compaction
+        // remove still hands back the original (time, slot)
+        assert_eq!(h.remove(60), Some((VirtualTime::new(5.0), 160)));
+        assert_eq!(h.len(), 15);
+        // the re-pushed id 3 pops first (t=0.25, new slot), the stale
+        // node never resurfaces, and the rest pop in (time, id) order
+        assert_eq!(h.pop(), Some((VirtualTime::new(0.25), 3, 999)));
+        let got: Vec<u64> = std::iter::from_fn(|| h.pop()).map(|(_, id, _)| id).collect();
+        assert_eq!(got, vec![0, 56, 63, 1, 57, 64, 2, 58, 59, 53, 54, 61, 55, 62]);
+        assert!(h.is_empty());
+        assert_eq!(h.heap.len(), 0, "no tombstones may outlive the live set");
+    }
+
     #[test]
     fn heap_order_survives_many_random_times() {
         let mut rng = crate::util::rng::Rng::new(77);

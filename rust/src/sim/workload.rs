@@ -1,0 +1,452 @@
+//! Trace-driven **workload generation**: deterministic, seedable arrival
+//! processes that emit timed [`CampaignRequest`] traces.
+//!
+//! Every bench used to drive the scheduler with hand-rolled arrival
+//! patterns; this module replaces them with parameterized processes —
+//! Poisson, diurnal sinusoid, bursty on-off, heavy-tailed inter-arrivals
+//! — heavy-tailed Pareto campaign sizes, and multi-tenant mixes with
+//! per-tenant class/policy/deadline profiles. A trace is a **pure
+//! function of a `u64` seed**: [`generate_trace`] derives independent
+//! RNG streams for arrivals, sizes, and the tenant mix, so the same
+//! `(spec, seed)` always yields the byte-identical `Vec<TimedRequest>`,
+//! and each request's own campaign seed derives from the trace seed and
+//! its index. The conformance battery
+//! (`rust/tests/conformance/`) pins scorecards of these traces replayed
+//! through [`crate::sim::service`] admission and
+//! [`crate::sim::faults`] fault plans.
+
+use crate::sim::service::{CampaignRequest, PolicyKind};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workflow::mofa::CampaignConfig;
+use crate::workflow::thinker::PolicyConfig;
+
+/// Mixer for per-request campaign seeds (the same constant the scheduler
+/// uses for per-task seeds): request `i` of trace seed `s` runs campaign
+/// seed `s ⊕ (i+1)·MIX`, so traces with different seeds share no streams.
+const REQUEST_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Arrival process for campaign requests over virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// memoryless arrivals at a constant rate (requests per 1000 s)
+    Poisson {
+        /// mean arrival rate, requests per 1000 virtual seconds
+        rate_per_ks: f64,
+    },
+    /// sinusoidally modulated Poisson — the day/night cycle of a
+    /// user-facing service (rate = base·(1 + amplitude·sin(2πt/period)))
+    Diurnal {
+        /// mean arrival rate, requests per 1000 virtual seconds
+        base_per_ks: f64,
+        /// modulation depth in `[0, 1]` (clamped)
+        amplitude: f64,
+        /// cycle length, virtual seconds
+        period_s: f64,
+    },
+    /// on-off bursts: exponential on/off phases, Poisson arrivals at
+    /// `rate_per_ks` while on, silence while off (self-similar-ish load)
+    Bursty {
+        /// mean burst length, virtual seconds
+        on_s: f64,
+        /// mean gap between bursts, virtual seconds
+        off_s: f64,
+        /// arrival rate inside a burst, requests per 1000 virtual seconds
+        rate_per_ks: f64,
+    },
+    /// heavy-tailed (Pareto) inter-arrival gaps: most requests arrive in
+    /// clumps, rare gaps are enormous
+    HeavyTail {
+        /// mean inter-arrival gap, virtual seconds
+        mean_gap_s: f64,
+        /// Pareto shape (floored at 1.05; smaller = heavier tail)
+        alpha: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Stable label for scenario names and scorecards.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::HeavyTail { .. } => "heavy-tail",
+        }
+    }
+}
+
+/// An exponential gap at `rate` events/second (inverse-CDF sampling;
+/// `1 - u` keeps the argument of `ln` strictly positive).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate.max(1e-12)
+}
+
+/// A Pareto sample with scale `xm` and shape `alpha` (≥ 1.05).
+fn pareto(rng: &mut Rng, xm: f64, alpha: f64) -> f64 {
+    let a = alpha.max(1.05);
+    xm / (1.0 - rng.f64()).powf(1.0 / a)
+}
+
+/// Stateful arrival-time iterator for one process and one RNG stream.
+struct Arrivals {
+    process: ArrivalProcess,
+    t: f64,
+    /// Bursty: end of the current on-phase (arrivals past it first burn
+    /// the off-phase and roll into the next burst)
+    burst_end: f64,
+}
+
+impl Arrivals {
+    fn new(process: ArrivalProcess) -> Arrivals {
+        Arrivals { process, t: 0.0, burst_end: 0.0 }
+    }
+
+    /// Advance to and return the next arrival's virtual time.
+    fn next(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate_per_ks } => {
+                self.t += exp_gap(rng, rate_per_ks / 1000.0);
+            }
+            ArrivalProcess::Diurnal { base_per_ks, amplitude, period_s } => {
+                // thinning: draw candidates at the peak rate, accept with
+                // probability rate(t)/peak — exact for a sinusoid
+                let amp = amplitude.clamp(0.0, 1.0);
+                let base = base_per_ks / 1000.0;
+                let peak = base * (1.0 + amp);
+                loop {
+                    self.t += exp_gap(rng, peak);
+                    let phase = (self.t / period_s.max(1e-9)) * std::f64::consts::TAU;
+                    let rate = base * (1.0 + amp * phase.sin());
+                    if rng.f64() * peak <= rate {
+                        break;
+                    }
+                }
+            }
+            ArrivalProcess::Bursty { on_s, off_s, rate_per_ks } => loop {
+                if self.t >= self.burst_end {
+                    // burn the off-phase, open the next burst
+                    self.t += exp_gap(rng, 1.0 / off_s.max(1e-9));
+                    self.burst_end = self.t + exp_gap(rng, 1.0 / on_s.max(1e-9));
+                }
+                self.t += exp_gap(rng, rate_per_ks / 1000.0);
+                if self.t < self.burst_end {
+                    break;
+                }
+            },
+            ArrivalProcess::HeavyTail { mean_gap_s, alpha } => {
+                let a = alpha.max(1.05);
+                // Pareto with mean = mean_gap_s: xm = mean·(α−1)/α; cap
+                // a single gap at 1000× the mean so one astronomical draw
+                // cannot push the whole trace past any usable horizon
+                let xm = mean_gap_s * (a - 1.0) / a;
+                self.t += pareto(rng, xm, a).min(mean_gap_s * 1e3);
+            }
+        }
+        self.t
+    }
+}
+
+/// Campaign size (virtual duration) model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SizeModel {
+    /// every campaign runs the same virtual duration
+    Fixed {
+        /// campaign duration, virtual seconds
+        duration_s: f64,
+    },
+    /// heavy-tailed (bounded Pareto) durations: many short campaigns,
+    /// few huge ones — the paper's task-size skew at campaign scale
+    Pareto {
+        /// minimum duration (the Pareto scale), virtual seconds
+        min_s: f64,
+        /// Pareto shape (floored at 1.05)
+        alpha: f64,
+        /// hard cap, virtual seconds
+        cap_s: f64,
+    },
+}
+
+impl SizeModel {
+    /// Draw one campaign duration from the model's stream.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            SizeModel::Fixed { duration_s } => duration_s,
+            SizeModel::Pareto { min_s, alpha, cap_s } => pareto(rng, min_s, alpha).min(cap_s),
+        }
+    }
+}
+
+/// Per-tenant request profile in a multi-tenant mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantProfile {
+    /// tenant name stamped on its requests
+    pub name: String,
+    /// share of the mix (requests are drawn tenant-weighted)
+    pub weight: u32,
+    /// priority class for the tenant's requests (lower = more important)
+    pub class: u8,
+    /// scheduling policy for the tenant's campaigns
+    pub policy: PolicyKind,
+    /// deadline slack: a request arriving at virtual service-time `c`
+    /// gets deadline `c + slack` (None = no deadline)
+    pub deadline_slack_s: Option<f64>,
+    /// whether the tenant's campaigns run preemption-enabled
+    pub preemption: bool,
+}
+
+impl TenantProfile {
+    /// A minimal profile: equal weight, class 0, base policy, no
+    /// deadline, no preemption.
+    pub fn new(name: impl Into<String>) -> TenantProfile {
+        TenantProfile {
+            name: name.into(),
+            weight: 1,
+            class: 0,
+            policy: PolicyKind::Mofa,
+            deadline_slack_s: None,
+            preemption: false,
+        }
+    }
+}
+
+/// Everything that defines a workload trace except the seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    /// when requests arrive
+    pub arrivals: ArrivalProcess,
+    /// how long each campaign runs
+    pub sizes: SizeModel,
+    /// who submits (must be non-empty, weights must not all be zero)
+    pub tenants: Vec<TenantProfile>,
+    /// number of requests in the trace
+    pub count: usize,
+    /// cluster size for every generated campaign
+    pub nodes: usize,
+    /// utilization sampling cadence for every generated campaign
+    pub util_sample_dt: f64,
+}
+
+/// One trace entry: a request and its virtual arrival offset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedRequest {
+    /// virtual arrival time (non-decreasing along the trace)
+    pub at_vt: f64,
+    /// the request to submit at that time
+    pub request: CampaignRequest,
+}
+
+/// Generate a workload trace: a **pure function of `(spec, seed)`**.
+/// Arrivals, sizes, and the tenant mix draw from three independent
+/// derived streams, so changing one model never perturbs the others'
+/// draws; request `i` carries campaign seed
+/// `seed ⊕ (i+1)·REQUEST_SEED_MIX`.
+pub fn generate_trace(spec: &WorkloadSpec, seed: u64) -> Vec<TimedRequest> {
+    assert!(!spec.tenants.is_empty(), "workload needs at least one tenant");
+    let weight_total: u64 = spec.tenants.iter().map(|t| t.weight as u64).sum();
+    assert!(weight_total > 0, "tenant weights must not all be zero");
+    let base = Rng::new(seed);
+    let mut arrival_rng = base.derive(1);
+    let mut size_rng = base.derive(2);
+    let mut mix_rng = base.derive(3);
+    let mut arrivals = Arrivals::new(spec.arrivals);
+    let mut out = Vec::with_capacity(spec.count);
+    for i in 0..spec.count {
+        let at_vt = arrivals.next(&mut arrival_rng);
+        let duration_s = spec.sizes.sample(&mut size_rng);
+        // weighted tenant pick from the mix stream
+        let mut ticket = (mix_rng.next_u64() % weight_total) as i64;
+        let tenant = spec
+            .tenants
+            .iter()
+            .find(|t| {
+                ticket -= t.weight as i64;
+                ticket < 0
+            })
+            .expect("weight_total > 0 guarantees a pick");
+        let config = CampaignConfig {
+            nodes: spec.nodes,
+            duration_s,
+            seed: seed ^ (i as u64 + 1).wrapping_mul(REQUEST_SEED_MIX),
+            policy: PolicyConfig::default(),
+            threads: 0,
+            util_sample_dt: spec.util_sample_dt,
+        };
+        let mut request = CampaignRequest::new(config)
+            .policy(tenant.policy)
+            .tenant(tenant.name.clone())
+            .class(tenant.class)
+            .preemption(tenant.preemption);
+        if let Some(slack) = tenant.deadline_slack_s {
+            request = request.deadline(slack);
+        }
+        out.push(TimedRequest { at_vt, request });
+    }
+    out
+}
+
+/// Serialize a trace (arrival times + full requests) — scenario tables
+/// and debugging aids; byte-stable like every `util/json` rendering.
+pub fn trace_json(trace: &[TimedRequest]) -> Json {
+    Json::Arr(
+        trace
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("at_vt", Json::Num(t.at_vt)),
+                    ("request", t.request.to_json()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(arrivals: ArrivalProcess) -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals,
+            sizes: SizeModel::Fixed { duration_s: 60.0 },
+            tenants: vec![TenantProfile::new("solo")],
+            count: 200,
+            nodes: 8,
+            util_sample_dt: 30.0,
+        }
+    }
+
+    const ALL_ARRIVALS: [ArrivalProcess; 4] = [
+        ArrivalProcess::Poisson { rate_per_ks: 50.0 },
+        ArrivalProcess::Diurnal { base_per_ks: 50.0, amplitude: 0.8, period_s: 2000.0 },
+        ArrivalProcess::Bursty { on_s: 200.0, off_s: 400.0, rate_per_ks: 200.0 },
+        ArrivalProcess::HeavyTail { mean_gap_s: 20.0, alpha: 1.5 },
+    ];
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        for arrivals in ALL_ARRIVALS {
+            let s = spec(arrivals);
+            let a = trace_json(&generate_trace(&s, 42)).to_string();
+            let b = trace_json(&generate_trace(&s, 42)).to_string();
+            assert_eq!(a, b, "{} trace must be a pure function of the seed", arrivals.label());
+            let c = trace_json(&generate_trace(&s, 43)).to_string();
+            assert_ne!(a, c, "{} trace must depend on the seed", arrivals.label());
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_finite_and_positive() {
+        for arrivals in ALL_ARRIVALS {
+            let trace = generate_trace(&spec(arrivals), 7);
+            assert_eq!(trace.len(), 200);
+            let mut last = 0.0;
+            for t in &trace {
+                assert!(
+                    t.at_vt.is_finite() && t.at_vt > 0.0 && t.at_vt >= last,
+                    "{}: bad arrival {} after {last}",
+                    arrivals.label(),
+                    t.at_vt
+                );
+                last = t.at_vt;
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_close_to_nominal() {
+        // 50/ks → mean gap 20 s; 1000 draws keep the sample mean within
+        // a loose factor-of-two band (this is a sanity check, not a
+        // statistical test — the trace is deterministic given the seed)
+        let mut s = spec(ArrivalProcess::Poisson { rate_per_ks: 50.0 });
+        s.count = 1000;
+        let trace = generate_trace(&s, 5);
+        let mean = trace.last().unwrap().at_vt / trace.len() as f64;
+        assert!((10.0..40.0).contains(&mean), "poisson mean gap {mean}");
+    }
+
+    #[test]
+    fn heavy_tail_max_gap_dwarfs_the_median() {
+        let mut s = spec(ArrivalProcess::HeavyTail { mean_gap_s: 20.0, alpha: 1.1 });
+        s.count = 1000;
+        let trace = generate_trace(&s, 5);
+        let mut gaps: Vec<f64> = trace.windows(2).map(|w| w[1].at_vt - w[0].at_vt).collect();
+        gaps.sort_by(f64::total_cmp);
+        let median = gaps[gaps.len() / 2];
+        let max = *gaps.last().unwrap();
+        assert!(
+            max > 20.0 * median,
+            "α=1.1 Pareto gaps should be heavy-tailed (median {median}, max {max})"
+        );
+        // ...but the cap holds: no gap exceeds 1000× the mean
+        assert!(max <= 20.0 * 1e3 + 1e-9, "gap cap violated: {max}");
+    }
+
+    #[test]
+    fn tenant_mix_honors_profiles() {
+        let tenants = vec![
+            TenantProfile {
+                name: "batch".into(),
+                weight: 3,
+                class: 2,
+                policy: PolicyKind::Mofa,
+                deadline_slack_s: None,
+                preemption: false,
+            },
+            TenantProfile {
+                name: "interactive".into(),
+                weight: 1,
+                class: 0,
+                policy: PolicyKind::Mofa,
+                deadline_slack_s: Some(500.0),
+                preemption: true,
+            },
+        ];
+        let s = WorkloadSpec { tenants, ..spec(ALL_ARRIVALS[0]) };
+        let trace = generate_trace(&s, 9);
+        let mut seen_batch = 0usize;
+        let mut seen_inter = 0usize;
+        for t in &trace {
+            match t.request.tenant.as_str() {
+                "batch" => {
+                    seen_batch += 1;
+                    assert_eq!(t.request.class, 2);
+                    assert_eq!(t.request.deadline, None);
+                    assert!(!t.request.preemption);
+                }
+                "interactive" => {
+                    seen_inter += 1;
+                    assert_eq!(t.request.class, 0);
+                    assert_eq!(t.request.deadline, Some(500.0));
+                    assert!(t.request.preemption);
+                }
+                other => panic!("unknown tenant {other}"),
+            }
+        }
+        // 3:1 weights: both appear, batch dominates
+        assert!(seen_batch > seen_inter && seen_inter > 0, "{seen_batch}:{seen_inter}");
+        // per-request campaign seeds are all distinct
+        let mut seeds: Vec<u64> = trace.iter().map(|t| t.request.config.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), trace.len());
+    }
+
+    #[test]
+    fn pareto_sizes_stay_in_bounds() {
+        let s = WorkloadSpec {
+            sizes: SizeModel::Pareto { min_s: 30.0, alpha: 1.2, cap_s: 3600.0 },
+            ..spec(ALL_ARRIVALS[0])
+        };
+        let trace = generate_trace(&s, 3);
+        let mut spread = false;
+        for t in &trace {
+            let d = t.request.config.duration_s;
+            assert!((30.0..=3600.0).contains(&d), "duration {d} out of bounds");
+            if t.request.config.duration_s > 60.0 {
+                spread = true;
+            }
+        }
+        assert!(spread, "a heavy-tailed size model should spread past 2× min");
+    }
+}

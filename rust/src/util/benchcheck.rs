@@ -1,0 +1,208 @@
+//! Bench **regression gate**: compare a freshly measured bench report
+//! against a committed baseline, metric by metric, and say exactly
+//! *which* metric regressed and by how much — not a bare pass/fail bit.
+//!
+//! `benches/bench_events.rs --check BASELINE.json` is the caller; the
+//! logic lives here so the skip rules (provisional baselines are
+//! hand-estimated and never gate; quick-mode runs must not be held to
+//! full-mode numbers) and the per-metric floors are unit-testable
+//! without running a bench.
+
+use crate::util::json::Json;
+
+/// The metrics `bench_events` gates, with the floor fraction each is
+/// held to: a run passes while `current >= floor * baseline`. The
+/// noisier counters (preemption storm, checkpoint serialization) get a
+/// looser floor than the main event-loop throughput.
+pub const GATED_METRICS: &[(&str, f64)] = &[
+    ("events_per_sec", 0.8),
+    ("tasks_per_sec", 0.8),
+    ("preempt_cancels_per_sec", 0.7),
+    ("checkpoint_bytes_per_sec", 0.7),
+];
+
+/// One gated metric compared against the baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricDelta {
+    /// report key, e.g. `"events_per_sec"`
+    pub name: String,
+    /// this run's measurement
+    pub current: f64,
+    /// the committed baseline's measurement
+    pub baseline: f64,
+    /// signed change vs baseline in percent (negative = slower)
+    pub change_pct: f64,
+    /// floor fraction this metric is held to (0.8 ⇒ −20% allowed)
+    pub floor: f64,
+    /// true when `current < floor * baseline`
+    pub regressed: bool,
+}
+
+impl MetricDelta {
+    /// One human line for the bench log:
+    /// `events_per_sec 1200 vs baseline 2000 (-40.0%, floor -20%)`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {:.0} vs baseline {:.0} ({:+.1}%, floor -{:.0}%)",
+            self.name,
+            self.current,
+            self.baseline,
+            self.change_pct,
+            (1.0 - self.floor) * 100.0
+        )
+    }
+}
+
+/// Verdict of one `--check` comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckOutcome {
+    /// the baseline is marked `"provisional": true` (hand-estimated,
+    /// never measured on this machine) — nothing is gated
+    SkippedProvisional,
+    /// the baseline was measured under a different bench mode
+    /// (quick vs full) — numbers are not comparable
+    SkippedModeMismatch {
+        /// the baseline report's mode
+        baseline: String,
+        /// this run's mode
+        current: String,
+    },
+    /// every gated metric held its floor
+    Pass(Vec<MetricDelta>),
+    /// at least one metric fell below its floor (the vector still
+    /// carries *all* compared metrics; filter on
+    /// [`MetricDelta::regressed`] for the offenders)
+    Regressed(Vec<MetricDelta>),
+}
+
+/// Compare `current` against `baseline` over `metrics`
+/// (`(report key, floor fraction)` pairs, e.g. [`GATED_METRICS`]).
+/// `mode` is this run's bench mode (`"quick"` / `"full"`).
+///
+/// Skip rules come first: a provisional baseline skips everything, a
+/// mode mismatch skips everything. Metrics absent from either report
+/// (or with a non-positive baseline) are left out of the deltas rather
+/// than failing the check, so a newly added metric doesn't break
+/// `--check` against a pre-existing baseline.
+pub fn check_regression(
+    current: &Json,
+    baseline: &Json,
+    mode: &str,
+    metrics: &[(&str, f64)],
+) -> CheckOutcome {
+    if baseline.get("provisional").and_then(Json::as_bool).unwrap_or(false) {
+        return CheckOutcome::SkippedProvisional;
+    }
+    let base_mode = baseline.get("mode").and_then(Json::as_str).unwrap_or("");
+    if base_mode != mode {
+        return CheckOutcome::SkippedModeMismatch {
+            baseline: base_mode.to_string(),
+            current: mode.to_string(),
+        };
+    }
+    let mut deltas = Vec::new();
+    for &(name, floor) in metrics {
+        let (Some(cur), Some(base)) = (
+            current.get(name).and_then(Json::as_f64),
+            baseline.get(name).and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        if base <= 0.0 {
+            continue;
+        }
+        deltas.push(MetricDelta {
+            name: name.to_string(),
+            current: cur,
+            baseline: base,
+            change_pct: (cur / base - 1.0) * 100.0,
+            floor,
+            regressed: cur < floor * base,
+        });
+    }
+    if deltas.iter().any(|d| d.regressed) {
+        CheckOutcome::Regressed(deltas)
+    } else {
+        CheckOutcome::Pass(deltas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(mode: &str, provisional: bool, eps: f64, cancels: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("bench_sim/v1".into())),
+            ("mode", Json::Str(mode.into())),
+            ("provisional", Json::Bool(provisional)),
+            ("events_per_sec", Json::Num(eps)),
+            ("preempt_cancels_per_sec", Json::Num(cancels)),
+        ])
+    }
+
+    #[test]
+    fn provisional_baseline_skips_before_anything_else() {
+        // even a catastrophic regression is ignored against an estimate
+        let cur = report("full", false, 1.0, 1.0);
+        let base = report("full", true, 1e9, 1e9);
+        assert_eq!(
+            check_regression(&cur, &base, "full", GATED_METRICS),
+            CheckOutcome::SkippedProvisional
+        );
+    }
+
+    #[test]
+    fn mode_mismatch_skips_with_both_modes_reported() {
+        let cur = report("quick", false, 1.0, 1.0);
+        let base = report("full", false, 1e9, 1e9);
+        assert_eq!(
+            check_regression(&cur, &base, "quick", GATED_METRICS),
+            CheckOutcome::SkippedModeMismatch {
+                baseline: "full".into(),
+                current: "quick".into()
+            }
+        );
+    }
+
+    #[test]
+    fn pass_reports_signed_deltas_for_compared_metrics_only() {
+        // 10% faster events, exactly at the cancels floor (0.7 is not
+        // below it); tasks/ckpt metrics are absent → left out entirely
+        let cur = report("full", false, 1100.0, 700.0);
+        let base = report("full", false, 1000.0, 1000.0);
+        match check_regression(&cur, &base, "full", GATED_METRICS) {
+            CheckOutcome::Pass(deltas) => {
+                assert_eq!(deltas.len(), 2, "absent metrics must not be gated");
+                assert_eq!(deltas[0].name, "events_per_sec");
+                assert!((deltas[0].change_pct - 10.0).abs() < 1e-9);
+                assert!(!deltas[0].regressed);
+                assert_eq!(deltas[1].name, "preempt_cancels_per_sec");
+                assert!((deltas[1].change_pct + 30.0).abs() < 1e-9);
+                assert!(!deltas[1].regressed, "exactly at the floor still passes");
+            }
+            other => panic!("expected Pass, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn regression_names_the_offending_metric_and_percent() {
+        // events hold, cancels fall to 60% of baseline (floor is 70%)
+        let cur = report("full", false, 1000.0, 600.0);
+        let base = report("full", false, 1000.0, 1000.0);
+        match check_regression(&cur, &base, "full", GATED_METRICS) {
+            CheckOutcome::Regressed(deltas) => {
+                let bad: Vec<&MetricDelta> = deltas.iter().filter(|d| d.regressed).collect();
+                assert_eq!(bad.len(), 1);
+                assert_eq!(bad[0].name, "preempt_cancels_per_sec");
+                assert!((bad[0].change_pct + 40.0).abs() < 1e-9);
+                let line = bad[0].describe();
+                assert!(line.contains("preempt_cancels_per_sec"), "{line}");
+                assert!(line.contains("-40.0%"), "{line}");
+                // the healthy metric still shows up for context
+                assert!(deltas.iter().any(|d| d.name == "events_per_sec" && !d.regressed));
+            }
+            other => panic!("expected Regressed, got {other:?}"),
+        }
+    }
+}

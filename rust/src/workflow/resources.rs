@@ -62,6 +62,10 @@ impl WorkerKind {
 struct Pool {
     total: usize,
     busy: usize,
+    /// slots withheld by a fault injector: never offered to `acquire`
+    /// until recommissioned; `total` stays the layout value so that
+    /// utilization denominators are stable across faults
+    down: usize,
     /// Σ busy · dt (virtual seconds × slots)
     busy_integral: f64,
     last_t: f64,
@@ -70,7 +74,7 @@ struct Pool {
 
 impl Pool {
     fn new(total: usize) -> Self {
-        Pool { total, busy: 0, busy_integral: 0.0, last_t: 0.0, tasks_done: 0 }
+        Pool { total, busy: 0, down: 0, busy_integral: 0.0, last_t: 0.0, tasks_done: 0 }
     }
 
     fn advance(&mut self, t: f64) {
@@ -157,7 +161,7 @@ impl Cluster {
     pub fn acquire(&mut self, kind: WorkerKind, t: f64) -> bool {
         let p = &mut self.pools[kind.index()];
         p.advance(t);
-        if p.busy < p.total {
+        if p.busy < p.total - p.down {
             p.busy += 1;
             true
         } else {
@@ -188,7 +192,7 @@ impl Cluster {
 
     pub fn free_slots(&self, kind: WorkerKind) -> usize {
         let p = &self.pools[kind.index()];
-        p.total - p.busy
+        (p.total - p.down).saturating_sub(p.busy)
     }
 
     pub fn total_slots(&self, kind: WorkerKind) -> usize {
@@ -197,6 +201,50 @@ impl Cluster {
 
     pub fn tasks_done(&self, kind: WorkerKind) -> u64 {
         self.pools[kind.index()].tasks_done
+    }
+
+    /// Withdraw up to `count` slots of `kind` from service at virtual
+    /// time `t` (fault injection: a node loss). Returns how many slots
+    /// were actually decommissioned (capped by the slots still up). The
+    /// pool's `total` is untouched — utilization denominators stay the
+    /// layout values — but `acquire`/`free_slots` stop offering the
+    /// withheld capacity. Busy slots are *not* force-freed here: the
+    /// caller (the scheduler's fault hook) evicts in-flight work until
+    /// `busy_slots ≤ active_slots` via the preemption path, which keeps
+    /// the busy-time integral exact.
+    pub fn decommission(&mut self, kind: WorkerKind, count: usize, t: f64) -> usize {
+        let p = &mut self.pools[kind.index()];
+        p.advance(t);
+        let cut = count.min(p.total - p.down);
+        p.down += cut;
+        cut
+    }
+
+    /// Return up to `count` previously decommissioned slots of `kind` to
+    /// service at virtual time `t`. Returns how many came back (capped
+    /// by the slots currently down).
+    pub fn recommission(&mut self, kind: WorkerKind, count: usize, t: f64) -> usize {
+        let p = &mut self.pools[kind.index()];
+        p.advance(t);
+        let back = count.min(p.down);
+        p.down -= back;
+        back
+    }
+
+    /// Slots of `kind` currently in service (`total − down`).
+    pub fn active_slots(&self, kind: WorkerKind) -> usize {
+        let p = &self.pools[kind.index()];
+        p.total - p.down
+    }
+
+    /// Slots of `kind` currently occupied by in-flight tasks.
+    pub fn busy_slots(&self, kind: WorkerKind) -> usize {
+        self.pools[kind.index()].busy
+    }
+
+    /// Slots of `kind` currently decommissioned by fault injection.
+    pub fn down_slots(&self, kind: WorkerKind) -> usize {
+        self.pools[kind.index()].down
     }
 
     /// Serialize every pool's slot totals, live busy counts, and
@@ -219,6 +267,7 @@ impl Cluster {
                                 Json::obj(vec![
                                     ("total", Json::Num(p.total as f64)),
                                     ("busy", Json::Num(p.busy as f64)),
+                                    ("down", Json::Num(p.down as f64)),
                                     ("busy_integral", Json::Num(p.busy_integral)),
                                     ("last_t", Json::Num(p.last_t)),
                                     ("tasks_done", Json::u64_str(p.tasks_done)),
@@ -251,8 +300,16 @@ impl Cluster {
             if busy > total {
                 return Err(format!("cluster: {} busy {busy} > total {total}", kind.label()));
             }
+            let down = p.req("down")?.as_usize().ok_or("cluster: bad down")?;
+            if busy + down > total {
+                return Err(format!(
+                    "cluster: {} busy {busy} + down {down} > total {total}",
+                    kind.label()
+                ));
+            }
             let pool = &mut cluster.pools[kind.index()];
             pool.busy = busy;
+            pool.down = down;
             pool.busy_integral =
                 p.req("busy_integral")?.as_f64().ok_or("cluster: bad busy_integral")?;
             pool.last_t = p.req("last_t")?.as_f64().ok_or("cluster: bad last_t")?;
@@ -355,6 +412,61 @@ mod tests {
     #[should_panic]
     fn too_few_nodes_panics() {
         layout(2);
+    }
+
+    #[test]
+    fn decommission_withholds_capacity_and_caps() {
+        let mut c = Cluster::new(32);
+        let total = c.total_slots(WorkerKind::Validate);
+        // ask for more than exists: capped at the pool size
+        assert_eq!(c.decommission(WorkerKind::Validate, total + 5, 1.0), total);
+        assert_eq!(c.active_slots(WorkerKind::Validate), 0);
+        assert_eq!(c.free_slots(WorkerKind::Validate), 0);
+        assert!(!c.acquire(WorkerKind::Validate, 1.0), "down pool must refuse acquire");
+        // total (the layout denominator) is untouched
+        assert_eq!(c.total_slots(WorkerKind::Validate), total);
+        // restore half, then all — recommission caps at what is down
+        assert_eq!(c.recommission(WorkerKind::Validate, total / 2, 2.0), total / 2);
+        assert_eq!(c.free_slots(WorkerKind::Validate), total / 2);
+        assert_eq!(c.recommission(WorkerKind::Validate, total, 3.0), total - total / 2);
+        assert_eq!(c.down_slots(WorkerKind::Validate), 0);
+        assert!(c.acquire(WorkerKind::Validate, 3.0));
+    }
+
+    #[test]
+    fn decommission_keeps_busy_integral_exact() {
+        let mut c = Cluster::new(8);
+        assert!(c.acquire(WorkerKind::Trainer, 0.0));
+        // the fault hits at t=10 while the slot is busy: decommission does
+        // not force-free it (the scheduler evicts separately), so the pool
+        // is oversubscribed (busy > active) until the eviction lands
+        assert_eq!(c.decommission(WorkerKind::Trainer, 1, 10.0), 1);
+        assert_eq!(c.busy_slots(WorkerKind::Trainer), 1);
+        assert_eq!(c.active_slots(WorkerKind::Trainer), 0);
+        c.release_preempted(WorkerKind::Trainer, 10.0);
+        assert_eq!(c.busy_slots(WorkerKind::Trainer), 0);
+        // back at t=15, busy again 15..20
+        assert_eq!(c.recommission(WorkerKind::Trainer, 1, 15.0), 1);
+        assert!(c.acquire(WorkerKind::Trainer, 15.0));
+        c.release(WorkerKind::Trainer, 20.0);
+        // busy 0-10 (evicted) + 15-20 (completed) = 15 of 20 seconds
+        let u = c.utilization(WorkerKind::Trainer, 20.0);
+        assert!((u - 0.75).abs() < 1e-9, "utilization {u}");
+        assert_eq!(c.tasks_done(WorkerKind::Trainer), 1);
+    }
+
+    #[test]
+    fn down_slots_round_trip_json() {
+        let mut c = Cluster::new(8);
+        assert!(c.acquire(WorkerKind::Cpu, 0.0));
+        c.decommission(WorkerKind::Cpu, 3, 5.0);
+        let j = c.to_json();
+        let r = Cluster::from_json(&j).expect("round trip");
+        assert_eq!(r.down_slots(WorkerKind::Cpu), 3);
+        assert_eq!(r.busy_slots(WorkerKind::Cpu), 1);
+        assert_eq!(r.free_slots(WorkerKind::Cpu), c.free_slots(WorkerKind::Cpu));
+        // byte-stable serialization
+        assert_eq!(j.to_string(), r.to_json().to_string());
     }
 
     /// Property: under random acquire/release sequences, a pool never

@@ -1,0 +1,339 @@
+//! Golden **conformance battery** for the workload → admission →
+//! scheduler → fault-injection stack (`cargo test --test conformance`).
+//!
+//! A scenario table crosses every arrival process
+//! ([`ArrivalProcess`]: poisson, diurnal, bursty, heavy-tail) with
+//! three service policies (mofa/RejectNewest, priority +
+//! preemption/DropLowestPriority, fair-share + deadlines/DeadlineFirst)
+//! and a fault axis (none vs a kill/restore churn plan), plus two
+//! checkpoint-kill-restore scenarios whose campaigns are serialized
+//! through a checkpoint string mid-fault-window and must resume
+//! byte-identically. Every scenario:
+//!
+//! 1. generates its trace from a pinned seed ([`generate_trace`] is a
+//!    pure function of `(spec, seed)`),
+//! 2. replays it through [`replay_trace`] in pure virtual time,
+//! 3. reduces the [`TraceStats`] to a compact scorecard JSON,
+//! 4. runs the whole pipeline **twice** (fresh engines, fresh trace)
+//!    and fails unless the two scorecards are byte-identical,
+//! 5. byte-compares the scorecard against
+//!    `tests/conformance/golden/<name>.json` when that golden exists.
+//!
+//! Golden policy (see `golden/README.md`): bless with
+//! `MOFA_BLESS=1 cargo test --test conformance`. A missing golden is
+//! reported and the fresh scorecard is written next to the goldens'
+//! directory (or `$MOFA_CONFORMANCE_OUT`) so CI can upload it — it is
+//! **not** a failure, because scorecards cross machines only modulo
+//! libm (`ln`/`sin`/`powf` feed the arrival processes). A *present*
+//! golden that mismatches is a hard failure.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::trainer::SurrogateTrainer;
+use mofa::sim::checkpoint::canonical_report_json;
+use mofa::sim::{
+    generate_trace, replay_trace, run_request_with_faults, run_request_with_faults_checkpointed,
+    ArrivalProcess, CampaignRequest, FaultPlan, PolicyKind, PriorityClasses, ServiceConfig,
+    ShedPolicy, SizeModel, TenantProfile, TraceStats, WorkloadSpec,
+};
+use mofa::util::json::Json;
+use mofa::util::stats;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::mofa::CampaignReport;
+use mofa::workflow::resources::WorkerKind;
+use mofa::workflow::taskserver::Engines;
+
+/// Virtual turnaround budget a completion is held to in the scorecard's
+/// `slo_violations` / `goodput` fields.
+const SLO_S: f64 = 1800.0;
+
+/// Barrier for the checkpoint-kill-restore scenarios: after the first
+/// kill (vt 10), before the restore (vt 60), so the serialized state
+/// carries a mid-window fault cursor.
+const CKPT_BARRIER_VT: f64 = 30.0;
+
+fn quick_engines() -> Arc<Engines> {
+    let mut e = Engines::scaled(
+        Arc::new(SurrogateGenerator::builtin(16)),
+        Arc::new(SurrogateTrainer),
+    );
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    Arc::new(e)
+}
+
+struct Scenario {
+    name: String,
+    spec: WorkloadSpec,
+    cfg: ServiceConfig,
+    plan: FaultPlan,
+    /// run every campaign through checkpoint-kill-restore and assert
+    /// byte-equality with the uninterrupted run
+    ckpt: bool,
+    seed: u64,
+}
+
+fn churn_plan() -> FaultPlan {
+    FaultPlan::new()
+        .kill_at(10.0, WorkerKind::Generator, usize::MAX)
+        .kill_at(25.0, WorkerKind::Cpu, usize::MAX)
+        .restore_at(60.0, WorkerKind::Generator, usize::MAX)
+        .restore_at(90.0, WorkerKind::Cpu, usize::MAX)
+}
+
+/// The three policy mixes: (label, shed policy, tenant profiles).
+fn policy_mixes() -> Vec<(&'static str, ShedPolicy, Vec<TenantProfile>)> {
+    let mofa = vec![TenantProfile::new("solo")];
+    let priority = vec![
+        TenantProfile {
+            name: "batch".into(),
+            weight: 2,
+            class: 2,
+            policy: PolicyKind::Priority(PriorityClasses::default()),
+            deadline_slack_s: None,
+            preemption: false,
+        },
+        TenantProfile {
+            name: "interactive".into(),
+            weight: 1,
+            class: 0,
+            policy: PolicyKind::Priority(PriorityClasses::default()),
+            deadline_slack_s: Some(2000.0),
+            preemption: true,
+        },
+    ];
+    let fair = vec![
+        TenantProfile {
+            name: "alice".into(),
+            weight: 2,
+            class: 0,
+            policy: PolicyKind::FairShare { weight: 2, weight_total: 3 },
+            deadline_slack_s: Some(2000.0),
+            preemption: false,
+        },
+        TenantProfile {
+            name: "bob".into(),
+            weight: 1,
+            class: 1,
+            policy: PolicyKind::FairShare { weight: 1, weight_total: 3 },
+            deadline_slack_s: None,
+            preemption: false,
+        },
+    ];
+    vec![
+        ("mofa", ShedPolicy::RejectNewest, mofa),
+        ("priority", ShedPolicy::DropLowestPriority, priority),
+        ("fair-share", ShedPolicy::DeadlineFirst, fair),
+    ]
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let arrivals = [
+        ArrivalProcess::Poisson { rate_per_ks: 40.0 },
+        ArrivalProcess::Diurnal { base_per_ks: 40.0, amplitude: 0.8, period_s: 1500.0 },
+        ArrivalProcess::Bursty { on_s: 150.0, off_s: 300.0, rate_per_ks: 120.0 },
+        ArrivalProcess::HeavyTail { mean_gap_s: 25.0, alpha: 1.3 },
+    ];
+    let mut out = Vec::new();
+    for (ai, arr) in arrivals.iter().enumerate() {
+        for (pi, (plabel, shed, tenants)) in policy_mixes().into_iter().enumerate() {
+            for (flabel, plan) in
+                [("none", FaultPlan::new()), ("churn", churn_plan())]
+            {
+                out.push(Scenario {
+                    name: format!("{}-{plabel}-{flabel}", arr.label()),
+                    spec: WorkloadSpec {
+                        arrivals: *arr,
+                        sizes: SizeModel::Pareto { min_s: 90.0, alpha: 1.4, cap_s: 360.0 },
+                        tenants: tenants.clone(),
+                        count: 5,
+                        nodes: 8,
+                        util_sample_dt: 30.0,
+                    },
+                    cfg: ServiceConfig::new(2).queue_bound(3).shed(shed),
+                    plan,
+                    ckpt: false,
+                    // distinct, pinned seed per cell of the matrix
+                    seed: 1000 + (ai * 10 + pi) as u64,
+                });
+            }
+        }
+    }
+    // checkpoint-kill-restore: one single-tenant, one multi-tenant cell
+    for (name, pi) in [("poisson-mofa-churn-ckpt", 0usize), ("bursty-priority-churn-ckpt", 1)] {
+        let (_, shed, tenants) = policy_mixes().into_iter().nth(pi).expect("mix exists");
+        out.push(Scenario {
+            name: name.to_string(),
+            spec: WorkloadSpec {
+                arrivals: if pi == 0 {
+                    ArrivalProcess::Poisson { rate_per_ks: 40.0 }
+                } else {
+                    ArrivalProcess::Bursty { on_s: 150.0, off_s: 300.0, rate_per_ks: 120.0 }
+                },
+                sizes: SizeModel::Fixed { duration_s: 150.0 },
+                tenants,
+                count: 4,
+                nodes: 8,
+                util_sample_dt: 30.0,
+            },
+            cfg: ServiceConfig::new(2).queue_bound(3).shed(shed),
+            plan: churn_plan(),
+            ckpt: true,
+            seed: 2000 + pi as u64,
+        });
+    }
+    out
+}
+
+/// Run one campaign for a scenario: straight under the plan, or — in
+/// checkpoint mode — both straight and through checkpoint-kill-restore,
+/// panicking unless the two canonical reports are byte-identical.
+fn run_one(
+    sc: &Scenario,
+    req: &CampaignRequest,
+    engines: &Arc<Engines>,
+    pool: &Arc<ThreadPool>,
+) -> CampaignReport {
+    let straight = run_request_with_faults(
+        req.clone(),
+        Arc::clone(engines),
+        pool,
+        sc.plan.clone(),
+        f64::INFINITY,
+    )
+    .report()
+    .expect("no barrier: the campaign must drain");
+    if !sc.ckpt {
+        return straight;
+    }
+    let resumed = run_request_with_faults_checkpointed(
+        req.clone(),
+        Arc::clone(engines),
+        pool,
+        sc.plan.clone(),
+        CKPT_BARRIER_VT,
+    )
+    .expect("checkpoint round trip");
+    let (a, b) =
+        (canonical_report_json(&straight).to_string(), canonical_report_json(&resumed).to_string());
+    assert_eq!(
+        a, b,
+        "{}: checkpoint-kill-restore diverged from the uninterrupted run",
+        sc.name
+    );
+    resumed
+}
+
+/// Reduce a replay to the pinned scorecard. Everything in here is
+/// virtual-time-pure; wallclock must never leak in.
+fn scorecard(sc: &Scenario, stats: &TraceStats) -> Json {
+    let p50 = stats::quantile(&stats.turnarounds, 0.5);
+    let p99 = stats::quantile(&stats.turnarounds, 0.99);
+    let violations = stats.turnarounds.iter().filter(|&&t| t > SLO_S).count();
+    let rejected_by = Json::obj(
+        stats.rejected_by.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect(),
+    );
+    Json::obj(vec![
+        ("schema", Json::Str("conformance/v1".into())),
+        ("scenario", Json::Str(sc.name.clone())),
+        ("submitted", Json::Num(stats.submitted as f64)),
+        ("rejected", Json::Num(stats.rejected as f64)),
+        ("rejected_by", rejected_by),
+        ("shed", Json::Num(stats.shed as f64)),
+        ("completed", Json::Num(stats.completed as f64)),
+        ("slo_violations", Json::Num(violations as f64)),
+        ("goodput", Json::Num((stats.completed - violations) as f64)),
+        ("turnaround_p50_s", Json::Num(p50)),
+        ("turnaround_p99_s", Json::Num(p99)),
+        ("evictions", Json::Num(stats.evictions as f64)),
+        ("redispatches", Json::Num(stats.redispatches as f64)),
+        ("wasted_busy_s", Json::Num(stats.wasted_busy_s)),
+        ("busy_integral_s", Json::Num(stats.busy_integral_s)),
+        ("tasks_done", Json::Num(stats.tasks_done as f64)),
+        ("final_vt", Json::Num(stats.final_vt)),
+    ])
+}
+
+fn run_scenario(sc: &Scenario, pool: &Arc<ThreadPool>) -> String {
+    let trace = generate_trace(&sc.spec, sc.seed);
+    let engines = quick_engines();
+    let stats = replay_trace(&trace, &sc.cfg, |req| run_one(sc, req, &engines, pool));
+    scorecard(sc, &stats).to_string() + "\n"
+}
+
+/// First byte offset where two strings differ, with context, for
+/// readable golden-mismatch reports.
+fn first_diff(a: &str, b: &str) -> String {
+    let at = a
+        .bytes()
+        .zip(b.bytes())
+        .position(|(x, y)| x != y)
+        .unwrap_or_else(|| a.len().min(b.len()));
+    let lo = at.saturating_sub(40);
+    format!(
+        "first difference at byte {at}:\n  got  …{}…\n  want …{}…",
+        &a[lo..(at + 40).min(a.len())],
+        &b[lo..(at + 40).min(b.len())]
+    )
+}
+
+fn main() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let golden_dir = manifest.join("tests/conformance/golden");
+    let out_dir = std::env::var("MOFA_CONFORMANCE_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| manifest.join("target/conformance"));
+    let bless = std::env::var("MOFA_BLESS").map(|v| v == "1").unwrap_or(false);
+    let pool = Arc::new(ThreadPool::new(2));
+
+    let table = scenarios();
+    eprintln!("== conformance battery: {} scenarios ==", table.len());
+    let mut failures = 0usize;
+    let mut unblessed = 0usize;
+    for sc in &table {
+        // the determinism gate: two fully independent pipeline runs
+        let card = run_scenario(sc, &pool);
+        let again = run_scenario(sc, &pool);
+        if card != again {
+            failures += 1;
+            eprintln!("FAIL {}: two runs differ\n{}", sc.name, first_diff(&again, &card));
+            continue;
+        }
+        let golden_path = golden_dir.join(format!("{}.json", sc.name));
+        if bless {
+            std::fs::create_dir_all(&golden_dir).expect("create golden dir");
+            std::fs::write(&golden_path, &card).expect("write golden");
+            eprintln!("BLESS {} -> {}", sc.name, golden_path.display());
+            continue;
+        }
+        match std::fs::read_to_string(&golden_path) {
+            Ok(want) if want == card => eprintln!("ok   {}", sc.name),
+            Ok(want) => {
+                failures += 1;
+                eprintln!("FAIL {}: golden mismatch\n{}", sc.name, first_diff(&card, &want));
+            }
+            Err(_) => {
+                unblessed += 1;
+                std::fs::create_dir_all(&out_dir).expect("create scorecard out dir");
+                let out = out_dir.join(format!("{}.json", sc.name));
+                std::fs::write(&out, &card).expect("write scorecard");
+                eprintln!(
+                    "??   {}: no golden; scorecard written to {} (bless with MOFA_BLESS=1)",
+                    sc.name,
+                    out.display()
+                );
+            }
+        }
+    }
+    eprintln!(
+        "== conformance: {} scenarios, {failures} failed, {unblessed} unblessed ==",
+        table.len()
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
