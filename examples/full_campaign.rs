@@ -48,6 +48,15 @@
 //! the campaign (wallclock excluded), so a byte diff proves bit-identical
 //! replay.
 //!
+//! **Live migration** (`--migrate S`): the sharded front door's wire
+//! cycle in one process. Run to the virtual-time barrier `S`, stamp the
+//! v4 migration metadata onto the checkpoint, serialize it to wire text,
+//! parse it back as the "receiver", and resume to completion — the
+//! canonical report must be byte-identical to a clean run (the CI
+//! determinism gate `cmp`s them):
+//!
+//!     full_campaign -- 8 0.05 --surrogate --migrate 90 --canonical-out migrated.json
+//!
 //! `--preempt` enables class-based task preemption: the campaign runs
 //! under the priority policy with preemption ON, so a pending high-class
 //! task evicts a running lower-class one (the victim re-queues and
@@ -60,7 +69,8 @@ use std::sync::Arc;
 use mofa::hmof::HmofReference;
 use mofa::sim::admission::ShedPolicy;
 use mofa::sim::checkpoint::{
-    canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
+    canonical_report_json, migration_meta, resume_request, run_request_to_barrier,
+    stamp_migration, CampaignRunOutcome, MigrationMeta,
 };
 use mofa::sim::policy::PriorityClasses;
 use mofa::sim::service::{CampaignRequest, CampaignService, PolicyKind, ServiceConfig};
@@ -308,6 +318,7 @@ struct CheckpointFlow {
     checkpoint_path: Option<String>,
     resume_path: Option<String>,
     barrier_s: Option<f64>,
+    migrate_s: Option<f64>,
     canonical_out: Option<String>,
 }
 
@@ -328,6 +339,56 @@ fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Re
     };
     let barrier = flow.barrier_s.unwrap_or(duration_s / 2.0);
     let pool = Arc::new(ThreadPool::default_pool());
+    if let Some(vt) = flow.migrate_s {
+        // live-migration demo: pause at the barrier, stamp the v4
+        // migration metadata, ship the checkpoint as wire text, parse
+        // it back as the "receiver" (fresh engines), and resume to
+        // completion — exactly the cycle `sim::shard` runs per hop
+        let mut req = CampaignRequest::new(config);
+        if flow.preempt {
+            println!("class-based preemption ON (priority policy)");
+            req = req
+                .policy(PolicyKind::Priority(PriorityClasses::default()))
+                .preemption(true);
+        }
+        let mut wire = run_request_to_barrier(req, engines, &pool, vt)
+            .checkpoint()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "campaign drained before the {vt:.0} s migration barrier — pick \
+                     --migrate below the campaign duration"
+                )
+            })?;
+        let meta = MigrationMeta { hops: 1, from_shard: Some(0) };
+        stamp_migration(&mut wire, &meta)
+            .map_err(|e| anyhow::anyhow!("checkpoint refuses the migration stamp: {e}"))?;
+        let text = wire.to_string();
+        println!("migrating: {} checkpoint bytes over the wire (hop 1)", text.len());
+        let received = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("wire checkpoint does not parse back: {e}"))?;
+        let survived = migration_meta(&received)
+            .map_err(|e| anyhow::anyhow!("wire checkpoint lost its migration section: {e}"))?;
+        anyhow::ensure!(
+            survived == meta,
+            "migration metadata did not survive the wire: {survived:?}"
+        );
+        let receiver_engines = if flow.surrogate {
+            build_quick_surrogate_engines()
+        } else {
+            build_engines(ModelMode::Hlo, true)?
+        };
+        let report = resume_request(&received, receiver_engines, &pool, f64::INFINITY)
+            .map_err(|e| anyhow::anyhow!("receiver cannot resume the migrated campaign: {e}"))?
+            .report()
+            .ok_or_else(|| anyhow::anyhow!("unbounded resume must drain the campaign"))?;
+        let href = HmofReference::generate(0);
+        print_report(&report, hours, &href);
+        if let Some(path) = &flow.canonical_out {
+            std::fs::write(path, canonical_report_json(&report).to_string())?;
+            println!("canonical report written to {path}");
+        }
+        return Ok(());
+    }
     let outcome = match &flow.resume_path {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -413,7 +474,21 @@ fn main() -> anyhow::Result<()> {
         ),
         None => None,
     };
+    let migrate_s = match take_value(&mut args, "--migrate")? {
+        Some(s) => Some(
+            s.parse::<f64>().map_err(|_| anyhow::anyhow!("--migrate: bad seconds value {s:?}"))?,
+        ),
+        None => None,
+    };
     let canonical_out = take_value(&mut args, "--canonical-out")?;
+    if migrate_s.is_some()
+        && (checkpoint_path.is_some() || resume_path.is_some() || barrier_s.is_some())
+    {
+        anyhow::bail!(
+            "--migrate runs its own pause -> wire -> resume cycle; it does not combine \
+             with --checkpoint/--resume/--barrier"
+        );
+    }
     // --service [N]: serve campaigns through a CampaignService instead of
     // a one-shot sweep; N bounds concurrent in-flight campaigns
     let mut service_max: Option<usize> = None;
@@ -448,7 +523,11 @@ fn main() -> anyhow::Result<()> {
     };
     let hours: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
 
-    if checkpoint_path.is_some() || resume_path.is_some() || canonical_out.is_some() {
+    if checkpoint_path.is_some()
+        || resume_path.is_some()
+        || canonical_out.is_some()
+        || migrate_s.is_some()
+    {
         println!("== MOFA full campaign (checkpoint/replay flow) ==");
         return checkpoint_flow(
             node_counts[0],
@@ -459,6 +538,7 @@ fn main() -> anyhow::Result<()> {
                 checkpoint_path,
                 resume_path,
                 barrier_s,
+                migrate_s,
                 canonical_out,
             },
         );

@@ -21,6 +21,12 @@
 //!   re-queue by payload id).
 //! * **checkpoint** — a paused mid-campaign scheduler serialized to the
 //!   checkpoint JSON string: `checkpoint_bytes_per_sec`.
+//! * **migration** — the shard-migration wire cycle over a live
+//!   mid-campaign checkpoint: stamp migration metadata, serialize to
+//!   the wire string, parse it back, re-read the metadata — K hops
+//!   timed as `shard_migrations_per_sec`, then one final resume that
+//!   must run to completion (the byte-identity gates live in
+//!   `tests/shard.rs` and the conformance battery).
 //!
 //! `--check BASELINE.json` exits non-zero when any gated metric falls
 //! below its floor (see [`mofa::util::benchcheck::GATED_METRICS`]),
@@ -35,13 +41,19 @@ use std::time::Instant;
 
 use mofa::genai::generator::SurrogateGenerator;
 use mofa::genai::trainer::SurrogateTrainer;
-use mofa::sim::{Completion, Policy, PreemptCandidate, Scheduler, SimOutcome, SimParams};
+use mofa::sim::checkpoint::{
+    migration_meta, resume_request, run_request_to_barrier, stamp_migration, MigrationMeta,
+};
+use mofa::sim::{
+    CampaignRequest, Completion, Policy, PreemptCandidate, Scheduler, SimOutcome, SimParams,
+};
 use mofa::util::benchcheck::{check_regression, CheckOutcome, GATED_METRICS};
 use mofa::util::json::Json;
 use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::mofa::CampaignConfig;
 use mofa::workflow::resources::{Cluster, WorkerKind};
 use mofa::workflow::taskserver::{Engines, ExecMode, Payload, TaskKind};
-use mofa::workflow::thinker::TaskRequest;
+use mofa::workflow::thinker::{PolicyConfig, TaskRequest};
 
 fn engines() -> Arc<Engines> {
     Arc::new(Engines::scaled(Arc::new(SurrogateGenerator::builtin(16)), Arc::new(SurrogateTrainer)))
@@ -186,6 +198,49 @@ fn run_checkpoint(n_tasks: u64, pool: &Arc<ThreadPool>) -> (usize, f64) {
     }
 }
 
+/// Time the shard-migration wire cycle: checkpoint one live campaign at
+/// a virtual-time barrier, then perform `hops` wire hops — stamp
+/// [`MigrationMeta`], serialize, parse, re-read the metadata — and
+/// finally resume the last wire image to completion. Returns
+/// (hops, wire seconds). The per-hop wire work is exactly what
+/// [`mofa::sim::shard`] pays to move a campaign between shards; the
+/// resume compute is excluded (a campaign runs its remaining virtual
+/// time wherever it lives).
+fn run_migrations(hops: usize, pool: &Arc<ThreadPool>) -> (usize, f64) {
+    let req = CampaignRequest::new(CampaignConfig {
+        nodes: 8,
+        duration_s: 300.0,
+        seed: 33,
+        policy: PolicyConfig::default(),
+        threads: 0,
+        util_sample_dt: 60.0,
+    });
+    let ckpt = run_request_to_barrier(req, engines(), pool, 150.0)
+        .checkpoint()
+        .expect("300 s campaign must still be live at barrier 150");
+    let mut wire = ckpt;
+    let t = Instant::now();
+    for hop in 1..=hops {
+        let meta = MigrationMeta { hops: hop as u32, from_shard: Some((hop % 4) as u64) };
+        stamp_migration(&mut wire, &meta).expect("campaign checkpoint accepts the stamp");
+        let text = wire.to_string();
+        let parsed = Json::parse(&text).expect("wire text parses");
+        assert_eq!(
+            migration_meta(&parsed).expect("wire carries migration metadata"),
+            meta,
+            "metadata must survive the wire"
+        );
+        wire = parsed;
+    }
+    let wall = t.elapsed().as_secs_f64();
+    let report = resume_request(&wire, engines(), pool, f64::INFINITY)
+        .expect("wire checkpoint resumes")
+        .report()
+        .expect("resume to infinity completes");
+    assert!(report.final_vtime >= 150.0, "resumed campaign must pass the barrier");
+    (hops, wall)
+}
+
 /// Peak resident set (VmHWM) in MiB, or 0.0 where /proc is unavailable.
 fn peak_rss_mb() -> f64 {
     let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
@@ -240,6 +295,11 @@ fn main() {
     let (ckpt_bytes, ckpt_wall) = run_checkpoint(n_ckpt, &pool);
     let checkpoint_bytes_per_sec = ckpt_bytes as f64 / ckpt_wall.max(1e-9);
 
+    let n_hops: usize = if quick { 50 } else { 200 };
+    eprintln!("-- shard migration wire cycle ({n_hops} hops)");
+    let (hops, mig_wall) = run_migrations(n_hops, &pool);
+    let shard_migrations_per_sec = hops as f64 / mig_wall.max(1e-9);
+
     let rss = peak_rss_mb();
     let speedup = events_per_sec / pre_events_per_sec.max(1e-9);
 
@@ -255,6 +315,8 @@ fn main() {
         ("preempt_evictions", Json::Num(storm.preemption.evictions as f64)),
         ("checkpoint_bytes", Json::Num(ckpt_bytes as f64)),
         ("checkpoint_bytes_per_sec", Json::Num(checkpoint_bytes_per_sec)),
+        ("shard_migration_hops", Json::Num(hops as f64)),
+        ("shard_migrations_per_sec", Json::Num(shard_migrations_per_sec)),
         ("peak_rss_mb", Json::Num(rss)),
         ("speedup_vs_pre", Json::Num(speedup)),
         (
@@ -270,7 +332,7 @@ fn main() {
     eprintln!(
         "events/s {events_per_sec:.0} (pre {pre_events_per_sec:.0}, speedup {speedup:.1}x), \
          cancels/s {preempt_cancels_per_sec:.0}, ckpt {checkpoint_bytes_per_sec:.0} B/s, \
-         rss {rss:.0} MiB -> {out_path}"
+         migrations/s {shard_migrations_per_sec:.0}, rss {rss:.0} MiB -> {out_path}"
     );
 
     if let Some(path) = baseline_path {

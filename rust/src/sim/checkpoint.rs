@@ -57,9 +57,14 @@ use crate::workflow::thinker::Thinker;
 /// cluster pool carries a `down` (decommissioned) slot count and the
 /// scheduler serializes its [`crate::sim::faults::FaultPlan`] with the
 /// next-fault cursor, so a checkpoint taken mid-fault-plan resumes the
-/// remaining kills/restores. Older files (v1/v2) fail loudly with
+/// remaining kills/restores. v4: migration — every campaign checkpoint
+/// carries a required `migration` section ([`MigrationMeta`]: hop count
+/// and donor shard) so [`crate::sim::shard`] can use the checkpoint as
+/// its live-migration wire format, and service checkpoints carry each
+/// tenant's rolling turnaround window so post-resume quantiles aren't
+/// cold-start biased. Older files (v1/v2/v3) fail loudly with
 /// [`CheckpointError::FormatMismatch`], never a silent default.
-pub const FORMAT_VERSION: u32 = 3;
+pub const FORMAT_VERSION: u32 = 4;
 
 /// Why a checkpoint could not be restored.
 #[derive(Clone, Debug, PartialEq)]
@@ -176,6 +181,67 @@ impl CheckpointHeader {
     }
 }
 
+/// Migration metadata stamped into every campaign checkpoint (format
+/// v4): how many shard-to-shard hops the campaign has survived and, on
+/// the wire, which shard donated it. A freshly written checkpoint
+/// carries `hops: 0, from_shard: None`; [`crate::sim::shard`] restamps
+/// it via [`stamp_migration`] before putting the bytes on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationMeta {
+    /// shard-to-shard migrations this campaign has survived
+    pub hops: u32,
+    /// donor shard id when the checkpoint is a migration wire message
+    /// (`None` for a plain disk checkpoint)
+    pub from_shard: Option<u64>,
+}
+
+impl MigrationMeta {
+    /// Serialize the metadata (`{"hops": n, "from_shard": n|null}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hops", Json::Num(self.hops as f64)),
+            ("from_shard", self.from_shard.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
+        ])
+    }
+
+    /// Parse the representation written by [`MigrationMeta::to_json`].
+    pub fn from_json(v: &Json) -> Result<MigrationMeta, CheckpointError> {
+        let hops = v
+            .req("hops")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(n))
+            .ok_or_else(|| "migration: 'hops' must be an integer".to_string())?
+            as u32;
+        let from_shard = match v.req("from_shard")? {
+            Json::Null => None,
+            j => Some(
+                j.as_f64()
+                    .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                    .ok_or_else(|| "migration: bad 'from_shard'".to_string())? as u64,
+            ),
+        };
+        Ok(MigrationMeta { hops, from_shard })
+    }
+}
+
+/// Replace the `migration` section of a campaign checkpoint — the donor
+/// shard calls this right before putting the checkpoint on the wire.
+/// Errors when `ckpt` is not a checkpoint object.
+pub fn stamp_migration(ckpt: &mut Json, meta: &MigrationMeta) -> Result<(), CheckpointError> {
+    match ckpt {
+        Json::Obj(map) => {
+            map.insert("migration".to_string(), meta.to_json());
+            Ok(())
+        }
+        _ => Err(CheckpointError::Malformed("stamp_migration: expected an object".into())),
+    }
+}
+
+/// Read the required (v4) `migration` section of a campaign checkpoint.
+pub fn migration_meta(v: &Json) -> Result<MigrationMeta, CheckpointError> {
+    MigrationMeta::from_json(v.req("migration")?)
+}
+
 /// How a barrier-bounded campaign run ended.
 pub enum CampaignRunOutcome {
     /// the campaign drained before the barrier: its report
@@ -266,6 +332,9 @@ fn assemble_checkpoint(
             ]),
         ),
         ("model", model.to_json()),
+        // v4: a fresh checkpoint has never migrated; the shard layer
+        // restamps this section when the bytes become a wire message
+        ("migration", MigrationMeta { hops: 0, from_shard: None }.to_json()),
         (
             "fair_share_outstanding",
             fair_share_outstanding
@@ -447,6 +516,9 @@ pub fn resume_request(
             )));
         }
     }
+    // v4: the migration section is required — validate it here so a
+    // truncated wire message fails at parse time, not mid-replay
+    migration_meta(v)?;
     let model = ModelSnapshot::from_json(v.req("model")?)?;
     // reinstall the checkpointed weights: post-barrier generate fills
     // snapshot the *current* generator state, which must match what the
@@ -569,9 +641,9 @@ mod tests {
         assert_eq!(err, CheckpointError::FormatMismatch { found: 99, expected: FORMAT_VERSION });
         // a *future* format with unknown header fields still reports the
         // version mismatch, not the unknown field
-        let future = r#"{"format":4,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
+        let future = r#"{"format":5,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
         let err = CheckpointHeader::parse(&Json::parse(future).unwrap()).unwrap_err();
-        assert!(matches!(err, CheckpointError::FormatMismatch { found: 4, .. }), "{err}");
+        assert!(matches!(err, CheckpointError::FormatMismatch { found: 5, .. }), "{err}");
         // a v1 file (pre-preemption layout) is equally a version error —
         // its missing preemption fields must never default silently
         let v1 = r#"{"format":1,"kind":"campaign","created_vt":0}"#;
@@ -582,6 +654,34 @@ mod tests {
         let v2 = r#"{"format":2,"kind":"campaign","created_vt":0}"#;
         let err = CheckpointHeader::parse(&Json::parse(v2).unwrap()).unwrap_err();
         assert_eq!(err, CheckpointError::FormatMismatch { found: 2, expected: FORMAT_VERSION });
+        // a v3 file (pre-migration layout) likewise: it carries no
+        // migration section and no per-tenant turnaround windows
+        let v3 = r#"{"format":3,"kind":"campaign","created_vt":0}"#;
+        let err = CheckpointHeader::parse(&Json::parse(v3).unwrap()).unwrap_err();
+        assert_eq!(err, CheckpointError::FormatMismatch { found: 3, expected: FORMAT_VERSION });
+    }
+
+    #[test]
+    fn migration_meta_round_trips_and_stamps() {
+        let fresh = MigrationMeta { hops: 0, from_shard: None };
+        let parsed =
+            MigrationMeta::from_json(&Json::parse(&fresh.to_json().to_string()).unwrap());
+        assert_eq!(parsed.unwrap(), fresh);
+        let wired = MigrationMeta { hops: 2, from_shard: Some(7) };
+        let parsed =
+            MigrationMeta::from_json(&Json::parse(&wired.to_json().to_string()).unwrap());
+        assert_eq!(parsed.unwrap(), wired);
+
+        // stamping replaces the fresh section in a checkpoint object
+        let mut ckpt = Json::obj(vec![("migration", fresh.to_json())]);
+        stamp_migration(&mut ckpt, &wired).unwrap();
+        assert_eq!(migration_meta(&ckpt).unwrap(), wired);
+        // stamping a non-object is a typed error
+        let mut not_obj = Json::Num(3.0);
+        assert!(stamp_migration(&mut not_obj, &wired).is_err());
+        // a checkpoint without the section is a typed error (v4 requires it)
+        let empty = Json::obj(vec![]);
+        assert!(migration_meta(&empty).is_err());
     }
 
     #[test]

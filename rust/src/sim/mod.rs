@@ -51,6 +51,15 @@
 //!   emitting timed [`service::CampaignRequest`] traces that are pure
 //!   functions of a `u64` seed ([`workload::generate_trace`]), replayed
 //!   through the admission front door by [`service::replay_trace`].
+//! * [`shard`] — **horizontal scale-out**:
+//!   [`shard::ShardedService`] replays a trace across N independent
+//!   scheduler shards (each its own admission front, deadline clock,
+//!   and in-flight cap) behind one routed front door
+//!   ([`shard::Router`]: tenant-hash or least-loaded, deterministic
+//!   tie-breaks), with **live campaign migration** over the checkpoint
+//!   wire format — elastic rebalancing, `drain`-for-maintenance, and
+//!   shard-kill failover whose reports stay byte-identical to
+//!   never-migrated twins.
 //! * [`faults`] — virtual-time **fault injection**: a sorted
 //!   [`faults::FaultPlan`] of kill/restore events that the scheduler
 //!   interleaves with its event loop, decommissioning pool slots (and
@@ -77,14 +86,15 @@ pub mod faults;
 pub mod policy;
 pub mod scheduler;
 pub mod service;
+pub mod shard;
 pub mod sweep;
 pub mod vtime;
 pub mod workload;
 
 pub use admission::{RejectReason, RequestStatus, ShedPolicy};
 pub use checkpoint::{
-    canonical_report_json, resume_request, run_request_to_barrier, CampaignRunOutcome,
-    CheckpointError, CheckpointHeader, FORMAT_VERSION,
+    canonical_report_json, migration_meta, resume_request, run_request_to_barrier, stamp_migration,
+    CampaignRunOutcome, CheckpointError, CheckpointHeader, MigrationMeta, FORMAT_VERSION,
 };
 pub use faults::{
     run_request_with_faults, run_request_with_faults_checkpointed, FaultAction, FaultEvent,
@@ -99,7 +109,13 @@ pub use service::{
     replay_trace, run_campaign_request, CampaignRequest, CampaignService, PolicyKind,
     RequestOutcome, ServiceConfig, ServiceStats, TenantStats, Ticket, TraceStats,
 };
-pub use sweep::{default_drivers, run_sweep, run_sweep_with, sweep_nodes, SweepItem};
+pub use shard::{
+    digest_reports, fnv1a, replay_sharded, report_hash, ClusterSnapshot, Router, ShardConfig,
+    ShardEvent, ShardOp, ShardPlan, ShardState, ShardStats, ShardedService, MAX_MIGRATION_HOPS,
+};
+pub use sweep::{
+    default_drivers, run_indexed_tasks, run_sweep, run_sweep_with, sweep_nodes, SweepItem,
+};
 pub use vtime::{EventHeap, VirtualTime};
 pub use workload::{
     generate_trace, trace_json, ArrivalProcess, SizeModel, TenantProfile, TimedRequest,

@@ -31,6 +31,11 @@
 //! pure function of the push/pop sequence and request fields — wallclock
 //! never enters a decision, so a saturated service sheds the same
 //! requests on every replay of the same submission sequence.
+//!
+//! This module is the single-shard building block: [`crate::sim::shard`]
+//! puts N of these admission fronts (one per scheduler shard) behind a
+//! routed front door and migrates running campaigns between them over
+//! the checkpoint wire format.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -389,8 +394,9 @@ impl ServiceConfig {
     }
 }
 
-/// Per-tenant admission counters (all monotonic).
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// Per-tenant admission counters (monotonic) plus the tenant's own
+/// rolling turnaround window.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TenantStats {
     /// requests admitted into the queue
     pub admitted: usize,
@@ -402,6 +408,23 @@ pub struct TenantStats {
     pub cancelled: usize,
     /// campaigns that ran to completion with the report delivered
     pub completed: usize,
+    /// this tenant's most recent [`TURNAROUND_WINDOW`] turnarounds, in
+    /// completion order; carried through service checkpoints so
+    /// post-resume per-tenant quantiles aren't cold-start biased
+    pub turnaround_s: VecDeque<f64>,
+}
+
+impl TenantStats {
+    /// Turnaround quantile (`q` in [0, 1]) over this tenant's window;
+    /// NaN when the tenant has no completions yet.
+    pub fn turnaround_quantile(&self, q: f64) -> f64 {
+        if self.turnaround_s.is_empty() {
+            f64::NAN
+        } else {
+            let window: Vec<f64> = self.turnaround_s.iter().copied().collect();
+            crate::util::stats::quantile(&window, q)
+        }
+    }
 }
 
 /// A point-in-time snapshot of the service counters
@@ -650,13 +673,19 @@ impl SvcState {
         self.per_tenant.entry(tenant.to_string()).or_default()
     }
 
-    /// Record a completed request's turnaround, keeping only the most
-    /// recent [`TURNAROUND_WINDOW`] values.
-    fn note_turnaround(&mut self, turnaround: f64) {
+    /// Record a completed request's turnaround in the service-wide and
+    /// the tenant's own window, keeping only the most recent
+    /// [`TURNAROUND_WINDOW`] values in each.
+    fn note_turnaround(&mut self, tenant: &str, turnaround: f64) {
         if self.turnaround_s.len() == TURNAROUND_WINDOW {
             self.turnaround_s.pop_front();
         }
         self.turnaround_s.push_back(turnaround);
+        let t = &mut self.tenant_mut(tenant).turnaround_s;
+        if t.len() == TURNAROUND_WINDOW {
+            t.pop_front();
+        }
+        t.push_back(turnaround);
     }
 
     /// Settle a request shed by the admission queue (eviction or
@@ -847,7 +876,7 @@ impl CampaignService {
                     } else {
                         st.completed += 1;
                         st.tenant_mut(&guard.tenant).completed += 1;
-                        st.note_turnaround(turnaround);
+                        st.note_turnaround(&guard.tenant, turnaround);
                         inner.status = RequestStatus::Done;
                         inner.report = Some(report);
                     }
@@ -966,6 +995,14 @@ impl CampaignService {
                             ("shed", Json::Num(t.shed as f64)),
                             ("cancelled", Json::Num(t.cancelled as f64)),
                             ("completed", Json::Num(t.completed as f64)),
+                            // v4: the tenant's rolling window rides along
+                            // so post-resume quantiles aren't cold-started
+                            (
+                                "turnaround_s",
+                                Json::Arr(
+                                    t.turnaround_s.iter().map(|&x| Json::Num(x)).collect(),
+                                ),
+                            ),
                         ]),
                     )
                 })
@@ -1040,6 +1077,19 @@ impl CampaignService {
             let field = |key: &str| -> Result<usize, String> {
                 t.req(key)?.as_usize().ok_or_else(|| format!("tenant stats: bad {key}"))
             };
+            // required since format v4: the header version check has
+            // already rejected older files, so a missing window here is
+            // corruption, not an old layout
+            let mut window = VecDeque::new();
+            for x in t
+                .req("turnaround_s")?
+                .as_arr()
+                .ok_or_else(|| "tenant stats: bad turnaround_s".to_string())?
+            {
+                window.push_back(
+                    x.as_f64().ok_or_else(|| "tenant stats: bad turnaround".to_string())?,
+                );
+            }
             per_tenant.insert(
                 tenant.clone(),
                 TenantStats {
@@ -1048,6 +1098,7 @@ impl CampaignService {
                     shed: field("shed")?,
                     cancelled: field("cancelled")?,
                     completed: field("completed")?,
+                    turnaround_s: window,
                 },
             );
         }

@@ -1,0 +1,1015 @@
+//! Sharded multi-pool serving: N independent scheduler shards behind one
+//! front door, with checkpoint-based **live campaign migration**.
+//!
+//! [`crate::sim::service::replay_trace`] reproduces the service semantics
+//! on one admission queue and one server pool. This module scales that
+//! out the way the paper scales MOF production to 450 nodes: a
+//! [`ShardedService`] owns `N` independent shards — each with its own
+//! admission queue (own bound, shed policy, tenant quota, and virtual
+//! deadline clock) and its own in-flight capacity — behind a single
+//! front door. Arrivals are routed by a pluggable [`Router`]:
+//! tenant-hash (sticky, stateless) or least-loaded-score (adaptive),
+//! both with deterministic tie-breaks by shard id.
+//!
+//! The creative core is **migration**: a running campaign is checkpointed
+//! at a virtual-time barrier on the donor shard using the campaign
+//! checkpoint format ([`crate::sim::checkpoint`], format v4) as the wire
+//! format — serialized to bytes, stamped with a
+//! [`crate::sim::checkpoint::MigrationMeta`], parsed back, and resumed
+//! on the receiver. Resume is bit-identical by construction (the
+//! checkpoint layer's contract), so migration never perturbs a
+//! campaign's report; with [`ShardConfig::verify_migrations`] on, every
+//! migration actually performs the extract → wire → implant cycle and
+//! asserts the resumed canonical report byte-matches the never-migrated
+//! one. Migration unlocks:
+//!
+//! * **elastic rebalancing** — when the load spread between the hottest
+//!   and coldest shard exceeds [`ShardConfig::rebalance_threshold_s`],
+//!   the longest-remaining flight migrates off the hot shard (each
+//!   campaign bounded by [`ShardConfig::max_hops`] rebalance hops);
+//! * **drain for maintenance** — [`ShardOp::Drain`] re-routes a shard's
+//!   queue and migrates its running flights, then stops routing to it;
+//! * **shard-level fault churn** — [`ShardOp::Kill`] is a drain that
+//!   counts as a fault: every campaign finishes elsewhere (receivers
+//!   may overcommit above their in-flight bound for migrated-in
+//!   flights, so failover is lossless) and the cluster's scorecard
+//!   byte-matches an unsharded run of the same trace (the conformance
+//!   battery pins this).
+//!
+//! Determinism: the replay is a pure function of
+//! `(trace, ShardConfig, ShardPlan)`. Campaign reports are pure
+//! functions of `(request, seed)` given a fresh engine stack, so the
+//! replay precomputes every report in parallel on the work-stealing
+//! executor ([`crate::sim::sweep::run_indexed_tasks`]) and the event
+//! loop is pure bookkeeping; [`ClusterSnapshot::reports_digest`] folds
+//! the canonical report of every completed campaign in trace order, so
+//! two layouts that complete the same campaigns are byte-comparable
+//! with one `u64`. Migration is instantaneous in *virtual* time (the
+//! wire cost is wallclock, measured by `bench_events`'
+//! `shard_migrations_per_sec`).
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::sim::admission::{AdmissionConfig, AdmissionQueue, Popped, RejectReason};
+use crate::sim::checkpoint::{
+    canonical_report_json, migration_meta, resume_request, run_request_to_barrier,
+    stamp_migration, CampaignRunOutcome, MigrationMeta,
+};
+use crate::sim::service::{run_campaign_request, CampaignRequest, ServiceConfig, TraceStats};
+use crate::sim::sweep::{default_drivers, run_indexed_tasks};
+use crate::sim::workload::TimedRequest;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::mofa::CampaignReport;
+use crate::workflow::resources::{layout, WorkerKind};
+use crate::workflow::taskserver::Engines;
+
+/// Default cap on **rebalance** migrations per campaign (failover
+/// migrations off a drained/killed shard are never capped — they must
+/// land somewhere).
+pub const MAX_MIGRATION_HOPS: u32 = 3;
+
+/// Rebalance attempts per settled instant: bounds the work done at one
+/// virtual time so a pathological threshold cannot loop forever.
+const REBALANCE_PASSES_PER_INSTANT: usize = 8;
+
+/// How arrivals are assigned to shards. Both variants are pure
+/// functions of their inputs with ties broken by the lowest shard id,
+/// so routing replays identically across runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Router {
+    /// FNV-1a hash of the tenant name modulo the accepting-shard count:
+    /// sticky (a tenant keeps landing on the same shard while the
+    /// accepting set is stable) and stateless
+    TenantHash,
+    /// the accepting shard with the smallest load score (running
+    /// remaining virtual seconds + queued virtual seconds), ties to the
+    /// lowest shard id
+    LeastLoaded,
+}
+
+impl Router {
+    /// Stable label for scenario names and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Router::TenantHash => "tenant-hash",
+            Router::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// Pick a shard for `tenant` out of `accepting` (shard ids in
+    /// ascending order, must be non-empty); `loads` is indexed by shard
+    /// id and only read by [`Router::LeastLoaded`].
+    pub fn pick(&self, tenant: &str, accepting: &[usize], loads: &[f64]) -> usize {
+        assert!(!accepting.is_empty(), "routing needs an accepting shard");
+        match self {
+            Router::TenantHash => {
+                accepting[(fnv1a(tenant.as_bytes()) % accepting.len() as u64) as usize]
+            }
+            Router::LeastLoaded => accepting
+                .iter()
+                .copied()
+                .min_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)))
+                .expect("accepting is non-empty"),
+        }
+    }
+}
+
+/// Lifecycle state of one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// accepting new arrivals and dispatching its queue
+    Up,
+    /// maintenance drain: queue evacuated, flights migrated, no new
+    /// arrivals routed here
+    Draining,
+    /// killed mid-campaign: like draining, but counted as a fault
+    Dead,
+}
+
+/// A maintenance/fault operation applied to one shard at a virtual
+/// time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardOp {
+    /// evacuate the shard for maintenance (queue re-routed, flights
+    /// migrated) and stop routing to it
+    Drain {
+        /// shard id to drain
+        shard: usize,
+    },
+    /// kill the shard mid-campaign: same evacuation, counted as a fault
+    Kill {
+        /// shard id to kill
+        shard: usize,
+    },
+}
+
+impl ShardOp {
+    fn shard(&self) -> usize {
+        match *self {
+            ShardOp::Drain { shard } | ShardOp::Kill { shard } => shard,
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            ShardOp::Drain { .. } => "drain",
+            ShardOp::Kill { .. } => "kill",
+        }
+    }
+}
+
+/// One scheduled shard operation. At exact virtual-time ties,
+/// completions settle before shard ops, and shard ops before arrivals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardEvent {
+    /// virtual time the operation fires at
+    pub at_vt: f64,
+    /// what happens
+    pub op: ShardOp,
+}
+
+/// A sorted plan of shard drains/kills, mirroring
+/// [`crate::sim::faults::FaultPlan`]: built fluently, kept sorted by
+/// time (stable at ties), JSON round-trips with out-of-order rejection.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardPlan {
+    events: Vec<ShardEvent>,
+}
+
+impl ShardPlan {
+    /// An empty plan (no drains, no kills).
+    pub fn new() -> ShardPlan {
+        ShardPlan::default()
+    }
+
+    fn push(mut self, at_vt: f64, op: ShardOp) -> ShardPlan {
+        assert!(at_vt.is_finite() && at_vt >= 0.0, "shard op time must be finite and >= 0");
+        self.events.push(ShardEvent { at_vt, op });
+        self.events.sort_by(|a, b| a.at_vt.total_cmp(&b.at_vt));
+        self
+    }
+
+    /// Schedule a maintenance drain of `shard` at virtual time `at_vt`.
+    pub fn drain_at(self, at_vt: f64, shard: usize) -> ShardPlan {
+        self.push(at_vt, ShardOp::Drain { shard })
+    }
+
+    /// Schedule a kill of `shard` at virtual time `at_vt`.
+    pub fn kill_at(self, at_vt: f64, shard: usize) -> ShardPlan {
+        self.push(at_vt, ShardOp::Kill { shard })
+    }
+
+    /// The planned events, sorted by time.
+    pub fn events(&self) -> &[ShardEvent] {
+        &self.events
+    }
+
+    /// True when the plan holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize the plan (an array of `{at_vt, op, shard}` objects).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("at_vt", Json::Num(e.at_vt)),
+                        ("op", Json::Str(e.op.label().into())),
+                        ("shard", Json::Num(e.op.shard() as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse the representation written by [`ShardPlan::to_json`].
+    /// Out-of-order events are rejected — a hand-edited plan must never
+    /// silently reorder operations.
+    pub fn from_json(v: &Json) -> Result<ShardPlan, String> {
+        let arr = v.as_arr().ok_or_else(|| "shard plan: expected an array".to_string())?;
+        let mut events = Vec::with_capacity(arr.len());
+        let mut last = 0.0f64;
+        for e in arr {
+            let at_vt = e
+                .req("at_vt")?
+                .as_f64()
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(|| "shard plan: bad at_vt".to_string())?;
+            if at_vt < last {
+                return Err(format!("shard plan: event at {at_vt} after {last} (out of order)"));
+            }
+            last = at_vt;
+            let shard = e
+                .req("shard")?
+                .as_usize()
+                .ok_or_else(|| "shard plan: bad shard id".to_string())?;
+            let op = e.req("op")?.as_str().ok_or_else(|| "shard plan: bad op".to_string())?;
+            let op = match op {
+                "drain" => ShardOp::Drain { shard },
+                "kill" => ShardOp::Kill { shard },
+                other => return Err(format!("shard plan: unknown op '{other}'")),
+            };
+            events.push(ShardEvent { at_vt, op });
+        }
+        Ok(ShardPlan { events })
+    }
+}
+
+/// Cluster-wide configuration: shard count, the per-shard service
+/// config, routing, and migration knobs.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// number of shards (≥ 1)
+    pub shards: usize,
+    /// every shard's admission + concurrency configuration (bound, shed
+    /// policy, and tenant quota apply **per shard**)
+    pub per_shard: ServiceConfig,
+    /// how arrivals pick a shard
+    pub router: Router,
+    /// rebalance when `load(hottest) − load(coldest)` exceeds this many
+    /// virtual seconds (`None` = rebalancing off)
+    pub rebalance_threshold_s: Option<f64>,
+    /// rebalance-migration cap per campaign (failover is never capped)
+    pub max_hops: u32,
+    /// when on (the default), every migration performs the real
+    /// checkpoint → wire → parse → resume cycle and asserts the
+    /// resumed canonical report is byte-identical to the never-migrated
+    /// one; turn off only for large accounting-only sweeps
+    pub verify_migrations: bool,
+}
+
+impl ShardConfig {
+    /// A cluster of `shards` identical shards with tenant-hash routing,
+    /// rebalancing off, the default hop cap, and migration verification
+    /// on.
+    pub fn new(shards: usize, per_shard: ServiceConfig) -> ShardConfig {
+        assert!(shards >= 1, "a cluster needs at least one shard");
+        ShardConfig {
+            shards,
+            per_shard,
+            router: Router::TenantHash,
+            rebalance_threshold_s: None,
+            max_hops: MAX_MIGRATION_HOPS,
+            verify_migrations: true,
+        }
+    }
+
+    /// Set the router.
+    pub fn router(mut self, router: Router) -> ShardConfig {
+        self.router = router;
+        self
+    }
+
+    /// Enable elastic rebalancing at the given load-spread threshold
+    /// (virtual seconds).
+    pub fn rebalance(mut self, threshold_s: f64) -> ShardConfig {
+        assert!(threshold_s.is_finite() && threshold_s >= 0.0, "threshold must be >= 0");
+        self.rebalance_threshold_s = Some(threshold_s);
+        self
+    }
+
+    /// Set the per-campaign rebalance-hop cap.
+    pub fn max_hops(mut self, hops: u32) -> ShardConfig {
+        self.max_hops = hops;
+        self
+    }
+
+    /// Toggle per-migration byte-identity verification (see the field
+    /// docs).
+    pub fn verify_migrations(mut self, on: bool) -> ShardConfig {
+        self.verify_migrations = on;
+        self
+    }
+}
+
+/// Per-shard counters, rolled up into a [`ClusterSnapshot`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// arrivals the router assigned to this shard
+    pub routed: usize,
+    /// arrivals refused at this shard's front door (bound or quota)
+    pub rejected: usize,
+    /// admitted requests this shard dropped under overload, deadline
+    /// expiry, or evacuation
+    pub shed: usize,
+    /// campaigns that completed on this shard
+    pub completed: usize,
+    /// flights migrated in (failover + rebalance + drain)
+    pub migrations_in: usize,
+    /// flights migrated out
+    pub migrations_out: usize,
+    /// high-water mark of concurrently running campaigns (can exceed
+    /// the in-flight bound when failover overcommits)
+    pub peak_running: usize,
+    /// busy slot-seconds across campaigns dispatched here
+    pub busy_integral_s: f64,
+    /// tasks completed across campaigns dispatched here
+    pub tasks_done: u64,
+}
+
+/// Cluster-level rollup of one sharded replay: the aggregate
+/// [`TraceStats`] (scorecard-compatible with
+/// [`crate::sim::service::replay_trace`]), per-shard breakdowns, the
+/// migration/fault counters, and the reports digest.
+#[derive(Clone, Debug)]
+pub struct ClusterSnapshot {
+    /// aggregate admission/turnaround/campaign counters across shards
+    pub agg: TraceStats,
+    /// per-shard breakdown, indexed by shard id
+    pub per_shard: Vec<ShardStats>,
+    /// the router's initial shard assignment per trace index (`None` =
+    /// rejected before routing, i.e. no accepting shard)
+    pub routed_to: Vec<Option<usize>>,
+    /// total migrations (failover + rebalance + drain)
+    pub migrations: u64,
+    /// migrations triggered by load rebalancing
+    pub rebalance_migrations: u64,
+    /// migrations triggered by a maintenance drain
+    pub drain_migrations: u64,
+    /// migrations triggered by a shard kill
+    pub failover_migrations: u64,
+    /// shard kills executed
+    pub shard_faults: u64,
+    /// largest per-campaign migration count observed
+    pub max_hops_seen: u32,
+    /// largest excess of running campaigns over a shard's in-flight
+    /// bound (failover overcommit; 0 when failover never overcommitted)
+    pub overcommit_peak: usize,
+    /// FNV-1a fold of the canonical report of every **completed**
+    /// campaign, in trace order: two runs (or two layouts) that
+    /// complete the same campaigns byte-identically produce the same
+    /// digest
+    pub reports_digest: u64,
+}
+
+/// FNV-1a 64-bit hash (the tenant-hash routing function and the digest
+/// primitive).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash one report's canonical rendering (the digest unit).
+pub fn report_hash(report: &CampaignReport) -> u64 {
+    fnv1a(canonical_report_json(report).to_string().as_bytes())
+}
+
+/// Fold per-report hashes (in trace order) into one digest. Exposed so
+/// an unsharded twin run can compute the digest a [`ClusterSnapshot`]
+/// carries.
+pub fn digest_reports(hashes: impl IntoIterator<Item = u64>) -> u64 {
+    let mut d = 0xcbf2_9ce4_8422_2325u64;
+    for h in hashes {
+        d ^= h;
+        d = d.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    d
+}
+
+/// A campaign running on a shard.
+struct Flight {
+    /// trace index of the request
+    idx: usize,
+    /// virtual arrival time (turnaround baseline)
+    arrival_vt: f64,
+    /// virtual dispatch time (campaign-local vtime zero)
+    start_vt: f64,
+    /// virtual completion time (`start_vt + final_vtime`; unchanged by
+    /// migration — state transfer is instantaneous in virtual time)
+    finish_vt: f64,
+    /// migrations this flight has survived
+    hops: u32,
+    /// the campaign's (precomputed) report
+    report: CampaignReport,
+}
+
+struct Shard {
+    state: ShardState,
+    adm: AdmissionQueue<usize>,
+    running: Vec<Flight>,
+    stats: ShardStats,
+}
+
+/// The sharded front door. Construct with a [`ShardConfig`], then drive
+/// a trace through [`ShardedService::replay`].
+pub struct ShardedService {
+    cfg: ShardConfig,
+}
+
+impl ShardedService {
+    /// Build a cluster per `cfg` (shards start [`ShardState::Up`]).
+    pub fn new(cfg: ShardConfig) -> ShardedService {
+        assert!(cfg.shards >= 1, "a cluster needs at least one shard");
+        assert!(cfg.per_shard.max_in_flight >= 1, "shards need at least one server");
+        ShardedService { cfg }
+    }
+
+    /// Replay `trace` through the sharded front door in pure virtual
+    /// time, applying `plan`'s drains/kills as they come due. Campaign
+    /// reports are precomputed in parallel (they are pure functions of
+    /// their requests given the fresh engine stacks `engines_for`
+    /// supplies); admission, routing, migration, and completion
+    /// bookkeeping then run deterministically. See the module docs for
+    /// the event-ordering and migration contracts.
+    pub fn replay(
+        self,
+        trace: &[TimedRequest],
+        plan: &ShardPlan,
+        pool: &Arc<ThreadPool>,
+        engines_for: impl Fn(&CampaignRequest) -> Arc<Engines> + Sync,
+    ) -> ClusterSnapshot {
+        let cfg = &self.cfg;
+        for e in plan.events() {
+            assert!(e.op.shard() < cfg.shards, "shard plan names a shard beyond the cluster");
+        }
+        // Reports are order-independent pure functions of their
+        // requests, so compute them all up front on the work-stealing
+        // executor. (Requests that end up rejected or shed waste their
+        // precompute — the replay trades that for parallelism.)
+        let requests: Vec<CampaignRequest> = trace.iter().map(|t| t.request.clone()).collect();
+        let mut reports: Vec<Option<CampaignReport>> =
+            run_indexed_tasks(requests, default_drivers(), |req| {
+                let engines = engines_for(&req);
+                Some(run_campaign_request(req, engines, pool))
+            });
+        let durations: Vec<f64> = trace.iter().map(|t| t.request.config.duration_s).collect();
+
+        let mut shards: Vec<Shard> = (0..cfg.shards)
+            .map(|_| Shard {
+                state: ShardState::Up,
+                adm: AdmissionQueue::new(AdmissionConfig {
+                    bound: cfg.per_shard.queue_bound,
+                    shed: cfg.per_shard.shed,
+                    tenant_quota: cfg.per_shard.tenant_quota,
+                }),
+                running: Vec::new(),
+                stats: ShardStats::default(),
+            })
+            .collect();
+
+        let mut agg = TraceStats::default();
+        let mut routed_to: Vec<Option<usize>> = vec![None; trace.len()];
+        let mut hashes: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut migrations = 0u64;
+        let mut rebalance_migrations = 0u64;
+        let mut drain_migrations = 0u64;
+        let mut failover_migrations = 0u64;
+        let mut shard_faults = 0u64;
+        let mut max_hops_seen = 0u32;
+
+        let mut now = 0.0f64;
+        let mut next_arrival = 0usize;
+        let mut next_op = 0usize;
+
+        loop {
+            // earliest completion across shards, ties by (shard, idx)
+            let mut best: Option<(f64, usize, usize, usize)> = None; // (finish, shard, idx, pos)
+            for (s, sh) in shards.iter().enumerate() {
+                for (p, fl) in sh.running.iter().enumerate() {
+                    let replace = match best {
+                        None => true,
+                        Some((bf, bs, bi, _)) => {
+                            fl.finish_vt.total_cmp(&bf).then(s.cmp(&bs)).then(fl.idx.cmp(&bi))
+                                == Ordering::Less
+                        }
+                    };
+                    if replace {
+                        best = Some((fl.finish_vt, s, fl.idx, p));
+                    }
+                }
+            }
+            let op_at = plan.events().get(next_op).map(|e| e.at_vt);
+            let arrival_at = trace.get(next_arrival).map(|t| t.at_vt);
+            if best.is_none() && op_at.is_none() && arrival_at.is_none() {
+                break;
+            }
+            let f_at = best.map_or(f64::INFINITY, |(f, ..)| f);
+            let op_t = op_at.unwrap_or(f64::INFINITY);
+            let arr_t = arrival_at.unwrap_or(f64::INFINITY);
+
+            if best.is_some() && f_at <= op_t && f_at <= arr_t {
+                // completions settle first at exact ties (matching the
+                // scheduler's completions-before-dispatch rule)
+                let (f, s, _, p) = best.expect("completion branch has a flight");
+                let fl = shards[s].running.remove(p);
+                now = f;
+                agg.completed += 1;
+                agg.turnarounds.push(fl.finish_vt - fl.arrival_vt);
+                shards[s].stats.completed += 1;
+                hashes.insert(fl.idx, report_hash(&fl.report));
+            } else if op_at.is_some() && op_t <= arr_t {
+                // shard ops settle before arrivals at exact ties, so an
+                // arrival never routes to a shard that is already down
+                let ev = plan.events()[next_op];
+                next_op += 1;
+                now = ev.at_vt;
+                let s = ev.op.shard();
+                if shards[s].state != ShardState::Up {
+                    continue; // already drained/killed: nothing to do
+                }
+                let is_kill = matches!(ev.op, ShardOp::Kill { .. });
+                shards[s].state = if is_kill { ShardState::Dead } else { ShardState::Draining };
+                if is_kill {
+                    shard_faults += 1;
+                }
+                // evacuate the queue: deadline-expired pops shed
+                // honestly, survivors re-route through the router
+                // (receiving admission applies — a refusal there is an
+                // overload drop, not a front-door rejection)
+                let mut survivors = Vec::new();
+                while let Some(popped) = shards[s].adm.pop() {
+                    match popped {
+                        Popped::Shed { .. } => {
+                            agg.shed += 1;
+                            shards[s].stats.shed += 1;
+                        }
+                        Popped::Run { item, .. } => survivors.push(item),
+                    }
+                }
+                for idx in survivors {
+                    let accepting = accepting_ids(&shards);
+                    if accepting.is_empty() {
+                        agg.shed += 1;
+                        shards[s].stats.shed += 1;
+                        continue;
+                    }
+                    let loads = load_scores(&shards, &durations, now);
+                    let req = &trace[idx].request;
+                    let to = cfg.router.pick(&req.tenant, &accepting, &loads);
+                    let deadline = req.deadline.map(|slack| shards[to].adm.clock() + slack);
+                    let pushed = shards[to].adm.try_push(
+                        &req.tenant,
+                        req.class,
+                        deadline,
+                        req.config.duration_s,
+                        idx,
+                    );
+                    match pushed {
+                        Ok(admitted) => {
+                            if admitted.shed.is_some() {
+                                agg.shed += 1;
+                                shards[to].stats.shed += 1;
+                            }
+                        }
+                        Err(_) => {
+                            agg.shed += 1;
+                            shards[to].stats.shed += 1;
+                        }
+                    }
+                }
+                // migrate the running flights, lowest trace index first
+                // (receivers may overcommit: the in-flight bound gates
+                // fresh dispatches only, so failover is lossless)
+                while let Some(p) = lowest_idx_pos(&shards[s].running) {
+                    let fl = shards[s].running.remove(p);
+                    let accepting = accepting_ids(&shards);
+                    if accepting.is_empty() {
+                        // cluster-wide outage: the work is lost
+                        agg.shed += 1;
+                        shards[s].stats.shed += 1;
+                        continue;
+                    }
+                    let loads = load_scores(&shards, &durations, now);
+                    let to = cfg.router.pick(&trace[fl.idx].request.tenant, &accepting, &loads);
+                    let hops =
+                        migrate(fl, s, to, now, cfg, trace, pool, &engines_for, &mut shards);
+                    max_hops_seen = max_hops_seen.max(hops);
+                    migrations += 1;
+                    if is_kill {
+                        failover_migrations += 1;
+                    } else {
+                        drain_migrations += 1;
+                    }
+                }
+            } else {
+                let tr = &trace[next_arrival];
+                let idx = next_arrival;
+                next_arrival += 1;
+                now = tr.at_vt;
+                agg.submitted += 1;
+                let accepting = accepting_ids(&shards);
+                if accepting.is_empty() {
+                    agg.rejected += 1;
+                    *agg.rejected_by.entry("no-shard").or_insert(0) += 1;
+                } else {
+                    let loads = load_scores(&shards, &durations, now);
+                    let req = &tr.request;
+                    let s = cfg.router.pick(&req.tenant, &accepting, &loads);
+                    routed_to[idx] = Some(s);
+                    shards[s].stats.routed += 1;
+                    let deadline = req.deadline.map(|slack| shards[s].adm.clock() + slack);
+                    let pushed = shards[s].adm.try_push(
+                        &req.tenant,
+                        req.class,
+                        deadline,
+                        req.config.duration_s,
+                        idx,
+                    );
+                    match pushed {
+                        Ok(admitted) => {
+                            if admitted.shed.is_some() {
+                                agg.shed += 1;
+                                shards[s].stats.shed += 1;
+                            }
+                        }
+                        Err(reason) => {
+                            agg.rejected += 1;
+                            shards[s].stats.rejected += 1;
+                            let label = match reason {
+                                RejectReason::QueueFull { .. } => "queue-full",
+                                RejectReason::TenantOverQuota { .. } => "tenant-over-quota",
+                            };
+                            *agg.rejected_by.entry(label).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+
+            // fill free servers from each shard's queue in policy order
+            for sh in shards.iter_mut() {
+                if sh.state != ShardState::Up {
+                    continue;
+                }
+                while sh.running.len() < cfg.per_shard.max_in_flight {
+                    match sh.adm.pop() {
+                        None => break,
+                        Some(Popped::Shed { .. }) => {
+                            agg.shed += 1;
+                            sh.stats.shed += 1;
+                        }
+                        Some(Popped::Run { item: idx, .. }) => {
+                            let report = reports[idx]
+                                .take()
+                                .expect("each trace entry dispatches at most once");
+                            account_dispatch(&mut agg, &mut sh.stats, &report, trace, idx);
+                            sh.running.push(Flight {
+                                idx,
+                                arrival_vt: trace[idx].at_vt,
+                                start_vt: now,
+                                finish_vt: now + report.final_vtime,
+                                hops: 0,
+                                report,
+                            });
+                            sh.stats.peak_running = sh.stats.peak_running.max(sh.running.len());
+                        }
+                    }
+                }
+            }
+
+            // elastic rebalancing: migrate the longest-remaining flight
+            // off the hottest shard while the spread exceeds the
+            // threshold (bounded passes per settled instant)
+            if let Some(threshold) = cfg.rebalance_threshold_s {
+                for _ in 0..REBALANCE_PASSES_PER_INSTANT {
+                    let loads = load_scores(&shards, &durations, now);
+                    let up: Vec<usize> = (0..shards.len())
+                        .filter(|&s| shards[s].state == ShardState::Up)
+                        .collect();
+                    if up.len() < 2 {
+                        break;
+                    }
+                    // hot = max load (tie: lowest id); cold = min load
+                    // with a free server, excluding hot (tie: lowest id)
+                    let hot = *up
+                        .iter()
+                        .max_by(|&&a, &&b| loads[a].total_cmp(&loads[b]).then(b.cmp(&a)))
+                        .expect("up has at least two shards");
+                    let cold = up
+                        .iter()
+                        .copied()
+                        .filter(|&s| {
+                            s != hot && shards[s].running.len() < cfg.per_shard.max_in_flight
+                        })
+                        .min_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)));
+                    let Some(cold) = cold else { break };
+                    if loads[hot] - loads[cold] <= threshold {
+                        break;
+                    }
+                    // candidate: largest remaining virtual time (tie:
+                    // lowest trace idx), under the rebalance hop cap
+                    let cand = shards[hot]
+                        .running
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, fl)| fl.hops < cfg.max_hops && fl.finish_vt > now)
+                        .max_by(|(_, a), (_, b)| {
+                            (a.finish_vt - now)
+                                .total_cmp(&(b.finish_vt - now))
+                                .then(b.idx.cmp(&a.idx))
+                        })
+                        .map(|(p, _)| p);
+                    let Some(p) = cand else { break };
+                    let fl = shards[hot].running.remove(p);
+                    let hops =
+                        migrate(fl, hot, cold, now, cfg, trace, pool, &engines_for, &mut shards);
+                    max_hops_seen = max_hops_seen.max(hops);
+                    migrations += 1;
+                    rebalance_migrations += 1;
+                }
+            }
+        }
+
+        agg.final_vt = now;
+        let overcommit_peak = shards
+            .iter()
+            .map(|sh| sh.stats.peak_running.saturating_sub(cfg.per_shard.max_in_flight))
+            .max()
+            .unwrap_or(0);
+        ClusterSnapshot {
+            agg,
+            per_shard: shards.into_iter().map(|sh| sh.stats).collect(),
+            routed_to,
+            migrations,
+            rebalance_migrations,
+            drain_migrations,
+            failover_migrations,
+            shard_faults,
+            max_hops_seen,
+            overcommit_peak,
+            reports_digest: digest_reports(hashes.values().copied()),
+        }
+    }
+}
+
+/// Convenience wrapper: build the cluster and replay in one call.
+pub fn replay_sharded(
+    trace: &[TimedRequest],
+    cfg: &ShardConfig,
+    plan: &ShardPlan,
+    pool: &Arc<ThreadPool>,
+    engines_for: impl Fn(&CampaignRequest) -> Arc<Engines> + Sync,
+) -> ClusterSnapshot {
+    ShardedService::new(cfg.clone()).replay(trace, plan, pool, engines_for)
+}
+
+/// Shard ids currently accepting work ([`ShardState::Up`]), ascending.
+fn accepting_ids(shards: &[Shard]) -> Vec<usize> {
+    (0..shards.len()).filter(|&s| shards[s].state == ShardState::Up).collect()
+}
+
+/// Load score per shard id: running remaining virtual seconds + queued
+/// virtual seconds.
+fn load_scores(shards: &[Shard], durations: &[f64], now: f64) -> Vec<f64> {
+    shards
+        .iter()
+        .map(|sh| {
+            let running: f64 = sh.running.iter().map(|fl| (fl.finish_vt - now).max(0.0)).sum();
+            let queued: f64 = sh.adm.iter().map(|(_, &idx)| durations[idx]).sum();
+            running + queued
+        })
+        .collect()
+}
+
+fn lowest_idx_pos(running: &[Flight]) -> Option<usize> {
+    running.iter().enumerate().min_by_key(|(_, fl)| fl.idx).map(|(p, _)| p)
+}
+
+/// Accumulate the dispatch-time counters [`TraceStats`] shares with
+/// [`crate::sim::service::replay_trace`] (eviction/redispatch/waste,
+/// busy integral, tasks done).
+fn account_dispatch(
+    agg: &mut TraceStats,
+    stats: &mut ShardStats,
+    report: &CampaignReport,
+    trace: &[TimedRequest],
+    idx: usize,
+) {
+    agg.evictions += report.preemption.evictions;
+    agg.redispatches += report.preemption.redispatches;
+    agg.wasted_busy_s += report.preemption.wasted_busy_s;
+    let lay = layout(trace[idx].request.config.nodes);
+    let mut busy = 0.0;
+    for (k, u) in &report.utilization_avg {
+        let slots = match k {
+            WorkerKind::Generator => lay.generator_slots,
+            WorkerKind::Validate => lay.validate_slots,
+            WorkerKind::Cpu => lay.cpu_slots,
+            WorkerKind::Optimize => lay.optimize_slots,
+            WorkerKind::Trainer => lay.trainer_slots,
+        };
+        busy += u * slots as f64 * report.final_vtime;
+    }
+    agg.busy_integral_s += busy;
+    stats.busy_integral_s += busy;
+    let tasks: u64 = report.tasks_done.values().map(|&n| n as u64).sum();
+    agg.tasks_done += tasks;
+    stats.tasks_done += tasks;
+}
+
+/// Move `fl` from shard `from` to shard `to` at virtual time `now`,
+/// bumping its hop count and the per-shard counters. With
+/// `cfg.verify_migrations` on, the move performs the real barrier
+/// protocol (see [`ShardConfig::verify_migrations`]). Returns the
+/// flight's new hop count.
+#[allow(clippy::too_many_arguments)]
+fn migrate(
+    mut fl: Flight,
+    from: usize,
+    to: usize,
+    now: f64,
+    cfg: &ShardConfig,
+    trace: &[TimedRequest],
+    pool: &Arc<ThreadPool>,
+    engines_for: &(impl Fn(&CampaignRequest) -> Arc<Engines> + Sync),
+    shards: &mut [Shard],
+) -> u32 {
+    fl.hops += 1;
+    if cfg.verify_migrations {
+        verify_migration(&fl, from, now, trace, pool, engines_for);
+    }
+    shards[from].stats.migrations_out += 1;
+    shards[to].stats.migrations_in += 1;
+    let hops = fl.hops;
+    shards[to].running.push(fl);
+    let peak = shards[to].running.len();
+    shards[to].stats.peak_running = shards[to].stats.peak_running.max(peak);
+    hops
+}
+
+/// The migration barrier protocol, executed for real: checkpoint the
+/// campaign at its local barrier (`now − start_vt`), stamp the
+/// [`MigrationMeta`], serialize to the wire string, parse it back,
+/// resume to completion on a fresh engine stack, and assert the
+/// canonical report byte-matches the never-migrated one. Panics (fails
+/// the replay) on any deviation — migration must be invisible.
+fn verify_migration(
+    fl: &Flight,
+    from: usize,
+    now: f64,
+    trace: &[TimedRequest],
+    pool: &Arc<ThreadPool>,
+    engines_for: &(impl Fn(&CampaignRequest) -> Arc<Engines> + Sync),
+) {
+    let req = trace[fl.idx].request.clone();
+    let barrier = (now - fl.start_vt).max(0.0);
+    let expect = canonical_report_json(&fl.report).to_string();
+    match run_request_to_barrier(req.clone(), engines_for(&req), pool, barrier) {
+        CampaignRunOutcome::Done(report) => {
+            // the campaign drained at/before the barrier: nothing to
+            // transfer, but the rerun must still match
+            let got = canonical_report_json(&report).to_string();
+            assert_eq!(got, expect, "pre-barrier rerun deviated (trace idx {})", fl.idx);
+        }
+        CampaignRunOutcome::Checkpointed(ckpt) => {
+            let mut wire_json = *ckpt;
+            stamp_migration(
+                &mut wire_json,
+                &MigrationMeta { hops: fl.hops, from_shard: Some(from as u64) },
+            )
+            .expect("campaign checkpoint accepts migration metadata");
+            let wire = wire_json.to_string();
+            let parsed = Json::parse(&wire).expect("wire round-trip parses");
+            let meta = migration_meta(&parsed).expect("wire carries migration metadata");
+            assert_eq!(meta.hops, fl.hops, "hop count must survive the wire");
+            let resumed = resume_request(&parsed, engines_for(&req), pool, f64::INFINITY)
+                .expect("wire checkpoint resumes")
+                .report()
+                .expect("resume to infinity completes");
+            let got = canonical_report_json(&resumed).to_string();
+            assert_eq!(
+                got, expect,
+                "migrated campaign deviated from its never-migrated twin (trace idx {})",
+                fl.idx
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::{
+        generate_trace, ArrivalProcess, SizeModel, TenantProfile, WorkloadSpec,
+    };
+    use crate::workflow::launch::build_quick_surrogate_engines;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn shard_plan_round_trips_and_rejects_out_of_order() {
+        let plan = ShardPlan::new().kill_at(40.0, 1).drain_at(10.0, 0);
+        assert_eq!(plan.events()[0].at_vt, 10.0, "plan must sort by time");
+        let text = plan.to_json().to_string();
+        let parsed = ShardPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, plan, "round-trip changed {text}");
+
+        let bad = r#"[{"at_vt":40,"op":"kill","shard":1},{"at_vt":10,"op":"drain","shard":0}]"#;
+        assert!(ShardPlan::from_json(&Json::parse(bad).unwrap()).is_err());
+        let unknown = r#"[{"at_vt":1,"op":"pause","shard":0}]"#;
+        assert!(ShardPlan::from_json(&Json::parse(unknown).unwrap()).is_err());
+    }
+
+    #[test]
+    fn router_is_deterministic_and_breaks_ties_by_id() {
+        let accepting = [0usize, 1, 2, 3];
+        let a = Router::TenantHash.pick("alice", &accepting, &[]);
+        let b = Router::TenantHash.pick("alice", &accepting, &[]);
+        assert_eq!(a, b, "tenant-hash must be stable");
+        // equal loads: least-loaded ties to the lowest shard id
+        let loads = [5.0, 5.0, 5.0, 5.0];
+        assert_eq!(Router::LeastLoaded.pick("anyone", &accepting, &loads), 0);
+        let loads = [5.0, 1.0, 1.0, 5.0];
+        assert_eq!(Router::LeastLoaded.pick("anyone", &accepting, &loads), 1);
+        // a drained shard disappears from the accepting set
+        assert_eq!(Router::LeastLoaded.pick("anyone", &[0, 3], &[5.0, 0.0, 0.0, 4.0]), 3);
+    }
+
+    #[test]
+    fn digest_is_order_sensitive_and_stable() {
+        let a = digest_reports([1u64, 2, 3]);
+        let b = digest_reports([1u64, 2, 3]);
+        let c = digest_reports([3u64, 2, 1]);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "the digest must be order-sensitive (trace order)");
+    }
+
+    fn tiny_spec(count: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Poisson { rate_per_ks: 30.0 },
+            sizes: SizeModel::Fixed { duration_s: 120.0 },
+            tenants: vec![TenantProfile::new("solo")],
+            count,
+            nodes: 8,
+            util_sample_dt: 60.0,
+        }
+    }
+
+    #[test]
+    fn single_shard_replay_completes_and_is_bit_identical() {
+        let trace = generate_trace(&tiny_spec(3), 11);
+        let cfg = ShardConfig::new(1, ServiceConfig::new(2));
+        let pool = Arc::new(ThreadPool::new(2));
+        let run = || {
+            replay_sharded(&trace, &cfg, &ShardPlan::new(), &pool, |_| {
+                build_quick_surrogate_engines()
+            })
+        };
+        let a = run();
+        assert_eq!(a.agg.submitted, 3);
+        assert_eq!(a.agg.completed, 3);
+        assert_eq!(a.agg.rejected, 0);
+        assert_eq!(a.migrations, 0);
+        assert!(a.agg.tasks_done > 0);
+        assert_eq!(a.per_shard[0].completed, 3);
+        let b = run();
+        assert_eq!(a.reports_digest, b.reports_digest);
+        assert_eq!(a.agg.turnarounds, b.agg.turnarounds, "replay must be bit-identical");
+        assert_eq!(a.agg.final_vt.to_bits(), b.agg.final_vt.to_bits());
+        assert_eq!(a.routed_to, b.routed_to);
+    }
+}

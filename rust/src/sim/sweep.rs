@@ -61,31 +61,41 @@ pub fn run_sweep(items: Vec<SweepItem>, pool: &Arc<ThreadPool>) -> Vec<CampaignR
     run_sweep_with(items, pool, default_drivers())
 }
 
-/// [`run_sweep`] with an explicit driver-thread count (≥ 1; also capped
-/// at the item count). Exposed for benches and tests that need a fixed
-/// driver pool regardless of host parallelism.
-pub fn run_sweep_with(
-    items: Vec<SweepItem>,
-    pool: &Arc<ThreadPool>,
-    drivers: usize,
-) -> Vec<CampaignReport> {
+/// Run `f` over every item on `drivers` work-stealing driver threads
+/// and return the results **in input order**. This is the generic core
+/// of the sweep executor: items are dealt round-robin into per-driver
+/// deques, each driver pops its own deque from the front and steals
+/// from a neighbour's back when it runs dry, and each result lands in
+/// the slot of its item's original index. [`run_sweep_with`] and the
+/// sharded replay precompute pass ([`crate::sim::shard`]) both run on
+/// it.
+///
+/// Determinism contract: `f` must be a pure function of the item (plus
+/// shared immutable state), so the result vector is independent of
+/// which driver ran which item and of wallclock interleaving.
+pub fn run_indexed_tasks<T, R, F>(items: Vec<T>, drivers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let drivers = drivers.max(1).min(n);
     // deal items round-robin; each deque entry remembers its input index
-    let queues: Vec<Mutex<VecDeque<(usize, SweepItem)>>> =
+    let queues: Vec<Mutex<VecDeque<(usize, T)>>> =
         (0..drivers).map(|_| Mutex::new(VecDeque::new())).collect();
     for (i, item) in items.into_iter().enumerate() {
         queues[i % drivers].lock().unwrap().push_back((i, item));
     }
-    let results: Vec<Mutex<Option<CampaignReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let f = &f;
     std::thread::scope(|s| {
         for w in 0..drivers {
             let queues = &queues;
             let results = &results;
-            let pool = Arc::clone(pool);
             s.spawn(move || loop {
                 // own deque first (front = FIFO), then steal from a
                 // neighbour's back; no new items ever arrive, so an
@@ -95,15 +105,26 @@ pub fn run_sweep_with(
                         .find_map(|off| queues[(w + off) % drivers].lock().unwrap().pop_back())
                 });
                 let Some((idx, item)) = job else { break };
-                let report = run_campaign_on(item.config, item.engines, &pool);
-                *results[idx].lock().unwrap() = Some(report);
+                *results[idx].lock().unwrap() = Some(f(item));
             });
         }
     });
     results
         .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("every sweep item produces a report"))
+        .map(|slot| slot.into_inner().unwrap().expect("every task produces a result"))
         .collect()
+}
+
+/// [`run_sweep`] with an explicit driver-thread count (≥ 1; also capped
+/// at the item count). Exposed for benches and tests that need a fixed
+/// driver pool regardless of host parallelism.
+pub fn run_sweep_with(
+    items: Vec<SweepItem>,
+    pool: &Arc<ThreadPool>,
+    drivers: usize,
+) -> Vec<CampaignReport> {
+    let pool = Arc::clone(pool);
+    run_indexed_tasks(items, drivers, move |item| run_campaign_on(item.config, item.engines, &pool))
 }
 
 /// Convenience for node-count sweeps (Fig. 5): one campaign per node
@@ -158,6 +179,18 @@ mod tests {
             threads: 0,
             util_sample_dt: 120.0,
         }
+    }
+
+    /// The generic executor keeps input order and visits every item
+    /// exactly once, even with far more items than drivers.
+    #[test]
+    fn indexed_tasks_preserve_order_and_coverage() {
+        let out = run_indexed_tasks((0..100u64).collect(), 3, |x| x * x);
+        assert_eq!(out.len(), 100);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * (i as u64));
+        }
+        assert!(run_indexed_tasks(Vec::<u64>::new(), 4, |x| x).is_empty());
     }
 
     #[test]

@@ -74,6 +74,27 @@ impl ArrivalProcess {
             ArrivalProcess::HeavyTail { .. } => "heavy-tail",
         }
     }
+
+    /// The same process with its arrival **rate multiplied by `f`**
+    /// (burst/diurnal phase structure unchanged; heavy-tail mean gap
+    /// divided by `f`). Weak-scaling sweeps use this to grow offered
+    /// load proportionally with shard count.
+    pub fn scaled(self, f: f64) -> ArrivalProcess {
+        match self {
+            ArrivalProcess::Poisson { rate_per_ks } => {
+                ArrivalProcess::Poisson { rate_per_ks: rate_per_ks * f }
+            }
+            ArrivalProcess::Diurnal { base_per_ks, amplitude, period_s } => {
+                ArrivalProcess::Diurnal { base_per_ks: base_per_ks * f, amplitude, period_s }
+            }
+            ArrivalProcess::Bursty { on_s, off_s, rate_per_ks } => {
+                ArrivalProcess::Bursty { on_s, off_s, rate_per_ks: rate_per_ks * f }
+            }
+            ArrivalProcess::HeavyTail { mean_gap_s, alpha } => {
+                ArrivalProcess::HeavyTail { mean_gap_s: mean_gap_s / f.max(1e-12), alpha }
+            }
+        }
+    }
 }
 
 /// An exponential gap at `rate` events/second (inverse-CDF sampling;
@@ -225,6 +246,21 @@ pub struct WorkloadSpec {
     pub nodes: usize,
     /// utilization sampling cadence for every generated campaign
     pub util_sample_dt: f64,
+}
+
+impl WorkloadSpec {
+    /// The spec scaled to an `n`-shard cluster: `n`× the arrival rate
+    /// and `n`× the request count over the same horizon — the classic
+    /// **weak-scaling** configuration (offered load per shard held
+    /// constant). The fig5 "cluster of clusters" section sweeps shard
+    /// count with this.
+    pub fn scaled(&self, n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals: self.arrivals.scaled(n as f64),
+            count: self.count * n,
+            ..self.clone()
+        }
+    }
 }
 
 /// One trace entry: a request and its virtual arrival offset.
@@ -430,6 +466,34 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), trace.len());
+    }
+
+    /// Weak scaling: a 4× spec generates 4× the requests over a
+    /// similar horizon (rate and count both grew 4×), for every
+    /// arrival process.
+    #[test]
+    fn scaled_spec_holds_the_horizon_roughly_fixed() {
+        for arrivals in ALL_ARRIVALS {
+            let base = spec(arrivals);
+            let scaled = base.scaled(4);
+            assert_eq!(scaled.count, base.count * 4);
+            assert_eq!(scaled.sizes, base.sizes);
+            let t1 = generate_trace(&base, 11);
+            let t4 = generate_trace(&scaled, 11);
+            assert_eq!(t4.len(), 4 * t1.len());
+            let h1 = t1.last().unwrap().at_vt;
+            let h4 = t4.last().unwrap().at_vt;
+            // 4× rate × 4× count → horizons within a loose band of each
+            // other (stochastic, but deterministic given the seed)
+            assert!(
+                h4 > 0.2 * h1 && h4 < 5.0 * h1,
+                "{}: horizon drifted {h1} -> {h4}",
+                arrivals.label()
+            );
+        }
+        // identity scale is a no-op
+        let base = spec(ALL_ARRIVALS[0]);
+        assert_eq!(base.scaled(1), base);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub const GATED_METRICS: &[(&str, f64)] = &[
     ("tasks_per_sec", 0.8),
     ("preempt_cancels_per_sec", 0.7),
     ("checkpoint_bytes_per_sec", 0.7),
+    ("shard_migrations_per_sec", 0.7),
 ];
 
 /// One gated metric compared against the baseline.

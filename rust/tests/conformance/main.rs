@@ -8,7 +8,11 @@
 //! and a fault axis (none vs a kill/restore churn plan), plus two
 //! checkpoint-kill-restore scenarios whose campaigns are serialized
 //! through a checkpoint string mid-fault-window and must resume
-//! byte-identically. Every scenario:
+//! byte-identically. A second, **sharded** table replays traces through
+//! [`replay_sharded`] (2-shard and 4-shard clusters, migration churn on
+//! and off, drain and kill-mid-campaign plans); the kill scenario's
+//! cluster scorecard must additionally byte-match an unsharded
+//! [`replay_trace`] twin of the same trace. Every scenario:
 //!
 //! 1. generates its trace from a pinned seed ([`generate_trace`] is a
 //!    pure function of `(spec, seed)`),
@@ -33,10 +37,14 @@ use std::sync::Arc;
 use mofa::genai::generator::SurrogateGenerator;
 use mofa::genai::trainer::SurrogateTrainer;
 use mofa::sim::checkpoint::canonical_report_json;
+use mofa::sim::shard::{
+    digest_reports, replay_sharded, report_hash, Router, ShardConfig, ShardPlan,
+};
 use mofa::sim::{
-    generate_trace, replay_trace, run_request_with_faults, run_request_with_faults_checkpointed,
-    ArrivalProcess, CampaignRequest, FaultPlan, PolicyKind, PriorityClasses, ServiceConfig,
-    ShedPolicy, SizeModel, TenantProfile, TraceStats, WorkloadSpec,
+    generate_trace, replay_trace, run_campaign_request, run_request_with_faults,
+    run_request_with_faults_checkpointed, ArrivalProcess, CampaignRequest, FaultPlan, PolicyKind,
+    PriorityClasses, ServiceConfig, ShedPolicy, SizeModel, TenantProfile, TraceStats,
+    WorkloadSpec,
 };
 use mofa::util::json::Json;
 use mofa::util::stats;
@@ -228,18 +236,20 @@ fn run_one(
     resumed
 }
 
-/// Reduce a replay to the pinned scorecard. Everything in here is
-/// virtual-time-pure; wallclock must never leak in.
-fn scorecard(sc: &Scenario, stats: &TraceStats) -> Json {
+/// The scorecard fields shared by the unsharded and sharded tables (a
+/// sharded cluster's aggregate [`TraceStats`] reduces exactly like a
+/// single front door's — the kill-twin gate depends on that).
+/// Everything in here is virtual-time-pure; wallclock must never leak
+/// in.
+fn scorecard_fields(name: &str, stats: &TraceStats) -> Vec<(&'static str, Json)> {
     let p50 = stats::quantile(&stats.turnarounds, 0.5);
     let p99 = stats::quantile(&stats.turnarounds, 0.99);
     let violations = stats.turnarounds.iter().filter(|&&t| t > SLO_S).count();
     let rejected_by = Json::obj(
         stats.rejected_by.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect(),
     );
-    Json::obj(vec![
-        ("schema", Json::Str("conformance/v1".into())),
-        ("scenario", Json::Str(sc.name.clone())),
+    vec![
+        ("scenario", Json::Str(name.to_string())),
         ("submitted", Json::Num(stats.submitted as f64)),
         ("rejected", Json::Num(stats.rejected as f64)),
         ("rejected_by", rejected_by),
@@ -255,7 +265,14 @@ fn scorecard(sc: &Scenario, stats: &TraceStats) -> Json {
         ("busy_integral_s", Json::Num(stats.busy_integral_s)),
         ("tasks_done", Json::Num(stats.tasks_done as f64)),
         ("final_vt", Json::Num(stats.final_vt)),
-    ])
+    ]
+}
+
+/// Reduce a replay to the pinned scorecard.
+fn scorecard(sc: &Scenario, stats: &TraceStats) -> Json {
+    let mut fields = vec![("schema", Json::Str("conformance/v1".into()))];
+    fields.extend(scorecard_fields(&sc.name, stats));
+    Json::obj(fields)
 }
 
 fn run_scenario(sc: &Scenario, pool: &Arc<ThreadPool>) -> String {
@@ -263,6 +280,126 @@ fn run_scenario(sc: &Scenario, pool: &Arc<ThreadPool>) -> String {
     let engines = quick_engines();
     let stats = replay_trace(&trace, &sc.cfg, |req| run_one(sc, req, &engines, pool));
     scorecard(sc, &stats).to_string() + "\n"
+}
+
+/// One sharded scenario: a trace replayed through a [`ShardConfig`]
+/// cluster under a [`ShardPlan`] of drains/kills. Migration
+/// verification stays ON, so every migration that fires performs the
+/// full checkpoint-wire-resume cycle and byte-asserts against its
+/// never-migrated twin inside the replay.
+struct ShardScenario {
+    name: String,
+    spec: WorkloadSpec,
+    cfg: ShardConfig,
+    plan: ShardPlan,
+    /// byte-match the shared scorecard fields against an unsharded
+    /// [`replay_trace`] of the same trace with the same total capacity
+    /// (requires deadline-free tenants + ample capacity, so dispatch is
+    /// immediate on both sides)
+    twin: bool,
+    seed: u64,
+}
+
+fn shard_scenarios() -> Vec<ShardScenario> {
+    let duo = vec![TenantProfile::new("alice"), TenantProfile::new("bob")];
+    let spec = |count: usize| WorkloadSpec {
+        arrivals: ArrivalProcess::Poisson { rate_per_ks: 40.0 },
+        sizes: SizeModel::Fixed { duration_s: 150.0 },
+        tenants: duo.clone(),
+        count,
+        nodes: 8,
+        util_sample_dt: 30.0,
+    };
+    vec![
+        // baseline cluster: sticky routing, no churn, no migrations
+        ShardScenario {
+            name: "sharded-2-tenant-hash".into(),
+            spec: spec(6),
+            cfg: ShardConfig::new(2, ServiceConfig::new(2).queue_bound(3)),
+            plan: ShardPlan::new(),
+            twin: false,
+            seed: 3000,
+        },
+        // migration churn ON: least-loaded routing with a hair-trigger
+        // rebalance threshold; every migration is byte-verified in-replay
+        ShardScenario {
+            name: "sharded-4-least-loaded-rebalance".into(),
+            spec: spec(10),
+            cfg: ShardConfig::new(4, ServiceConfig::new(1).queue_bound(4))
+                .router(Router::LeastLoaded)
+                .rebalance(30.0),
+            plan: ShardPlan::new(),
+            twin: false,
+            seed: 3001,
+        },
+        // maintenance drain mid-trace: queue evacuation + flight handoff
+        ShardScenario {
+            name: "sharded-2-drain".into(),
+            spec: spec(8),
+            cfg: ShardConfig::new(2, ServiceConfig::new(2).queue_bound(4)),
+            plan: ShardPlan::new().drain_at(200.0, 1),
+            twin: false,
+            seed: 3002,
+        },
+        // kill-shard-mid-campaign: failover must be lossless and the
+        // cluster scorecard must byte-match the unsharded twin
+        ShardScenario {
+            name: "sharded-4-kill-twin".into(),
+            spec: spec(8),
+            cfg: ShardConfig::new(4, ServiceConfig::new(4).queue_bound(64)),
+            plan: ShardPlan::new().kill_at(200.0, 2),
+            twin: true,
+            seed: 3003,
+        },
+    ]
+}
+
+fn run_shard_scenario(sc: &ShardScenario, pool: &Arc<ThreadPool>) -> String {
+    let trace = generate_trace(&sc.spec, sc.seed);
+    let snap = replay_sharded(&trace, &sc.cfg, &sc.plan, pool, |_| quick_engines());
+    if sc.twin {
+        // unsharded twin: one front door with the cluster's total
+        // capacity over the very same trace
+        let total = sc.cfg.per_shard.max_in_flight * sc.cfg.shards;
+        let twin_cfg = ServiceConfig::new(total).queue_bound(sc.cfg.per_shard.queue_bound);
+        let mut hashes = std::collections::BTreeMap::new();
+        let twin = replay_trace(&trace, &twin_cfg, |req| {
+            let report = run_campaign_request(req.clone(), quick_engines(), pool);
+            hashes.insert(req.config.seed, report_hash(&report));
+            report
+        });
+        let twin_digest = digest_reports(
+            trace.iter().filter_map(|t| hashes.get(&t.request.config.seed)).copied(),
+        );
+        assert_eq!(
+            snap.reports_digest, twin_digest,
+            "{}: sharded reports digest diverged from the unsharded twin",
+            sc.name
+        );
+        let ours = Json::obj(scorecard_fields(&sc.name, &snap.agg)).to_string();
+        let theirs = Json::obj(scorecard_fields(&sc.name, &twin)).to_string();
+        assert_eq!(
+            ours, theirs,
+            "{}: sharded scorecard diverged from the unsharded twin\n{}",
+            sc.name,
+            first_diff(&ours, &theirs)
+        );
+    }
+    let mut fields = vec![("schema", Json::Str("conformance/shard/v1".into()))];
+    fields.extend(scorecard_fields(&sc.name, &snap.agg));
+    fields.extend(vec![
+        ("shards", Json::Num(sc.cfg.shards as f64)),
+        ("router", Json::Str(sc.cfg.router.label().to_string())),
+        ("migrations", Json::Num(snap.migrations as f64)),
+        ("rebalance_migrations", Json::Num(snap.rebalance_migrations as f64)),
+        ("drain_migrations", Json::Num(snap.drain_migrations as f64)),
+        ("failover_migrations", Json::Num(snap.failover_migrations as f64)),
+        ("shard_faults", Json::Num(snap.shard_faults as f64)),
+        ("max_hops_seen", Json::Num(snap.max_hops_seen as f64)),
+        ("overcommit_peak", Json::Num(snap.overcommit_peak as f64)),
+        ("reports_digest", Json::Str(format!("{:016x}", snap.reports_digest))),
+    ]);
+    Json::obj(fields).to_string() + "\n"
 }
 
 /// First byte offset where two strings differ, with context, for
@@ -291,48 +428,54 @@ fn main() {
     let pool = Arc::new(ThreadPool::new(2));
 
     let table = scenarios();
-    eprintln!("== conformance battery: {} scenarios ==", table.len());
+    let shard_table = shard_scenarios();
+    let total = table.len() + shard_table.len();
+    eprintln!("== conformance battery: {total} scenarios ==");
     let mut failures = 0usize;
     let mut unblessed = 0usize;
-    for sc in &table {
+    let mut gate = |name: &str, card: String, again: String| {
         // the determinism gate: two fully independent pipeline runs
-        let card = run_scenario(sc, &pool);
-        let again = run_scenario(sc, &pool);
         if card != again {
             failures += 1;
-            eprintln!("FAIL {}: two runs differ\n{}", sc.name, first_diff(&again, &card));
-            continue;
+            eprintln!("FAIL {name}: two runs differ\n{}", first_diff(&again, &card));
+            return;
         }
-        let golden_path = golden_dir.join(format!("{}.json", sc.name));
+        let golden_path = golden_dir.join(format!("{name}.json"));
         if bless {
             std::fs::create_dir_all(&golden_dir).expect("create golden dir");
             std::fs::write(&golden_path, &card).expect("write golden");
-            eprintln!("BLESS {} -> {}", sc.name, golden_path.display());
-            continue;
+            eprintln!("BLESS {name} -> {}", golden_path.display());
+            return;
         }
         match std::fs::read_to_string(&golden_path) {
-            Ok(want) if want == card => eprintln!("ok   {}", sc.name),
+            Ok(want) if want == card => eprintln!("ok   {name}"),
             Ok(want) => {
                 failures += 1;
-                eprintln!("FAIL {}: golden mismatch\n{}", sc.name, first_diff(&card, &want));
+                eprintln!("FAIL {name}: golden mismatch\n{}", first_diff(&card, &want));
             }
             Err(_) => {
                 unblessed += 1;
                 std::fs::create_dir_all(&out_dir).expect("create scorecard out dir");
-                let out = out_dir.join(format!("{}.json", sc.name));
+                let out = out_dir.join(format!("{name}.json"));
                 std::fs::write(&out, &card).expect("write scorecard");
                 eprintln!(
-                    "??   {}: no golden; scorecard written to {} (bless with MOFA_BLESS=1)",
-                    sc.name,
+                    "??   {name}: no golden; scorecard written to {} (bless with MOFA_BLESS=1)",
                     out.display()
                 );
             }
         }
+    };
+    for sc in &table {
+        let card = run_scenario(sc, &pool);
+        let again = run_scenario(sc, &pool);
+        gate(&sc.name, card, again);
     }
-    eprintln!(
-        "== conformance: {} scenarios, {failures} failed, {unblessed} unblessed ==",
-        table.len()
-    );
+    for sc in &shard_table {
+        let card = run_shard_scenario(sc, &pool);
+        let again = run_shard_scenario(sc, &pool);
+        gate(&sc.name, card, again);
+    }
+    eprintln!("== conformance: {total} scenarios, {failures} failed, {unblessed} unblessed ==");
     if failures > 0 {
         std::process::exit(1);
     }
