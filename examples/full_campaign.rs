@@ -63,10 +63,19 @@
 //! re-executes; canonical reports include the eviction counters). It
 //! applies to the checkpoint/replay flow (the CI determinism gate runs
 //! it) and to `--service` requests; plain sweeps reject it.
+//!
+//! `--adaptive` runs the campaign under the self-tuning policy
+//! ([`mofa::sim::adaptive::AdaptivePolicy`], target-latency controller,
+//! preemption enabled): a controller moves the fair-share weight,
+//! preemption switch, and thrash cap at every virtual-time barrier, and
+//! the controller state rides in the checkpoint (format v5). The CI
+//! determinism gate byte-compares a mid-adaptation checkpoint/resume
+//! against a clean run. Checkpoint/replay flow only.
 
 use std::sync::Arc;
 
 use mofa::hmof::HmofReference;
+use mofa::sim::adaptive::{AdaptiveConfig, ControllerCfg};
 use mofa::sim::admission::ShedPolicy;
 use mofa::sim::checkpoint::{
     canonical_report_json, migration_meta, resume_request, run_request_to_barrier,
@@ -315,11 +324,36 @@ fn take_value(args: &mut Vec<String>, name: &str) -> anyhow::Result<Option<Strin
 struct CheckpointFlow {
     surrogate: bool,
     preempt: bool,
+    adaptive: bool,
     checkpoint_path: Option<String>,
     resume_path: Option<String>,
     barrier_s: Option<f64>,
     migrate_s: Option<f64>,
     canonical_out: Option<String>,
+}
+
+/// The `--adaptive` policy: a hysteresis target-latency controller with
+/// an aggressive 30-minute p99 setpoint and 2-minute barriers, starting
+/// from a half share so escalation is visible within a short campaign.
+fn adaptive_policy_kind() -> PolicyKind {
+    PolicyKind::Adaptive(
+        AdaptiveConfig::new(ControllerCfg::TargetLatency { target_p99_s: 1800.0, band: 0.25 })
+            .interval_s(120.0)
+            .share(2, 4),
+    )
+}
+
+/// Apply `--adaptive` / `--preempt` to a freshly built request
+/// (`--adaptive` wins when both are given: it already runs preemptive).
+fn apply_policy_flags(mut req: CampaignRequest, flow: &CheckpointFlow) -> CampaignRequest {
+    if flow.adaptive {
+        println!("adaptive control loop ON (target-latency controller, preemption enabled)");
+        req = req.policy(adaptive_policy_kind()).preemption(true);
+    } else if flow.preempt {
+        println!("class-based preemption ON (priority policy)");
+        req = req.policy(PolicyKind::Priority(PriorityClasses::default())).preemption(true);
+    }
+    req
 }
 
 fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Result<()> {
@@ -344,13 +378,7 @@ fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Re
         // migration metadata, ship the checkpoint as wire text, parse
         // it back as the "receiver" (fresh engines), and resume to
         // completion — exactly the cycle `sim::shard` runs per hop
-        let mut req = CampaignRequest::new(config);
-        if flow.preempt {
-            println!("class-based preemption ON (priority policy)");
-            req = req
-                .policy(PolicyKind::Priority(PriorityClasses::default()))
-                .preemption(true);
-        }
+        let req = apply_policy_flags(CampaignRequest::new(config), &flow);
         let mut wire = run_request_to_barrier(req, engines, &pool, vt)
             .checkpoint()
             .ok_or_else(|| {
@@ -416,13 +444,7 @@ fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Re
         }
         None => {
             let vt = if flow.checkpoint_path.is_some() { barrier } else { f64::INFINITY };
-            let mut req = CampaignRequest::new(config);
-            if flow.preempt {
-                println!("class-based preemption ON (priority policy)");
-                req = req
-                    .policy(PolicyKind::Priority(PriorityClasses::default()))
-                    .preemption(true);
-            }
+            let req = apply_policy_flags(CampaignRequest::new(config), &flow);
             run_request_to_barrier(req, engines, &pool, vt)
         }
     };
@@ -466,6 +488,7 @@ fn main() -> anyhow::Result<()> {
     // the run through the deterministic single-campaign flow
     let surrogate = take_flag(&mut args, "--surrogate");
     let preempt = take_flag(&mut args, "--preempt");
+    let adaptive = take_flag(&mut args, "--adaptive");
     let checkpoint_path = take_value(&mut args, "--checkpoint")?;
     let resume_path = take_value(&mut args, "--resume")?;
     let barrier_s = match take_value(&mut args, "--barrier")? {
@@ -535,6 +558,7 @@ fn main() -> anyhow::Result<()> {
             CheckpointFlow {
                 surrogate,
                 preempt,
+                adaptive,
                 checkpoint_path,
                 resume_path,
                 barrier_s,
@@ -550,6 +574,13 @@ fn main() -> anyhow::Result<()> {
         anyhow::bail!(
             "--preempt applies to the checkpoint/replay flow or --service requests; \
              plain sweeps run the Thinker policy without task classes"
+        );
+    }
+    if adaptive {
+        anyhow::bail!(
+            "--adaptive applies to the checkpoint/replay flow \
+             (--checkpoint/--resume/--migrate/--canonical-out); plain sweeps and \
+             --service runs pick their own per-request policies"
         );
     }
 

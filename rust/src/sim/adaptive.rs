@@ -1,0 +1,1410 @@
+//! **Adaptive scheduling**: close MOFA's online-learning loop at the
+//! scheduler, not just the generator.
+//!
+//! The paper's central claim is that an online feedback loop steering
+//! the campaign is what makes GenAI + simulation productive at scale —
+//! yet until this module the Thinker only retrained the *generator*
+//! while the scheduler's policies stayed static. [`AdaptivePolicy`] is a
+//! decorator over any inner [`Policy`] that tunes its own scheduling
+//! knobs — fair-share weight, preemption on/off, the preemption thrash
+//! cap, and (advisory) admission queue bound / deadline slack — from
+//! observed per-class turnaround and utilization.
+//!
+//! The design is a **proposer/approver chain** (the `CompositePolicy`
+//! shape from tenor): a [`Controller`] *proposes* a new [`ControlState`]
+//! from the last window of observations, and the policy *approves* it by
+//! clamping every knob into hard bounds ([`ControlLimits`]) — a
+//! runaway controller can never starve a tenant, exceed the scheduler's
+//! [`MAX_PREEMPTIONS`] cap, or unbound the admission queue.
+//!
+//! **Determinism is non-negotiable.** Every control decision fires at a
+//! **virtual-time barrier** (every [`AdaptiveConfig::interval_s`]
+//! virtual seconds — the same between-event points the checkpoint layer
+//! pauses at and [`crate::sim::policy::FairSharePolicy`] re-weights at)
+//! and is a pure function of (controller state, the closed observation
+//! window). The [`BarrierObserver`] window is fed exclusively by the
+//! [`Policy`] hooks — completions, dispatches, evictions, and the
+//! [`Policy::on_util_sample`] tap — all of which fire in an order that
+//! is itself a pure function of the event sequence. No wallclock, no
+//! cross-campaign state. Controller state, the open window, and the
+//! next-barrier cursor all serialize into format-v5 checkpoints
+//! ([`crate::sim::checkpoint`]), so an adapting campaign checkpoints,
+//! resumes, and live-migrates bit-identically (`tests/adaptive.rs`).
+//!
+//! The admission knobs ([`ControlState::queue_bound`],
+//! [`ControlState::deadline_slack_s`]) are *advice*: a campaign has no
+//! admission queue of its own, so front-door drivers read
+//! [`AdaptivePolicy::controls`] at the same barriers and apply them via
+//! [`crate::sim::admission::AdmissionQueue::set_bound`], keeping the
+//! whole loop on one barrier discipline.
+
+use crate::sim::policy::PriorityClasses;
+use crate::sim::scheduler::{Completion, Policy, PreemptCandidate, MAX_PREEMPTIONS};
+use crate::util::json::Json;
+use crate::workflow::resources::WorkerKind;
+use crate::workflow::taskserver::TaskKind;
+use crate::workflow::thinker::TaskRequest;
+
+/// Most turnaround samples a window retains (keep-newest). Bounds both
+/// the per-barrier quantile sort and the checkpoint size; 256 samples
+/// is plenty for a p99 over one control interval.
+pub const TURNAROUND_WINDOW_CAP: usize = 256;
+
+/// Largest fair-share weight move the approver allows per barrier —
+/// bounded adjustments keep the share trajectory smooth even under a
+/// high-gain controller.
+pub const MAX_WEIGHT_STEP: u32 = 2;
+
+/// Largest admission queue bound the approver allows (advice clamp).
+pub const MAX_QUEUE_BOUND: u32 = 64;
+
+/// Deadline-slack advice clamp, virtual seconds.
+pub const MIN_DEADLINE_SLACK_S: f64 = 60.0;
+/// See [`MIN_DEADLINE_SLACK_S`].
+pub const MAX_DEADLINE_SLACK_S: f64 = 86_400.0;
+
+/// Position of a worker kind in [`WorkerKind::ALL`] (quota-table index).
+fn worker_idx(kind: WorkerKind) -> usize {
+    kind.index()
+}
+
+/// The knobs a controller may move. Every field is re-clamped by the
+/// approver ([`ControlLimits`]) before it takes effect, so controllers
+/// can propose freely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlState {
+    /// fair-share weight in effect (1..=`weight_total`)
+    pub weight: u32,
+    /// whether [`Policy::preempt`] may evict running flights
+    pub preemptive: bool,
+    /// per-flight eviction budget this policy respects (1..=
+    /// [`MAX_PREEMPTIONS`]; the scheduler's own cap still applies)
+    pub thrash_cap: u32,
+    /// **advice**: admission queue bound a front door should apply at
+    /// the next barrier (1..=[`MAX_QUEUE_BOUND`])
+    pub queue_bound: u32,
+    /// **advice**: deadline slack (virtual seconds) a front door should
+    /// grant new requests
+    pub deadline_slack_s: f64,
+}
+
+impl ControlState {
+    /// Serialize for checkpoints (format v5 `adaptive.controls`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weight", Json::Num(self.weight as f64)),
+            ("preemptive", Json::Bool(self.preemptive)),
+            ("thrash_cap", Json::Num(self.thrash_cap as f64)),
+            ("queue_bound", Json::Num(self.queue_bound as f64)),
+            ("deadline_slack_s", Json::Num(self.deadline_slack_s)),
+        ])
+    }
+
+    /// Parse the representation written by [`ControlState::to_json`].
+    pub fn from_json(v: &Json) -> Result<ControlState, String> {
+        let num = |key: &str| -> Result<u32, String> {
+            v.req(key)?
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && (1.0..=u32::MAX as f64).contains(n))
+                .ok_or_else(|| format!("controls: '{key}' must be a positive integer"))
+                .map(|n| n as u32)
+        };
+        Ok(ControlState {
+            weight: num("weight")?,
+            preemptive: v
+                .req("preemptive")?
+                .as_bool()
+                .ok_or_else(|| "controls: 'preemptive' must be a bool".to_string())?,
+            thrash_cap: num("thrash_cap")?,
+            queue_bound: num("queue_bound")?,
+            deadline_slack_s: v
+                .req("deadline_slack_s")?
+                .as_f64()
+                .filter(|s| s.is_finite() && *s >= 0.0)
+                .ok_or_else(|| "controls: bad 'deadline_slack_s'".to_string())?,
+        })
+    }
+}
+
+/// Hard bounds the approver clamps every proposal into. Derived from the
+/// [`AdaptiveConfig`]; controllers receive them so ladder-style
+/// escalation (e.g. [`TargetLatencyController`]) knows when a knob is
+/// saturated.
+#[derive(Clone, Copy, Debug)]
+pub struct ControlLimits {
+    /// fair-share weight ceiling (the tenant's `weight_total`)
+    pub weight_total: u32,
+    /// thrash-cap ceiling (the scheduler's [`MAX_PREEMPTIONS`])
+    pub max_thrash_cap: u32,
+    /// admission-bound advice ceiling
+    pub max_queue_bound: u32,
+    /// deadline-slack advice floor, virtual seconds
+    pub min_deadline_slack_s: f64,
+    /// deadline-slack advice ceiling, virtual seconds
+    pub max_deadline_slack_s: f64,
+}
+
+/// One observation window between consecutive virtual-time barriers:
+/// per-class completion turnarounds, eviction/dispatch counts, and the
+/// utilization samples the scheduler tapped through
+/// [`Policy::on_util_sample`]. Everything a controller reads lives here;
+/// the window resets when the barrier decision fires. (Per-*tenant*
+/// windows live one layer up, in
+/// [`crate::sim::service::ServiceStats`] — a campaign observes only its
+/// own traffic.)
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BarrierObserver {
+    /// end-to-end turnaround (completion − origin) of high-class
+    /// completions, keep-newest, capped at [`TURNAROUND_WINDOW_CAP`]
+    pub high_turnaround_s: Vec<f64>,
+    /// completions at or below the high-class cutoff
+    pub high_completions: u64,
+    /// completions above the cutoff
+    pub low_completions: u64,
+    /// flights evicted (preemption or faults) this window
+    pub evictions: u64,
+    /// tasks dispatched this window
+    pub dispatches: u64,
+    /// sum of mean busy fractions over sampled rows
+    pub util_sum: f64,
+    /// utilization rows sampled this window
+    pub util_samples: u64,
+}
+
+impl BarrierObserver {
+    /// Record a completion: `high` per the configured class cutoff,
+    /// `turnaround_s` = completion − origin virtual time.
+    pub fn note_completion(&mut self, high: bool, turnaround_s: f64) {
+        if high {
+            self.high_completions += 1;
+            if self.high_turnaround_s.len() == TURNAROUND_WINDOW_CAP {
+                self.high_turnaround_s.remove(0);
+            }
+            self.high_turnaround_s.push(turnaround_s);
+        } else {
+            self.low_completions += 1;
+        }
+    }
+
+    /// Record a dispatch.
+    pub fn note_dispatch(&mut self) {
+        self.dispatches += 1;
+    }
+
+    /// Record an eviction (preemption or fault).
+    pub fn note_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    /// Record one utilization row's mean busy fraction.
+    pub fn note_util(&mut self, mean_busy: f64) {
+        self.util_sum += mean_busy;
+        self.util_samples += 1;
+    }
+
+    /// p99 of the high-class turnarounds in this window (`None` when no
+    /// high-class work completed — controllers hold in that case).
+    pub fn p99_high_turnaround_s(&self) -> Option<f64> {
+        if self.high_turnaround_s.is_empty() {
+            return None;
+        }
+        let mut sorted = self.high_turnaround_s.clone();
+        sorted.sort_by(f64::total_cmp);
+        let idx = ((sorted.len() - 1) as f64 * 0.99).ceil() as usize;
+        Some(sorted[idx])
+    }
+
+    /// Mean busy fraction across the window's utilization samples.
+    pub fn mean_util(&self) -> Option<f64> {
+        (self.util_samples > 0).then(|| self.util_sum / self.util_samples as f64)
+    }
+
+    /// Close the window: drop every observation (the barrier decision
+    /// has consumed it).
+    pub fn reset(&mut self) {
+        *self = BarrierObserver::default();
+    }
+
+    /// Serialize for checkpoints (format v5 `adaptive.window`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "high_turnaround_s",
+                Json::Arr(self.high_turnaround_s.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("high_completions", Json::Num(self.high_completions as f64)),
+            ("low_completions", Json::Num(self.low_completions as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("dispatches", Json::Num(self.dispatches as f64)),
+            ("util_sum", Json::Num(self.util_sum)),
+            ("util_samples", Json::Num(self.util_samples as f64)),
+        ])
+    }
+
+    /// Parse the representation written by [`BarrierObserver::to_json`].
+    pub fn from_json(v: &Json) -> Result<BarrierObserver, String> {
+        let count = |key: &str| -> Result<u64, String> {
+            v.req(key)?
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                .ok_or_else(|| format!("observer: '{key}' must be a count"))
+                .map(|n| n as u64)
+        };
+        let arr = v
+            .req("high_turnaround_s")?
+            .as_arr()
+            .ok_or_else(|| "observer: 'high_turnaround_s' must be an array".to_string())?;
+        if arr.len() > TURNAROUND_WINDOW_CAP {
+            return Err(format!(
+                "observer: {} turnaround samples exceed the window cap {TURNAROUND_WINDOW_CAP}",
+                arr.len()
+            ));
+        }
+        let mut high_turnaround_s = Vec::with_capacity(arr.len());
+        for t in arr {
+            high_turnaround_s.push(
+                t.as_f64().ok_or_else(|| "observer: non-numeric turnaround".to_string())?,
+            );
+        }
+        Ok(BarrierObserver {
+            high_turnaround_s,
+            high_completions: count("high_completions")?,
+            low_completions: count("low_completions")?,
+            evictions: count("evictions")?,
+            dispatches: count("dispatches")?,
+            util_sum: v
+                .req("util_sum")?
+                .as_f64()
+                .ok_or_else(|| "observer: bad 'util_sum'".to_string())?,
+            util_samples: count("util_samples")?,
+        })
+    }
+}
+
+/// The **proposer** half of the chain: maps a closed observation window
+/// plus the current controls to a proposed next [`ControlState`]. The
+/// policy (the approver) clamps the proposal into [`ControlLimits`]
+/// before applying it. Implementations must be pure functions of
+/// `(their own serialized state, window, current, limits)` — that is the
+/// whole determinism argument — and must round-trip that state through
+/// [`Controller::state_json`] / [`Controller::restore_state`] exactly,
+/// because format-v5 checkpoints carry it.
+pub trait Controller {
+    /// Stable label stored in checkpoints and matched on restore.
+    fn kind(&self) -> &'static str;
+
+    /// Propose the next controls from the closed window. Return
+    /// `current` unchanged to hold (e.g. when the window has no
+    /// high-class completions to judge latency by).
+    fn propose(
+        &mut self,
+        window: &BarrierObserver,
+        current: ControlState,
+        limits: &ControlLimits,
+    ) -> ControlState;
+
+    /// Serialize internal state (format v5 `adaptive.controller.state`).
+    fn state_json(&self) -> Json;
+
+    /// Restore the state written by [`Controller::state_json`].
+    fn restore_state(&mut self, v: &Json) -> Result<(), String>;
+}
+
+/// Controller configuration: which [`Controller`] an
+/// [`AdaptivePolicy`] runs and its setpoints. `Copy` so
+/// [`crate::sim::service::PolicyKind`] stays `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ControllerCfg {
+    /// [`ProportionalController`]: weight step ∝ relative p99 error
+    Proportional {
+        /// high-class p99 turnaround setpoint, virtual seconds (> 0)
+        target_p99_s: f64,
+        /// proportional gain (> 0): weight step = `gain · error`,
+        /// clamped to ±[`MAX_WEIGHT_STEP`]
+        gain: f64,
+    },
+    /// [`TargetLatencyController`]: hysteresis-banded escalation ladder
+    TargetLatency {
+        /// high-class p99 turnaround setpoint, virtual seconds (> 0)
+        target_p99_s: f64,
+        /// half-width of the hold band as a fraction of the target
+        /// (0 < band < 1): escalate above `target·(1+band)`,
+        /// de-escalate below `target·(1−band)`, hold between
+        band: f64,
+    },
+}
+
+impl ControllerCfg {
+    /// Stable label (`"proportional"` / `"target-latency"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControllerCfg::Proportional { .. } => "proportional",
+            ControllerCfg::TargetLatency { .. } => "target-latency",
+        }
+    }
+
+    /// Validate setpoints (shared by JSON parsing and construction).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ControllerCfg::Proportional { target_p99_s, gain } => {
+                if !(target_p99_s.is_finite() && target_p99_s > 0.0) {
+                    return Err(format!(
+                        "proportional controller: target_p99_s must be > 0, got {target_p99_s}"
+                    ));
+                }
+                if !(gain.is_finite() && gain > 0.0) {
+                    return Err(format!("proportional controller: gain must be > 0, got {gain}"));
+                }
+            }
+            ControllerCfg::TargetLatency { target_p99_s, band } => {
+                if !(target_p99_s.is_finite() && target_p99_s > 0.0) {
+                    return Err(format!(
+                        "target-latency controller: target_p99_s must be > 0, got {target_p99_s}"
+                    ));
+                }
+                if !(band.is_finite() && band > 0.0 && band < 1.0) {
+                    return Err(format!(
+                        "target-latency controller: band must be in (0, 1), got {band}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as a tagged object.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ControllerCfg::Proportional { target_p99_s, gain } => Json::obj(vec![
+                ("kind", Json::Str("proportional".into())),
+                ("target_p99_s", Json::Num(target_p99_s)),
+                ("gain", Json::Num(gain)),
+            ]),
+            ControllerCfg::TargetLatency { target_p99_s, band } => Json::obj(vec![
+                ("kind", Json::Str("target-latency".into())),
+                ("target_p99_s", Json::Num(target_p99_s)),
+                ("band", Json::Num(band)),
+            ]),
+        }
+    }
+
+    /// Parse the representation written by [`ControllerCfg::to_json`].
+    pub fn from_json(v: &Json) -> Result<ControllerCfg, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "controller: missing 'kind'".to_string())?;
+        let num = |key: &str| -> Result<f64, String> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| format!("controller: '{key}' must be a number"))
+        };
+        let cfg = match kind {
+            "proportional" => ControllerCfg::Proportional {
+                target_p99_s: num("target_p99_s")?,
+                gain: num("gain")?,
+            },
+            "target-latency" => ControllerCfg::TargetLatency {
+                target_p99_s: num("target_p99_s")?,
+                band: num("band")?,
+            },
+            other => return Err(format!("unknown controller kind '{other}'")),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Instantiate the controller this configuration describes.
+    pub fn build(&self) -> AnyController {
+        match *self {
+            ControllerCfg::Proportional { target_p99_s, gain } => AnyController::Proportional(
+                ProportionalController { target_p99_s, gain, last_error: 0.0, decisions: 0 },
+            ),
+            ControllerCfg::TargetLatency { target_p99_s, band } => AnyController::TargetLatency(
+                TargetLatencyController { target_p99_s, band, hot: false, decisions: 0 },
+            ),
+        }
+    }
+}
+
+/// Proportional control: the fair-share weight moves by
+/// `round(gain · error)` per barrier where
+/// `error = (p99 − target) / target`, preemption switches on while the
+/// window runs hot and off once comfortably cold, and the thrash cap
+/// tightens whenever evictions dominate dispatches (an eviction storm
+/// wastes more work than it reorders). Admission advice follows the same
+/// sign: hot windows shrink the queue bound and deadline slack (shed
+/// earlier), cold windows relax both.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProportionalController {
+    /// high-class p99 turnaround setpoint, virtual seconds
+    pub target_p99_s: f64,
+    /// proportional gain on the relative error
+    pub gain: f64,
+    /// relative error of the last window that carried data
+    pub last_error: f64,
+    /// barrier decisions taken (windows with no data still count)
+    pub decisions: u64,
+}
+
+impl Controller for ProportionalController {
+    fn kind(&self) -> &'static str {
+        "proportional"
+    }
+
+    fn propose(
+        &mut self,
+        window: &BarrierObserver,
+        current: ControlState,
+        _limits: &ControlLimits,
+    ) -> ControlState {
+        self.decisions += 1;
+        let Some(p99) = window.p99_high_turnaround_s() else {
+            return current; // no high-class completions: hold
+        };
+        let error = (p99 - self.target_p99_s) / self.target_p99_s;
+        self.last_error = error;
+        let step = (self.gain * error)
+            .clamp(-(MAX_WEIGHT_STEP as f64), MAX_WEIGHT_STEP as f64)
+            .round() as i64;
+        let mut next = current;
+        next.weight = (current.weight as i64 + step).max(1) as u32;
+        if error > 0.0 {
+            next.preemptive = true;
+            next.queue_bound = current.queue_bound.saturating_sub(1);
+            next.deadline_slack_s = current.deadline_slack_s / 1.25;
+        } else if error < -0.25 {
+            next.preemptive = false;
+            next.queue_bound = current.queue_bound + 1;
+            next.deadline_slack_s = current.deadline_slack_s * 1.25;
+        }
+        // thrash guard: when a quarter of dispatches get evicted the
+        // loop is churning, not scheduling — tighten; otherwise relax
+        // (the approver caps at MAX_PREEMPTIONS)
+        if next.preemptive && window.evictions * 4 > window.dispatches {
+            next.thrash_cap = current.thrash_cap.saturating_sub(1);
+        } else {
+            next.thrash_cap = current.thrash_cap + 1;
+        }
+        next
+    }
+
+    fn state_json(&self) -> Json {
+        Json::obj(vec![
+            ("last_error", Json::Num(self.last_error)),
+            ("decisions", Json::Num(self.decisions as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &Json) -> Result<(), String> {
+        self.last_error = v
+            .req("last_error")?
+            .as_f64()
+            .ok_or_else(|| "controller: bad 'last_error'".to_string())?;
+        self.decisions = v
+            .req("decisions")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .ok_or_else(|| "controller: bad 'decisions'".to_string())?
+            as u64;
+        Ok(())
+    }
+}
+
+/// Hysteresis-banded target tracking: a hold band around the setpoint
+/// keeps the loop from oscillating on noise. Above `target·(1+band)` the
+/// controller latches **hot** and escalates one notch per barrier up a
+/// fixed ladder — grow the fair-share weight first (cheapest), then
+/// enable preemption, then raise the thrash cap — while tightening the
+/// admission advice. Below `target·(1−band)` it unlatches and descends
+/// the ladder in reverse. Inside the band it holds everything, even
+/// while latched hot: de-escalation requires *proof* of cold, not mere
+/// absence of hot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TargetLatencyController {
+    /// high-class p99 turnaround setpoint, virtual seconds
+    pub target_p99_s: f64,
+    /// hold-band half-width as a fraction of the target
+    pub band: f64,
+    /// latched above the band; cleared only below it
+    pub hot: bool,
+    /// barrier decisions taken (windows with no data still count)
+    pub decisions: u64,
+}
+
+impl Controller for TargetLatencyController {
+    fn kind(&self) -> &'static str {
+        "target-latency"
+    }
+
+    fn propose(
+        &mut self,
+        window: &BarrierObserver,
+        current: ControlState,
+        limits: &ControlLimits,
+    ) -> ControlState {
+        self.decisions += 1;
+        let Some(p99) = window.p99_high_turnaround_s() else {
+            return current; // no high-class completions: hold
+        };
+        let mut next = current;
+        if p99 > self.target_p99_s * (1.0 + self.band) {
+            self.hot = true;
+            // one notch up the ladder per barrier
+            if current.weight < limits.weight_total {
+                next.weight = current.weight + 1;
+            } else if !current.preemptive {
+                next.preemptive = true;
+            } else if current.thrash_cap < limits.max_thrash_cap {
+                next.thrash_cap = current.thrash_cap + 1;
+            }
+            next.queue_bound = current.queue_bound.saturating_sub(1);
+            next.deadline_slack_s = current.deadline_slack_s / 1.25;
+        } else if p99 < self.target_p99_s * (1.0 - self.band) {
+            self.hot = false;
+            // one notch down, in reverse ladder order
+            if current.preemptive && current.thrash_cap > 1 {
+                next.thrash_cap = current.thrash_cap - 1;
+            } else if current.preemptive {
+                next.preemptive = false;
+            } else if current.weight > 1 {
+                next.weight = current.weight - 1;
+            }
+            next.queue_bound = current.queue_bound + 1;
+            next.deadline_slack_s = current.deadline_slack_s * 1.25;
+        }
+        next
+    }
+
+    fn state_json(&self) -> Json {
+        Json::obj(vec![
+            ("hot", Json::Bool(self.hot)),
+            ("decisions", Json::Num(self.decisions as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &Json) -> Result<(), String> {
+        self.hot =
+            v.req("hot")?.as_bool().ok_or_else(|| "controller: bad 'hot'".to_string())?;
+        self.decisions = v
+            .req("decisions")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .ok_or_else(|| "controller: bad 'decisions'".to_string())?
+            as u64;
+        Ok(())
+    }
+}
+
+/// Closed enum over the shipped controllers, so [`AdaptivePolicy`]
+/// stays object-safe-free and serializable without `dyn` plumbing.
+/// External [`Controller`] impls can still be exercised directly in
+/// tests; the campaign/checkpoint plumbing runs these two.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnyController {
+    /// see [`ProportionalController`]
+    Proportional(ProportionalController),
+    /// see [`TargetLatencyController`]
+    TargetLatency(TargetLatencyController),
+}
+
+impl Controller for AnyController {
+    fn kind(&self) -> &'static str {
+        match self {
+            AnyController::Proportional(c) => c.kind(),
+            AnyController::TargetLatency(c) => c.kind(),
+        }
+    }
+
+    fn propose(
+        &mut self,
+        window: &BarrierObserver,
+        current: ControlState,
+        limits: &ControlLimits,
+    ) -> ControlState {
+        match self {
+            AnyController::Proportional(c) => c.propose(window, current, limits),
+            AnyController::TargetLatency(c) => c.propose(window, current, limits),
+        }
+    }
+
+    fn state_json(&self) -> Json {
+        match self {
+            AnyController::Proportional(c) => c.state_json(),
+            AnyController::TargetLatency(c) => c.state_json(),
+        }
+    }
+
+    fn restore_state(&mut self, v: &Json) -> Result<(), String> {
+        match self {
+            AnyController::Proportional(c) => c.restore_state(v),
+            AnyController::TargetLatency(c) => c.restore_state(v),
+        }
+    }
+}
+
+/// Configuration of one adaptive campaign: the class table and cutoff
+/// the observer classifies by, the fair-share basis, the barrier
+/// cadence, the initial admission advice, and the controller. `Copy` so
+/// [`crate::sim::service::PolicyKind::Adaptive`] stays `Copy` like
+/// every other policy kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// per-task-kind priority classes (also the preemption classes)
+    pub classes: PriorityClasses,
+    /// completions with class ≤ this are "high" for the p99 window
+    pub high_cutoff: u8,
+    /// fair-share weight denominator (≥ 1)
+    pub weight_total: u32,
+    /// initial fair-share weight (1..=`weight_total`)
+    pub start_weight: u32,
+    /// virtual seconds between control barriers (> 0)
+    pub interval_s: f64,
+    /// initial admission queue-bound advice (≥ 1)
+    pub queue_bound: u32,
+    /// initial deadline-slack advice, virtual seconds (> 0)
+    pub deadline_slack_s: f64,
+    /// the controller and its setpoints
+    pub controller: ControllerCfg,
+}
+
+impl AdaptiveConfig {
+    /// A config with chain-tail-first classes, a half share of a
+    /// 4-weight cluster, 60-second barriers, and neutral admission
+    /// advice. Override per field.
+    pub fn new(controller: ControllerCfg) -> AdaptiveConfig {
+        AdaptiveConfig {
+            classes: PriorityClasses::default(),
+            high_cutoff: 2,
+            weight_total: 4,
+            start_weight: 2,
+            interval_s: 60.0,
+            queue_bound: 8,
+            deadline_slack_s: 4.0 * 3600.0,
+            controller,
+        }
+    }
+
+    /// Set the barrier cadence (virtual seconds, > 0).
+    pub fn interval_s(mut self, interval_s: f64) -> Self {
+        self.interval_s = interval_s;
+        self
+    }
+
+    /// Set the fair-share basis: start at `start_weight` of
+    /// `weight_total`.
+    pub fn share(mut self, start_weight: u32, weight_total: u32) -> Self {
+        self.start_weight = start_weight;
+        self.weight_total = weight_total;
+        self
+    }
+
+    /// Set the high-class cutoff for the turnaround window.
+    pub fn high_cutoff(mut self, cutoff: u8) -> Self {
+        self.high_cutoff = cutoff;
+        self
+    }
+
+    /// Validate every invariant (shared by JSON parsing and
+    /// [`AdaptivePolicy::new`]).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.weight_total < 1 {
+            return Err("adaptive: weight_total must be >= 1".into());
+        }
+        if self.start_weight < 1 || self.start_weight > self.weight_total {
+            return Err(format!(
+                "adaptive: start_weight {} outside 1..=weight_total ({})",
+                self.start_weight, self.weight_total
+            ));
+        }
+        if !(self.interval_s.is_finite() && self.interval_s > 0.0) {
+            return Err(format!("adaptive: interval_s must be > 0, got {}", self.interval_s));
+        }
+        if self.queue_bound < 1 {
+            return Err("adaptive: queue_bound must be >= 1".into());
+        }
+        if !(self.deadline_slack_s.is_finite() && self.deadline_slack_s > 0.0) {
+            return Err(format!(
+                "adaptive: deadline_slack_s must be > 0, got {}",
+                self.deadline_slack_s
+            ));
+        }
+        self.controller.validate()
+    }
+
+    /// The flat field list [`crate::sim::service::PolicyKind::to_json`]
+    /// splices after its `"kind"` tag.
+    pub fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("classes", self.classes.to_json()),
+            ("high_cutoff", Json::Num(self.high_cutoff as f64)),
+            ("weight_total", Json::Num(self.weight_total as f64)),
+            ("start_weight", Json::Num(self.start_weight as f64)),
+            ("interval_s", Json::Num(self.interval_s)),
+            ("queue_bound", Json::Num(self.queue_bound as f64)),
+            ("deadline_slack_s", Json::Num(self.deadline_slack_s)),
+            ("controller", self.controller.to_json()),
+        ]
+    }
+
+    /// Parse the flat fields written by [`AdaptiveConfig::json_fields`]
+    /// (the object may carry the policy `"kind"` tag alongside).
+    pub fn from_json(v: &Json) -> Result<AdaptiveConfig, String> {
+        let int = |key: &str| -> Result<u32, String> {
+            v.req(key)?
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(n))
+                .ok_or_else(|| format!("adaptive: '{key}' must be a non-negative integer"))
+                .map(|n| n as u32)
+        };
+        let num = |key: &str| -> Result<f64, String> {
+            v.req(key)?.as_f64().ok_or_else(|| format!("adaptive: '{key}' must be a number"))
+        };
+        let cutoff = int("high_cutoff")?;
+        if cutoff > u8::MAX as u32 {
+            return Err(format!("adaptive: high_cutoff {cutoff} exceeds 255"));
+        }
+        let cfg = AdaptiveConfig {
+            classes: PriorityClasses::from_json(v.req("classes")?)?,
+            high_cutoff: cutoff as u8,
+            weight_total: int("weight_total")?,
+            start_weight: int("start_weight")?,
+            interval_s: num("interval_s")?,
+            queue_bound: int("queue_bound")?,
+            deadline_slack_s: num("deadline_slack_s")?,
+            controller: ControllerCfg::from_json(v.req("controller")?)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// The **approver**: clamp a controller proposal into the hard limits,
+/// additionally bounding the per-barrier weight move to
+/// ±[`MAX_WEIGHT_STEP`] relative to the previous controls. A pure
+/// function — part of the determinism argument and unit-tested directly.
+pub fn approve(
+    proposed: ControlState,
+    prev: ControlState,
+    limits: &ControlLimits,
+) -> ControlState {
+    let lo = prev.weight.saturating_sub(MAX_WEIGHT_STEP);
+    let hi = prev.weight.saturating_add(MAX_WEIGHT_STEP);
+    ControlState {
+        weight: proposed.weight.clamp(lo, hi).clamp(1, limits.weight_total.max(1)),
+        preemptive: proposed.preemptive,
+        thrash_cap: proposed.thrash_cap.clamp(1, limits.max_thrash_cap.max(1)),
+        queue_bound: proposed.queue_bound.clamp(1, limits.max_queue_bound.max(1)),
+        deadline_slack_s: if proposed.deadline_slack_s.is_finite() {
+            proposed
+                .deadline_slack_s
+                .clamp(limits.min_deadline_slack_s, limits.max_deadline_slack_s)
+        } else {
+            prev.deadline_slack_s
+        },
+    }
+}
+
+/// Decorator: self-tuning scheduling. Combines the
+/// [`crate::sim::policy::PriorityPolicy`] class behaviors (pending-queue
+/// ordering, optional class-strict preemption) with the
+/// [`crate::sim::policy::FairSharePolicy`] quota clamp — but every knob
+/// is live, moved by the [`Controller`] at each virtual-time barrier
+/// under the proposer/approver contract described in the module docs.
+pub struct AdaptivePolicy<P> {
+    inner: P,
+    cfg: AdaptiveConfig,
+    /// cluster slot totals, indexed in [`WorkerKind::ALL`] order
+    totals: [usize; 5],
+    controller: AnyController,
+    controls: ControlState,
+    window: BarrierObserver,
+    /// dispatched-but-not-completed tasks per worker kind
+    outstanding: [usize; 5],
+    /// virtual time of the next control barrier
+    next_barrier: f64,
+    /// barriers applied so far (each = one controller decision)
+    barriers_applied: u64,
+}
+
+impl<P: Policy> AdaptivePolicy<P> {
+    /// Wrap `inner` with the given cluster slot totals and config.
+    /// Panics on an invalid config (JSON paths validate at parse time
+    /// instead; see [`AdaptiveConfig::validate`]).
+    pub fn new(inner: P, totals: [usize; 5], cfg: AdaptiveConfig) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
+        AdaptivePolicy {
+            inner,
+            controller: cfg.controller.build(),
+            controls: ControlState {
+                weight: cfg.start_weight,
+                preemptive: false,
+                thrash_cap: MAX_PREEMPTIONS,
+                queue_bound: cfg.queue_bound,
+                deadline_slack_s: cfg.deadline_slack_s,
+            },
+            window: BarrierObserver::default(),
+            outstanding: [0; 5],
+            next_barrier: cfg.interval_s,
+            barriers_applied: 0,
+            totals,
+            cfg,
+        }
+    }
+
+    /// Set the *initial* preemption control (the request-level
+    /// `preemption` flag; the controller may flip it at any barrier).
+    pub fn preemptive(mut self, enabled: bool) -> Self {
+        self.controls.preemptive = enabled;
+        self
+    }
+
+    /// Unwrap the inner policy (to recover e.g. the Thinker for reports).
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    /// The controls currently in effect (front doors read the admission
+    /// advice here at their own barriers).
+    pub fn controls(&self) -> ControlState {
+        self.controls
+    }
+
+    /// Barrier decisions applied so far.
+    pub fn barriers_applied(&self) -> u64 {
+        self.barriers_applied
+    }
+
+    /// The hard limits proposals are clamped into.
+    pub fn limits(&self) -> ControlLimits {
+        ControlLimits {
+            weight_total: self.cfg.weight_total,
+            max_thrash_cap: MAX_PREEMPTIONS,
+            max_queue_bound: MAX_QUEUE_BOUND,
+            min_deadline_slack_s: MIN_DEADLINE_SLACK_S,
+            max_deadline_slack_s: MAX_DEADLINE_SLACK_S,
+        }
+    }
+
+    /// Apply every barrier at or before `now`: close the window, let the
+    /// controller propose, clamp, reset. Pure in `now` and monotonic —
+    /// hooks that arrive with an older timestamp (utilization rows
+    /// sampled behind the current event) simply no-op here.
+    fn maybe_apply_barriers(&mut self, now: f64) {
+        while now >= self.next_barrier {
+            let limits = self.limits();
+            let proposed = self.controller.propose(&self.window, self.controls, &limits);
+            self.controls = approve(proposed, self.controls, &limits);
+            self.window.reset();
+            self.barriers_applied += 1;
+            self.next_barrier += self.cfg.interval_s;
+        }
+    }
+
+    /// Serialize the full adaptive state for format-v5 checkpoints:
+    /// controls, the open window, the outstanding tally, the barrier
+    /// cursor, and the controller's own state.
+    pub fn state_json(&self) -> Json {
+        Json::obj(vec![
+            ("controls", self.controls.to_json()),
+            ("window", self.window.to_json()),
+            (
+                "outstanding",
+                Json::Arr(self.outstanding.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("next_barrier", Json::Num(self.next_barrier)),
+            ("barriers_applied", Json::Num(self.barriers_applied as f64)),
+            (
+                "controller",
+                Json::obj(vec![
+                    ("kind", Json::Str(self.controller.kind().to_string())),
+                    ("state", self.controller.state_json()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Restore the state written by [`AdaptivePolicy::state_json`]. The
+    /// checkpointed controller kind must match this config's controller;
+    /// a mismatch is an error, never a silent re-initialization.
+    pub fn restore_state(&mut self, v: &Json) -> Result<(), String> {
+        let controls = ControlState::from_json(v.req("controls")?)?;
+        if controls.weight > self.cfg.weight_total {
+            return Err(format!(
+                "adaptive: checkpointed weight {} exceeds weight_total {}",
+                controls.weight, self.cfg.weight_total
+            ));
+        }
+        let window = BarrierObserver::from_json(v.req("window")?)?;
+        let oj = v.req("outstanding")?;
+        let words = oj
+            .as_arr()
+            .filter(|a| a.len() == 5)
+            .ok_or_else(|| "adaptive: 'outstanding' must be a 5-element array".to_string())?;
+        let mut outstanding = [0usize; 5];
+        for (slot, w) in outstanding.iter_mut().zip(words) {
+            *slot =
+                w.as_usize().ok_or_else(|| "adaptive: bad outstanding count".to_string())?;
+        }
+        let cj = v.req("controller")?;
+        let kind = cj
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| "adaptive: bad controller kind".to_string())?;
+        if kind != self.controller.kind() {
+            return Err(format!(
+                "adaptive: checkpointed controller '{kind}' does not match configured '{}'",
+                self.controller.kind()
+            ));
+        }
+        self.controller.restore_state(cj.req("state")?)?;
+        self.controls = controls;
+        self.window = window;
+        self.outstanding = outstanding;
+        self.next_barrier = v
+            .req("next_barrier")?
+            .as_f64()
+            .ok_or_else(|| "adaptive: bad 'next_barrier'".to_string())?;
+        self.barriers_applied = v
+            .req("barriers_applied")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .ok_or_else(|| "adaptive: bad 'barriers_applied'".to_string())?
+            as u64;
+        Ok(())
+    }
+
+    /// Per-kind quota under the current weight:
+    /// `max(1, totals[k] · weight / weight_total)` — the fair-share
+    /// formula with a live numerator.
+    fn quota(&self) -> [usize; 5] {
+        let mut quota = [0usize; 5];
+        for (q, &t) in quota.iter_mut().zip(self.totals.iter()) {
+            *q = ((t * self.controls.weight as usize) / self.cfg.weight_total as usize).max(1);
+        }
+        quota
+    }
+}
+
+impl<P: Policy> Policy for AdaptivePolicy<P> {
+    fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, now: f64) -> Vec<TaskRequest> {
+        self.maybe_apply_barriers(now);
+        let quota = self.quota();
+        let out = self.outstanding;
+        let clamped = move |k: WorkerKind| {
+            let i = worker_idx(k);
+            free(k).min(quota[i].saturating_sub(out[i]))
+        };
+        self.inner.fill(&clamped, now)
+    }
+
+    fn handle(&mut self, done: Completion) -> Vec<TaskRequest> {
+        self.maybe_apply_barriers(done.completed_at);
+        let i = worker_idx(done.kind.worker());
+        self.outstanding[i] = self.outstanding[i].saturating_sub(1);
+        let class = self.cfg.classes.class(done.kind);
+        self.window.note_completion(
+            class <= self.cfg.high_cutoff,
+            done.completed_at - done.origin_t,
+        );
+        self.inner.handle(done)
+    }
+
+    fn on_dispatch(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.maybe_apply_barriers(now);
+        self.outstanding[worker_idx(kind.worker())] += 1;
+        self.window.note_dispatch();
+        self.inner.on_dispatch(kind, origin_t, now);
+    }
+
+    fn priority(&self, req: &TaskRequest) -> u8 {
+        self.cfg.classes.class(req.kind)
+    }
+
+    fn preempt(
+        &mut self,
+        _kind: WorkerKind,
+        pending_class: u8,
+        running: &[PreemptCandidate],
+    ) -> Option<u64> {
+        if !self.controls.preemptive {
+            return None;
+        }
+        // class-strict like PriorityPolicy, but additionally bounded by
+        // the *live* thrash cap (the scheduler's MAX_PREEMPTIONS cap
+        // still applies upstream)
+        running
+            .iter()
+            .filter(|c| c.class > pending_class && c.preemptions < self.controls.thrash_cap)
+            .max_by_key(|c| (c.class, c.task_id))
+            .map(|c| c.task_id)
+    }
+
+    fn on_preempt(&mut self, kind: TaskKind, origin_t: f64, now: f64) {
+        self.maybe_apply_barriers(now);
+        let i = worker_idx(kind.worker());
+        self.outstanding[i] = self.outstanding[i].saturating_sub(1);
+        self.window.note_eviction();
+        self.inner.on_preempt(kind, origin_t, now);
+    }
+
+    fn wants_preemption(&self) -> bool {
+        self.controls.preemptive
+    }
+
+    fn on_util_sample(&mut self, t: f64, busy: &[f64; 5]) {
+        self.maybe_apply_barriers(t);
+        self.window.note_util(busy.iter().sum::<f64>() / busy.len() as f64);
+        self.inner.on_util_sample(t, busy);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::taskserver::Outcome;
+
+    /// Inner probe: records the free capacity it is offered per kind.
+    struct Probe {
+        seen: Vec<[usize; 5]>,
+    }
+
+    impl Policy for Probe {
+        fn fill(&mut self, free: &dyn Fn(WorkerKind) -> usize, _now: f64) -> Vec<TaskRequest> {
+            let mut row = [0usize; 5];
+            for (i, k) in WorkerKind::ALL.iter().enumerate() {
+                row[i] = free(*k);
+            }
+            self.seen.push(row);
+            Vec::new()
+        }
+        fn handle(&mut self, _done: Completion) -> Vec<TaskRequest> {
+            Vec::new()
+        }
+    }
+
+    fn completion(kind: TaskKind, origin_t: f64, completed_at: f64) -> Completion {
+        Completion {
+            task_id: 0,
+            kind,
+            submitted_at: origin_t,
+            completed_at,
+            origin_t,
+            outcome: Outcome::Failed { kind, reason: "test".into() },
+        }
+    }
+
+    fn target_cfg(target_p99_s: f64, interval_s: f64) -> AdaptiveConfig {
+        AdaptiveConfig::new(ControllerCfg::TargetLatency { target_p99_s, band: 0.2 })
+            .interval_s(interval_s)
+    }
+
+    fn policy(cfg: AdaptiveConfig) -> AdaptivePolicy<Probe> {
+        AdaptivePolicy::new(Probe { seen: Vec::new() }, [10; 5], cfg)
+    }
+
+    fn limits() -> ControlLimits {
+        ControlLimits {
+            weight_total: 4,
+            max_thrash_cap: MAX_PREEMPTIONS,
+            max_queue_bound: MAX_QUEUE_BOUND,
+            min_deadline_slack_s: MIN_DEADLINE_SLACK_S,
+            max_deadline_slack_s: MAX_DEADLINE_SLACK_S,
+        }
+    }
+
+    fn controls() -> ControlState {
+        ControlState {
+            weight: 2,
+            preemptive: false,
+            thrash_cap: 3,
+            queue_bound: 8,
+            deadline_slack_s: 3600.0,
+        }
+    }
+
+    fn hot_window(turnaround_s: f64) -> BarrierObserver {
+        let mut w = BarrierObserver::default();
+        w.note_completion(true, turnaround_s);
+        w.note_dispatch();
+        w
+    }
+
+    #[test]
+    fn observer_window_caps_and_quantiles() {
+        let mut w = BarrierObserver::default();
+        assert_eq!(w.p99_high_turnaround_s(), None, "empty window holds");
+        for i in 0..TURNAROUND_WINDOW_CAP + 10 {
+            w.note_completion(true, i as f64);
+        }
+        assert_eq!(w.high_turnaround_s.len(), TURNAROUND_WINDOW_CAP, "keep-newest cap");
+        assert_eq!(w.high_turnaround_s[0], 10.0, "oldest samples dropped first");
+        let p99 = w.p99_high_turnaround_s().unwrap();
+        assert!(p99 >= 260.0, "p99 of the retained tail, got {p99}");
+        w.note_completion(false, 1.0);
+        assert_eq!(w.low_completions, 1);
+        w.note_util(0.5);
+        w.note_util(1.0);
+        assert_eq!(w.mean_util(), Some(0.75));
+        w.reset();
+        assert_eq!(w, BarrierObserver::default(), "reset drops everything");
+    }
+
+    #[test]
+    fn observer_window_json_round_trips() {
+        let mut w = BarrierObserver::default();
+        w.note_completion(true, 123.5);
+        w.note_completion(false, 2.0);
+        w.note_dispatch();
+        w.note_eviction();
+        w.note_util(0.625);
+        let text = w.to_json().to_string();
+        let parsed = BarrierObserver::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, w, "round-trip changed {text}");
+    }
+
+    #[test]
+    fn controller_cfg_json_round_trips_and_validates() {
+        for cfg in [
+            ControllerCfg::Proportional { target_p99_s: 900.0, gain: 1.5 },
+            ControllerCfg::TargetLatency { target_p99_s: 600.0, band: 0.25 },
+        ] {
+            let text = cfg.to_json().to_string();
+            let parsed = ControllerCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, cfg, "round-trip changed {text}");
+        }
+        assert!(ControllerCfg::Proportional { target_p99_s: 0.0, gain: 1.0 }
+            .validate()
+            .is_err());
+        assert!(ControllerCfg::Proportional { target_p99_s: 10.0, gain: -1.0 }
+            .validate()
+            .is_err());
+        assert!(ControllerCfg::TargetLatency { target_p99_s: 10.0, band: 1.5 }
+            .validate()
+            .is_err());
+        assert!(
+            ControllerCfg::from_json(&Json::parse(r#"{"kind":"pid"}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn adaptive_config_json_round_trips_and_validates() {
+        let cfg = target_cfg(900.0, 120.0).share(1, 5).high_cutoff(1);
+        let text = Json::obj(cfg.json_fields()).to_string();
+        let parsed = AdaptiveConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, cfg, "round-trip changed {text}");
+
+        let mut bad = cfg;
+        bad.start_weight = 9;
+        assert!(bad.validate().is_err(), "start_weight above weight_total");
+        bad = cfg;
+        bad.interval_s = 0.0;
+        assert!(bad.validate().is_err(), "zero barrier interval");
+        bad = cfg;
+        bad.queue_bound = 0;
+        assert!(bad.validate().is_err(), "zero queue bound");
+    }
+
+    #[test]
+    fn proportional_controller_tracks_the_error_sign() {
+        let mut c = ProportionalController {
+            target_p99_s: 100.0,
+            gain: 2.0,
+            last_error: 0.0,
+            decisions: 0,
+        };
+        // hot window: weight up (clamped step), preemption on, advice
+        // tightened
+        let next = c.propose(&hot_window(300.0), controls(), &limits());
+        assert_eq!(next.weight, 4, "gain·error = 4 clamps to +2");
+        assert!(next.preemptive);
+        assert_eq!(next.queue_bound, 7);
+        assert!(next.deadline_slack_s < 3600.0);
+        assert_eq!(c.decisions, 1);
+        assert_eq!(c.last_error, 2.0);
+        // cold window: weight down, preemption off, advice relaxed
+        let next = c.propose(&hot_window(10.0), controls(), &limits());
+        assert_eq!(next.weight, 1, "proposal floors at 1");
+        assert!(!next.preemptive);
+        assert_eq!(next.queue_bound, 9);
+        // empty window: hold
+        let hold = c.propose(&BarrierObserver::default(), controls(), &limits());
+        assert_eq!(hold, controls());
+        assert_eq!(c.decisions, 3, "held windows still count as decisions");
+    }
+
+    #[test]
+    fn proportional_controller_thrash_guard_tightens_the_cap() {
+        let mut c = ProportionalController {
+            target_p99_s: 100.0,
+            gain: 1.0,
+            last_error: 0.0,
+            decisions: 0,
+        };
+        let mut w = hot_window(300.0);
+        for _ in 0..3 {
+            w.note_eviction();
+        }
+        // 3 evictions vs 1 dispatch: churning — cap tightens
+        let next = c.propose(&w, controls(), &limits());
+        assert_eq!(next.thrash_cap, 2);
+        // quiet window relaxes it again (approver caps at MAX_PREEMPTIONS)
+        let next = c.propose(&hot_window(300.0), controls(), &limits());
+        assert_eq!(next.thrash_cap, 4, "proposal before the approver clamp");
+    }
+
+    #[test]
+    fn target_latency_controller_walks_the_ladder_with_hysteresis() {
+        let mut c = TargetLatencyController {
+            target_p99_s: 100.0,
+            band: 0.2,
+            hot: false,
+            decisions: 0,
+        };
+        let lim = limits();
+        // escalation ladder: weight → preemption → thrash cap
+        let mut cur = controls();
+        cur = c.propose(&hot_window(200.0), cur, &lim);
+        assert_eq!((cur.weight, cur.preemptive), (3, false));
+        assert!(c.hot);
+        cur = c.propose(&hot_window(200.0), cur, &lim);
+        assert_eq!((cur.weight, cur.preemptive), (4, false));
+        cur = c.propose(&hot_window(200.0), cur, &lim);
+        assert_eq!((cur.weight, cur.preemptive), (4, true), "weight saturated: preempt");
+        // inside the band: hold, even while latched hot
+        let held = c.propose(&hot_window(100.0), cur, &lim);
+        assert_eq!(held, cur, "hysteresis holds inside the band");
+        assert!(c.hot, "still latched");
+        // below the band: unlatch and descend in reverse order
+        cur.thrash_cap = 2;
+        cur = c.propose(&hot_window(10.0), cur, &lim);
+        assert!(!c.hot);
+        assert_eq!((cur.thrash_cap, cur.preemptive), (1, true), "cap descends first");
+        cur = c.propose(&hot_window(10.0), cur, &lim);
+        assert!(!cur.preemptive, "then preemption turns off");
+        cur = c.propose(&hot_window(10.0), cur, &lim);
+        assert_eq!(cur.weight, 3, "then the weight descends");
+    }
+
+    #[test]
+    fn approver_clamps_every_knob() {
+        let lim = limits();
+        let prev = controls();
+        let wild = ControlState {
+            weight: 40,
+            preemptive: true,
+            thrash_cap: 99,
+            queue_bound: 1000,
+            deadline_slack_s: f64::INFINITY,
+        };
+        let ok = approve(wild, prev, &lim);
+        assert_eq!(ok.weight, 4, "±MAX_WEIGHT_STEP then 1..=weight_total");
+        assert_eq!(ok.thrash_cap, MAX_PREEMPTIONS);
+        assert_eq!(ok.queue_bound, MAX_QUEUE_BOUND);
+        assert_eq!(ok.deadline_slack_s, prev.deadline_slack_s, "non-finite advice held");
+        let wild_low = ControlState {
+            weight: 0,
+            preemptive: false,
+            thrash_cap: 0,
+            queue_bound: 0,
+            deadline_slack_s: 0.0,
+        };
+        let ok = approve(wild_low, prev, &lim);
+        assert_eq!((ok.weight, ok.thrash_cap, ok.queue_bound), (1, 1, 1));
+        assert_eq!(ok.deadline_slack_s, MIN_DEADLINE_SLACK_S);
+    }
+
+    #[test]
+    fn barriers_apply_in_virtual_time_and_reset_the_window() {
+        // target 10s, interval 100s: one hot completion in the first
+        // window escalates at the first barrier
+        let mut p = policy(target_cfg(10.0, 100.0));
+        assert_eq!(p.controls().weight, 2);
+        p.handle(completion(TaskKind::EstimateAdsorption, 0.0, 50.0));
+        assert_eq!(p.barriers_applied(), 0, "no barrier before vt 100");
+        p.fill(&|_| 10, 150.0);
+        assert_eq!(p.barriers_applied(), 1);
+        assert_eq!(p.controls().weight, 3, "hot window escalated the weight");
+        assert_eq!(p.window, BarrierObserver::default(), "window reset at the barrier");
+        // a late utilization row (sampled behind the event that crossed
+        // the barrier) lands in the *new* window, and never re-fires
+        p.on_util_sample(120.0, &[1.0; 5]);
+        assert_eq!(p.barriers_applied(), 1);
+        assert_eq!(p.window.util_samples, 1);
+        // jumping several intervals applies every barrier in order;
+        // the empty intermediate windows hold
+        p.fill(&|_| 10, 460.0);
+        assert_eq!(p.barriers_applied(), 4);
+    }
+
+    #[test]
+    fn fill_clamps_to_the_live_quota() {
+        // 10 slots per kind, weight 2 of 4 -> quota 5
+        let mut p = policy(target_cfg(10.0, 100.0));
+        p.fill(&|_| 10, 0.0);
+        assert_eq!(p.inner.seen[0], [5; 5], "fill sees the quota, not raw free");
+        p.on_dispatch(TaskKind::AssembleMofs, 0.0, 0.0);
+        p.on_dispatch(TaskKind::AssembleMofs, 0.0, 0.0);
+        p.fill(&|_| 10, 1.0);
+        assert_eq!(p.inner.seen[1][WorkerKind::Cpu.index()], 3, "outstanding counts");
+        // hot barrier grows the weight -> quota follows the controls
+        p.handle(completion(TaskKind::EstimateAdsorption, 0.0, 50.0));
+        p.fill(&|_| 10, 150.0);
+        assert_eq!(p.controls().weight, 3);
+        assert_eq!(p.inner.seen[2][WorkerKind::Validate.index()], 7, "10·3/4 = 7");
+    }
+
+    #[test]
+    fn preemption_respects_the_live_controls() {
+        fn candidate(task_id: u64, class: u8, preemptions: u32) -> PreemptCandidate {
+            PreemptCandidate { task_id, kind: TaskKind::ProcessLinkers, class, preemptions }
+        }
+        let mut p = policy(target_cfg(10.0, 100.0));
+        let running = [candidate(3, 5, 0), candidate(7, 5, 2), candidate(9, 2, 0)];
+        assert!(!p.wants_preemption(), "preemption starts off");
+        assert_eq!(p.preempt(WorkerKind::Cpu, 0, &running), None);
+        let mut p = policy(target_cfg(10.0, 100.0)).preemptive(true);
+        assert!(p.wants_preemption());
+        // worst class wins, youngest tie — like PriorityPolicy
+        assert_eq!(p.preempt(WorkerKind::Cpu, 0, &running), Some(7));
+        assert_eq!(p.preempt(WorkerKind::Cpu, 5, &running), None, "class-strict");
+        // a tighter live thrash cap excludes the churned flight
+        p.controls.thrash_cap = 2;
+        assert_eq!(p.preempt(WorkerKind::Cpu, 0, &running), Some(3));
+    }
+
+    #[test]
+    fn state_json_round_trips_mid_window() {
+        let cfg = target_cfg(10.0, 100.0);
+        let mut p = policy(cfg);
+        // cross one barrier (controller latches hot), then open a
+        // fresh half-filled window
+        p.handle(completion(TaskKind::EstimateAdsorption, 0.0, 50.0));
+        p.fill(&|_| 10, 150.0);
+        p.on_dispatch(TaskKind::AssembleMofs, 150.0, 150.0);
+        p.on_util_sample(160.0, &[0.5; 5]);
+        p.handle(completion(TaskKind::GenerateLinkers, 100.0, 170.0));
+        let snap = p.state_json().to_string();
+
+        let mut fresh = policy(cfg);
+        fresh.restore_state(&Json::parse(&snap).unwrap()).unwrap();
+        assert_eq!(fresh.state_json().to_string(), snap, "byte-exact state round-trip");
+        assert_eq!(fresh.controls(), p.controls());
+        assert_eq!(fresh.barriers_applied(), 1);
+
+        // a mismatched controller kind is a loud error
+        let mut other = policy(AdaptiveConfig::new(ControllerCfg::Proportional {
+            target_p99_s: 10.0,
+            gain: 1.0,
+        }));
+        assert!(other.restore_state(&Json::parse(&snap).unwrap()).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=weight_total")]
+    fn invalid_config_panics_at_construction() {
+        let _ = policy(target_cfg(10.0, 100.0).share(5, 4));
+    }
+}

@@ -248,7 +248,7 @@ impl<T> AdmissionQueue<T> {
         }
         let score = self.cfg.shed.score(class, deadline);
         let mut shed = None;
-        if self.q.len() == self.cfg.bound {
+        if self.q.len() >= self.cfg.bound {
             let reject = RejectReason::QueueFull { bound: self.cfg.bound };
             if matches!(self.cfg.shed, ShedPolicy::RejectNewest) {
                 return Err(reject);
@@ -314,6 +314,27 @@ impl<T> AdmissionQueue<T> {
     /// The configured queue bound.
     pub fn bound(&self) -> usize {
         self.cfg.bound
+    }
+
+    /// Retarget the queue bound (≥ 1) — the runtime-adjustable knob the
+    /// adaptive control loop moves at virtual-time barriers
+    /// ([`crate::sim::adaptive::ControlState::queue_bound`]). Shrinking
+    /// below the current depth sheds deterministically — worst victim
+    /// first, exactly the overflow order [`try_push`](Self::try_push)
+    /// uses — and returns the shed `(seq, item)` pairs in eviction
+    /// order so callers can record them. Growing never sheds. Calls
+    /// from the same barrier time in the same order replay identically.
+    pub fn set_bound(&mut self, bound: usize) -> Vec<(u64, T)> {
+        assert!(bound >= 1, "queue bound must be >= 1");
+        let mut shed = Vec::new();
+        while self.q.len() > bound {
+            let (_, seq, victim) = self.q.evict_worst().expect("queue over bound");
+            self.note_removed(&victim.tenant);
+            shed.push((seq, victim.item));
+        }
+        self.cfg.bound = bound;
+        self.q.set_bound(bound);
+        shed
     }
 
     /// Virtual service time dispatched so far (the deadline clock).
@@ -486,6 +507,55 @@ mod tests {
         assert!(matches!(q.pop(), Some(Popped::Run { item: "d100-first", .. })));
         assert!(matches!(q.pop(), Some(Popped::Run { item: "d100-second", .. })));
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn set_bound_grows_without_shedding() {
+        let mut q = AdmissionQueue::new(cfg(2, ShedPolicy::RejectNewest, None));
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        q.try_push("a", 0, None, 1.0, "r1").unwrap();
+        assert!(q.try_push("a", 0, None, 1.0, "r2").is_err());
+        assert!(q.set_bound(4).is_empty(), "growing never sheds");
+        assert_eq!(q.bound(), 4);
+        q.try_push("a", 0, None, 1.0, "r2").unwrap();
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn set_bound_shrinks_by_shedding_worst_first() {
+        // DropLowestPriority: worst class goes first, newest within a tie
+        let mut q = AdmissionQueue::new(cfg(4, ShedPolicy::DropLowestPriority, None));
+        q.try_push("a", 0, None, 1.0, "high").unwrap();
+        q.try_push("b", 2, None, 1.0, "low-old").unwrap();
+        q.try_push("b", 2, None, 1.0, "low-new").unwrap();
+        q.try_push("a", 1, None, 1.0, "mid").unwrap();
+        let shed: Vec<&str> = q.set_bound(2).into_iter().map(|(_, it)| it).collect();
+        assert_eq!(shed, vec!["low-new", "low-old"], "try_push's overflow order");
+        assert_eq!((q.bound(), q.len()), (2, 2));
+        // tenant accounting followed the shed entries out
+        assert_eq!(q.queued_for("b"), 0);
+        assert_eq!(q.queued_for("a"), 2);
+        // the shrunk bound is live for admission control
+        assert!(q.try_push("a", 1, None, 1.0, "tied").is_err(), "ties favor holders");
+        assert!(q.try_push("a", 0, None, 1.0, "better").is_ok());
+
+        // DeadlineFirst sheds the latest deadline (None = latest) first
+        let mut q = AdmissionQueue::new(cfg(3, ShedPolicy::DeadlineFirst, None));
+        q.try_push("a", 0, Some(50.0), 1.0, "tight").unwrap();
+        q.try_push("a", 0, None, 1.0, "open").unwrap();
+        q.try_push("a", 0, Some(500.0), 1.0, "loose").unwrap();
+        let shed: Vec<&str> = q.set_bound(1).into_iter().map(|(_, it)| it).collect();
+        assert_eq!(shed, vec!["open", "loose"]);
+        assert!(matches!(q.pop(), Some(Popped::Run { item: "tight", .. })));
+
+        // RejectNewest has no overflow victim at push time, but an
+        // explicit shrink still sheds — worst score = newest arrival
+        let mut q = AdmissionQueue::new(cfg(3, ShedPolicy::RejectNewest, None));
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        q.try_push("a", 0, None, 1.0, "r1").unwrap();
+        q.try_push("a", 0, None, 1.0, "r2").unwrap();
+        let shed: Vec<&str> = q.set_bound(2).into_iter().map(|(_, it)| it).collect();
+        assert_eq!(shed, vec!["r2"], "FIFO sheds the newest on shrink");
     }
 
     #[test]

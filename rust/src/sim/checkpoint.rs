@@ -35,6 +35,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::genai::ModelSnapshot;
+use crate::sim::adaptive::AdaptivePolicy;
 use crate::sim::policy::{FairSharePolicy, PriorityPolicy};
 use crate::sim::scheduler::{BarrierOutcome, Policy, Scheduler, SimOutcome, SimParams};
 use crate::sim::service::{CampaignRequest, PolicyKind};
@@ -62,9 +63,15 @@ use crate::workflow::thinker::Thinker;
 /// and donor shard) so [`crate::sim::shard`] can use the checkpoint as
 /// its live-migration wire format, and service checkpoints carry each
 /// tenant's rolling turnaround window so post-resume quantiles aren't
-/// cold-start biased. Older files (v1/v2/v3) fail loudly with
+/// cold-start biased. v5: adaptive control — every campaign checkpoint
+/// carries a required `adaptive` section (`Null` for non-adaptive
+/// policies) holding the full [`crate::sim::adaptive::AdaptivePolicy`]
+/// state: live controls, the open observer window, the outstanding
+/// tally, the next-barrier cursor, the barriers-applied count, and the
+/// controller's own state, so an adapting campaign resumes and migrates
+/// bit-identically. Older files (v1–v4) fail loudly with
 /// [`CheckpointError::FormatMismatch`], never a silent default.
-pub const FORMAT_VERSION: u32 = 4;
+pub const FORMAT_VERSION: u32 = 5;
 
 /// Why a checkpoint could not be restored.
 #[derive(Clone, Debug, PartialEq)]
@@ -299,6 +306,7 @@ fn finish_report(ctx: RunCtx, thinker: Thinker, sim: SimOutcome) -> CampaignRunO
 fn assemble_checkpoint(
     ctx: &RunCtx,
     fair_share_outstanding: Option<[usize; 5]>,
+    adaptive: Option<Json>,
     model: &ModelSnapshot,
     created_vt: f64,
     scheduler: Json,
@@ -341,6 +349,8 @@ fn assemble_checkpoint(
                 .map(|o| Json::Arr(o.iter().map(|&n| Json::Num(n as f64)).collect()))
                 .unwrap_or(Json::Null),
         ),
+        // v5: required; Null whenever the policy is not adaptive
+        ("adaptive", adaptive.unwrap_or(Json::Null)),
         ("scheduler", scheduler),
         ("mofa", mofa),
     ])
@@ -362,8 +372,9 @@ fn slot_totals(layout: crate::workflow::resources::Layout) -> [usize; 5] {
 /// The one barrier-run driver every `PolicyKind` shares: run `p` to the
 /// barrier, then either assemble the report (`unwrap` recovers the base
 /// [`MofaPolicy`] from the decorator) or the checkpoint (`outstanding`
-/// extracts fair-share decorator state, `None` for the rest). Keeping
-/// this single keeps checkpoint contents identical across policies.
+/// extracts fair-share decorator state, `adaptive` the adaptive
+/// decorator's control-loop state — `None` for the rest). Keeping this
+/// single keeps checkpoint contents identical across policies.
 fn drive<P: Policy>(
     sched: Scheduler,
     mut p: P,
@@ -371,6 +382,7 @@ fn drive<P: Policy>(
     ctx: RunCtx,
     unwrap: impl FnOnce(P) -> MofaPolicy,
     outstanding: impl FnOnce(&P) -> Option<[usize; 5]>,
+    adaptive: impl FnOnce(&P) -> Option<Json>,
 ) -> CampaignRunOutcome {
     match sched.checkpoint_at(&mut p, barrier_vt) {
         BarrierOutcome::Finished(sim) => {
@@ -380,10 +392,12 @@ fn drive<P: Policy>(
         BarrierOutcome::Paused(s) => {
             let vt = s.vtime();
             let fair = outstanding(&p);
+            let adaptive = adaptive(&p);
             let model = ctx.engines.generator.snapshot();
             CampaignRunOutcome::Checkpointed(Box::new(assemble_checkpoint(
                 &ctx,
                 fair,
+                adaptive,
                 &model,
                 vt,
                 s.checkpoint_json(),
@@ -441,16 +455,29 @@ pub(crate) fn run_request_configured(
     let ctx =
         RunCtx { config, policy, tenant, class, deadline, preemption, reweights, engines, t_wall };
     match policy {
-        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
+        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None, |_| None),
         PolicyKind::Priority(classes) => {
             let p = PriorityPolicy::new(base, classes).preemptive(ctx.preemption);
-            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
+            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None, |_| None)
         }
         PolicyKind::FairShare { weight, weight_total } => {
             let p = FairSharePolicy::new(base, slot_totals(layout), weight, weight_total)
                 .with_reweights(ctx.reweights.clone());
-            drive(sched, p, barrier_vt, ctx, FairSharePolicy::into_inner, |p| {
-                Some(p.outstanding_state())
+            drive(
+                sched,
+                p,
+                barrier_vt,
+                ctx,
+                FairSharePolicy::into_inner,
+                |p| Some(p.outstanding_state()),
+                |_| None,
+            )
+        }
+        PolicyKind::Adaptive(acfg) => {
+            let p = AdaptivePolicy::new(base, slot_totals(layout), acfg)
+                .preemptive(ctx.preemption);
+            drive(sched, p, barrier_vt, ctx, AdaptivePolicy::into_inner, |_| None, |p| {
+                Some(p.state_json())
             })
         }
     }
@@ -530,10 +557,10 @@ pub fn resume_request(
     let ctx =
         RunCtx { config, policy, tenant, class, deadline, preemption, reweights, engines, t_wall };
     Ok(match policy {
-        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None),
+        PolicyKind::Mofa => drive(sched, base, barrier_vt, ctx, |p| p, |_| None, |_| None),
         PolicyKind::Priority(classes) => {
             let p = PriorityPolicy::new(base, classes).preemptive(ctx.preemption);
-            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None)
+            drive(sched, p, barrier_vt, ctx, PriorityPolicy::into_inner, |_| None, |_| None)
         }
         PolicyKind::FairShare { weight, weight_total } => {
             let totals = slot_totals(crate::workflow::resources::layout(nodes));
@@ -550,8 +577,29 @@ pub fn resume_request(
                     .ok_or_else(|| "checkpoint: bad outstanding count".to_string())?;
             }
             p.set_outstanding_state(outstanding);
-            drive(sched, p, barrier_vt, ctx, FairSharePolicy::into_inner, |p| {
-                Some(p.outstanding_state())
+            drive(
+                sched,
+                p,
+                barrier_vt,
+                ctx,
+                FairSharePolicy::into_inner,
+                |p| Some(p.outstanding_state()),
+                |_| None,
+            )
+        }
+        PolicyKind::Adaptive(acfg) => {
+            let totals = slot_totals(crate::workflow::resources::layout(nodes));
+            let mut p =
+                AdaptivePolicy::new(base, totals, acfg).preemptive(ctx.preemption);
+            let aj = v.req("adaptive")?;
+            if matches!(aj, Json::Null) {
+                return Err(CheckpointError::Malformed(
+                    "checkpoint: adaptive policy needs the 'adaptive' section".to_string(),
+                ));
+            }
+            p.restore_state(aj)?;
+            drive(sched, p, barrier_vt, ctx, AdaptivePolicy::into_inner, |_| None, |p| {
+                Some(p.state_json())
             })
         }
     })
@@ -641,9 +689,9 @@ mod tests {
         assert_eq!(err, CheckpointError::FormatMismatch { found: 99, expected: FORMAT_VERSION });
         // a *future* format with unknown header fields still reports the
         // version mismatch, not the unknown field
-        let future = r#"{"format":5,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
+        let future = r#"{"format":6,"kind":"campaign","created_vt":0,"compression":"zst"}"#;
         let err = CheckpointHeader::parse(&Json::parse(future).unwrap()).unwrap_err();
-        assert!(matches!(err, CheckpointError::FormatMismatch { found: 5, .. }), "{err}");
+        assert!(matches!(err, CheckpointError::FormatMismatch { found: 6, .. }), "{err}");
         // a v1 file (pre-preemption layout) is equally a version error —
         // its missing preemption fields must never default silently
         let v1 = r#"{"format":1,"kind":"campaign","created_vt":0}"#;
@@ -659,6 +707,11 @@ mod tests {
         let v3 = r#"{"format":3,"kind":"campaign","created_vt":0}"#;
         let err = CheckpointHeader::parse(&Json::parse(v3).unwrap()).unwrap_err();
         assert_eq!(err, CheckpointError::FormatMismatch { found: 3, expected: FORMAT_VERSION });
+        // a v4 file (pre-adaptive layout) likewise: it carries no
+        // 'adaptive' section, which v5 requires on every campaign
+        let v4 = r#"{"format":4,"kind":"campaign","created_vt":0}"#;
+        let err = CheckpointHeader::parse(&Json::parse(v4).unwrap()).unwrap_err();
+        assert_eq!(err, CheckpointError::FormatMismatch { found: 4, expected: FORMAT_VERSION });
     }
 
     #[test]

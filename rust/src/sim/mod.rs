@@ -60,6 +60,16 @@
 //!   wire format — elastic rebalancing, `drain`-for-maintenance, and
 //!   shard-kill failover whose reports stay byte-identical to
 //!   never-migrated twins.
+//! * [`adaptive`] — the **online control loop**:
+//!   [`adaptive::AdaptivePolicy`], a proposer/approver decorator that
+//!   closes MOFA's feedback loop at the scheduler — a
+//!   [`adaptive::BarrierObserver`] windows per-class turnaround,
+//!   evictions, and utilization between virtual-time barriers, a
+//!   [`adaptive::Controller`] ([`adaptive::ProportionalController`] or
+//!   the hysteresis-banded [`adaptive::TargetLatencyController`])
+//!   proposes bounded moves of the fair-share weight, preemption,
+//!   thrash cap, and admission advice, and the approver clamps them —
+//!   deterministic by construction, checkpointed in format v5.
 //! * [`faults`] — virtual-time **fault injection**: a sorted
 //!   [`faults::FaultPlan`] of kill/restore events that the scheduler
 //!   interleaves with its event loop, decommissioning pool slots (and
@@ -80,6 +90,7 @@
 //! `tests/campaign_service.rs`).
 #![warn(missing_docs)]
 
+pub mod adaptive;
 pub mod admission;
 pub mod checkpoint;
 pub mod faults;
@@ -91,6 +102,10 @@ pub mod sweep;
 pub mod vtime;
 pub mod workload;
 
+pub use adaptive::{
+    AdaptiveConfig, AdaptivePolicy, AnyController, BarrierObserver, ControlLimits, ControlState,
+    Controller, ControllerCfg, ProportionalController, TargetLatencyController,
+};
 pub use admission::{RejectReason, RequestStatus, ShedPolicy};
 pub use checkpoint::{
     canonical_report_json, migration_meta, resume_request, run_request_to_barrier, stamp_migration,

@@ -195,6 +195,10 @@ impl<P: Policy> Policy for PriorityPolicy<P> {
         // preemption behavior rather than composing with it
         self.preempt
     }
+
+    fn on_util_sample(&mut self, t: f64, busy: &[f64; 5]) {
+        self.inner.on_util_sample(t, busy);
+    }
 }
 
 /// Decorator: weighted multi-tenant slot shares. The campaign is offered
@@ -368,6 +372,10 @@ impl<P: Policy> Policy for FairSharePolicy<P> {
 
     fn wants_preemption(&self) -> bool {
         self.inner.wants_preemption()
+    }
+
+    fn on_util_sample(&mut self, t: f64, busy: &[f64; 5]) {
+        self.inner.on_util_sample(t, busy);
     }
 }
 

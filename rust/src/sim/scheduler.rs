@@ -193,6 +193,17 @@ pub trait Policy {
     fn wants_preemption(&self) -> bool {
         false
     }
+
+    /// Hook: one utilization row was sampled at virtual time `t` (`busy`
+    /// = busy fraction per worker kind, [`WorkerKind::ALL`] order). Rows
+    /// fire in time order, before the dispatch pass at the event that
+    /// crossed them, so a decorator that aggregates them sees a stream
+    /// that is a pure function of the event sequence — this is the
+    /// barrier-observer tap [`crate::sim::adaptive::AdaptivePolicy`]
+    /// feeds its utilization window from. Decorators must forward to
+    /// their inner policy.
+    #[allow(unused_variables)]
+    fn on_util_sample(&mut self, t: f64, busy: &[f64; 5]) {}
 }
 
 /// Scheduler parameters.
@@ -558,7 +569,7 @@ impl Scheduler {
                 let (_, task_id, slot) = self.heap.pop().expect("peeked event");
                 self.complete_one(policy, task_id, slot, now);
             }
-            self.sample_utilization(now);
+            self.sample_utilization(policy, now);
             self.dispatch(policy, now);
         }
         BarrierOutcome::Finished(SimOutcome {
@@ -790,7 +801,7 @@ impl Scheduler {
         let at = t.max(self.now);
         self.now = at;
         // sample pending points with the pre-fault busy fractions
-        self.sample_utilization(at);
+        self.sample_utilization(policy, at);
         match ev.action {
             FaultAction::Kill { kind, slots } => {
                 self.cluster.decommission(kind, slots, at);
@@ -884,8 +895,10 @@ impl Scheduler {
     }
 
     /// Emit `(t, busy fraction per kind)` rows for every sample point up
-    /// to `now` within the horizon (Fig. 4).
-    fn sample_utilization(&mut self, now: f64) {
+    /// to `now` within the horizon (Fig. 4), tapping each row through
+    /// [`Policy::on_util_sample`] so barrier observers see the same
+    /// stream the series records.
+    fn sample_utilization<P: Policy>(&mut self, policy: &mut P, now: f64) {
         while self.next_sample <= now && self.next_sample <= self.params.horizon_s {
             let mut row = [0.0f64; 5];
             for (i, k) in WorkerKind::ALL.iter().enumerate() {
@@ -895,6 +908,7 @@ impl Scheduler {
                 // the busy fraction (identical in fault-free runs)
                 row[i] = self.cluster.busy_slots(*k) as f64 / total as f64;
             }
+            policy.on_util_sample(self.next_sample, &row);
             self.util_series.push((self.next_sample, row));
             self.next_sample += self.params.util_sample_dt;
         }

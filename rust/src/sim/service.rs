@@ -42,6 +42,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
+use crate::sim::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use crate::sim::admission::{
     AdmissionConfig, AdmissionQueue, Popped, RejectReason, RequestStatus, ShedPolicy,
 };
@@ -71,6 +72,10 @@ pub enum PolicyKind {
         /// sum of weights across the tenants sharing the cluster
         weight_total: u32,
     },
+    /// self-tuning: a controller moves the fair-share weight, preemption,
+    /// and admission advice at virtual-time barriers
+    /// ([`crate::sim::adaptive::AdaptivePolicy`])
+    Adaptive(AdaptiveConfig),
 }
 
 impl PolicyKind {
@@ -80,6 +85,7 @@ impl PolicyKind {
             PolicyKind::Mofa => "mofa",
             PolicyKind::Priority(_) => "priority",
             PolicyKind::FairShare { .. } => "fair-share",
+            PolicyKind::Adaptive(_) => "adaptive",
         }
     }
 
@@ -96,6 +102,11 @@ impl PolicyKind {
                 ("weight", Json::Num(*weight as f64)),
                 ("weight_total", Json::Num(*weight_total as f64)),
             ]),
+            PolicyKind::Adaptive(cfg) => {
+                let mut pairs = vec![("kind", Json::Str("adaptive".into()))];
+                pairs.extend(cfg.json_fields());
+                Json::obj(pairs)
+            }
         }
     }
 
@@ -138,6 +149,7 @@ impl PolicyKind {
                 }
                 Ok(PolicyKind::FairShare { weight, weight_total })
             }
+            "adaptive" => Ok(PolicyKind::Adaptive(AdaptiveConfig::from_json(v)?)),
             other => Err(format!("unknown policy kind '{other}'")),
         }
     }
@@ -1256,6 +1268,18 @@ pub fn run_campaign_request(
             let sim = sched.run(&mut p);
             (p.into_inner().into_thinker(), sim)
         }
+        PolicyKind::Adaptive(acfg) => {
+            let totals = [
+                layout.generator_slots,
+                layout.validate_slots,
+                layout.cpu_slots,
+                layout.optimize_slots,
+                layout.trainer_slots,
+            ];
+            let mut p = AdaptivePolicy::new(base, totals, acfg).preemptive(preemption);
+            let sim = sched.run(&mut p);
+            (p.into_inner().into_thinker(), sim)
+        }
     };
     let wallclock = t_wall.elapsed().as_secs_f64();
     let mut report = assemble_report(config, thinker, sim, wallclock);
@@ -1458,6 +1482,11 @@ mod tests {
         assert_eq!(PolicyKind::Mofa.label(), "mofa");
         assert_eq!(PolicyKind::Priority(PriorityClasses::default()).label(), "priority");
         assert_eq!(PolicyKind::FairShare { weight: 1, weight_total: 2 }.label(), "fair-share");
+        let acfg = AdaptiveConfig::new(crate::sim::adaptive::ControllerCfg::TargetLatency {
+            target_p99_s: 900.0,
+            band: 0.2,
+        });
+        assert_eq!(PolicyKind::Adaptive(acfg).label(), "adaptive");
     }
 
     #[test]
@@ -1497,6 +1526,14 @@ mod tests {
                     .with_class(crate::workflow::taskserver::TaskKind::Retrain, 0),
             ),
             PolicyKind::FairShare { weight: 3, weight_total: 7 },
+            PolicyKind::Adaptive(
+                AdaptiveConfig::new(crate::sim::adaptive::ControllerCfg::Proportional {
+                    target_p99_s: 1800.0,
+                    gain: 1.5,
+                })
+                .share(1, 5)
+                .interval_s(120.0),
+            ),
         ];
         for kind in kinds {
             let text = kind.to_json().to_string();
@@ -1515,6 +1552,16 @@ mod tests {
                 "must reject {bad}"
             );
         }
+        // a bad adaptive config fails at parse time too: splice a broken
+        // field into an otherwise-valid serialization
+        let good = PolicyKind::Adaptive(AdaptiveConfig::new(
+            crate::sim::adaptive::ControllerCfg::TargetLatency { target_p99_s: 900.0, band: 0.2 },
+        ))
+        .to_json()
+        .to_string();
+        let bad = good.replace("\"interval_s\":60", "\"interval_s\":0");
+        assert_ne!(good, bad, "test must actually corrupt the field");
+        assert!(PolicyKind::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -268,7 +268,7 @@ impl<T> BoundedScoredQueue<T> {
     /// at its bound. On success returns the entry's sequence handle
     /// (usable with [`remove`](BoundedScoredQueue::remove)).
     pub fn push(&mut self, score: f64, item: T) -> Result<u64, T> {
-        if self.entries.len() == self.bound {
+        if self.entries.len() >= self.bound {
             return Err(item);
         }
         let seq = self.seq;
@@ -318,6 +318,17 @@ impl<T> BoundedScoredQueue<T> {
     /// The capacity bound.
     pub fn bound(&self) -> usize {
         self.bound
+    }
+
+    /// Retarget the capacity bound (≥ 1) at a barrier. Shrinking below
+    /// the current depth does **not** shed here — callers that shrink
+    /// must evict to fit first (see
+    /// `sim::admission::AdmissionQueue::set_bound`, which sheds
+    /// deterministically via [`evict_worst`](Self::evict_worst));
+    /// `push` rejects while the queue is over-full either way.
+    pub fn set_bound(&mut self, bound: usize) {
+        assert!(bound >= 1, "queue bound must be >= 1");
+        self.bound = bound;
     }
 
     /// High-water mark of the queue depth (≤ bound by construction).
@@ -601,6 +612,26 @@ mod tests {
         assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("mid"));
         assert_eq!(q.evict_worst().map(|(_, _, i)| i), Some("old-low"));
         assert_eq!(q.evict_worst().map(|(_, _, i)| i), None);
+    }
+
+    #[test]
+    fn bounded_set_bound_retargets_capacity() {
+        let mut q = BoundedScoredQueue::new(2);
+        q.push(0.1, "a").unwrap();
+        q.push(0.2, "b").unwrap();
+        assert_eq!(q.push(0.3, "c"), Err("c"));
+        // growing admits again
+        q.set_bound(3);
+        assert_eq!(q.push(0.3, "c"), Ok(2));
+        // shrinking below the depth rejects pushes until drained to fit
+        q.set_bound(1);
+        assert_eq!(q.push(0.0, "x"), Err("x"), "over-full queue must reject");
+        assert_eq!(q.len(), 3, "set_bound itself never sheds");
+        q.pop();
+        q.pop();
+        assert_eq!(q.push(0.0, "x"), Err("x"), "still at the new bound");
+        q.pop();
+        assert_eq!(q.push(0.0, "x"), Ok(3));
     }
 
     #[test]

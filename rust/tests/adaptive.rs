@@ -1,0 +1,238 @@
+//! Adaptive-policy determinism acceptance tests (ISSUE 9): an
+//! [`mofa::sim::adaptive::AdaptivePolicy`] campaign — controller moving
+//! the fair-share weight, preemption, and thrash cap at virtual-time
+//! barriers, with online retraining and preemption all ON — is
+//! bit-identical run concurrently vs. sequentially, across a
+//! checkpoint/resume taken mid-adaptation, and across a shard-migration
+//! wire round-trip. Controller state rides in checkpoint format v5; a
+//! missing `adaptive` section is a typed error, never a silent
+//! re-initialization.
+
+use std::sync::Arc;
+use std::thread;
+
+use mofa::genai::generator::SurrogateGenerator;
+use mofa::genai::trainer::SurrogateTrainer;
+use mofa::sim::adaptive::{AdaptiveConfig, ControllerCfg};
+use mofa::sim::checkpoint::{
+    canonical_report_json, migration_meta, resume_request, run_request_to_barrier,
+    stamp_migration, CheckpointError, MigrationMeta,
+};
+use mofa::sim::service::{run_campaign_request, CampaignRequest, PolicyKind};
+use mofa::util::json::Json;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::mofa::{CampaignConfig, CampaignReport};
+use mofa::workflow::taskserver::Engines;
+use mofa::workflow::thinker::PolicyConfig;
+
+fn quick_engines() -> Arc<Engines> {
+    let mut e = Engines::scaled(
+        Arc::new(SurrogateGenerator::builtin(16)),
+        Arc::new(SurrogateTrainer),
+    );
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    Arc::new(e)
+}
+
+/// Warmed generator: high model quality -> high linker survival -> the
+/// trainable pool crosses `retrain_min` early, so retrains fire inside
+/// the campaign window (the `tests/sim_sweep.rs` recipe).
+fn warmed_engines() -> Arc<Engines> {
+    let engines = quick_engines();
+    engines.generator.set_params(vec![], 6);
+    engines
+}
+
+fn quick_config(seed: u64, duration_s: f64) -> CampaignConfig {
+    CampaignConfig {
+        nodes: 8,
+        duration_s,
+        seed,
+        // retraining ON with low thresholds: checkpoints must carry the
+        // installed weights alongside the controller state
+        policy: PolicyConfig { retrain_min: 8, adsorption_switch: 8, ..Default::default() },
+        threads: 0,
+        util_sample_dt: 60.0,
+    }
+}
+
+/// A deliberately hot controller: a 5-second p99 target no campaign
+/// meets, so every data-bearing barrier escalates — weight 2 → 3 → 4,
+/// then preemption, then the thrash cap. `high_cutoff(6)` counts every
+/// completion except retrains as high-class, so the very first barriers
+/// carry data.
+fn hot_target_cfg() -> AdaptiveConfig {
+    AdaptiveConfig::new(ControllerCfg::TargetLatency { target_p99_s: 5.0, band: 0.2 })
+        .interval_s(120.0)
+        .high_cutoff(6)
+        .share(2, 4)
+}
+
+fn hot_proportional_cfg() -> AdaptiveConfig {
+    AdaptiveConfig::new(ControllerCfg::Proportional { target_p99_s: 5.0, gain: 1.0 })
+        .interval_s(120.0)
+        .high_cutoff(6)
+        .share(2, 4)
+}
+
+fn adaptive_request(seed: u64, duration_s: f64, cfg: AdaptiveConfig) -> CampaignRequest {
+    CampaignRequest::new(quick_config(seed, duration_s))
+        .policy(PolicyKind::Adaptive(cfg))
+        .preemption(true)
+}
+
+fn canonical(report: &CampaignReport) -> String {
+    canonical_report_json(report).to_string()
+}
+
+/// Concurrent-vs-sequential bit-identity with the whole loop closed:
+/// adaptation moving controls at barriers, online retraining installing
+/// new generator weights mid-run, and preemption evicting flights — two
+/// adaptive campaigns sharing one pool must reproduce their solo runs
+/// exactly, because every control decision is a pure function of
+/// virtual-time state.
+#[test]
+fn concurrent_adaptive_campaigns_match_sequential_runs() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let requests =
+        [adaptive_request(60, 1200.0, hot_target_cfg()),
+         adaptive_request(61, 1200.0, hot_proportional_cfg())];
+
+    // concurrent: both campaigns share the pool at once
+    let handles: Vec<_> = requests
+        .iter()
+        .map(|req| {
+            let req = req.clone();
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || run_campaign_request(req, warmed_engines(), &pool))
+        })
+        .collect();
+    let concurrent: Vec<CampaignReport> =
+        handles.into_iter().map(|h| h.join().expect("campaign thread")).collect();
+
+    // the retraining path must actually be exercised
+    assert!(
+        concurrent.iter().any(|r| r.thinker.model_version >= 1),
+        "no retrain fired in any adaptive campaign"
+    );
+
+    // sequential twins, fresh engines each
+    for (req, con) in requests.iter().zip(&concurrent) {
+        let seq = run_campaign_request(req.clone(), warmed_engines(), &pool);
+        assert_eq!(
+            canonical(con),
+            canonical(&seq),
+            "seed {}: concurrent adaptive run diverged from the sequential one",
+            req.config.seed
+        );
+    }
+}
+
+/// Checkpoint at a barrier **mid-adaptation** — controls already moved,
+/// a half-filled observer window open — and resume: the continuation is
+/// byte-identical to the uninterrupted run, for both shipped
+/// controllers, at two different barriers. Also pins the v5 surface:
+/// the `adaptive` section carries the applied-barrier count, the moved
+/// controls, and the controller's own state, and nulling it out is a
+/// typed error.
+#[test]
+fn checkpoint_mid_adaptation_resumes_byte_identically() {
+    let pool = Arc::new(ThreadPool::new(4));
+    for (label, cfg) in
+        [("target-latency", hot_target_cfg()), ("proportional", hot_proportional_cfg())]
+    {
+        let req = adaptive_request(70, 900.0, cfg);
+        let clean = run_request_to_barrier(req.clone(), quick_engines(), &pool, f64::INFINITY)
+            .report()
+            .expect("clean run finishes");
+        let want = canonical(&clean);
+        for barrier in [300.0, 600.0] {
+            let ckpt = run_request_to_barrier(req.clone(), quick_engines(), &pool, barrier)
+                .checkpoint()
+                .expect("campaign still live at the barrier");
+            // the state really is mid-adaptation: barriers fired and the
+            // hot controller escalated the weight past its start
+            let aj = ckpt.get("adaptive").expect("v5 campaigns carry the adaptive section");
+            let applied = aj
+                .get("barriers_applied")
+                .and_then(Json::as_f64)
+                .expect("barriers_applied serializes");
+            assert!(applied >= 1.0, "{label} @ {barrier}: no barrier applied before the pause");
+            let weight = aj
+                .get("controls")
+                .and_then(|c| c.get("weight"))
+                .and_then(Json::as_f64)
+                .expect("controls serialize");
+            if barrier >= 600.0 {
+                assert!(
+                    weight > 2.0,
+                    "{label} @ {barrier}: hot controller must have escalated, weight {weight}"
+                );
+            }
+            let kind = aj
+                .get("controller")
+                .and_then(|c| c.get("kind"))
+                .and_then(Json::as_str)
+                .expect("controller kind serializes");
+            assert_eq!(kind, label);
+
+            // wire round-trip through text, then resume to completion
+            let text = ckpt.to_string();
+            let resumed =
+                resume_request(&Json::parse(&text).unwrap(), quick_engines(), &pool, f64::INFINITY)
+                    .expect("resume")
+                    .report()
+                    .expect("resume runs to completion");
+            assert_eq!(
+                canonical(&resumed),
+                want,
+                "{label} @ barrier {barrier}: resumed adaptive run diverged"
+            );
+
+            // a checkpoint stripped of its adaptive section must refuse
+            // to resume — silent re-initialization would fork the run
+            let aj_text = aj.to_string();
+            let stripped = text.replacen(&format!("\"adaptive\":{aj_text}"), "\"adaptive\":null", 1);
+            assert_ne!(stripped, text, "strip must hit the section");
+            let err =
+                resume_request(&Json::parse(&stripped).unwrap(), quick_engines(), &pool, f64::INFINITY)
+                    .expect_err("null adaptive section must be refused");
+            assert!(
+                matches!(err, CheckpointError::Malformed(ref m) if m.contains("adaptive")),
+                "{err}"
+            );
+        }
+    }
+}
+
+/// The migration barrier protocol with an adapting campaign: checkpoint
+/// at a barrier, stamp migration metadata, push the bytes through the
+/// wire (text) form, resume on a fresh engine stack — the controller's
+/// post-migration decisions replay exactly, so the report is
+/// byte-identical to the never-migrated twin.
+#[test]
+fn migrated_adaptive_campaign_matches_unmigrated_twin() {
+    let pool = Arc::new(ThreadPool::new(4));
+    for (label, cfg) in
+        [("target-latency", hot_target_cfg()), ("proportional", hot_proportional_cfg())]
+    {
+        let req = adaptive_request(80, 600.0, cfg);
+        let clean = canonical(&run_campaign_request(req.clone(), quick_engines(), &pool));
+        let mut wire_json = run_request_to_barrier(req.clone(), quick_engines(), &pool, 240.0)
+            .checkpoint()
+            .expect("600 s campaign must still be live at barrier 240");
+        let meta = MigrationMeta { hops: 1, from_shard: Some(0) };
+        stamp_migration(&mut wire_json, &meta).expect("campaign checkpoint accepts the stamp");
+        let text = wire_json.to_string();
+        let parsed = Json::parse(&text).expect("wire text parses");
+        assert_eq!(migration_meta(&parsed).unwrap(), meta, "{label}: meta survives the wire");
+        let resumed = resume_request(&parsed, quick_engines(), &pool, f64::INFINITY)
+            .expect("wire checkpoint resumes")
+            .report()
+            .expect("resume to infinity completes");
+        assert_eq!(canonical(&resumed), clean, "{label}: migration must be invisible");
+    }
+}

@@ -23,13 +23,18 @@
 //! 5. byte-compares the scorecard against
 //!    `tests/conformance/golden/<name>.json` when that golden exists.
 //!
+//! A third, **adaptive** table (schema `conformance/adaptive/v1`)
+//! crosses a self-tuning [`PolicyKind::Adaptive`] tenant mix with the
+//! diurnal and bursty arrivals and the fault-churn axis, pinning the
+//! barrier-driven control loop's end-to-end numbers.
+//!
 //! Golden policy (see `golden/README.md`): bless with
-//! `MOFA_BLESS=1 cargo test --test conformance`. A missing golden is
-//! reported and the fresh scorecard is written next to the goldens'
-//! directory (or `$MOFA_CONFORMANCE_OUT`) so CI can upload it — it is
-//! **not** a failure, because scorecards cross machines only modulo
-//! libm (`ln`/`sin`/`powf` feed the arrival processes). A *present*
-//! golden that mismatches is a hard failure.
+//! `MOFA_BLESS=1 cargo test --test conformance`. By default a missing
+//! golden is reported and the fresh scorecard is written next to the
+//! goldens' directory (or `$MOFA_CONFORMANCE_OUT`) so CI can upload it;
+//! with `MOFA_REQUIRE_GOLDEN=1` (set in CI) a missing golden is a
+//! **hard failure** — the battery only gates when every cell is pinned.
+//! A *present* golden that mismatches is always a hard failure.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -42,9 +47,9 @@ use mofa::sim::shard::{
 };
 use mofa::sim::{
     generate_trace, replay_trace, run_campaign_request, run_request_with_faults,
-    run_request_with_faults_checkpointed, ArrivalProcess, CampaignRequest, FaultPlan, PolicyKind,
-    PriorityClasses, ServiceConfig, ShedPolicy, SizeModel, TenantProfile, TraceStats,
-    WorkloadSpec,
+    run_request_with_faults_checkpointed, AdaptiveConfig, ArrivalProcess, CampaignRequest,
+    ControllerCfg, FaultPlan, PolicyKind, PriorityClasses, ServiceConfig, ShedPolicy, SizeModel,
+    TenantProfile, TraceStats, WorkloadSpec,
 };
 use mofa::util::json::Json;
 use mofa::util::stats;
@@ -76,6 +81,8 @@ fn quick_engines() -> Arc<Engines> {
 
 struct Scenario {
     name: String,
+    /// scorecard schema tag (`conformance/v1`, `conformance/adaptive/v1`)
+    schema: &'static str,
     spec: WorkloadSpec,
     cfg: ServiceConfig,
     plan: FaultPlan,
@@ -154,6 +161,7 @@ fn scenarios() -> Vec<Scenario> {
             {
                 out.push(Scenario {
                     name: format!("{}-{plabel}-{flabel}", arr.label()),
+                    schema: "conformance/v1",
                     spec: WorkloadSpec {
                         arrivals: *arr,
                         sizes: SizeModel::Pareto { min_s: 90.0, alpha: 1.4, cap_s: 360.0 },
@@ -176,6 +184,7 @@ fn scenarios() -> Vec<Scenario> {
         let (_, shed, tenants) = policy_mixes().into_iter().nth(pi).expect("mix exists");
         out.push(Scenario {
             name: name.to_string(),
+            schema: "conformance/v1",
             spec: WorkloadSpec {
                 arrivals: if pi == 0 {
                     ArrivalProcess::Poisson { rate_per_ks: 40.0 }
@@ -193,6 +202,77 @@ fn scenarios() -> Vec<Scenario> {
             ckpt: true,
             seed: 2000 + pi as u64,
         });
+    }
+    out.extend(adaptive_scenarios());
+    out
+}
+
+/// The ISSUE-9 adaptive cells: a self-tuning [`PolicyKind::Adaptive`]
+/// tenant mix (one hysteresis target-latency controller with preemption,
+/// one proportional controller) crossed with the two time-varying
+/// arrival processes and the fault-churn axis. Controller decisions at
+/// every virtual-time barrier land in the scorecard through turnaround,
+/// eviction, and goodput numbers, so any drift in the control loop is a
+/// golden mismatch.
+fn adaptive_scenarios() -> Vec<Scenario> {
+    let tenants = vec![
+        TenantProfile {
+            name: "interactive".into(),
+            weight: 1,
+            class: 0,
+            policy: PolicyKind::Adaptive(
+                AdaptiveConfig::new(ControllerCfg::TargetLatency {
+                    target_p99_s: 1800.0,
+                    band: 0.25,
+                })
+                .interval_s(120.0)
+                .share(3, 4),
+            ),
+            deadline_slack_s: Some(2000.0),
+            preemption: true,
+        },
+        TenantProfile {
+            name: "batch".into(),
+            weight: 2,
+            class: 2,
+            policy: PolicyKind::Adaptive(
+                AdaptiveConfig::new(ControllerCfg::Proportional {
+                    target_p99_s: 3600.0,
+                    gain: 1.0,
+                })
+                .interval_s(180.0)
+                .share(2, 4),
+            ),
+            deadline_slack_s: None,
+            preemption: false,
+        },
+    ];
+    let arrivals = [
+        ArrivalProcess::Diurnal { base_per_ks: 40.0, amplitude: 0.8, period_s: 1500.0 },
+        ArrivalProcess::Bursty { on_s: 150.0, off_s: 300.0, rate_per_ks: 120.0 },
+    ];
+    let mut out = Vec::new();
+    for (ai, arr) in arrivals.iter().enumerate() {
+        for (fi, (flabel, plan)) in
+            [("none", FaultPlan::new()), ("churn", churn_plan())].into_iter().enumerate()
+        {
+            out.push(Scenario {
+                name: format!("{}-adaptive-{flabel}", arr.label()),
+                schema: "conformance/adaptive/v1",
+                spec: WorkloadSpec {
+                    arrivals: *arr,
+                    sizes: SizeModel::Pareto { min_s: 90.0, alpha: 1.4, cap_s: 360.0 },
+                    tenants: tenants.clone(),
+                    count: 5,
+                    nodes: 8,
+                    util_sample_dt: 30.0,
+                },
+                cfg: ServiceConfig::new(2).queue_bound(3).shed(ShedPolicy::DeadlineFirst),
+                plan,
+                ckpt: false,
+                seed: 4000 + (ai * 2 + fi) as u64,
+            });
+        }
     }
     out
 }
@@ -270,7 +350,7 @@ fn scorecard_fields(name: &str, stats: &TraceStats) -> Vec<(&'static str, Json)>
 
 /// Reduce a replay to the pinned scorecard.
 fn scorecard(sc: &Scenario, stats: &TraceStats) -> Json {
-    let mut fields = vec![("schema", Json::Str("conformance/v1".into()))];
+    let mut fields = vec![("schema", Json::Str(sc.schema.into()))];
     fields.extend(scorecard_fields(&sc.name, stats));
     Json::obj(fields)
 }
@@ -425,6 +505,11 @@ fn main() {
         .map(PathBuf::from)
         .unwrap_or_else(|_| manifest.join("target/conformance"));
     let bless = std::env::var("MOFA_BLESS").map(|v| v == "1").unwrap_or(false);
+    // CI sets this: a scenario without a committed golden is then a hard
+    // failure, not a "??" advisory — the battery only gates for real
+    // when every cell is pinned.
+    let require_golden =
+        std::env::var("MOFA_REQUIRE_GOLDEN").map(|v| v == "1").unwrap_or(false);
     let pool = Arc::new(ThreadPool::new(2));
 
     let table = scenarios();
@@ -454,14 +539,23 @@ fn main() {
                 eprintln!("FAIL {name}: golden mismatch\n{}", first_diff(&card, &want));
             }
             Err(_) => {
-                unblessed += 1;
                 std::fs::create_dir_all(&out_dir).expect("create scorecard out dir");
                 let out = out_dir.join(format!("{name}.json"));
                 std::fs::write(&out, &card).expect("write scorecard");
-                eprintln!(
-                    "??   {name}: no golden; scorecard written to {} (bless with MOFA_BLESS=1)",
-                    out.display()
-                );
+                if require_golden {
+                    failures += 1;
+                    eprintln!(
+                        "FAIL {name}: no golden committed (MOFA_REQUIRE_GOLDEN=1); \
+                         scorecard written to {}",
+                        out.display()
+                    );
+                } else {
+                    unblessed += 1;
+                    eprintln!(
+                        "??   {name}: no golden; scorecard written to {} (bless with MOFA_BLESS=1)",
+                        out.display()
+                    );
+                }
             }
         }
     };
