@@ -30,6 +30,13 @@
 //!
 //!     cargo run --release --example full_campaign -- --service-load 12,4,deadline-first
 //!
+//! `--tokens CAP:REFILL` arms the virtual-time token bucket on either
+//! service mode's front door: bursts up to CAP requests, then refills at
+//! REFILL tokens per *dispatched virtual service second* (never
+//! wallclock — `mofa-serve` shares the same admission layer):
+//!
+//!     cargo run --release --example full_campaign -- --service-load 12,4,reject-newest --tokens 3:0.01
+//!
 //! **Checkpoint/replay** (the CI determinism gate drives these):
 //!
 //!     # run to a virtual-time barrier (default: half the duration) and
@@ -197,7 +204,7 @@ fn print_report(report: &CampaignReport, hours: f64, href: &HmofReference) {
 /// an admission queue bounded at BOUND under the given shed policy, then
 /// print the `ServiceStats` table. One request is also cancelled mid-queue
 /// to exercise the ticket path.
-fn service_load_demo(spec: &str) -> anyhow::Result<()> {
+fn service_load_demo(spec: &str, tokens: Option<(f64, f64)>) -> anyhow::Result<()> {
     let parts: Vec<&str> = spec.split(',').collect();
     let [offered, bound, shed] = parts[..] else {
         anyhow::bail!("--service-load expects OFFERED,BOUND,SHED (e.g. 12,4,deadline-first)");
@@ -225,10 +232,12 @@ fn service_load_demo(spec: &str) -> anyhow::Result<()> {
     );
 
     let pool = Arc::new(ThreadPool::default_pool());
-    let svc = CampaignService::new(
-        Arc::clone(&pool),
-        ServiceConfig::new(2).queue_bound(bound).shed(shed).tenant_quota(4),
-    );
+    let mut cfg = ServiceConfig::new(2).queue_bound(bound).shed(shed).tenant_quota(4);
+    if let Some((cap, refill)) = tokens {
+        println!("token bucket: burst {cap:.1}, refill {refill} tokens per virtual second");
+        cfg = cfg.tokens(cap, refill);
+    }
+    let svc = CampaignService::new(Arc::clone(&pool), cfg);
     let mut tickets = Vec::new();
     for i in 0..offered {
         let config = CampaignConfig {
@@ -268,10 +277,10 @@ fn service_load_demo(spec: &str) -> anyhow::Result<()> {
     let s = svc.stats();
     println!("\n-- ServiceStats --");
     println!(
-        "queue depth {} (peak {}), submitted {}, admitted {}, rejected {}, shed {}, \
-         cancelled {}, completed {}, task evictions {}",
-        s.queue_depth, s.peak_queue_depth, s.submitted, s.admitted, s.rejected, s.shed,
-        s.cancelled, s.completed, s.task_evictions
+        "queue depth {} (peak {}), submitted {}, admitted {}, rejected {} ({} throttled), \
+         shed {}, cancelled {}, completed {}, task evictions {}",
+        s.queue_depth, s.peak_queue_depth, s.submitted, s.admitted, s.rejected, s.throttled,
+        s.shed, s.cancelled, s.completed, s.task_evictions
     );
     println!(
         "goodput {:.1}%  turnaround p50 {:.2} s  p99 {:.2} s",
@@ -476,13 +485,28 @@ fn checkpoint_flow(nodes: usize, hours: f64, flow: CheckpointFlow) -> anyhow::Re
 
 fn main() -> anyhow::Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // --tokens CAP:REFILL arms the virtual-time token bucket on the
+    // service front door (service modes only; tokens accrue per
+    // dispatched virtual service time, never per wallclock)
+    let tokens: Option<(f64, f64)> = match take_value(&mut args, "--tokens")? {
+        Some(s) => {
+            let (cap, refill) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--tokens expects CAP:REFILL, got {s:?}"))?;
+            Some((
+                cap.parse().map_err(|_| anyhow::anyhow!("--tokens: bad capacity {cap:?}"))?,
+                refill.parse().map_err(|_| anyhow::anyhow!("--tokens: bad refill {refill:?}"))?,
+            ))
+        }
+        None => None,
+    };
     // --service-load OFFERED,BOUND,SHED: run the overload demo and exit
     if let Some(i) = args.iter().position(|a| a == "--service-load") {
         let spec = args
             .get(i + 1)
             .cloned()
             .ok_or_else(|| anyhow::anyhow!("--service-load needs OFFERED,BOUND,SHED"))?;
-        return service_load_demo(&spec);
+        return service_load_demo(&spec, tokens);
     }
     // checkpoint/replay flags (see the module docs); any of them routes
     // the run through the deterministic single-campaign flow
@@ -632,12 +656,16 @@ fn main() -> anyhow::Result<()> {
                 "campaigns: {node_counts:?} nodes, {hours:.2} h virtual each, online \
                  retraining ON, served via CampaignService (max {max_in_flight} in flight)"
             );
-            let svc =
-                CampaignService::new(Arc::clone(&pool), ServiceConfig::new(max_in_flight));
+            let mut svc_cfg = ServiceConfig::new(max_in_flight);
+            if let Some((cap, refill)) = tokens {
+                println!("token bucket: burst {cap:.1}, refill {refill}/virtual s");
+                svc_cfg = svc_cfg.tokens(cap, refill);
+            }
+            let svc = CampaignService::new(Arc::clone(&pool), svc_cfg);
             let tickets: Vec<_> = items
                 .into_iter()
                 .enumerate()
-                .map(|(i, item)| {
+                .filter_map(|(i, item)| {
                     let policy = kinds[i % kinds.len()];
                     println!(
                         "  request {i}: {} nodes, policy {}{}",
@@ -645,14 +673,21 @@ fn main() -> anyhow::Result<()> {
                         policy.label(),
                         if preempt { " (preemption on)" } else { "" }
                     );
-                    svc.try_submit(
+                    match svc.try_submit(
                         CampaignRequest::new(item.config)
                             .policy(policy)
                             .preemption(preempt)
                             .tenant(format!("sweep-{i}")),
                         item.engines,
-                    )
-                    .expect("the default queue bound admits a node sweep")
+                    ) {
+                        Ok(t) => Some(t),
+                        // only the --tokens bucket can refuse a node
+                        // sweep: the default queue bound always admits
+                        Err(reason) => {
+                            println!("  request {i}: rejected — {reason}");
+                            None
+                        }
+                    }
                 })
                 .collect();
             let reports: Vec<_> = tickets

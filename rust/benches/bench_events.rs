@@ -27,6 +27,13 @@
 //!   timed as `shard_migrations_per_sec`, then one final resume that
 //!   must run to completion (the byte-identity gates live in
 //!   `tests/shard.rs` and the conformance battery).
+//! * **journal** — the `mofa-serve` durability hot paths: framed,
+//!   FNV-1a-checksummed appends of full `Submit` records
+//!   (`journal_appends_per_sec`) and crash-recovery replay of a real
+//!   `ServeCore` journal — parse + re-drive every verdict through a
+//!   fresh admission queue — as `journal_replay_records_per_sec` (the
+//!   bit-identity gates live in `tests/serve.rs` and the serve
+//!   conformance table).
 //!
 //! `--check BASELINE.json` exits non-zero when any gated metric falls
 //! below its floor (see [`mofa::util::benchcheck::GATED_METRICS`]),
@@ -44,8 +51,13 @@ use mofa::genai::trainer::SurrogateTrainer;
 use mofa::sim::checkpoint::{
     migration_meta, resume_request, run_request_to_barrier, stamp_migration, MigrationMeta,
 };
+use mofa::sim::journal::{
+    read_journal_bytes, replay_journal, JournalRecord, JournalWriter, ServeConfig, ServeCore,
+    Verdict,
+};
 use mofa::sim::{
-    CampaignRequest, Completion, Policy, PreemptCandidate, Scheduler, SimOutcome, SimParams,
+    CampaignRequest, Completion, Policy, PreemptCandidate, Scheduler, ServiceConfig, SimOutcome,
+    SimParams,
 };
 use mofa::util::benchcheck::{check_regression, CheckOutcome, GATED_METRICS};
 use mofa::util::json::Json;
@@ -241,6 +253,93 @@ fn run_migrations(hops: usize, pool: &Arc<ThreadPool>) -> (usize, f64) {
     (hops, wall)
 }
 
+/// Append throughput: `appends` framed Submit records — compact-JSON
+/// serialization + FNV-1a checksum + length-delimited framing into an
+/// in-memory sink (no fsync; the fsync axis is configuration, not a hot
+/// path). Returns records/sec.
+fn run_journal_appends(appends: u64) -> f64 {
+    let mut w = JournalWriter::in_memory();
+    w.append(&JournalRecord::Config { cfg: ServeConfig::new(ServiceConfig::new(2)) })
+        .expect("config record");
+    let req = CampaignRequest::new(CampaignConfig {
+        nodes: 8,
+        duration_s: 120.0,
+        seed: 99,
+        policy: PolicyConfig::default(),
+        threads: 0,
+        util_sample_dt: 30.0,
+    })
+    .tenant("bench")
+    .deadline(600.0);
+    let rec = JournalRecord::Submit {
+        id: 1,
+        req,
+        verdict: Verdict::Admit { seq: 1, shed_victim: None },
+    };
+    let t = Instant::now();
+    for _ in 0..appends {
+        w.append(&rec).expect("in-memory append");
+    }
+    let wall = t.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(w.records(), appends + 1);
+    appends as f64 / wall
+}
+
+/// Replay throughput over a real `ServeCore` journal: an overloaded
+/// single-server run (token bucket + deadline sheds + re-offers)
+/// journaled in memory, then replayed `replays` times — each pass
+/// parses every frame and re-drives every verdict through a fresh
+/// admission queue, byte-asserting the canonical state against the live
+/// core once. Returns (journal records, records replayed per sec).
+fn run_journal_replays(replays: usize, pool: &Arc<ThreadPool>) -> (usize, f64) {
+    // scaled-down engines: the campaigns themselves are setup cost, not
+    // the measured path (replay never re-runs them)
+    let mut e =
+        Engines::scaled(Arc::new(SurrogateGenerator::builtin(16)), Arc::new(SurrogateTrainer));
+    e.md.steps = 60;
+    e.gcmc.equil_moves = 200;
+    e.gcmc.prod_moves = 400;
+    e.opt.max_steps = 10;
+    let cfg = ServeConfig {
+        service: ServiceConfig::new(1).queue_bound(3).tokens(4.0, 0.002),
+        reoffer_watermark: 2,
+    };
+    let mut core =
+        ServeCore::new(cfg, Arc::new(e), Arc::clone(pool), JournalWriter::in_memory())
+            .expect("config record");
+    for i in 0..12u64 {
+        let req = CampaignRequest::new(CampaignConfig {
+            nodes: 8,
+            duration_s: if i % 4 == 0 { 300.0 } else { 60.0 },
+            seed: 600 + i,
+            policy: PolicyConfig::default(),
+            threads: 0,
+            util_sample_dt: 30.0,
+        })
+        .tenant(["argonne", "campus", "edge"][i as usize % 3]);
+        let req = if i % 2 == 1 { req.deadline(150.0) } else { req };
+        core.offer_at(i as f64 * 5.0, req).expect("offer");
+    }
+    core.drain().expect("drain");
+    let bytes = core.journal_bytes().expect("in-memory journal").to_vec();
+    let n_records = read_journal_bytes(&bytes).expect("journal reads").records.len();
+    let live = core.canonical_state_json().to_string();
+    let t = Instant::now();
+    for i in 0..replays {
+        let read = read_journal_bytes(&bytes).expect("journal reads");
+        let replayed = replay_journal(&read.records).expect("journal replays");
+        if i == 0 {
+            assert_eq!(
+                replayed.canonical_json().to_string(),
+                live,
+                "replay must reconstruct the live core"
+            );
+        }
+    }
+    let wall = t.elapsed().as_secs_f64().max(1e-9);
+    (n_records, (n_records * replays) as f64 / wall)
+}
+
 /// Peak resident set (VmHWM) in MiB, or 0.0 where /proc is unavailable.
 fn peak_rss_mb() -> f64 {
     let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
@@ -300,6 +399,13 @@ fn main() {
     let (hops, mig_wall) = run_migrations(n_hops, &pool);
     let shard_migrations_per_sec = hops as f64 / mig_wall.max(1e-9);
 
+    let n_appends: u64 = if quick { 20_000 } else { 200_000 };
+    let n_replays: usize = if quick { 2_000 } else { 10_000 };
+    eprintln!("-- journal appends ({n_appends} framed Submit records)");
+    let journal_appends_per_sec = run_journal_appends(n_appends);
+    eprintln!("-- journal replay ({n_replays} passes over a ServeCore journal)");
+    let (journal_records, journal_replay_records_per_sec) = run_journal_replays(n_replays, &pool);
+
     let rss = peak_rss_mb();
     let speedup = events_per_sec / pre_events_per_sec.max(1e-9);
 
@@ -317,6 +423,9 @@ fn main() {
         ("checkpoint_bytes_per_sec", Json::Num(checkpoint_bytes_per_sec)),
         ("shard_migration_hops", Json::Num(hops as f64)),
         ("shard_migrations_per_sec", Json::Num(shard_migrations_per_sec)),
+        ("journal_appends_per_sec", Json::Num(journal_appends_per_sec)),
+        ("journal_records", Json::Num(journal_records as f64)),
+        ("journal_replay_records_per_sec", Json::Num(journal_replay_records_per_sec)),
         ("peak_rss_mb", Json::Num(rss)),
         ("speedup_vs_pre", Json::Num(speedup)),
         (
@@ -332,7 +441,9 @@ fn main() {
     eprintln!(
         "events/s {events_per_sec:.0} (pre {pre_events_per_sec:.0}, speedup {speedup:.1}x), \
          cancels/s {preempt_cancels_per_sec:.0}, ckpt {checkpoint_bytes_per_sec:.0} B/s, \
-         migrations/s {shard_migrations_per_sec:.0}, rss {rss:.0} MiB -> {out_path}"
+         migrations/s {shard_migrations_per_sec:.0}, journal appends/s \
+         {journal_appends_per_sec:.0}, replay records/s {journal_replay_records_per_sec:.0}, \
+         rss {rss:.0} MiB -> {out_path}"
     );
 
     if let Some(path) = baseline_path {

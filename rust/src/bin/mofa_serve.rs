@@ -1,0 +1,421 @@
+//! `mofa-serve` — the journaled campaign front door as a process.
+//!
+//! Accepts line-delimited `CampaignRequest` JSON from a file, stdin, or
+//! a Unix/TCP socket, drives the deterministic serve loop
+//! (`mofa::sim::journal::ServeCore`), appends every admission decision
+//! to an append-only checksummed journal, and streams ticket status
+//! events as NDJSON — a separate consumer from the durable journal
+//! (stdout for file/stdin input, the client connection for sockets).
+//!
+//! ```text
+//! # serve a request file, journal to serve.bin, state snapshot at exit
+//! mofa-serve --input reqs.jsonl --journal serve.bin --state-out state.json
+//!
+//! # pipe requests in; fsync every record
+//! mofa-serve --emit-demo 12 | mofa-serve --input - --journal serve.bin --fsync always
+//!
+//! # crash-replay: die after 20 journal records (exit code 3, no state
+//! # written — the journal alone carries the truth)...
+//! mofa-serve --input reqs.jsonl --journal crash.bin --kill-after 20
+//! # ...then recover: replay the journal through the real admission
+//! # queue back to the exact pre-crash state
+//! mofa-serve --replay crash.bin --state-out recovered.json
+//!
+//! # listen on a socket; each connection sends request lines and reads
+//! # its event stream back; the literal line "shutdown" stops the server
+//! mofa-serve --listen unix:/tmp/mofa.sock --journal serve.bin
+//! mofa-serve --listen tcp:127.0.0.1:7171 --journal serve.bin
+//! ```
+//!
+//! Request lines are either a bare `CampaignRequest` JSON object or
+//! `{"at_vt": T, "request": {...}}` to offer at virtual time `T`
+//! (monotonic; earlier times clamp to "now"). Campaigns run on the
+//! procedural surrogate engine stack — this binary is the serving-layer
+//! harness, not the PJRT launcher.
+//!
+//! Exit codes: 0 success, 1 usage/IO/parse error, 2 replay divergence,
+//! 3 journal record limit reached (`--kill-after`).
+
+use std::io::{BufRead, Write};
+use std::sync::{Arc, Mutex};
+
+use mofa::sim::journal::{
+    read_journal, replay_journal, FsyncPolicy, JournalError, JournalWriter, ServeConfig,
+    ServeCore,
+};
+use mofa::sim::service::{CampaignRequest, ServiceConfig};
+use mofa::sim::admission::ShedPolicy;
+use mofa::util::json::Json;
+use mofa::util::threadpool::ThreadPool;
+use mofa::workflow::launch::build_quick_surrogate_engines;
+use mofa::workflow::mofa::CampaignConfig;
+use mofa::workflow::thinker::PolicyConfig;
+
+const USAGE: &str = "\
+mofa-serve: journaled, replayable campaign front door
+
+  --input FILE|-          line-delimited requests from a file or stdin
+  --listen unix:PATH      accept request lines on a Unix socket
+  --listen tcp:ADDR       accept request lines on a TCP socket
+  --journal PATH          journal file (default mofa_serve_journal.bin)
+  --fsync POLICY          always | never | every-N (default every-16)
+  --state-out PATH        write the canonical state JSON on clean exit
+  --kill-after K          refuse the K+1th journal record and die (exit 3)
+  --replay PATH           replay a journal instead of serving; verify
+                          every recorded verdict; print/write the state
+  --emit-demo N           print N deterministic demo request lines, exit
+  --max-in-flight N       concurrent campaigns (default 2)
+  --bound N               admission queue bound (default 8)
+  --shed POLICY           reject-newest | drop-lowest | deadline-first
+  --quota N               per-tenant in-queue quota
+  --tokens CAP:REFILL     virtual-time token bucket (burst CAP, REFILL
+                          tokens per dispatched virtual second)
+  --watermark N           re-offer shed requests below this queue depth
+                          (default bound/2; 0 disables)
+";
+
+fn take_flag(args: &mut Vec<String>, name: &str) -> bool {
+    match args.iter().position(|a| a == name) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
+fn take_value(args: &mut Vec<String>, name: &str) -> anyhow::Result<Option<String>> {
+    match args.iter().position(|a| a == name) {
+        Some(i) => {
+            args.remove(i);
+            if i < args.len() {
+                Ok(Some(args.remove(i)))
+            } else {
+                anyhow::bail!("{name} needs a value")
+            }
+        }
+        None => Ok(None),
+    }
+}
+
+/// A deterministic demo trace: mixed tenants, classes, deadlines, and
+/// sizes — enough pressure to exercise admit/reject/shed/re-offer.
+fn emit_demo(n: usize) {
+    let tenants = ["argonne", "campus", "edge"];
+    for i in 0..n {
+        let config = CampaignConfig {
+            nodes: 8,
+            duration_s: if i % 4 == 0 { 300.0 } else { 60.0 },
+            seed: 900 + i as u64,
+            policy: PolicyConfig { retrain_enabled: false, ..Default::default() },
+            threads: 0,
+            util_sample_dt: 30.0,
+        };
+        let mut req = CampaignRequest::new(config)
+            .tenant(tenants[i % tenants.len()])
+            .class((i % 3) as u8);
+        if i % 2 == 0 {
+            req = req.deadline(150.0);
+        }
+        let line = Json::obj(vec![
+            ("at_vt", Json::Num(i as f64 * 5.0)),
+            ("request", req.to_json()),
+        ]);
+        println!("{}", line.to_string());
+    }
+}
+
+/// Parse one request line: a bare request object, or
+/// `{"at_vt": T, "request": {...}}`.
+fn parse_line(line: &str, now: f64) -> Result<(f64, CampaignRequest), String> {
+    let v = Json::parse(line)?;
+    match v.get("request") {
+        Some(r) => {
+            let at = v.get("at_vt").and_then(Json::as_f64).unwrap_or(now);
+            Ok((at, CampaignRequest::from_json(r)?))
+        }
+        None => Ok((now, CampaignRequest::from_json(&v)?)),
+    }
+}
+
+fn serve_cfg(args: &mut Vec<String>) -> anyhow::Result<ServeConfig> {
+    let max_in_flight = match take_value(args, "--max-in-flight")? {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--max-in-flight: bad count {s:?}"))?,
+        None => 2,
+    };
+    let bound: usize = match take_value(args, "--bound")? {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--bound: bad count {s:?}"))?,
+        None => 8,
+    };
+    let mut service = ServiceConfig::new(max_in_flight).queue_bound(bound);
+    if let Some(s) = take_value(args, "--shed")? {
+        service = service.shed(
+            ShedPolicy::from_label(&s)
+                .ok_or_else(|| anyhow::anyhow!("--shed: unknown policy {s:?}"))?,
+        );
+    }
+    if let Some(s) = take_value(args, "--quota")? {
+        service = service
+            .tenant_quota(s.parse().map_err(|_| anyhow::anyhow!("--quota: bad count {s:?}"))?);
+    }
+    if let Some(s) = take_value(args, "--tokens")? {
+        let (cap, refill) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--tokens expects CAP:REFILL, got {s:?}"))?;
+        service = service.tokens(
+            cap.parse().map_err(|_| anyhow::anyhow!("--tokens: bad capacity {cap:?}"))?,
+            refill.parse().map_err(|_| anyhow::anyhow!("--tokens: bad refill {refill:?}"))?,
+        );
+    }
+    let reoffer_watermark = match take_value(args, "--watermark")? {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--watermark: bad count {s:?}"))?,
+        None => bound / 2,
+    };
+    Ok(ServeConfig { service, reoffer_watermark })
+}
+
+/// Pretty one-line summary for stderr (stdout carries the event stream).
+fn summary(core: &ServeCore) -> String {
+    let s = core.stats();
+    format!(
+        "served: submitted {} admitted {} rejected {} (throttled {}) shed {} \
+         completed {} | journal records {} | vt {:.1}",
+        s.submitted, s.admitted, s.rejected, s.throttled, s.shed, s.completed,
+        core.journal_records(), core.now()
+    )
+}
+
+/// Exit honoring the `--kill-after` contract: a refused journal append
+/// means "the process died here" — no drain, no state file.
+fn die_if_limit(err: &JournalError) {
+    if matches!(err, JournalError::LimitReached) {
+        eprintln!("mofa-serve: journal record limit reached — dying (kill-after harness)");
+        std::process::exit(3);
+    }
+}
+
+/// Drain buffered event lines to a sink; a broken event stream is
+/// ignored by design (durability lives in the journal, not the stream).
+fn flush_events(buf: &Arc<Mutex<Vec<String>>>, out: &mut dyn Write) {
+    let lines: Vec<String> = std::mem::take(&mut *buf.lock().unwrap());
+    for l in lines {
+        let _ = writeln!(out, "{l}");
+    }
+    let _ = out.flush();
+}
+
+fn run_replay(path: &str, state_out: Option<&str>) -> anyhow::Result<()> {
+    let read = match read_journal(path) {
+        Ok(r) => r,
+        Err(e) => anyhow::bail!("cannot read journal {path}: {e}"),
+    };
+    if read.torn_bytes > 0 {
+        eprintln!(
+            "mofa-serve: dropped {} torn tail bytes (crash artifact) from {path}",
+            read.torn_bytes
+        );
+    }
+    match replay_journal(&read.records) {
+        Ok(state) => {
+            let canonical = state.canonical_json().to_string();
+            let s = state.stats();
+            eprintln!(
+                "replayed {} records: submitted {} admitted {} rejected {} (throttled {}) \
+                 shed {} completed {}",
+                state.records_applied, s.submitted, s.admitted, s.rejected, s.throttled,
+                s.shed, s.completed
+            );
+            match state_out {
+                Some(p) => std::fs::write(p, &canonical)?,
+                None => println!("{canonical}"),
+            }
+            Ok(())
+        }
+        Err(e @ JournalError::Divergence(_)) => {
+            eprintln!("mofa-serve: {e}");
+            std::process::exit(2);
+        }
+        Err(e) => anyhow::bail!("replay failed: {e}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if take_flag(&mut args, "--help") || take_flag(&mut args, "-h") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    if let Some(n) = take_value(&mut args, "--emit-demo")? {
+        let n: usize = n.parse().map_err(|_| anyhow::anyhow!("--emit-demo: bad count {n:?}"))?;
+        emit_demo(n);
+        return Ok(());
+    }
+    let state_out = take_value(&mut args, "--state-out")?;
+    if let Some(path) = take_value(&mut args, "--replay")? {
+        return run_replay(&path, state_out.as_deref());
+    }
+
+    let cfg = serve_cfg(&mut args)?;
+    let journal_path = take_value(&mut args, "--journal")?
+        .unwrap_or_else(|| "mofa_serve_journal.bin".to_string());
+    let fsync = match take_value(&mut args, "--fsync")? {
+        Some(s) => FsyncPolicy::from_spec(&s)
+            .ok_or_else(|| anyhow::anyhow!("--fsync: always | never | every-N, got {s:?}"))?,
+        None => FsyncPolicy::EveryN(16),
+    };
+    let kill_after = match take_value(&mut args, "--kill-after")? {
+        Some(s) => {
+            Some(s.parse::<u64>().map_err(|_| anyhow::anyhow!("--kill-after: bad count {s:?}"))?)
+        }
+        None => None,
+    };
+    let input = take_value(&mut args, "--input")?;
+    let listen = take_value(&mut args, "--listen")?;
+    if !args.is_empty() {
+        anyhow::bail!("unknown arguments {args:?}\n{USAGE}");
+    }
+    if input.is_some() == listen.is_some() {
+        anyhow::bail!("pick exactly one of --input or --listen\n{USAGE}");
+    }
+
+    let mut writer = match JournalWriter::create(&journal_path, fsync) {
+        Ok(w) => w,
+        Err(e) => anyhow::bail!("cannot create journal {journal_path}: {e}"),
+    };
+    if let Some(k) = kill_after {
+        writer = writer.limit_records(k);
+    }
+    let engines = build_quick_surrogate_engines();
+    let pool = Arc::new(ThreadPool::default_pool());
+    let mut core = match ServeCore::new(cfg, engines, pool, writer) {
+        Ok(c) => c,
+        Err(e) => {
+            die_if_limit(&e);
+            anyhow::bail!("cannot start the serve core: {e}");
+        }
+    };
+    // the live stream is decoupled from the journal: events buffer here
+    // and drain to the current consumer after each accepted line
+    let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    core.on_event(move |e| sink.lock().unwrap().push(e.to_json().to_string()));
+
+    if let Some(input) = input {
+        let reader: Box<dyn BufRead> = if input == "-" {
+            Box::new(std::io::BufReader::new(std::io::stdin()))
+        } else {
+            Box::new(std::io::BufReader::new(std::fs::File::open(&input).map_err(
+                |e| anyhow::anyhow!("cannot open --input {input}: {e}"),
+            )?))
+        };
+        let mut out = std::io::stdout();
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (at, req) = parse_line(&line, core.now())
+                .map_err(|e| anyhow::anyhow!("{input}:{}: bad request: {e}", lineno + 1))?;
+            if let Err(e) = core.offer_at(at, req) {
+                die_if_limit(&e);
+                anyhow::bail!("journal append failed: {e}");
+            }
+            flush_events(&events, &mut out);
+        }
+        if let Err(e) = core.drain() {
+            die_if_limit(&e);
+            anyhow::bail!("journal append failed during drain: {e}");
+        }
+        flush_events(&events, &mut out);
+    } else if let Some(spec) = listen {
+        serve_socket(&spec, &mut core, &events)?;
+    }
+
+    eprintln!("{}", summary(&core));
+    if let Some(p) = state_out {
+        std::fs::write(&p, core.canonical_state_json().to_string())?;
+        eprintln!("canonical state written to {p}");
+    }
+    Ok(())
+}
+
+/// Accept connections one at a time; each sends request lines and reads
+/// its own event stream back. The literal line `shutdown` drains the
+/// core and stops the server.
+fn serve_socket(
+    spec: &str,
+    core: &mut ServeCore,
+    events: &Arc<Mutex<Vec<String>>>,
+) -> anyhow::Result<()> {
+    enum Listener {
+        Unix(std::os::unix::net::UnixListener),
+        Tcp(std::net::TcpListener),
+    }
+    let listener = if let Some(path) = spec.strip_prefix("unix:") {
+        let _ = std::fs::remove_file(path);
+        Listener::Unix(
+            std::os::unix::net::UnixListener::bind(path)
+                .map_err(|e| anyhow::anyhow!("cannot bind {spec}: {e}"))?,
+        )
+    } else if let Some(addr) = spec.strip_prefix("tcp:") {
+        Listener::Tcp(
+            std::net::TcpListener::bind(addr)
+                .map_err(|e| anyhow::anyhow!("cannot bind {spec}: {e}"))?,
+        )
+    } else {
+        anyhow::bail!("--listen expects unix:PATH or tcp:ADDR, got {spec:?}");
+    };
+    eprintln!("mofa-serve: listening on {spec}");
+    let mut shutdown = false;
+    while !shutdown {
+        // boxed so Unix and TCP streams share one code path
+        let (read_half, mut write_half): (Box<dyn BufRead>, Box<dyn Write>) = match &listener {
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                (Box::new(std::io::BufReader::new(s.try_clone()?)), Box::new(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                (Box::new(std::io::BufReader::new(s.try_clone()?)), Box::new(s))
+            }
+        };
+        for line in read_half.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break, // client went away; the journal has the truth
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            if line.trim() == "shutdown" {
+                shutdown = true;
+                break;
+            }
+            match parse_line(&line, core.now()) {
+                Ok((at, req)) => {
+                    if let Err(e) = core.offer_at(at, req) {
+                        die_if_limit(&e);
+                        anyhow::bail!("journal append failed: {e}");
+                    }
+                }
+                Err(e) => {
+                    let _ = writeln!(
+                        write_half,
+                        "{}",
+                        Json::obj(vec![
+                            ("event", Json::Str("error".into())),
+                            ("message", Json::Str(e)),
+                        ])
+                        .to_string()
+                    );
+                }
+            }
+            flush_events(events, &mut write_half);
+        }
+    }
+    if let Err(e) = core.drain() {
+        die_if_limit(&e);
+        anyhow::bail!("journal append failed during drain: {e}");
+    }
+    Ok(())
+}

@@ -130,6 +130,55 @@ pub enum RejectReason {
         /// the per-tenant in-queue quota
         quota: usize,
     },
+    /// the token bucket is empty: admissions outpaced dispatched virtual
+    /// service time (see [`TokenBucketCfg`])
+    Throttled,
+}
+
+impl RejectReason {
+    /// Short stable label for scorecards and the journal wire format.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue-full",
+            RejectReason::TenantOverQuota { .. } => "tenant-over-quota",
+            RejectReason::Throttled => "throttled",
+        }
+    }
+
+    /// Serialize for the request journal (inverse of
+    /// [`RejectReason::from_json`]).
+    pub fn to_json(&self) -> Json {
+        match self {
+            RejectReason::QueueFull { bound } => Json::obj(vec![
+                ("kind", Json::Str("queue-full".into())),
+                ("bound", Json::Num(*bound as f64)),
+            ]),
+            RejectReason::TenantOverQuota { tenant, quota } => Json::obj(vec![
+                ("kind", Json::Str("tenant-over-quota".into())),
+                ("tenant", Json::Str(tenant.clone())),
+                ("quota", Json::Num(*quota as f64)),
+            ]),
+            RejectReason::Throttled => {
+                Json::obj(vec![("kind", Json::Str("throttled".into()))])
+            }
+        }
+    }
+
+    /// Parse a reason written by [`RejectReason::to_json`].
+    pub fn from_json(v: &Json) -> Result<RejectReason, String> {
+        let kind = v.req("kind")?.as_str().ok_or("reject: bad kind")?;
+        match kind {
+            "queue-full" => Ok(RejectReason::QueueFull {
+                bound: v.req("bound")?.as_usize().ok_or("reject: bad bound")?,
+            }),
+            "tenant-over-quota" => Ok(RejectReason::TenantOverQuota {
+                tenant: v.req("tenant")?.as_str().ok_or("reject: bad tenant")?.to_string(),
+                quota: v.req("quota")?.as_usize().ok_or("reject: bad quota")?,
+            }),
+            "throttled" => Ok(RejectReason::Throttled),
+            other => Err(format!("reject: unknown kind '{other}'")),
+        }
+    }
 }
 
 impl std::fmt::Display for RejectReason {
@@ -141,12 +190,28 @@ impl std::fmt::Display for RejectReason {
             RejectReason::TenantOverQuota { tenant, quota } => {
                 write!(f, "tenant '{tenant}' at its in-queue quota ({quota})")
             }
+            RejectReason::Throttled => {
+                write!(f, "admission throttled (token bucket empty)")
+            }
         }
     }
 }
 
 // so `try_submit(...)?` works in anyhow-style mains
 impl std::error::Error for RejectReason {}
+
+/// A deterministic token bucket **virtualized behind the deadline
+/// clock**: tokens accrue per unit of *dispatched virtual service time*,
+/// never per wallclock `Instant`, so every admit/throttle decision is a
+/// pure function of the push/pop sequence and replays byte-for-byte.
+/// The bucket starts full and each admission spends one token.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenBucketCfg {
+    /// maximum tokens (the admissible burst); the bucket starts full
+    pub capacity: f64,
+    /// tokens refilled per unit of dispatched virtual service time
+    pub refill_per_vt: f64,
+}
 
 /// Admission-queue parameters.
 #[derive(Clone, Copy, Debug)]
@@ -157,6 +222,8 @@ pub struct AdmissionConfig {
     pub shed: ShedPolicy,
     /// maximum queued requests per tenant (`None` = unlimited)
     pub tenant_quota: Option<usize>,
+    /// optional virtual-time token-bucket rate limit (`None` = unlimited)
+    pub tokens: Option<TokenBucketCfg>,
 }
 
 /// A queued request's admission metadata plus the caller's payload.
@@ -205,6 +272,11 @@ pub struct AdmissionQueue<T> {
     tenant_queued: BTreeMap<String, usize>,
     /// virtual service time: total cost dispatched so far
     clock: f64,
+    /// token-bucket level as of `tokens_vt` (only meaningful with
+    /// `cfg.tokens`); refilled lazily from the clock delta
+    tokens: f64,
+    /// virtual time the bucket level was last synced at
+    tokens_vt: f64,
 }
 
 impl<T> AdmissionQueue<T> {
@@ -212,9 +284,11 @@ impl<T> AdmissionQueue<T> {
     pub fn new(cfg: AdmissionConfig) -> Self {
         AdmissionQueue {
             q: BoundedScoredQueue::new(cfg.bound),
+            tokens: cfg.tokens.map(|tb| tb.capacity).unwrap_or(0.0),
             cfg,
             tenant_queued: BTreeMap::new(),
             clock: 0.0,
+            tokens_vt: 0.0,
         }
     }
 
@@ -226,10 +300,29 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
+    /// Bucket level as of the current virtual clock (the lazily-synced
+    /// level plus refill for virtual service time dispatched since);
+    /// `None` when no token bucket is configured.
+    pub fn tokens(&self) -> Option<f64> {
+        let tb = self.cfg.tokens?;
+        Some((self.tokens + tb.refill_per_vt * (self.clock - self.tokens_vt)).min(tb.capacity))
+    }
+
+    /// Fold accrued refill into the stored level. Pure bookkeeping —
+    /// `tokens()` is unchanged by a sync at the same clock.
+    fn sync_tokens(&mut self) {
+        if let Some(now) = self.tokens() {
+            self.tokens = now;
+            self.tokens_vt = self.clock;
+        }
+    }
+
     /// Admit a request or reject it with a reason. Checked in order:
-    /// tenant quota first, then the queue bound (where the shed policy
-    /// picks a victim — possibly the newcomer). `cost` is the virtual
-    /// service time this request will consume once dispatched.
+    /// tenant quota first, then the token bucket, then the queue bound
+    /// (where the shed policy picks a victim — possibly the newcomer).
+    /// `cost` is the virtual service time this request will consume once
+    /// dispatched. A successful admission spends one token; rejections
+    /// spend nothing.
     pub fn try_push(
         &mut self,
         tenant: &str,
@@ -244,6 +337,12 @@ impl<T> AdmissionQueue<T> {
                     tenant: tenant.to_string(),
                     quota,
                 });
+            }
+        }
+        if self.cfg.tokens.is_some() {
+            self.sync_tokens();
+            if self.tokens < 1.0 {
+                return Err(RejectReason::Throttled);
             }
         }
         let score = self.cfg.shed.score(class, deadline);
@@ -268,6 +367,9 @@ impl<T> AdmissionQueue<T> {
             Err(_) => unreachable!("room was made above"),
         };
         *self.tenant_queued.entry(tenant.to_string()).or_insert(0) += 1;
+        if self.cfg.tokens.is_some() {
+            self.tokens -= 1.0;
+        }
         Ok(Admitted { seq, shed })
     }
 
@@ -354,10 +456,12 @@ impl<T> AdmissionQueue<T> {
     }
 
     /// Serialize the admission state for service checkpoints: the
-    /// configuration, the **virtual deadline clock**, and the bounded
-    /// queue by entry (each with its admission handle, tenant, deadline
-    /// and declared cost). Per-tenant in-queue counts are derived state
-    /// and are recomputed on restore.
+    /// configuration, the **virtual deadline clock**, the token-bucket
+    /// level (synced to the clock so the bytes are canonical regardless
+    /// of when refill was last folded in), and the bounded queue by
+    /// entry (each with its admission handle, tenant, deadline and
+    /// declared cost). Per-tenant in-queue counts are derived state and
+    /// are recomputed on restore.
     pub fn to_json_with(&self, mut ser: impl FnMut(&T) -> Json) -> Json {
         Json::obj(vec![
             ("bound", Json::Num(self.cfg.bound as f64)),
@@ -367,6 +471,17 @@ impl<T> AdmissionQueue<T> {
                 self.cfg.tenant_quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
             ),
             ("clock", Json::Num(self.clock)),
+            (
+                "tokens",
+                match self.cfg.tokens {
+                    None => Json::Null,
+                    Some(tb) => Json::obj(vec![
+                        ("capacity", Json::Num(tb.capacity)),
+                        ("refill_per_vt", Json::Num(tb.refill_per_vt)),
+                        ("level", Json::Num(self.tokens().expect("bucket configured"))),
+                    ]),
+                },
+            ),
             (
                 "queue",
                 self.q.to_json_with(|queued| {
@@ -390,6 +505,7 @@ impl<T> AdmissionQueue<T> {
         mut de: impl FnMut(&Json) -> Result<T, String>,
     ) -> Result<AdmissionQueue<T>, String> {
         let shed = v.req("shed")?.as_str().ok_or("admission: bad shed policy")?;
+        let tokens_state = v.req("tokens")?;
         let cfg = AdmissionConfig {
             bound: v.req("bound")?.as_usize().ok_or("admission: bad bound")?,
             shed: ShedPolicy::from_label(shed)
@@ -397,6 +513,16 @@ impl<T> AdmissionQueue<T> {
             tenant_quota: match v.req("tenant_quota")? {
                 Json::Null => None,
                 j => Some(j.as_usize().ok_or("admission: bad tenant_quota")?),
+            },
+            tokens: match tokens_state {
+                Json::Null => None,
+                j => Some(TokenBucketCfg {
+                    capacity: j.req("capacity")?.as_f64().ok_or("admission: bad capacity")?,
+                    refill_per_vt: j
+                        .req("refill_per_vt")?
+                        .as_f64()
+                        .ok_or("admission: bad refill_per_vt")?,
+                }),
             },
         };
         let q = BoundedScoredQueue::from_json_with(v.req("queue")?, |e| {
@@ -421,11 +547,19 @@ impl<T> AdmissionQueue<T> {
         for (_, _, queued) in q.iter() {
             *tenant_queued.entry(queued.tenant.clone()).or_insert(0) += 1;
         }
+        let clock = v.req("clock")?.as_f64().ok_or("admission: bad clock")?;
+        let tokens = match tokens_state {
+            Json::Null => 0.0,
+            j => j.req("level")?.as_f64().ok_or("admission: bad token level")?,
+        };
         Ok(AdmissionQueue {
-            clock: v.req("clock")?.as_f64().ok_or("admission: bad clock")?,
+            clock,
             cfg,
             q,
             tenant_queued,
+            tokens,
+            // the serialized level is synced to the clock
+            tokens_vt: clock,
         })
     }
 }
@@ -435,7 +569,114 @@ mod tests {
     use super::*;
 
     fn cfg(bound: usize, shed: ShedPolicy, quota: Option<usize>) -> AdmissionConfig {
-        AdmissionConfig { bound, shed, tenant_quota: quota }
+        AdmissionConfig { bound, shed, tenant_quota: quota, tokens: None }
+    }
+
+    fn bucket(capacity: f64, refill_per_vt: f64) -> TokenBucketCfg {
+        TokenBucketCfg { capacity, refill_per_vt }
+    }
+
+    #[test]
+    fn token_bucket_throttles_bursts_and_refills_per_dispatched_vt() {
+        let mut c = cfg(8, ShedPolicy::RejectNewest, None);
+        c.tokens = Some(bucket(2.0, 0.5));
+        let mut q = AdmissionQueue::new(c);
+        // the bucket starts full: a burst of `capacity` admits, then throttles
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        q.try_push("a", 0, None, 1.0, "r1").unwrap();
+        assert_eq!(q.try_push("a", 0, None, 1.0, "r2").unwrap_err(), RejectReason::Throttled);
+        assert_eq!(q.tokens(), Some(0.0));
+        // dispatching cost 1.0 accrues 0.5 tokens — still under one
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        assert_eq!(q.tokens(), Some(0.5));
+        assert_eq!(q.try_push("a", 0, None, 1.0, "r3").unwrap_err(), RejectReason::Throttled);
+        // another dispatched unit crosses 1.0 and one admit goes through
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        assert_eq!(q.tokens(), Some(1.0));
+        q.try_push("a", 0, None, 1.0, "r4").unwrap();
+        assert_eq!(q.tokens(), Some(0.0));
+        // refill caps at capacity no matter how much vt is dispatched
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        q.try_push("a", 0, None, 100.0, "r5").unwrap();
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        assert_eq!(q.tokens(), Some(2.0));
+    }
+
+    #[test]
+    fn token_bucket_checked_after_quota_and_before_bound() {
+        let mut c = cfg(1, ShedPolicy::RejectNewest, Some(1));
+        c.tokens = Some(bucket(1.0, 0.0));
+        let mut q = AdmissionQueue::new(c);
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        // quota trips first for the same tenant...
+        assert_eq!(
+            q.try_push("a", 0, None, 1.0, "r1").unwrap_err(),
+            RejectReason::TenantOverQuota { tenant: "a".into(), quota: 1 }
+        );
+        // ...and an under-quota tenant sees Throttled, not QueueFull,
+        // even though the queue is simultaneously at its bound
+        assert_eq!(q.try_push("b", 0, None, 1.0, "r2").unwrap_err(), RejectReason::Throttled);
+    }
+
+    #[test]
+    fn token_bucket_rejections_spend_nothing() {
+        let mut c = cfg(1, ShedPolicy::RejectNewest, None);
+        c.tokens = Some(bucket(2.0, 0.0));
+        let mut q = AdmissionQueue::new(c);
+        q.try_push("a", 0, None, 1.0, "r0").unwrap();
+        assert_eq!(q.tokens(), Some(1.0));
+        // a bound rejection must not burn the token
+        assert_eq!(
+            q.try_push("a", 0, None, 1.0, "r1").unwrap_err(),
+            RejectReason::QueueFull { bound: 1 }
+        );
+        assert_eq!(q.tokens(), Some(1.0));
+    }
+
+    #[test]
+    fn token_bucket_state_round_trips_through_json() {
+        let mut c = cfg(4, ShedPolicy::DeadlineFirst, Some(3));
+        c.tokens = Some(bucket(3.0, 0.25));
+        let mut q = AdmissionQueue::new(c);
+        q.try_push("a", 0, Some(50.0), 4.0, 10u64).unwrap();
+        q.try_push("b", 0, None, 4.0, 11u64).unwrap();
+        assert!(matches!(q.pop(), Some(Popped::Run { .. })));
+        let wire = q.to_json_with(|id| Json::Num(*id as f64)).to_string();
+        let parsed = Json::parse(&wire).unwrap();
+        let mut back: AdmissionQueue<u64> =
+            AdmissionQueue::from_json_with(&parsed, |j| j.as_f64().map(|f| f as u64).ok_or("bad".into()))
+                .unwrap();
+        assert_eq!(back.tokens(), q.tokens());
+        assert_eq!(back.clock(), q.clock());
+        // the restored bucket keeps making identical decisions
+        let a = q.try_push("c", 0, None, 1.0, 12u64).map(|a| a.seq);
+        let b = back.try_push("c", 0, None, 1.0, 12u64).map(|a| a.seq);
+        assert_eq!(a.is_ok(), b.is_ok());
+        assert_eq!(q.tokens(), back.tokens());
+        // a bucketless queue serializes tokens as null and restores as such
+        let q2: AdmissionQueue<u64> = AdmissionQueue::new(cfg(2, ShedPolicy::RejectNewest, None));
+        let wire2 = q2.to_json_with(|id| Json::Num(*id as f64)).to_string();
+        assert!(wire2.contains("\"tokens\":null"));
+        let back2: AdmissionQueue<u64> = AdmissionQueue::from_json_with(
+            &Json::parse(&wire2).unwrap(),
+            |j| j.as_f64().map(|f| f as u64).ok_or("bad".into()),
+        )
+        .unwrap();
+        assert_eq!(back2.tokens(), None);
+    }
+
+    #[test]
+    fn reject_reason_round_trips_through_json() {
+        for r in [
+            RejectReason::QueueFull { bound: 7 },
+            RejectReason::TenantOverQuota { tenant: "t".into(), quota: 3 },
+            RejectReason::Throttled,
+        ] {
+            let wire = r.to_json().to_string();
+            let back = RejectReason::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+        assert!(RejectReason::from_json(&Json::parse("{\"kind\":\"nope\"}").unwrap()).is_err());
     }
 
     #[test]

@@ -69,9 +69,13 @@ use crate::workflow::thinker::Thinker;
 /// state: live controls, the open observer window, the outstanding
 /// tally, the next-barrier cursor, the barriers-applied count, and the
 /// controller's own state, so an adapting campaign resumes and migrates
-/// bit-identically. Older files (v1–v4) fail loudly with
+/// bit-identically. v6: token-bucket admission — service checkpoints
+/// carry the admission queue's `tokens` section (bucket config plus the
+/// clock-synced level, `Null` when no bucket is configured) and a
+/// `throttled` service counter, so a resumed front door reproduces every
+/// admit/throttle decision. Older files (v1–v5) fail loudly with
 /// [`CheckpointError::FormatMismatch`], never a silent default.
-pub const FORMAT_VERSION: u32 = 5;
+pub const FORMAT_VERSION: u32 = 6;
 
 /// Why a checkpoint could not be restored.
 #[derive(Clone, Debug, PartialEq)]
@@ -298,6 +302,9 @@ fn finish_report(ctx: RunCtx, thinker: Thinker, sim: SimOutcome) -> CampaignRunO
         class: ctx.class,
         deadline: ctx.deadline,
         policy: ctx.policy.label(),
+        // checkpoint-run requests never sat in an admission queue, so
+        // the canonical virtual turnaround is the campaign span
+        turnaround_vt: report.final_vtime,
         turnaround_s: wallclock,
     });
     CampaignRunOutcome::Done(Box::new(report))
@@ -608,14 +615,29 @@ pub fn resume_request(
 /// The **canonical report**: every deterministic field of a
 /// [`CampaignReport`], serialized compactly. Two runs of the same request
 /// produce byte-identical canonical reports; wallclock-dependent fields
-/// (`wallclock_s`, turnarounds) are deliberately excluded. This is what
-/// the CI `determinism` job byte-compares between a clean run and a
-/// checkpoint+resume run.
+/// (`wallclock_s`, `turnaround_s`) are deliberately excluded, while the
+/// virtual `turnaround_vt` — a pure function of the admission sequence —
+/// is included via the `request_meta` section (`Null` for standalone
+/// runs). This is what the CI `determinism` job byte-compares between a
+/// clean run and a checkpoint+resume run.
 pub fn canonical_report_json(report: &CampaignReport) -> Json {
     let th = &report.thinker;
     Json::obj(vec![
         ("config", report.config.to_json()),
         ("final_vtime", Json::Num(report.final_vtime)),
+        (
+            "request_meta",
+            match &report.request_meta {
+                None => Json::Null,
+                Some(m) => Json::obj(vec![
+                    ("tenant", Json::Str(m.tenant.clone())),
+                    ("class", Json::Num(m.class as f64)),
+                    ("deadline", m.deadline.map(Json::Num).unwrap_or(Json::Null)),
+                    ("policy", Json::Str(m.policy.to_string())),
+                    ("turnaround_vt", Json::Num(m.turnaround_vt)),
+                ]),
+            },
+        ),
         ("preemption", report.preemption.to_json()),
         ("linkers_generated", Json::Num(th.linkers_generated as f64)),
         ("linkers_processed_in", Json::Num(th.linkers_processed_in as f64)),

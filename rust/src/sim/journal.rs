@@ -1,0 +1,1409 @@
+//! Durable, replayable **request journal** behind the `mofa-serve`
+//! binary: every admission decision the front door makes is appended to
+//! an append-only, checksummed, length-delimited log, so a crashed
+//! service replays the log through the real
+//! [`AdmissionQueue`](crate::sim::admission::AdmissionQueue) back to
+//! bit-identical [`ServiceStats`] and per-request outcomes.
+//!
+//! Three layers, smallest first:
+//!
+//! * **Frames** — the on-disk format. A journal file is the 8-byte magic
+//!   `MOFAJRN1` followed by records, each framed as
+//!   `u32 LE payload length | u64 LE FNV-1a(payload) | payload` where
+//!   the payload is one compact-JSON [`JournalRecord`]. A torn tail
+//!   (short header, length past EOF, checksum mismatch) is **detected
+//!   and dropped**, never mis-parsed: [`read_journal`] returns the valid
+//!   prefix plus the torn byte count. A checksum-*valid* payload that
+//!   fails to parse is corruption of a different kind and fails loudly.
+//! * **[`ServeCore`]** — the deterministic single-threaded serve loop.
+//!   Requests arrive at virtual times ([`ServeCore::offer_at`]), drive a
+//!   real `AdmissionQueue` (bound, shed policy, tenant quotas, and the
+//!   virtual-time token bucket), dispatch onto `max_in_flight` virtual
+//!   servers, and journal every submit / re-offer / dispatch / shed /
+//!   complete decision. Status events stream to a caller-supplied sink
+//!   ([`ServeCore::on_event`]) as a **separate consumer** from the
+//!   durable journal — the live stream can lag, drop, or detach without
+//!   touching durability. Checkpoint-on-shed falls out of the journal:
+//!   shed requests spill and are **re-offered** once occupancy drops
+//!   below the configured watermark ([`ServeConfig::reoffer_watermark`]).
+//! * **[`replay_journal`]** — crash recovery. Re-drives every journaled
+//!   decision through a fresh `AdmissionQueue` and *verifies* each
+//!   recorded verdict against the one the queue reproduces (any mismatch
+//!   is a typed [`JournalError::Divergence`]); completion effects are
+//!   applied from the log (campaigns are **not** re-executed — this is
+//!   event sourcing, not recomputation). The recovered state's canonical
+//!   JSON is byte-identical to the live core's at the same record count.
+//!
+//! Determinism is inherited, not re-proven: admission decisions are pure
+//! functions of the push/pop sequence (see [`crate::sim::admission`]),
+//! campaign spans are pure functions of their requests, and the token
+//! bucket accrues per **dispatched virtual service time** — wallclock
+//! never enters the journal, so replay reproduces every admit / reject /
+//! shed / throttle decision byte-for-byte.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write;
+use std::sync::Arc;
+
+use crate::sim::admission::{AdmissionQueue, Popped, RejectReason, RequestStatus};
+use crate::sim::service::{
+    run_campaign_request, CampaignRequest, ServiceConfig, ServiceStats, TenantStats,
+    TURNAROUND_WINDOW,
+};
+use crate::sim::shard::fnv1a;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workflow::taskserver::Engines;
+
+/// File magic leading every journal (8 bytes).
+pub const JOURNAL_MAGIC: &[u8; 8] = b"MOFAJRN1";
+
+/// Per-record frame header: u32 LE payload length + u64 LE FNV-1a.
+const FRAME_HEADER: usize = 4 + 8;
+
+/// When the journal writer calls `fsync` on the backing file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// never fsync (the OS flushes when it pleases) — fastest, weakest
+    Never,
+    /// fsync every `n`-th record
+    EveryN(u64),
+    /// fsync after every record — strongest, slowest
+    Always,
+}
+
+impl FsyncPolicy {
+    /// Parse a CLI spec: `always`, `never`, or `every-N`.
+    pub fn from_spec(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "always" => Some(FsyncPolicy::Always),
+            "never" => Some(FsyncPolicy::Never),
+            _ => {
+                let n: u64 = s.strip_prefix("every-")?.parse().ok()?;
+                if n == 0 {
+                    return None;
+                }
+                Some(FsyncPolicy::EveryN(n))
+            }
+        }
+    }
+}
+
+/// Why a journal operation failed.
+#[derive(Debug)]
+pub enum JournalError {
+    /// underlying I/O failure (message carries the `io::Error` text)
+    Io(String),
+    /// the file does not start with [`JOURNAL_MAGIC`]
+    BadMagic,
+    /// a checksum-valid record that does not parse, or a structurally
+    /// invalid replay input (e.g. a journal not starting with `config`)
+    Malformed(String),
+    /// replay re-drove a journaled decision and the admission queue
+    /// produced a different verdict — the journal and the code disagree
+    Divergence(String),
+    /// the writer's record limit was reached (`--kill-after` harness:
+    /// the caller treats this as the process dying mid-run)
+    LimitReached,
+}
+
+impl std::fmt::Display for JournalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JournalError::Io(e) => write!(f, "journal I/O: {e}"),
+            JournalError::BadMagic => write!(f, "journal: bad file magic"),
+            JournalError::Malformed(m) => write!(f, "journal: malformed: {m}"),
+            JournalError::Divergence(m) => write!(f, "journal replay divergence: {m}"),
+            JournalError::LimitReached => write!(f, "journal: record limit reached"),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+impl From<std::io::Error> for JournalError {
+    fn from(e: std::io::Error) -> Self {
+        JournalError::Io(e.to_string())
+    }
+}
+
+/// The admission verdict journaled with every submit / re-offer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// admitted under handle `seq`, possibly displacing a queued victim
+    Admit {
+        /// admission handle the queue assigned
+        seq: u64,
+        /// external id of the queued request this admission displaced
+        shed_victim: Option<u64>,
+    },
+    /// refused at the front door
+    Reject {
+        /// why ([`RejectReason`] round-trips through the record)
+        reason: RejectReason,
+    },
+}
+
+impl Verdict {
+    fn to_json(&self) -> Json {
+        match self {
+            Verdict::Admit { seq, shed_victim } => Json::obj(vec![
+                ("kind", Json::Str("admit".into())),
+                ("seq", Json::u64_str(*seq)),
+                (
+                    "shed_victim",
+                    shed_victim.map(Json::u64_str).unwrap_or(Json::Null),
+                ),
+            ]),
+            Verdict::Reject { reason } => Json::obj(vec![
+                ("kind", Json::Str("reject".into())),
+                ("reason", reason.to_json()),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Verdict, String> {
+        match v.req("kind")?.as_str().ok_or("verdict: bad kind")? {
+            "admit" => Ok(Verdict::Admit {
+                seq: v.req("seq")?.as_u64().ok_or("verdict: bad seq")?,
+                shed_victim: match v.req("shed_victim")? {
+                    Json::Null => None,
+                    j => Some(j.as_u64().ok_or("verdict: bad shed_victim")?),
+                },
+            }),
+            "reject" => Ok(Verdict::Reject { reason: RejectReason::from_json(v.req("reason")?)? }),
+            other => Err(format!("verdict: unknown kind '{other}'")),
+        }
+    }
+}
+
+/// Front-door configuration for [`ServeCore`]: the service admission
+/// parameters plus the shed re-offer watermark.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// admission parameters (bound, shed policy, quotas, token bucket)
+    /// and the `max_in_flight` server count
+    pub service: ServiceConfig,
+    /// shed requests are re-offered (once each) when the queue depth
+    /// drops below this watermark; 0 disables re-offers
+    pub reoffer_watermark: usize,
+}
+
+impl ServeConfig {
+    /// Defaults: the [`ServiceConfig`] defaults plus re-offers at
+    /// half the queue bound.
+    pub fn new(service: ServiceConfig) -> Self {
+        ServeConfig { service, reoffer_watermark: service.queue_bound / 2 }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_in_flight", Json::Num(self.service.max_in_flight as f64)),
+            ("bound", Json::Num(self.service.queue_bound as f64)),
+            ("shed", Json::Str(self.service.shed.label().to_string())),
+            (
+                "tenant_quota",
+                self.service.tenant_quota.map(|q| Json::Num(q as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "tokens",
+                match self.service.tokens {
+                    None => Json::Null,
+                    Some(tb) => Json::obj(vec![
+                        ("capacity", Json::Num(tb.capacity)),
+                        ("refill_per_vt", Json::Num(tb.refill_per_vt)),
+                    ]),
+                },
+            ),
+            ("watermark", Json::Num(self.reoffer_watermark as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ServeConfig, String> {
+        let shed = v.req("shed")?.as_str().ok_or("config: bad shed")?;
+        let mut service = ServiceConfig::new(
+            v.req("max_in_flight")?.as_usize().ok_or("config: bad max_in_flight")?,
+        )
+        .queue_bound(v.req("bound")?.as_usize().ok_or("config: bad bound")?)
+        .shed(
+            crate::sim::admission::ShedPolicy::from_label(shed)
+                .ok_or_else(|| format!("config: unknown shed policy '{shed}'"))?,
+        );
+        if let Some(q) = match v.req("tenant_quota")? {
+            Json::Null => None,
+            j => Some(j.as_usize().ok_or("config: bad tenant_quota")?),
+        } {
+            service = service.tenant_quota(q);
+        }
+        if let Json::Obj(_) = v.req("tokens")? {
+            let t = v.req("tokens")?;
+            service = service.tokens(
+                t.req("capacity")?.as_f64().ok_or("config: bad capacity")?,
+                t.req("refill_per_vt")?.as_f64().ok_or("config: bad refill_per_vt")?,
+            );
+        }
+        Ok(ServeConfig {
+            service,
+            reoffer_watermark: v.req("watermark")?.as_usize().ok_or("config: bad watermark")?,
+        })
+    }
+}
+
+/// One journaled decision. The record stream is a complete, replayable
+/// account of the front door: configuration first, then one record per
+/// admission verdict, dispatch, pop-time shed, re-offer, and completion.
+#[derive(Clone, Debug)]
+pub enum JournalRecord {
+    /// first record of every journal: the front-door configuration
+    Config {
+        /// admission + serving parameters the journal was written under
+        cfg: ServeConfig,
+    },
+    /// an external request arrived and received a verdict
+    Submit {
+        /// external request id (monotonic per journal)
+        id: u64,
+        /// the full request, so replay needs no side channel
+        req: CampaignRequest,
+        /// what admission decided
+        verdict: Verdict,
+    },
+    /// a previously shed request was re-offered below the watermark
+    Reoffer {
+        /// external id of the spilled request
+        id: u64,
+        /// what admission decided this time
+        verdict: Verdict,
+    },
+    /// the queue popped this entry for execution
+    Dispatch {
+        /// admission handle
+        seq: u64,
+        /// virtual queue wait derived from the deadline clock
+        wait_vt: f64,
+        /// campaign span in virtual seconds
+        span_vt: f64,
+    },
+    /// the queue popped this entry past its deadline — shed, spilled
+    Shed {
+        /// admission handle
+        seq: u64,
+    },
+    /// a dispatched campaign finished; effects applied from the record
+    Complete {
+        /// admission handle
+        seq: u64,
+        /// canonical virtual turnaround (wait + span)
+        turnaround_vt: f64,
+        /// tasks the campaign completed
+        tasks_done: u64,
+        /// campaign-internal preemption evictions
+        evictions: u64,
+    },
+}
+
+impl JournalRecord {
+    /// Serialize as the journal's compact-JSON payload.
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Config { cfg } => Json::obj(vec![
+                ("t", Json::Str("config".into())),
+                ("cfg", cfg.to_json()),
+            ]),
+            JournalRecord::Submit { id, req, verdict } => Json::obj(vec![
+                ("t", Json::Str("submit".into())),
+                ("id", Json::u64_str(*id)),
+                ("req", req.to_json()),
+                ("verdict", verdict.to_json()),
+            ]),
+            JournalRecord::Reoffer { id, verdict } => Json::obj(vec![
+                ("t", Json::Str("reoffer".into())),
+                ("id", Json::u64_str(*id)),
+                ("verdict", verdict.to_json()),
+            ]),
+            JournalRecord::Dispatch { seq, wait_vt, span_vt } => Json::obj(vec![
+                ("t", Json::Str("dispatch".into())),
+                ("seq", Json::u64_str(*seq)),
+                ("wait_vt", Json::Num(*wait_vt)),
+                ("span_vt", Json::Num(*span_vt)),
+            ]),
+            JournalRecord::Shed { seq } => Json::obj(vec![
+                ("t", Json::Str("shed".into())),
+                ("seq", Json::u64_str(*seq)),
+            ]),
+            JournalRecord::Complete { seq, turnaround_vt, tasks_done, evictions } => {
+                Json::obj(vec![
+                    ("t", Json::Str("complete".into())),
+                    ("seq", Json::u64_str(*seq)),
+                    ("turnaround_vt", Json::Num(*turnaround_vt)),
+                    ("tasks_done", Json::u64_str(*tasks_done)),
+                    ("evictions", Json::u64_str(*evictions)),
+                ])
+            }
+        }
+    }
+
+    /// Parse a payload written by [`JournalRecord::to_json`].
+    pub fn from_json(v: &Json) -> Result<JournalRecord, String> {
+        match v.req("t")?.as_str().ok_or("record: bad tag")? {
+            "config" => Ok(JournalRecord::Config { cfg: ServeConfig::from_json(v.req("cfg")?)? }),
+            "submit" => Ok(JournalRecord::Submit {
+                id: v.req("id")?.as_u64().ok_or("record: bad id")?,
+                req: CampaignRequest::from_json(v.req("req")?)?,
+                verdict: Verdict::from_json(v.req("verdict")?)?,
+            }),
+            "reoffer" => Ok(JournalRecord::Reoffer {
+                id: v.req("id")?.as_u64().ok_or("record: bad id")?,
+                verdict: Verdict::from_json(v.req("verdict")?)?,
+            }),
+            "dispatch" => Ok(JournalRecord::Dispatch {
+                seq: v.req("seq")?.as_u64().ok_or("record: bad seq")?,
+                wait_vt: v.req("wait_vt")?.as_f64().ok_or("record: bad wait_vt")?,
+                span_vt: v.req("span_vt")?.as_f64().ok_or("record: bad span_vt")?,
+            }),
+            "shed" => Ok(JournalRecord::Shed {
+                seq: v.req("seq")?.as_u64().ok_or("record: bad seq")?,
+            }),
+            "complete" => Ok(JournalRecord::Complete {
+                seq: v.req("seq")?.as_u64().ok_or("record: bad seq")?,
+                turnaround_vt: v.req("turnaround_vt")?.as_f64().ok_or("record: bad turnaround")?,
+                tasks_done: v.req("tasks_done")?.as_u64().ok_or("record: bad tasks_done")?,
+                evictions: v.req("evictions")?.as_u64().ok_or("record: bad evictions")?,
+            }),
+            other => Err(format!("record: unknown tag '{other}'")),
+        }
+    }
+}
+
+enum Sink {
+    File(std::fs::File),
+    Mem(Vec<u8>),
+}
+
+/// Append-only journal writer: frames each record (length + FNV-1a
+/// checksum + compact JSON), applies the [`FsyncPolicy`], and enforces
+/// an optional record limit (the `--kill-after` crash harness).
+pub struct JournalWriter {
+    sink: Sink,
+    fsync: FsyncPolicy,
+    records: u64,
+    limit: Option<u64>,
+}
+
+impl JournalWriter {
+    /// Create (truncate) a journal file and write the magic.
+    pub fn create(path: &str, fsync: FsyncPolicy) -> Result<JournalWriter, JournalError> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(JOURNAL_MAGIC)?;
+        Ok(JournalWriter { sink: Sink::File(f), fsync, records: 0, limit: None })
+    }
+
+    /// An in-memory journal (tests and benches): same bytes, no disk.
+    pub fn in_memory() -> JournalWriter {
+        JournalWriter {
+            sink: Sink::Mem(JOURNAL_MAGIC.to_vec()),
+            fsync: FsyncPolicy::Never,
+            records: 0,
+            limit: None,
+        }
+    }
+
+    /// Refuse appends past `n` records with [`JournalError::LimitReached`]
+    /// — the crash-injection harness behind `mofa-serve --kill-after`.
+    pub fn limit_records(mut self, n: u64) -> JournalWriter {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Records appended so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// The journal bytes, for in-memory sinks (`None` for files).
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match &self.sink {
+            Sink::Mem(b) => Some(b),
+            Sink::File(_) => None,
+        }
+    }
+
+    /// Append one framed record, honoring the fsync policy and the
+    /// record limit.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<(), JournalError> {
+        if let Some(limit) = self.limit {
+            if self.records >= limit {
+                return Err(JournalError::LimitReached);
+            }
+        }
+        let payload = rec.to_json().to_string().into_bytes();
+        let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        match &mut self.sink {
+            Sink::Mem(b) => b.extend_from_slice(&frame),
+            Sink::File(f) => {
+                f.write_all(&frame)?;
+                self.records += 1;
+                let sync = match self.fsync {
+                    FsyncPolicy::Always => true,
+                    FsyncPolicy::EveryN(n) => self.records % n == 0,
+                    FsyncPolicy::Never => false,
+                };
+                if sync {
+                    f.sync_data()?;
+                }
+                return Ok(());
+            }
+        }
+        self.records += 1;
+        Ok(())
+    }
+}
+
+/// A decoded journal: the valid record prefix plus how many torn tail
+/// bytes were detected (by short header, length past EOF, or checksum
+/// mismatch) and dropped.
+pub struct ReadJournal {
+    /// every record whose frame checksum verified, in append order
+    pub records: Vec<JournalRecord>,
+    /// bytes dropped from the tail (0 for a cleanly closed journal)
+    pub torn_bytes: usize,
+}
+
+/// Decode journal bytes: verify the magic, then read frames until the
+/// bytes run out or a frame fails its length/checksum test — everything
+/// from the first bad frame is the torn tail and is dropped, not
+/// mis-parsed. A checksum-valid payload that does not parse as a
+/// [`JournalRecord`] is a hard [`JournalError::Malformed`] (the bytes
+/// are exactly what some writer framed, so this is version skew or real
+/// corruption, not a crash artifact).
+pub fn read_journal_bytes(bytes: &[u8]) -> Result<ReadJournal, JournalError> {
+    if bytes.len() < JOURNAL_MAGIC.len() || &bytes[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC {
+        return Err(JournalError::BadMagic);
+    }
+    let mut at = JOURNAL_MAGIC.len();
+    let mut records = Vec::new();
+    while at < bytes.len() {
+        if bytes.len() - at < FRAME_HEADER {
+            break; // torn header
+        }
+        let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().unwrap());
+        if bytes.len() - at - FRAME_HEADER < len {
+            break; // torn payload
+        }
+        let payload = &bytes[at + FRAME_HEADER..at + FRAME_HEADER + len];
+        if fnv1a(payload) != sum {
+            break; // torn / corrupt frame
+        }
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| JournalError::Malformed("payload is not UTF-8".into()))?;
+        let json = Json::parse(text).map_err(JournalError::Malformed)?;
+        records.push(JournalRecord::from_json(&json).map_err(JournalError::Malformed)?);
+        at += FRAME_HEADER + len;
+    }
+    Ok(ReadJournal { records, torn_bytes: bytes.len() - at })
+}
+
+/// Read and decode a journal file (see [`read_journal_bytes`]).
+pub fn read_journal(path: &str) -> Result<ReadJournal, JournalError> {
+    read_journal_bytes(&std::fs::read(path)?)
+}
+
+/// A status event streamed by the live [`ServeCore`] — the live-stream
+/// consumer, fully decoupled from the durable journal.
+#[derive(Clone, Debug)]
+pub enum ServeEvent {
+    /// a request arrived and was admitted or refused
+    Submitted {
+        /// external request id
+        id: u64,
+        /// whether admission accepted it
+        admitted: bool,
+        /// rejection reason label when refused
+        reason: Option<String>,
+    },
+    /// an admitted request was dropped under overload (displaced or
+    /// deadline-expired) and spilled for a later re-offer
+    Shed {
+        /// external request id
+        id: u64,
+    },
+    /// a spilled request was re-offered below the watermark
+    Reoffered {
+        /// external request id
+        id: u64,
+        /// whether the re-offer was admitted
+        admitted: bool,
+    },
+    /// the request started executing
+    Dispatched {
+        /// external request id
+        id: u64,
+        /// virtual queue wait it accrued
+        wait_vt: f64,
+    },
+    /// the request's campaign finished
+    Completed {
+        /// external request id
+        id: u64,
+        /// canonical virtual turnaround (wait + span)
+        turnaround_vt: f64,
+    },
+}
+
+impl ServeEvent {
+    /// Serialize for the line-delimited event stream.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServeEvent::Submitted { id, admitted, reason } => Json::obj(vec![
+                ("event", Json::Str("submitted".into())),
+                ("id", Json::u64_str(*id)),
+                ("admitted", Json::Bool(*admitted)),
+                (
+                    "reason",
+                    reason.as_ref().map(|r| Json::Str(r.clone())).unwrap_or(Json::Null),
+                ),
+            ]),
+            ServeEvent::Shed { id } => Json::obj(vec![
+                ("event", Json::Str("shed".into())),
+                ("id", Json::u64_str(*id)),
+            ]),
+            ServeEvent::Reoffered { id, admitted } => Json::obj(vec![
+                ("event", Json::Str("reoffered".into())),
+                ("id", Json::u64_str(*id)),
+                ("admitted", Json::Bool(*admitted)),
+            ]),
+            ServeEvent::Dispatched { id, wait_vt } => Json::obj(vec![
+                ("event", Json::Str("dispatched".into())),
+                ("id", Json::u64_str(*id)),
+                ("wait_vt", Json::Num(*wait_vt)),
+            ]),
+            ServeEvent::Completed { id, turnaround_vt } => Json::obj(vec![
+                ("event", Json::Str("completed".into())),
+                ("id", Json::u64_str(*id)),
+                ("turnaround_vt", Json::Num(*turnaround_vt)),
+            ]),
+        }
+    }
+}
+
+/// The admission-and-bookkeeping state machine shared by the live core
+/// and replay: both sides drive it with the **same** calls in the same
+/// order, which is what makes the recovered state byte-identical.
+struct CoreState {
+    cfg: ServeConfig,
+    adm: AdmissionQueue<u64>,
+    /// every request ever submitted, by external id (re-offers and the
+    /// canonical statuses need them after they leave the queue)
+    reqs: BTreeMap<u64, CampaignRequest>,
+    statuses: BTreeMap<u64, RequestStatus>,
+    /// deadline-clock reading at each id's latest push
+    submit_clock: BTreeMap<u64, f64>,
+    /// shed ids awaiting a re-offer, in shed order
+    spill: VecDeque<u64>,
+    /// ids already re-offered once: a second shed perishes
+    reoffered: BTreeSet<u64>,
+    /// dispatched-but-not-completed, admission handle → external id
+    running: BTreeMap<u64, u64>,
+    submitted: usize,
+    admitted: usize,
+    rejected: usize,
+    throttled: usize,
+    shed: usize,
+    completed: usize,
+    reoffers: usize,
+    task_evictions: usize,
+    peak_in_flight: usize,
+    per_tenant: BTreeMap<String, TenantStats>,
+    turnaround_vt: VecDeque<f64>,
+}
+
+/// What one queue pop produced.
+enum PopStep {
+    Dispatch { seq: u64, id: u64, wait_vt: f64 },
+    Shed { seq: u64, id: u64 },
+}
+
+impl CoreState {
+    fn new(cfg: ServeConfig) -> CoreState {
+        assert!(cfg.service.max_in_flight >= 1, "max_in_flight must be >= 1");
+        CoreState {
+            adm: AdmissionQueue::new(crate::sim::admission::AdmissionConfig {
+                bound: cfg.service.queue_bound,
+                shed: cfg.service.shed,
+                tenant_quota: cfg.service.tenant_quota,
+                tokens: cfg.service.tokens,
+            }),
+            cfg,
+            reqs: BTreeMap::new(),
+            statuses: BTreeMap::new(),
+            submit_clock: BTreeMap::new(),
+            spill: VecDeque::new(),
+            reoffered: BTreeSet::new(),
+            running: BTreeMap::new(),
+            submitted: 0,
+            admitted: 0,
+            rejected: 0,
+            throttled: 0,
+            shed: 0,
+            completed: 0,
+            reoffers: 0,
+            task_evictions: 0,
+            peak_in_flight: 0,
+            per_tenant: BTreeMap::new(),
+            turnaround_vt: VecDeque::new(),
+        }
+    }
+
+    fn tenant_mut(&mut self, tenant: &str) -> &mut TenantStats {
+        self.per_tenant.entry(tenant.to_string()).or_default()
+    }
+
+    /// Drop an admitted entry to Shed: spill it for one re-offer, or
+    /// perish it if it already had one.
+    fn note_shed(&mut self, id: u64) {
+        let tenant = self.reqs[&id].tenant.clone();
+        self.statuses.insert(id, RequestStatus::Shed);
+        self.shed += 1;
+        self.tenant_mut(&tenant).shed += 1;
+        if !self.reoffered.contains(&id) {
+            self.spill.push_back(id);
+        }
+    }
+
+    /// Push id's request into the admission queue and settle the
+    /// bookkeeping. `fresh` distinguishes an external submit (counted in
+    /// the front-door counters) from an internal re-offer (counted in
+    /// `reoffers` only; a re-offer rejection leaves the Shed status).
+    fn offer_existing(&mut self, id: u64, fresh: bool) -> Verdict {
+        let req = self.reqs.get(&id).expect("offer of unknown id").clone();
+        let deadline = req.deadline.map(|slack| self.adm.clock() + slack);
+        self.submit_clock.insert(id, self.adm.clock());
+        match self.adm.try_push(&req.tenant, req.class, deadline, req.config.duration_s, id) {
+            Ok(adm) => {
+                if fresh {
+                    self.admitted += 1;
+                    self.tenant_mut(&req.tenant).admitted += 1;
+                }
+                self.statuses.insert(id, RequestStatus::Queued);
+                let shed_victim = adm.shed.map(|(_, vid)| {
+                    self.note_shed(vid);
+                    vid
+                });
+                Verdict::Admit { seq: adm.seq, shed_victim }
+            }
+            Err(reason) => {
+                if fresh {
+                    self.rejected += 1;
+                    if matches!(reason, RejectReason::Throttled) {
+                        self.throttled += 1;
+                    }
+                    self.tenant_mut(&req.tenant).rejected += 1;
+                    self.statuses.insert(id, RequestStatus::Rejected);
+                }
+                Verdict::Reject { reason }
+            }
+        }
+    }
+
+    /// An external request arrives: record it and drive admission.
+    fn submit(&mut self, id: u64, req: CampaignRequest) -> Verdict {
+        self.submitted += 1;
+        self.reqs.insert(id, req);
+        self.offer_existing(id, true)
+    }
+
+    /// Re-offer the oldest spilled request if occupancy is below the
+    /// watermark; each id is re-offered at most once.
+    fn reoffer_next(&mut self) -> Option<(u64, Verdict)> {
+        if self.adm.len() >= self.cfg.reoffer_watermark {
+            return None;
+        }
+        let id = self.spill.pop_front()?;
+        self.reoffered.insert(id);
+        self.reoffers += 1;
+        let verdict = self.offer_existing(id, false);
+        Some((id, verdict))
+    }
+
+    /// Pop the next entry in policy order: a dispatch (with its virtual
+    /// queue wait derived from the deadline clock) or a pop-time shed.
+    fn pop_step(&mut self) -> Option<PopStep> {
+        match self.adm.pop()? {
+            Popped::Shed { seq, item: id } => {
+                self.note_shed(id);
+                Some(PopStep::Shed { seq, id })
+            }
+            Popped::Run { seq, item: id } => {
+                let cost = self.reqs[&id].config.duration_s;
+                let wait_vt = self.adm.clock() - cost - self.submit_clock[&id];
+                self.statuses.insert(id, RequestStatus::Running);
+                self.running.insert(seq, id);
+                self.peak_in_flight = self.peak_in_flight.max(self.running.len());
+                Some(PopStep::Dispatch { seq, id, wait_vt })
+            }
+        }
+    }
+
+    /// Apply a completion's effects (from the live campaign or from the
+    /// journaled record — identical either way).
+    fn complete(&mut self, seq: u64, turnaround_vt: f64, tasks_done: u64, evictions: u64) -> Option<u64> {
+        let id = self.running.remove(&seq)?;
+        let tenant = self.reqs[&id].tenant.clone();
+        self.statuses.insert(id, RequestStatus::Done);
+        self.completed += 1;
+        self.task_evictions += evictions as usize;
+        let _ = tasks_done;
+        if self.turnaround_vt.len() == TURNAROUND_WINDOW {
+            self.turnaround_vt.pop_front();
+        }
+        self.turnaround_vt.push_back(turnaround_vt);
+        let t = self.tenant_mut(&tenant);
+        t.completed += 1;
+        if t.turnaround_s.len() == TURNAROUND_WINDOW {
+            t.turnaround_s.pop_front();
+        }
+        t.turnaround_s.push_back(turnaround_vt);
+        Some(id)
+    }
+
+    /// Snapshot [`ServiceStats`]-shaped counters. Turnaround windows
+    /// carry **virtual** turnarounds here (the canonical field), unlike
+    /// the threaded service's wallclock windows.
+    fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            queue_depth: self.adm.len(),
+            peak_queue_depth: self.adm.peak_depth(),
+            submitted: self.submitted,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            throttled: self.throttled,
+            shed: self.shed,
+            cancelled: 0,
+            completed: self.completed,
+            task_evictions: self.task_evictions,
+            in_flight: self.running.len(),
+            peak_in_flight: self.peak_in_flight,
+            per_tenant: self.per_tenant.clone(),
+            turnaround_s: self.turnaround_vt.iter().copied().collect(),
+            resume_epoch: 0,
+        }
+    }
+
+    /// The canonical state: every deterministic field, serialized
+    /// compactly. Byte-identical between a live run and a journal
+    /// replay at the same record count.
+    fn canonical_json(&self) -> Json {
+        let stats = self.stats();
+        let tenants = Json::Obj(
+            stats
+                .per_tenant
+                .iter()
+                .map(|(tenant, t)| {
+                    (
+                        tenant.clone(),
+                        Json::obj(vec![
+                            ("admitted", Json::Num(t.admitted as f64)),
+                            ("rejected", Json::Num(t.rejected as f64)),
+                            ("shed", Json::Num(t.shed as f64)),
+                            ("completed", Json::Num(t.completed as f64)),
+                            (
+                                "turnaround_vt",
+                                Json::Arr(
+                                    t.turnaround_s.iter().map(|&x| Json::Num(x)).collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str("serve-state/v1".into())),
+            ("clock", Json::Num(self.adm.clock())),
+            (
+                "tokens",
+                self.adm.tokens().map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("queue_depth", Json::Num(stats.queue_depth as f64)),
+            ("peak_queue_depth", Json::Num(stats.peak_queue_depth as f64)),
+            ("submitted", Json::Num(stats.submitted as f64)),
+            ("admitted", Json::Num(stats.admitted as f64)),
+            ("rejected", Json::Num(stats.rejected as f64)),
+            ("throttled", Json::Num(stats.throttled as f64)),
+            ("shed", Json::Num(stats.shed as f64)),
+            ("completed", Json::Num(stats.completed as f64)),
+            ("reoffers", Json::Num(self.reoffers as f64)),
+            ("task_evictions", Json::Num(stats.task_evictions as f64)),
+            ("in_flight", Json::Num(stats.in_flight as f64)),
+            ("peak_in_flight", Json::Num(stats.peak_in_flight as f64)),
+            (
+                "turnaround_vt",
+                Json::Arr(self.turnaround_vt.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("per_tenant", tenants),
+            (
+                "statuses",
+                Json::Obj(
+                    self.statuses
+                        .iter()
+                        .map(|(id, s)| (id.to_string(), Json::Str(s.label().to_string())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A virtual server slot occupied by a dispatched campaign.
+struct Server {
+    finish_vt: f64,
+    seq: u64,
+    id: u64,
+    wait_vt: f64,
+    span_vt: f64,
+    tasks_done: u64,
+    evictions: u64,
+}
+
+/// The deterministic serve loop behind `mofa-serve` (module docs have
+/// the full model). Drive it with [`ServeCore::offer_at`] /
+/// [`ServeCore::drain`]; observe it through [`ServeCore::on_event`],
+/// [`ServeCore::stats`], and [`ServeCore::canonical_state_json`].
+pub struct ServeCore {
+    state: CoreState,
+    engines: Arc<Engines>,
+    pool: Arc<ThreadPool>,
+    writer: JournalWriter,
+    events: Option<Box<dyn FnMut(&ServeEvent)>>,
+    servers: Vec<Server>,
+    now: f64,
+    next_id: u64,
+}
+
+impl ServeCore {
+    /// Build a core over `cfg`, journaling into `writer` (the `config`
+    /// record is appended immediately).
+    pub fn new(
+        cfg: ServeConfig,
+        engines: Arc<Engines>,
+        pool: Arc<ThreadPool>,
+        mut writer: JournalWriter,
+    ) -> Result<ServeCore, JournalError> {
+        writer.append(&JournalRecord::Config { cfg })?;
+        Ok(ServeCore {
+            state: CoreState::new(cfg),
+            engines,
+            pool,
+            writer,
+            events: None,
+            servers: Vec::new(),
+            now: 0.0,
+            next_id: 0,
+        })
+    }
+
+    /// Attach the live event stream (a separate consumer from the
+    /// journal: it may drop or detach without touching durability).
+    pub fn on_event(&mut self, f: impl FnMut(&ServeEvent) + 'static) {
+        self.events = Some(Box::new(f));
+    }
+
+    fn emit(&mut self, e: ServeEvent) {
+        if let Some(f) = self.events.as_mut() {
+            f(&e);
+        }
+    }
+
+    /// Current virtual time (advanced by settled completions).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Records journaled so far.
+    pub fn journal_records(&self) -> u64 {
+        self.writer.records()
+    }
+
+    /// The journal bytes for in-memory writers (`None` for files).
+    pub fn journal_bytes(&self) -> Option<&[u8]> {
+        self.writer.bytes()
+    }
+
+    /// Counter snapshot (see [`CoreState::stats`] for the window note).
+    pub fn stats(&self) -> ServiceStats {
+        self.state.stats()
+    }
+
+    /// Terminal/live status per external request id.
+    pub fn statuses(&self) -> BTreeMap<u64, RequestStatus> {
+        self.state.statuses.clone()
+    }
+
+    /// Canonical deterministic state — what the kill-replay gate
+    /// byte-compares against [`ReplayedState::canonical_json`].
+    pub fn canonical_state_json(&self) -> Json {
+        self.state.canonical_json()
+    }
+
+    /// Settle the earliest completion: advance `now`, journal the
+    /// `complete` record, free the server.
+    fn settle_next(&mut self) -> Result<(), JournalError> {
+        let i = self
+            .servers
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.finish_vt.total_cmp(&b.1.finish_vt).then(a.0.cmp(&b.0)))
+            .map(|(i, _)| i)
+            .expect("settle_next on empty servers");
+        let s = self.servers.remove(i);
+        self.now = s.finish_vt;
+        let turnaround_vt = s.wait_vt + s.span_vt;
+        self.writer.append(&JournalRecord::Complete {
+            seq: s.seq,
+            turnaround_vt,
+            tasks_done: s.tasks_done,
+            evictions: s.evictions,
+        })?;
+        self.state.complete(s.seq, turnaround_vt, s.tasks_done, s.evictions);
+        self.emit(ServeEvent::Completed { id: s.id, turnaround_vt });
+        Ok(())
+    }
+
+    /// Fill free servers from the queue in policy order, re-offering
+    /// spilled requests whenever occupancy is below the watermark.
+    fn pump(&mut self) -> Result<(), JournalError> {
+        loop {
+            while let Some((id, verdict)) = self.state.reoffer_next() {
+                self.writer.append(&JournalRecord::Reoffer { id, verdict: verdict.clone() })?;
+                let admitted = matches!(verdict, Verdict::Admit { .. });
+                self.emit(ServeEvent::Reoffered { id, admitted });
+                if let Verdict::Admit { shed_victim: Some(vid), .. } = verdict {
+                    self.emit(ServeEvent::Shed { id: vid });
+                }
+            }
+            if self.servers.len() >= self.state.cfg.service.max_in_flight {
+                return Ok(());
+            }
+            match self.state.pop_step() {
+                None => return Ok(()),
+                Some(PopStep::Shed { seq, id }) => {
+                    self.writer.append(&JournalRecord::Shed { seq })?;
+                    self.emit(ServeEvent::Shed { id });
+                }
+                Some(PopStep::Dispatch { seq, id, wait_vt }) => {
+                    let req = self.state.reqs[&id].clone();
+                    let report =
+                        run_campaign_request(req, Arc::clone(&self.engines), &self.pool);
+                    let span_vt = report.final_vtime;
+                    let tasks_done =
+                        report.tasks_done.values().map(|&n| n as u64).sum::<u64>();
+                    let evictions = report.preemption.evictions;
+                    self.writer.append(&JournalRecord::Dispatch { seq, wait_vt, span_vt })?;
+                    self.emit(ServeEvent::Dispatched { id, wait_vt });
+                    self.servers.push(Server {
+                        finish_vt: self.now + span_vt,
+                        seq,
+                        id,
+                        wait_vt,
+                        span_vt,
+                        tasks_done,
+                        evictions,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Offer one request at virtual time `at_vt` (clamped to be
+    /// monotonic): completions due by then settle first, then the
+    /// request is journaled with its admission verdict and the servers
+    /// are re-filled. Returns the request's external id.
+    pub fn offer_at(&mut self, at_vt: f64, req: CampaignRequest) -> Result<u64, JournalError> {
+        let at = at_vt.max(self.now);
+        while self
+            .servers
+            .iter()
+            .map(|s| s.finish_vt)
+            .fold(f64::INFINITY, f64::min)
+            <= at
+        {
+            self.settle_next()?;
+            self.pump()?;
+        }
+        self.now = at;
+        let id = self.next_id;
+        self.next_id += 1;
+        let verdict = self.state.submit(id, req.clone());
+        self.writer.append(&JournalRecord::Submit { id, req, verdict: verdict.clone() })?;
+        match &verdict {
+            Verdict::Admit { shed_victim, .. } => {
+                self.emit(ServeEvent::Submitted { id, admitted: true, reason: None });
+                if let Some(vid) = shed_victim {
+                    let vid = *vid;
+                    self.emit(ServeEvent::Shed { id: vid });
+                }
+            }
+            Verdict::Reject { reason } => {
+                let label = reason.label().to_string();
+                self.emit(ServeEvent::Submitted { id, admitted: false, reason: Some(label) });
+            }
+        }
+        self.pump()
+            .map(|()| id)
+    }
+
+    /// Offer at the current virtual time (stdin/socket burst mode).
+    pub fn offer(&mut self, req: CampaignRequest) -> Result<u64, JournalError> {
+        self.offer_at(self.now, req)
+    }
+
+    /// Run everything to quiescence: settle all completions, dispatching
+    /// and re-offering as servers free up.
+    pub fn drain(&mut self) -> Result<(), JournalError> {
+        loop {
+            self.pump()?;
+            if self.servers.is_empty() {
+                return Ok(());
+            }
+            self.settle_next()?;
+        }
+    }
+}
+
+/// State recovered by [`replay_journal`].
+pub struct ReplayedState {
+    state: CoreState,
+    /// records applied (excluding the leading `config`)
+    pub records_applied: usize,
+}
+
+impl ReplayedState {
+    /// Counter snapshot, identical to the live core's at the same
+    /// record count.
+    pub fn stats(&self) -> ServiceStats {
+        self.state.stats()
+    }
+
+    /// Terminal/live status per external request id.
+    pub fn statuses(&self) -> BTreeMap<u64, RequestStatus> {
+        self.state.statuses.clone()
+    }
+
+    /// Canonical deterministic state — byte-identical to
+    /// [`ServeCore::canonical_state_json`] at the same record count.
+    pub fn canonical_json(&self) -> Json {
+        self.state.canonical_json()
+    }
+}
+
+/// Re-drive a journal through a fresh [`AdmissionQueue`], verifying
+/// every recorded verdict against the one the queue reproduces, and
+/// applying completion effects from the records (campaigns are not
+/// re-executed). Any disagreement between the log and the replayed
+/// decision is a [`JournalError::Divergence`].
+pub fn replay_journal(records: &[JournalRecord]) -> Result<ReplayedState, JournalError> {
+    let mut it = records.iter();
+    let cfg = match it.next() {
+        Some(JournalRecord::Config { cfg }) => *cfg,
+        _ => {
+            return Err(JournalError::Malformed(
+                "journal must start with a config record".into(),
+            ))
+        }
+    };
+    let mut state = CoreState::new(cfg);
+    let mut applied = 0usize;
+    for rec in it {
+        applied += 1;
+        match rec {
+            JournalRecord::Config { .. } => {
+                return Err(JournalError::Malformed("duplicate config record".into()));
+            }
+            JournalRecord::Submit { id, req, verdict } => {
+                let got = state.submit(*id, req.clone());
+                if got != *verdict {
+                    return Err(JournalError::Divergence(format!(
+                        "submit {id}: journal says {verdict:?}, replay says {got:?}"
+                    )));
+                }
+            }
+            JournalRecord::Reoffer { id, verdict } => {
+                match state.reoffer_next() {
+                    Some((rid, got)) if rid == *id && got == *verdict => {}
+                    Some((rid, got)) => {
+                        return Err(JournalError::Divergence(format!(
+                            "reoffer: journal says ({id}, {verdict:?}), replay says ({rid}, {got:?})"
+                        )));
+                    }
+                    None => {
+                        return Err(JournalError::Divergence(format!(
+                            "reoffer {id}: replay has nothing to re-offer"
+                        )));
+                    }
+                }
+            }
+            JournalRecord::Dispatch { seq, wait_vt, span_vt: _ } => match state.pop_step() {
+                Some(PopStep::Dispatch { seq: got_seq, id: _, wait_vt: got_wait })
+                    if got_seq == *seq && got_wait.to_bits() == wait_vt.to_bits() => {}
+                Some(PopStep::Dispatch { seq: got_seq, wait_vt: got_wait, .. }) => {
+                    return Err(JournalError::Divergence(format!(
+                        "dispatch: journal says (seq {seq}, wait {wait_vt}), \
+                         replay says (seq {got_seq}, wait {got_wait})"
+                    )));
+                }
+                other => {
+                    return Err(JournalError::Divergence(format!(
+                        "dispatch seq {seq}: replay popped {}",
+                        match other {
+                            Some(PopStep::Shed { seq, .. }) => format!("a shed (seq {seq})"),
+                            _ => "nothing".to_string(),
+                        }
+                    )));
+                }
+            },
+            JournalRecord::Shed { seq } => match state.pop_step() {
+                Some(PopStep::Shed { seq: got_seq, .. }) if got_seq == *seq => {}
+                other => {
+                    return Err(JournalError::Divergence(format!(
+                        "shed seq {seq}: replay popped {}",
+                        match other {
+                            Some(PopStep::Dispatch { seq, .. }) =>
+                                format!("a dispatch (seq {seq})"),
+                            Some(PopStep::Shed { seq, .. }) => format!("shed seq {seq}"),
+                            None => "nothing".to_string(),
+                        }
+                    )));
+                }
+            },
+            JournalRecord::Complete { seq, turnaround_vt, tasks_done, evictions } => {
+                if state.complete(*seq, *turnaround_vt, *tasks_done, *evictions).is_none() {
+                    return Err(JournalError::Divergence(format!(
+                        "complete seq {seq}: not running in replay"
+                    )));
+                }
+            }
+        }
+    }
+    Ok(ReplayedState { state, records_applied: applied })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::admission::ShedPolicy;
+    use crate::workflow::mofa::CampaignConfig;
+
+    fn quick_req(seed: u64, duration_s: f64) -> CampaignRequest {
+        CampaignRequest::new(CampaignConfig {
+            nodes: 8,
+            duration_s,
+            seed,
+            util_sample_dt: 30.0,
+            ..CampaignConfig::default()
+        })
+    }
+
+    fn demo_records() -> Vec<JournalRecord> {
+        vec![
+            JournalRecord::Config {
+                cfg: ServeConfig::new(ServiceConfig::new(2).queue_bound(4).tenant_quota(3)),
+            },
+            JournalRecord::Submit {
+                id: 0,
+                req: quick_req(1, 60.0),
+                verdict: Verdict::Admit { seq: 0, shed_victim: None },
+            },
+            JournalRecord::Dispatch { seq: 0, wait_vt: 0.0, span_vt: 61.25 },
+            JournalRecord::Submit {
+                id: 1,
+                req: quick_req(2, 30.0),
+                verdict: Verdict::Reject { reason: RejectReason::Throttled },
+            },
+            JournalRecord::Reoffer {
+                id: 0,
+                verdict: Verdict::Admit { seq: 7, shed_victim: Some(3) },
+            },
+            JournalRecord::Shed { seq: 7 },
+            JournalRecord::Complete { seq: 0, turnaround_vt: 61.25, tasks_done: 42, evictions: 2 },
+        ]
+    }
+
+    #[test]
+    fn records_round_trip_through_frames() {
+        let mut w = JournalWriter::in_memory();
+        let recs = demo_records();
+        for r in &recs {
+            w.append(r).unwrap();
+        }
+        assert_eq!(w.records(), recs.len() as u64);
+        let bytes = w.bytes().unwrap().to_vec();
+        let back = read_journal_bytes(&bytes).unwrap();
+        assert_eq!(back.torn_bytes, 0);
+        assert_eq!(back.records.len(), recs.len());
+        // spot-check exact payload round trips via re-serialization
+        for (a, b) in back.records.iter().zip(&recs) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn torn_tails_are_dropped_at_every_truncation_point() {
+        let mut w = JournalWriter::in_memory();
+        let recs = demo_records();
+        for r in &recs {
+            w.append(r).unwrap();
+        }
+        let bytes = w.bytes().unwrap().to_vec();
+        // find where the last record's frame starts
+        let mut starts = vec![JOURNAL_MAGIC.len()];
+        {
+            let mut at = JOURNAL_MAGIC.len();
+            while at < bytes.len() {
+                let len =
+                    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+                at += FRAME_HEADER + len;
+                starts.push(at);
+            }
+        }
+        let last_start = starts[starts.len() - 2];
+        // truncating anywhere inside the last frame drops exactly it
+        for cut in last_start..bytes.len() {
+            let torn = read_journal_bytes(&bytes[..cut]).unwrap();
+            assert_eq!(torn.records.len(), recs.len() - 1, "cut at {cut}");
+            assert_eq!(torn.torn_bytes, cut - last_start, "cut at {cut}");
+        }
+        // flipping a payload byte in the tail record fails its checksum
+        let mut corrupt = bytes.clone();
+        let flip = last_start + FRAME_HEADER + 2;
+        corrupt[flip] ^= 0x40;
+        let read = read_journal_bytes(&corrupt).unwrap();
+        assert_eq!(read.records.len(), recs.len() - 1, "checksum must catch the flip");
+        assert_eq!(read.torn_bytes, bytes.len() - last_start);
+        // a wrong magic is a hard error, not a torn tail
+        let mut bad = bytes;
+        bad[0] ^= 0xff;
+        assert!(matches!(read_journal_bytes(&bad), Err(JournalError::BadMagic)));
+    }
+
+    #[test]
+    fn writer_record_limit_refuses_like_a_crash() {
+        let mut w = JournalWriter::in_memory().limit_records(2);
+        let recs = demo_records();
+        w.append(&recs[0]).unwrap();
+        w.append(&recs[1]).unwrap();
+        assert!(matches!(w.append(&recs[2]), Err(JournalError::LimitReached)));
+        assert_eq!(w.records(), 2);
+        let read = read_journal_bytes(w.bytes().unwrap()).unwrap();
+        assert_eq!(read.records.len(), 2, "the refused record must not leak bytes");
+        assert_eq!(read.torn_bytes, 0);
+    }
+
+    #[test]
+    fn fsync_spec_parses() {
+        assert_eq!(FsyncPolicy::from_spec("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::from_spec("never"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::from_spec("every-8"), Some(FsyncPolicy::EveryN(8)));
+        assert_eq!(FsyncPolicy::from_spec("every-0"), None);
+        assert_eq!(FsyncPolicy::from_spec("sometimes"), None);
+    }
+
+    #[test]
+    fn serve_core_journal_replays_to_identical_state() {
+        let engines = crate::workflow::launch::build_quick_surrogate_engines();
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServeConfig {
+            service: ServiceConfig::new(1).queue_bound(2).tokens(2.0, 0.001),
+            reoffer_watermark: 1,
+        };
+        let mut core =
+            ServeCore::new(cfg, engines, pool, JournalWriter::in_memory()).unwrap();
+        // a tight deadline queued behind a long campaign expires at pop
+        // time, spills, and is re-offered; the token bucket throttles
+        // the tail of the burst
+        let offers = [
+            (0.0, quick_req(11, 300.0), None),
+            (1.0, quick_req(12, 60.0), Some(5.0)),
+            (2.0, quick_req(13, 60.0), None),
+            (3.0, quick_req(14, 60.0), None),
+            (4.0, quick_req(15, 60.0), None),
+        ];
+        for (at, req, deadline) in offers {
+            let req = match deadline {
+                Some(d) => req.deadline(d),
+                None => req,
+            };
+            core.offer_at(at, req).unwrap();
+        }
+        core.drain().unwrap();
+        let live = core.canonical_state_json().to_string();
+        let stats = core.stats();
+        assert_eq!(stats.submitted, 5);
+        assert!(stats.throttled > 0, "the token bucket must bite: {stats:?}");
+        assert!(stats.shed > 0, "the tight deadline must shed: {stats:?}");
+        assert_eq!(stats.in_flight, 0);
+
+        let read = read_journal_bytes(core.journal_bytes().unwrap()).unwrap();
+        assert_eq!(read.torn_bytes, 0);
+        let replayed = replay_journal(&read.records).unwrap();
+        assert_eq!(
+            replayed.canonical_json().to_string(),
+            live,
+            "replayed state must be byte-identical"
+        );
+        assert_eq!(replayed.stats().completed, stats.completed);
+    }
+
+    #[test]
+    fn replay_rejects_divergent_journals() {
+        let engines = crate::workflow::launch::build_quick_surrogate_engines();
+        let pool = Arc::new(ThreadPool::new(2));
+        let cfg = ServeConfig::new(ServiceConfig::new(1).queue_bound(2));
+        let mut core =
+            ServeCore::new(cfg, engines, pool, JournalWriter::in_memory()).unwrap();
+        core.offer_at(0.0, quick_req(21, 60.0)).unwrap();
+        core.offer_at(1.0, quick_req(22, 60.0)).unwrap();
+        core.drain().unwrap();
+        let read = read_journal_bytes(core.journal_bytes().unwrap()).unwrap();
+        // tamper with a recorded verdict: replay must call it out
+        let mut tampered = read.records.clone();
+        for rec in &mut tampered {
+            if let JournalRecord::Submit { verdict, .. } = rec {
+                *verdict = Verdict::Reject { reason: RejectReason::Throttled };
+                break;
+            }
+        }
+        assert!(matches!(
+            replay_journal(&tampered),
+            Err(JournalError::Divergence(_))
+        ));
+        // a journal that does not lead with config is malformed
+        assert!(matches!(
+            replay_journal(&read.records[1..]),
+            Err(JournalError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn serve_config_round_trips() {
+        let cfgs = [
+            ServeConfig::new(ServiceConfig::new(4)),
+            ServeConfig {
+                service: ServiceConfig::new(2)
+                    .queue_bound(8)
+                    .shed(ShedPolicy::DeadlineFirst)
+                    .tenant_quota(3)
+                    .tokens(5.0, 0.125),
+                reoffer_watermark: 2,
+            },
+        ];
+        for cfg in cfgs {
+            let wire = cfg.to_json().to_string();
+            let back = ServeConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), wire);
+        }
+    }
+}

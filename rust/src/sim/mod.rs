@@ -30,8 +30,10 @@
 //!   input-order results.
 //! * [`admission`] — pure admission-control state for the service front
 //!   door: the bounded request queue, shed policies
-//!   ([`admission::ShedPolicy`]), per-tenant in-queue quotas, and the
-//!   virtual service-time deadline clock.
+//!   ([`admission::ShedPolicy`]), per-tenant in-queue quotas, a
+//!   virtual-time token bucket ([`admission::TokenBucketCfg`]: tokens
+//!   accrue per dispatched virtual service time, never per wallclock),
+//!   and the virtual service-time deadline clock.
 //! * [`service`] — [`service::CampaignService`], the long-lived serving
 //!   layer: requests enter through the fallible
 //!   [`service::CampaignService::try_submit`] front door into a bounded
@@ -70,6 +72,16 @@
 //!   proposes bounded moves of the fair-share weight, preemption,
 //!   thrash cap, and admission advice, and the approver clamps them —
 //!   deterministic by construction, checkpointed in format v5.
+//! * [`journal`] — the durable front door behind the `mofa-serve`
+//!   binary: an append-only, FNV-1a-checksummed, length-delimited
+//!   request journal ([`journal::JournalWriter`] /
+//!   [`journal::read_journal`]) recording every admission verdict, a
+//!   deterministic single-threaded serve loop ([`journal::ServeCore`])
+//!   that journals submit/dispatch/shed/re-offer/complete decisions and
+//!   streams status events to a separate consumer, and
+//!   [`journal::replay_journal`], which re-drives the records through a
+//!   real [`admission::AdmissionQueue`] back to bit-identical
+//!   [`service::ServiceStats`] and ticket outcomes after a crash.
 //! * [`faults`] — virtual-time **fault injection**: a sorted
 //!   [`faults::FaultPlan`] of kill/restore events that the scheduler
 //!   interleaves with its event loop, decommissioning pool slots (and
@@ -94,6 +106,7 @@ pub mod adaptive;
 pub mod admission;
 pub mod checkpoint;
 pub mod faults;
+pub mod journal;
 pub mod policy;
 pub mod scheduler;
 pub mod service;
@@ -106,7 +119,7 @@ pub use adaptive::{
     AdaptiveConfig, AdaptivePolicy, AnyController, BarrierObserver, ControlLimits, ControlState,
     Controller, ControllerCfg, ProportionalController, TargetLatencyController,
 };
-pub use admission::{RejectReason, RequestStatus, ShedPolicy};
+pub use admission::{RejectReason, RequestStatus, ShedPolicy, TokenBucketCfg};
 pub use checkpoint::{
     canonical_report_json, migration_meta, resume_request, run_request_to_barrier, stamp_migration,
     CampaignRunOutcome, CheckpointError, CheckpointHeader, MigrationMeta, FORMAT_VERSION,
@@ -114,6 +127,10 @@ pub use checkpoint::{
 pub use faults::{
     run_request_with_faults, run_request_with_faults_checkpointed, FaultAction, FaultEvent,
     FaultPlan,
+};
+pub use journal::{
+    read_journal, read_journal_bytes, replay_journal, FsyncPolicy, JournalError, JournalRecord,
+    JournalWriter, ReadJournal, ReplayedState, ServeConfig, ServeCore, ServeEvent, Verdict,
 };
 pub use policy::{FairSharePolicy, PriorityClasses, PriorityPolicy};
 pub use scheduler::{

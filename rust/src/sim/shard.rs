@@ -52,7 +52,7 @@ use std::cmp::Ordering;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::sim::admission::{AdmissionConfig, AdmissionQueue, Popped, RejectReason};
+use crate::sim::admission::{AdmissionConfig, AdmissionQueue, Popped};
 use crate::sim::checkpoint::{
     canonical_report_json, migration_meta, resume_request, run_request_to_barrier,
     stamp_migration, CampaignRunOutcome, MigrationMeta,
@@ -491,6 +491,7 @@ impl ShardedService {
                     bound: cfg.per_shard.queue_bound,
                     shed: cfg.per_shard.shed,
                     tenant_quota: cfg.per_shard.tenant_quota,
+                    tokens: None,
                 }),
                 running: Vec::new(),
                 stats: ShardStats::default(),
@@ -665,10 +666,7 @@ impl ShardedService {
                         Err(reason) => {
                             agg.rejected += 1;
                             shards[s].stats.rejected += 1;
-                            let label = match reason {
-                                RejectReason::QueueFull { .. } => "queue-full",
-                                RejectReason::TenantOverQuota { .. } => "tenant-over-quota",
-                            };
+                            let label = reason.label();
                             *agg.rejected_by.entry(label).or_insert(0) += 1;
                         }
                     }

@@ -20,6 +20,8 @@ pub const GATED_METRICS: &[(&str, f64)] = &[
     ("preempt_cancels_per_sec", 0.7),
     ("checkpoint_bytes_per_sec", 0.7),
     ("shard_migrations_per_sec", 0.7),
+    ("journal_appends_per_sec", 0.7),
+    ("journal_replay_records_per_sec", 0.7),
 ];
 
 /// One gated metric compared against the baseline.

@@ -115,8 +115,15 @@ pub struct RequestMeta {
     pub deadline: Option<f64>,
     /// scheduling-policy label (`mofa` / `priority` / `fair-share`)
     pub policy: &'static str,
-    /// wallclock submit→report turnaround, seconds (queue wait included
-    /// when served; equals `wallclock_s` for direct runs)
+    /// **canonical** turnaround in virtual seconds: queue wait on the
+    /// virtual deadline clock plus the campaign's final virtual time. A
+    /// pure function of the admission sequence — this is the field the
+    /// journal records and replay verifies bit-for-bit
+    pub turnaround_vt: f64,
+    /// **non-canonical** wallclock submit→report turnaround, seconds
+    /// (queue wait included when served; equals `wallclock_s` for direct
+    /// runs). Diagnostic only: varies run to run and never enters a
+    /// canonical report or a replay comparison
     pub turnaround_s: f64,
 }
 

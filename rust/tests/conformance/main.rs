@@ -28,6 +28,15 @@
 //! diurnal and bursty arrivals and the fault-churn axis, pinning the
 //! barrier-driven control loop's end-to-end numbers.
 //!
+//! A fourth, **serve** table (schema `conformance/serve/v1`) drives the
+//! journaled front door ([`ServeCore`]) over generated traces —
+//! overload with token-bucket throttling and shed re-offers, tenant
+//! quotas with displacement sheds, and a mid-run crash via the journal
+//! record limit. Every cell replays its own journal through
+//! [`replay_journal`] and byte-asserts the recovered canonical state
+//! (against the live core when the run survived); the scorecard pins
+//! the counters plus an FNV-1a digest of the canonical state JSON.
+//!
 //! Golden policy (see `golden/README.md`): bless with
 //! `MOFA_BLESS=1 cargo test --test conformance`. By default a missing
 //! golden is reported and the fresh scorecard is written next to the
@@ -42,8 +51,11 @@ use std::sync::Arc;
 use mofa::genai::generator::SurrogateGenerator;
 use mofa::genai::trainer::SurrogateTrainer;
 use mofa::sim::checkpoint::canonical_report_json;
+use mofa::sim::journal::{
+    read_journal_bytes, replay_journal, JournalError, JournalWriter, ServeConfig, ServeCore,
+};
 use mofa::sim::shard::{
-    digest_reports, replay_sharded, report_hash, Router, ShardConfig, ShardPlan,
+    digest_reports, fnv1a, replay_sharded, report_hash, Router, ShardConfig, ShardPlan,
 };
 use mofa::sim::{
     generate_trace, replay_trace, run_campaign_request, run_request_with_faults,
@@ -482,6 +494,149 @@ fn run_shard_scenario(sc: &ShardScenario, pool: &Arc<ThreadPool>) -> String {
     Json::obj(fields).to_string() + "\n"
 }
 
+/// One serve-table cell: a generated trace offered to the journaled
+/// front door ([`ServeCore`], in-memory journal). `kill_after` caps the
+/// journal record count, simulating a crash mid-run; the scorecard is
+/// then reduced from the **replayed** as-of-crash state.
+struct ServeScenario {
+    name: String,
+    spec: WorkloadSpec,
+    cfg: ServeConfig,
+    kill_after: Option<u64>,
+    seed: u64,
+}
+
+fn serve_scenarios() -> Vec<ServeScenario> {
+    // deadline-bearing duo for the overload cells: tight slack plus a
+    // 300 s-class size model expires queued work at pop time
+    let impatient = vec![
+        TenantProfile {
+            name: "argonne".into(),
+            weight: 1,
+            class: 0,
+            policy: PolicyKind::Mofa,
+            deadline_slack_s: Some(200.0),
+            preemption: false,
+        },
+        TenantProfile::new("campus"),
+    ];
+    let overload_spec = WorkloadSpec {
+        arrivals: ArrivalProcess::Poisson { rate_per_ks: 40.0 },
+        sizes: SizeModel::Pareto { min_s: 90.0, alpha: 1.4, cap_s: 360.0 },
+        tenants: impatient.clone(),
+        count: 8,
+        nodes: 8,
+        util_sample_dt: 30.0,
+    };
+    let overload_cfg = ServeConfig {
+        service: ServiceConfig::new(1).queue_bound(3).tokens(4.0, 0.002),
+        reoffer_watermark: 2,
+    };
+    vec![
+        // token-bucket throttling, pop-time deadline sheds, re-offers
+        ServeScenario {
+            name: "serve-overload-reoffer".into(),
+            spec: overload_spec.clone(),
+            cfg: overload_cfg,
+            kill_after: None,
+            seed: 5000,
+        },
+        // per-tenant quotas plus displacement sheds under DeadlineFirst
+        ServeScenario {
+            name: "serve-quota-displace".into(),
+            spec: WorkloadSpec {
+                arrivals: ArrivalProcess::Bursty { on_s: 150.0, off_s: 300.0, rate_per_ks: 120.0 },
+                sizes: SizeModel::Fixed { duration_s: 150.0 },
+                tenants: impatient,
+                count: 8,
+                nodes: 8,
+                util_sample_dt: 30.0,
+            },
+            cfg: ServeConfig {
+                service: ServiceConfig::new(1)
+                    .queue_bound(2)
+                    .tenant_quota(1)
+                    .shed(ShedPolicy::DeadlineFirst),
+                reoffer_watermark: 1,
+            },
+            kill_after: None,
+            seed: 5001,
+        },
+        // crash mid-run: the journal refuses its 13th record; the cell
+        // pins what replay recovers from the truncated journal
+        ServeScenario {
+            name: "serve-kill-replay".into(),
+            spec: overload_spec,
+            cfg: overload_cfg,
+            kill_after: Some(12),
+            seed: 5000,
+        },
+    ]
+}
+
+fn run_serve_scenario(sc: &ServeScenario, pool: &Arc<ThreadPool>) -> String {
+    let trace = generate_trace(&sc.spec, sc.seed);
+    let engines = quick_engines();
+    let mut writer = JournalWriter::in_memory();
+    if let Some(k) = sc.kill_after {
+        writer = writer.limit_records(k);
+    }
+    let mut core = ServeCore::new(sc.cfg, engines, Arc::clone(pool), writer)
+        .expect("the config record always fits");
+    let mut crashed = false;
+    for t in &trace {
+        match core.offer_at(t.at_vt, t.request.clone()) {
+            Ok(_) => {}
+            Err(JournalError::LimitReached) => {
+                crashed = true;
+                break;
+            }
+            Err(e) => panic!("{}: journal append failed: {e}", sc.name),
+        }
+    }
+    if !crashed {
+        match core.drain() {
+            Ok(()) => {}
+            Err(JournalError::LimitReached) => crashed = true,
+            Err(e) => panic!("{}: drain failed: {e}", sc.name),
+        }
+    }
+    let bytes = core.journal_bytes().expect("in-memory journal").to_vec();
+    let read = read_journal_bytes(&bytes).expect("journal reads back");
+    assert_eq!(read.torn_bytes, 0, "{}: a refused append must not leak bytes", sc.name);
+    let replayed = replay_journal(&read.records)
+        .unwrap_or_else(|e| panic!("{}: replay failed: {e}", sc.name));
+    if !crashed {
+        // the in-run crash-replay gate: the journal must reconstruct the
+        // live core byte-for-byte
+        assert_eq!(
+            replayed.canonical_json().to_string(),
+            core.canonical_state_json().to_string(),
+            "{}: replayed state diverged from the live core",
+            sc.name
+        );
+    }
+    let canonical = replayed.canonical_json().to_string();
+    let s = replayed.stats();
+    Json::obj(vec![
+        ("schema", Json::Str("conformance/serve/v1".into())),
+        ("scenario", Json::Str(sc.name.clone())),
+        ("submitted", Json::Num(s.submitted as f64)),
+        ("admitted", Json::Num(s.admitted as f64)),
+        ("rejected", Json::Num(s.rejected as f64)),
+        ("throttled", Json::Num(s.throttled as f64)),
+        ("shed", Json::Num(s.shed as f64)),
+        ("completed", Json::Num(s.completed as f64)),
+        ("queue_depth", Json::Num(s.queue_depth as f64)),
+        ("in_flight", Json::Num(s.in_flight as f64)),
+        ("records", Json::Num(read.records.len() as f64)),
+        ("crashed", Json::Bool(crashed)),
+        ("state_digest", Json::Str(format!("{:016x}", fnv1a(canonical.as_bytes())))),
+    ])
+    .to_string()
+        + "\n"
+}
+
 /// First byte offset where two strings differ, with context, for
 /// readable golden-mismatch reports.
 fn first_diff(a: &str, b: &str) -> String {
@@ -514,7 +669,8 @@ fn main() {
 
     let table = scenarios();
     let shard_table = shard_scenarios();
-    let total = table.len() + shard_table.len();
+    let serve_table = serve_scenarios();
+    let total = table.len() + shard_table.len() + serve_table.len();
     eprintln!("== conformance battery: {total} scenarios ==");
     let mut failures = 0usize;
     let mut unblessed = 0usize;
@@ -567,6 +723,11 @@ fn main() {
     for sc in &shard_table {
         let card = run_shard_scenario(sc, &pool);
         let again = run_shard_scenario(sc, &pool);
+        gate(&sc.name, card, again);
+    }
+    for sc in &serve_table {
+        let card = run_serve_scenario(sc, &pool);
+        let again = run_serve_scenario(sc, &pool);
         gate(&sc.name, card, again);
     }
     eprintln!("== conformance: {total} scenarios, {failures} failed, {unblessed} unblessed ==");
